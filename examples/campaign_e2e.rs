@@ -1,0 +1,42 @@
+//! End-to-end SFI campaign: a scaled-down Table 1 with full reporting.
+//!
+//! ```text
+//! cargo run --release --example campaign_e2e [injections]
+//! ```
+//!
+//! Runs the three builds (baseline / data / full) through the statistical
+//! fault-injection engine on the paper's (12×16×16) workload, prints the
+//! Table-1 comparison against the published numbers, and asserts the
+//! paper's qualitative claims. The full-scale run is
+//! `cargo run --release -- table1 --injections 1000000`.
+
+use redmule_ft::campaign::Table1;
+
+fn main() -> redmule_ft::Result<()> {
+    let injections: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+
+    println!("running 3 x {injections} injections (seed 2025)...\n");
+    let t = Table1::run(injections, 2025, None)?;
+    println!("{}", t.render());
+
+    // The paper's qualitative claims must hold at any reasonable scale.
+    let base = &t.columns[0];
+    let data = &t.columns[1];
+    let full = &t.columns[2];
+    assert!(
+        data.functional_errors() * 4 < base.functional_errors().max(1),
+        "data protection must reduce functional errors by >4x"
+    );
+    assert_eq!(
+        full.functional_errors(),
+        0,
+        "full protection must show no functional errors"
+    );
+    assert!(full.correct_with_retry > 0, "retries must be exercised");
+    assert_eq!(base.correct_with_retry, 0, "baseline cannot retry");
+    println!("campaign_e2e OK ({:.0} runs/s)", base.runs_per_sec());
+    Ok(())
+}

@@ -1,0 +1,251 @@
+//! Targeted fault-injection walkthrough: one fault per protection
+//! mechanism of Figure 1, showing exactly which checker catches it.
+//!
+//! ```text
+//! cargo run --release --example fault_injection_demo
+//! ```
+
+use redmule_ft::cluster::{HostOutcome, System};
+use redmule_ft::fault::site::{
+    checker_unit, fault_unit as fu, regfile_unit, sched_unit, streamer_unit, wbuf_unit, Module,
+    SiteId,
+};
+use redmule_ft::fault::{FaultKind, FaultPlan};
+use redmule_ft::prelude::*;
+use redmule_ft::redmule::fault_unit::cause;
+
+fn inject(
+    sys: &mut System,
+    problem: &GemmProblem,
+    mode: ExecMode,
+    plan: FaultPlan,
+) -> redmule_ft::Result<(HostOutcome, u32, bool, bool)> {
+    let golden = problem.golden_z();
+    let r = sys.run_gemm_with_fault(problem, mode, Some(plan))?;
+    Ok((r.outcome, r.fault_causes, r.irq_seen, r.z_matches(&golden)))
+}
+
+fn main() -> redmule_ft::Result<()> {
+    let cfg = RedMuleConfig::paper();
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, 2025);
+    let mut sys = System::new(cfg, Protection::Full);
+    let ft = ExecMode::FaultTolerant;
+
+    // Mid-compute cycle for transient targets.
+    let mid = sys.run_gemm(&problem, ft)?.cycles / 2;
+
+    println!("== Figure-1 protection mechanisms, one targeted fault each ==\n");
+
+    // (3)+(B) broadcast weight corrupted *after* parity generation: the
+    // per-CE parity check fires. The column is only live on cycles where
+    // a wave sits at its entry slot, so probe a few cycles.
+    let mut w_hit = None;
+    for c in mid..mid + 16 {
+        let r = inject(
+            &mut sys,
+            &problem,
+            ft,
+            FaultPlan {
+                cycle: c,
+                site: SiteId::new(Module::WBuf, wbuf_unit::VALUE_REG, 1),
+                bit: 9,
+                kind: FaultKind::Transient,
+            },
+        )?;
+        if r.1 & cause::W_PARITY != 0 {
+            w_hit = Some(r);
+            break;
+        }
+    }
+    let (o, c, irq, ok) = w_hit.expect("a live cycle must trip the W parity check");
+    println!(
+        "W broadcast register flip  -> {:?}, causes [{}], irq {}, correct {}",
+        o,
+        cause::names(c).join("+"),
+        irq,
+        ok
+    );
+    assert!(c & cause::W_PARITY != 0 && ok);
+
+    // (2)+(4) one FMA result of one row of a redundant pair: the output
+    // checker sees the pair disagree (probe until the CE is live).
+    let mut fma_hit = None;
+    for cyc in mid..mid + 24 {
+        let r = inject(
+            &mut sys,
+            &problem,
+            ft,
+            FaultPlan {
+                cycle: cyc,
+                site: SiteId::new(Module::CeArray, redmule_ft::fault::site::ce_unit::FMA_NET, 5),
+                bit: 3,
+                kind: FaultKind::Transient,
+            },
+        )?;
+        assert!(r.3, "full protection must stay correct");
+        if r.1 & cause::Z_MISMATCH != 0 {
+            fma_hit = Some(r);
+            break;
+        }
+    }
+    let (o, c, _, ok) = fma_hit.expect("a live FMA transient must trip the Z checker");
+    println!(
+        "FMA result transient       -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(c & cause::Z_MISMATCH != 0 && ok);
+
+    // (1) corrupted accumulator of one row in the pair: detected when the
+    // tile is stored (or masked if the slot is overwritten first — probe).
+    let mut acc_hit = None;
+    for cyc in (mid..mid + 40).rev() {
+        let r = inject(
+            &mut sys,
+            &problem,
+            ft,
+            FaultPlan {
+                cycle: cyc,
+                site: SiteId::with_wide_index(Module::Accumulator, 0, 17),
+                bit: 14,
+                kind: FaultKind::StateUpset,
+            },
+        )?;
+        assert!(r.3, "full protection must stay correct");
+        if r.1 & cause::Z_MISMATCH != 0 {
+            acc_hit = Some(r);
+            break;
+        }
+    }
+    let (o, c, _, ok) = acc_hit.expect("a late accumulator SEU must trip the Z checker");
+    println!(
+        "accumulator SEU            -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(c & cause::Z_MISMATCH != 0 && ok);
+
+    // (A) streamer address generator upset: the reduced-width replica
+    // disagrees on the issued address.
+    let (o, c, _, ok) = inject(
+        &mut sys,
+        &problem,
+        ft,
+        FaultPlan {
+            cycle: 2, // before the first fetches
+            site: SiteId::new(Module::StreamerX, streamer_unit::ADDR_REG, 0),
+            bit: 6,
+            kind: FaultKind::StateUpset,
+        },
+    )?;
+    println!(
+        "streamer addr-gen SEU      -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(c & cause::STREAMER_MISMATCH != 0 && ok);
+
+    // (B) scheduler counter upset: lockstep FSM comparison.
+    let (o, c, _, ok) = inject(
+        &mut sys,
+        &problem,
+        ft,
+        FaultPlan {
+            cycle: mid,
+            site: SiteId::with_wide_index(Module::SchedFsm, sched_unit::COUNT_REG, 2),
+            bit: 1,
+            kind: FaultKind::StateUpset,
+        },
+    )?;
+    println!(
+        "scheduler counter SEU      -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(c & cause::FSM_MISMATCH != 0 && ok);
+
+    // (B) configuration word upset: continuous regfile parity check.
+    // After host_program+commit the *active* context is 1, so the live
+    // K word sits at index 1*WORDS + 6 (a flip in the shadow context is
+    // correctly ignored — see regfile unit tests).
+    let active_k = (redmule_ft::redmule::regfile::WORDS + 6) as u16;
+    let (o, c, _, ok) = inject(
+        &mut sys,
+        &problem,
+        ft,
+        FaultPlan {
+            cycle: mid,
+            site: SiteId::new(Module::RegFile, regfile_unit::WORD, active_k),
+            bit: 2,
+            kind: FaultKind::StateUpset,
+        },
+    )?;
+    println!(
+        "regfile config-word SEU    -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(c & cause::REGFILE_PARITY != 0 && ok);
+
+    // §3.3: transient on the interrupt wire during the 2-cycle assert —
+    // the host must still see the IRQ on the other cycle. Find an abort
+    // first, then hit the IRQ net on its first assert cycle.
+    let probe = FaultPlan {
+        cycle: 2,
+        site: SiteId::new(Module::StreamerX, streamer_unit::ADDR_REG, 0),
+        bit: 5,
+        kind: FaultKind::StateUpset,
+    };
+    let r = sys.run_gemm_with_fault(&problem, ft, Some(probe))?;
+    assert!(r.irq_seen && r.retries > 0);
+    println!(
+        "\nIRQ double-assert: detection raises the wire for 2 cycles; a 1-cycle\ntransient on the wire cannot hide it (see integration_fault.rs for the\nexhaustive per-cycle check). retries={}, correct={}",
+        r.retries,
+        r.z_matches(&problem.golden_z())
+    );
+
+    // Checker nets themselves are fault sites too (WFILTER / Z_CMP).
+    let store_cycle = sys.run_gemm(&problem, ft)?.cycles - 3; // during StoreZ
+    let (o, c, _, ok) = inject(
+        &mut sys,
+        &problem,
+        ft,
+        FaultPlan {
+            cycle: store_cycle,
+            site: SiteId::new(Module::Checker, checker_unit::WFILTER_NET, 4),
+            bit: 0,
+            kind: FaultKind::Transient,
+        },
+    )?;
+    println!(
+        "write-filter net transient -> {:?}, causes [{}], correct {}",
+        o,
+        cause::names(c).join("+"),
+        ok
+    );
+    assert!(ok);
+
+    // Fault-status register flip while idle-adjacent logic runs: sticky
+    // status is host-visible.
+    let (_, _, _, ok) = inject(
+        &mut sys,
+        &problem,
+        ft,
+        FaultPlan {
+            cycle: mid,
+            site: SiteId::new(Module::FaultUnit, fu::STATUS_REG, 0),
+            bit: 1,
+            kind: FaultKind::StateUpset,
+        },
+    )?;
+    println!("fault-status register SEU  -> correct {ok}");
+
+    println!("\nfault_injection_demo OK");
+    Ok(())
+}

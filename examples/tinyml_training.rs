@@ -1,0 +1,157 @@
+//! End-to-end driver: TinyML training entirely from Rust via PJRT.
+//!
+//! This is the full three-layer stack composing on a real workload:
+//! the Layer-1 Pallas GEMM kernel (FP16 RedMulE semantics) sits inside
+//! the Layer-2 JAX train-step graph, AOT-lowered once by `make artifacts`;
+//! this Rust binary loads the HLO artifact, holds the parameters, feeds
+//! synthetic spiral-classification batches, runs a few hundred SGD steps,
+//! logs the loss curve, and evaluates accuracy — Python never runs.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example tinyml_training
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use redmule_ft::runtime::GoldenRuntime;
+use redmule_ft::util::rng::Xoshiro256;
+
+const STEPS: usize = 300;
+const BATCH: usize = 32;
+const IN_DIM: usize = 16;
+const HIDDEN: usize = 32;
+const CLASSES: usize = 4;
+
+/// Standard-normal sample (Box–Muller).
+fn normal(rng: &mut Xoshiro256) -> f32 {
+    let u1 = rng.next_f64().max(1e-12);
+    let u2 = rng.next_f64();
+    ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+/// He-initialized parameters (matches python/compile/model.py's shapes).
+fn init_params(rng: &mut Xoshiro256) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let he1 = (2.0 / IN_DIM as f64).sqrt() as f32;
+    let he2 = (2.0 / HIDDEN as f64).sqrt() as f32;
+    let w1 = (0..IN_DIM * HIDDEN).map(|_| normal(rng) * he1).collect();
+    let b1 = vec![0.0; HIDDEN];
+    let w2 = (0..HIDDEN * CLASSES).map(|_| normal(rng) * he2).collect();
+    let b2 = vec![0.0; CLASSES];
+    (w1, b1, w2, b2)
+}
+
+/// The synthetic spiral workload (same construction as model.spiral_batch).
+fn spiral_batch(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut x = vec![0.0f32; BATCH * IN_DIM];
+    let mut onehot = vec![0.0f32; BATCH * CLASSES];
+    let mut labels = Vec::with_capacity(BATCH);
+    for b in 0..BATCH {
+        let label = rng.below(CLASSES as u64) as usize;
+        let t = rng.next_f64() * 2.0 + 0.5;
+        let theta = label as f64 * (2.0 * std::f64::consts::PI / CLASSES as f64) + t * 0.8;
+        x[b * IN_DIM] = (t * theta.cos()) as f32;
+        x[b * IN_DIM + 1] = (t * theta.sin()) as f32;
+        for f in 2..IN_DIM {
+            x[b * IN_DIM + f] = normal(&mut rng) * 0.02;
+        }
+        onehot[b * CLASSES + label] = 1.0;
+        labels.push(label);
+    }
+    (x, onehot, labels)
+}
+
+fn main() -> redmule_ft::Result<()> {
+    let rt = GoldenRuntime::load_default()?;
+    println!(
+        "loaded artifacts from {} (platform {})",
+        rt.dir().display(),
+        rt.platform()
+    );
+    let entry = rt
+        .entry("mlp_train")
+        .expect("mlp_train artifact (run `make artifacts`)");
+    assert_eq!(entry.params, vec![BATCH, IN_DIM, HIDDEN, CLASSES]);
+
+    let mut rng = Xoshiro256::new(0xE2E);
+    let (mut w1, mut b1, mut w2, mut b2) = init_params(&mut rng);
+
+    let dims_w1 = [IN_DIM as i64, HIDDEN as i64];
+    let dims_b1 = [HIDDEN as i64];
+    let dims_w2 = [HIDDEN as i64, CLASSES as i64];
+    let dims_b2 = [CLASSES as i64];
+    let dims_x = [BATCH as i64, IN_DIM as i64];
+    let dims_y = [BATCH as i64, CLASSES as i64];
+
+    let started = std::time::Instant::now();
+    let mut first_losses = Vec::new();
+    let mut last_losses = Vec::new();
+    println!("step    loss");
+    for step in 0..STEPS {
+        let (x, onehot, _) = spiral_batch(step as u64);
+        let outs = rt.execute_f32(
+            "mlp_train",
+            &[
+                (&w1, &dims_w1),
+                (&b1, &dims_b1),
+                (&w2, &dims_w2),
+                (&b2, &dims_b2),
+                (&x, &dims_x),
+                (&onehot, &dims_y),
+            ],
+        )?;
+        w1 = outs[0].clone();
+        b1 = outs[1].clone();
+        w2 = outs[2].clone();
+        b2 = outs[3].clone();
+        let loss = outs[4][0];
+        if step < 5 {
+            first_losses.push(loss);
+        }
+        if step >= STEPS - 5 {
+            last_losses.push(loss);
+        }
+        if step % 25 == 0 || step == STEPS - 1 {
+            println!("{step:>4}    {loss:.4}");
+        }
+    }
+    let train_secs = started.elapsed().as_secs_f64();
+
+    // Evaluation via the predict artifact.
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for s in 0..5u64 {
+        let (x, _, labels) = spiral_batch(10_000 + s);
+        let outs = rt.execute_f32(
+            "mlp_predict",
+            &[
+                (&w1, &dims_w1),
+                (&b1, &dims_b1),
+                (&w2, &dims_w2),
+                (&b2, &dims_b2),
+                (&x, &dims_x),
+            ],
+        )?;
+        for (p, l) in outs[0].iter().zip(&labels) {
+            hits += ((*p as usize) == *l) as usize;
+            total += 1;
+        }
+    }
+    let acc = hits as f64 / total as f64;
+
+    let first = first_losses.iter().sum::<f32>() / first_losses.len() as f32;
+    let last = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
+    println!(
+        "\n{} steps in {:.1} s ({:.1} steps/s), loss {:.3} -> {:.3}, eval accuracy {:.1} %",
+        STEPS,
+        train_secs,
+        STEPS as f64 / train_secs,
+        first,
+        last,
+        100.0 * acc
+    );
+    assert!(last < 0.5 * first, "training must reduce the loss");
+    assert!(acc > 0.8, "accuracy {acc:.2} too low");
+    println!("tinyml_training OK");
+    Ok(())
+}

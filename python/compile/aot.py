@@ -1,0 +1,165 @@
+"""AOT compilation: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Produces, under the output directory:
+
+* `gemm_<m>x<n>x<k>.hlo.txt`        — RedMulE GEMM (Pallas kernel inside)
+* `gemm_redundant_<m>x<n>x<k>.hlo.txt` — FT-mode duplicated GEMM + checker
+* `mlp_train.hlo.txt`               — full TinyML train step (6 offloads)
+* `mlp_predict.hlo.txt`             — inference pass
+* `manifest.txt`                    — `name kind file param*` per line,
+                                       parsed by `rust/src/runtime`
+
+Interchange is **HLO text**, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects with
+`proto.id() <= INT_MAX`. The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and aot_recipe.md).
+
+`jax_enable_x64` is required: the kernel's FMA chain accumulates in f64
+(53 bits >= 22 + 11 + 2) so each step is a true single-rounded FP16 FMA —
+f32 would double-round (see kernels/redmule.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels.fp8 import quantize_fp8  # noqa: E402
+from compile.kernels.redmule import redmule_gemm, redmule_gemm_redundant  # noqa: E402
+
+# GEMM shapes to export: the paper's fault-injection workload plus the
+# shapes the examples use.
+GEMM_SHAPES = [
+    (12, 16, 16),  # Table-1 campaign workload
+    (16, 16, 16),  # quickstart
+    (48, 96, 96),  # perf-mode comparison workload
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gemm(m: int, n: int, k: int, redundant: bool):
+    spec_x = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    fn = redmule_gemm_redundant if redundant else redmule_gemm
+
+    def tupled(x, w, y):
+        out = fn(x, w, y)
+        return out if isinstance(out, tuple) else (out,)
+
+    return jax.jit(tupled).lower(spec_x, spec_w, spec_y)
+
+
+def lower_gemm_fp8(m: int, n: int, k: int, fmt: str):
+    """Hybrid-FP8 GEMM (§2.1): X and W snap onto the FP8 grid before the
+    FP16 accumulation — the widening-CE input path, in-graph."""
+    spec_x = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((m, k), jnp.float32)
+
+    def fn(x, w, y):
+        return (redmule_gemm(quantize_fp8(x, fmt), quantize_fp8(w, fmt), y),)
+
+    return jax.jit(fn).lower(spec_x, spec_w, spec_y)
+
+
+def lower_mlp_train():
+    specs = (
+        jax.ShapeDtypeStruct((model.IN_DIM, model.HIDDEN), jnp.float32),
+        jax.ShapeDtypeStruct((model.HIDDEN,), jnp.float32),
+        jax.ShapeDtypeStruct((model.HIDDEN, model.CLASSES), jnp.float32),
+        jax.ShapeDtypeStruct((model.CLASSES,), jnp.float32),
+        jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((model.BATCH, model.CLASSES), jnp.float32),
+    )
+    return jax.jit(model.train_step).lower(*specs)
+
+
+def lower_mlp_predict():
+    specs = (
+        jax.ShapeDtypeStruct((model.IN_DIM, model.HIDDEN), jnp.float32),
+        jax.ShapeDtypeStruct((model.HIDDEN,), jnp.float32),
+        jax.ShapeDtypeStruct((model.HIDDEN, model.CLASSES), jnp.float32),
+        jax.ShapeDtypeStruct((model.CLASSES,), jnp.float32),
+        jax.ShapeDtypeStruct((model.BATCH, model.IN_DIM), jnp.float32),
+    )
+
+    def tupled(w1, b1, w2, b2, x):
+        return (model.predict(w1, b1, w2, b2, x).astype(jnp.float32),)
+
+    return jax.jit(tupled).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: list[str] = ["# name kind file param*  (see rust/src/runtime/mod.rs)"]
+
+    def emit(name: str, kind: str, lowered, params: list[int]):
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {kind} {fname} {' '.join(map(str, params))}".rstrip())
+        print(f"  {fname}: {len(text)} chars")
+
+    for m, n, k in GEMM_SHAPES:
+        emit(f"gemm_{m}x{n}x{k}", "gemm", lower_gemm(m, n, k, False), [m, n, k])
+    m, n, k = GEMM_SHAPES[0]
+    emit(
+        f"gemm_redundant_{m}x{n}x{k}",
+        "gemm_redundant",
+        lower_gemm(m, n, k, True),
+        [m, n, k],
+    )
+    for fmt in ("e4m3", "e5m2"):
+        emit(
+            f"gemm_fp8_{fmt}_{m}x{n}x{k}",
+            f"gemm_fp8_{fmt}",
+            lower_gemm_fp8(m, n, k, fmt),
+            [m, n, k],
+        )
+    emit(
+        "mlp_train",
+        "mlp_train",
+        lower_mlp_train(),
+        [model.BATCH, model.IN_DIM, model.HIDDEN, model.CLASSES],
+    )
+    emit(
+        "mlp_predict",
+        "mlp_predict",
+        lower_mlp_predict(),
+        [model.BATCH, model.IN_DIM, model.HIDDEN, model.CLASSES],
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

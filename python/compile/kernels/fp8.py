@@ -1,0 +1,83 @@
+"""FP8 (E4M3 / E5M2) quantization — the hybrid-precision input path.
+
+RedMulE supports "either FP16 or hybrid FP8 formats" (§2.1 of the
+RedMulE-FT paper; the RedMulE paper details the widening CEs): X and W
+arrive as 8-bit floats and are widened to FP16 at the compute elements,
+while accumulation stays FP16. The JAX side of that contract is this
+quantizer: it snaps values onto the exact FP8 grid (round-to-nearest-even,
+saturating), so a GEMM on quantized inputs is bit-identical to a GEMM on
+true 8-bit storage — the Rust side implements the same grids in
+`rust/src/fp/fp8.rs` and the two are cross-checked through the
+`gemm_fp8_*` artifact.
+
+Formats follow the OCP/FN conventions used by FPnew:
+  * E4M3: 4 exponent bits (bias 7), 3 mantissa bits, max 448, no inf
+    (we saturate to ±448 and reserve NaN).
+  * E5M2: 5 exponent bits (bias 15), 2 mantissa bits, max 57344,
+    IEEE-style inf/NaN.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FORMATS = ("e4m3", "e5m2")
+
+
+def _spec(fmt: str):
+    if fmt == "e4m3":
+        # (mantissa bits, exponent bias, max finite)
+        return 3, 7, 448.0
+    if fmt == "e5m2":
+        return 2, 15, 57344.0
+    raise ValueError(f"unknown FP8 format {fmt!r}")
+
+
+def quantize_fp8(v, fmt: str = "e4m3"):
+    """Snap an f32/f16-valued array onto the FP8 grid (RTNE, saturating).
+
+    Works under both numpy and jax.numpy inputs; returns the same backing
+    library's array in float32.
+    """
+    m_bits, bias, max_fin = _spec(fmt)
+    xp = jnp if isinstance(v, jnp.ndarray) else np
+    v = v.astype(xp.float32)
+    sign = xp.sign(v)
+    mag = xp.abs(v)
+
+    # Exponent of the FP8 binade, clamped at the subnormal floor.
+    min_exp = 1 - bias  # smallest normal exponent
+    e = xp.floor(xp.log2(xp.where(mag > 0, mag, 1.0)))
+    e = xp.clip(e, min_exp, None)
+    # Quantization step within the binade (subnormals share min_exp's).
+    step = xp.exp2(e - m_bits)
+    q = xp.round(mag / step)
+    # Round-half-to-even: xp.round implements banker's rounding in numpy
+    # and jax alike.
+    snapped = q * step
+    # Renormalize if rounding crossed into the next binade (e.g. 1.9375
+    # -> 2.0): the representation is still exact, no re-rounding needed.
+    snapped = xp.where(mag > 0, snapped, 0.0)
+    # Saturate (E4M3 has no infinity; E5M2 saturates here too because the
+    # hardware's widening path treats overflow as max-magnitude).
+    snapped = xp.minimum(snapped, max_fin)
+    return (sign * snapped).astype(xp.float32)
+
+
+def fp8_grid(fmt: str = "e4m3") -> np.ndarray:
+    """Every non-negative representable FP8 value (for tests)."""
+    m_bits, bias, max_fin = _spec(fmt)
+    vals = {0.0}
+    # Subnormals: e = 1 - bias, mantissa 1..2^m-1.
+    for m in range(1, 1 << m_bits):
+        vals.add(m * 2.0 ** (1 - bias - m_bits))
+    # Normals.
+    e = 1 - bias
+    while True:
+        for m in range(1 << m_bits):
+            x = (1.0 + m / (1 << m_bits)) * 2.0**e
+            if x > max_fin:
+                return np.array(sorted(vals), dtype=np.float64)
+            vals.add(x)
+        e += 1

@@ -1,0 +1,157 @@
+"""Layer-1 Pallas kernel: the RedMulE GEMM hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): RedMulE is an ASIC
+array of L×H cascaded FP16 FMAs that keeps output tiles *stationary* in
+per-row accumulator registers, streams X row-wise with maximal reuse, and
+broadcasts W column-wise. On a TPU-shaped memory hierarchy the same
+dataflow becomes:
+
+* **output-stationary VMEM tiles** — the accumulator registers' analogue.
+  One grid cell owns one (TILE_M × TILE_K) Z tile held in VMEM registers
+  for the whole inner loop;
+* a **`fori_loop` over the inner dimension n** — the paper's P-deep FMA
+  pipeline sweeping one dot-product term per cycle, with a
+  **round-to-binary16 after every step**, the exact numeric contract of
+  the hardware's single-rounded FP16 FMA chain;
+* **BlockSpecs** expressing the HBM↔VMEM schedule the RTL implements with
+  its streamer: X blocks re-used along the K grid axis (row-wise reuse),
+  W blocks re-fetched per K tile (column broadcast), Y/Z blocks touched
+  once.
+
+Values travel as f32 *carriers* of FP16 values at the PJRT boundary
+(conversion is exact both ways); the in-kernel accumulator is f64. Each
+FMA step computes `x*w + acc` in f64 and rounds the result to binary16:
+the FP16 product is exact (22 bits), the f64 add keeps 53 bits >= 22 +
+11 + 2, so rounding f64 -> f16 equals the hardware's single-rounded FMA.
+(f32 would NOT be enough: 24 < 35 — double rounding through f32 provably
+diverges, and the pytest sweep catches it on long chains.)
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is exactly what
+the Rust runtime loads. The real-TPU tiling story (VMEM footprint, MXU
+utilization) is analytic — DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes mirroring the paper instance: TILE_M = L = 12 rows,
+# TILE_K = D = H*P = 12 in-flight output columns per row.
+TILE_M = 12
+TILE_K = 12
+
+
+def _fp16_round(v: jnp.ndarray) -> jnp.ndarray:
+    """Round an f64 carrier to binary16, staying in f64."""
+    return v.astype(jnp.float16).astype(jnp.float64)
+
+
+def _gemm_kernel(x_ref, w_ref, y_ref, z_ref, *, n: int):
+    """One output tile: Z = Y + X·W with per-step FP16 rounding.
+
+    x_ref: (tm, n) f32    — this row tile's X panel (row-wise reuse)
+    w_ref: (n, tk) f32    — this column tile's W panel (broadcast)
+    y_ref/z_ref: (tm, tk) — output-stationary accumulator tile
+    """
+    acc = y_ref[...].astype(jnp.float64)
+    xs = x_ref[...].astype(jnp.float64)
+    ws = w_ref[...].astype(jnp.float64)
+
+    def step(t, acc):
+        xt = jax.lax.dynamic_slice_in_dim(xs, t, 1, axis=1)  # (tm, 1)
+        wt = jax.lax.dynamic_slice_in_dim(ws, t, 1, axis=0)  # (1, tk)
+        return _fp16_round(xt * wt + acc)
+
+    acc = jax.lax.fori_loop(0, n, step, acc)
+    z_ref[...] = acc.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_k"))
+def redmule_gemm(x, w, y, *, tile_m: int = TILE_M, tile_k: int = TILE_K):
+    """FP16 GEMM `Z = Y + X·W` in RedMulE's accumulation order.
+
+    Inputs/outputs are f32 carriers of FP16 values. Shapes:
+    x (m, n), w (n, k), y (m, k) → z (m, k).
+    """
+    m, n = x.shape
+    n2, k = w.shape
+    assert n == n2 and y.shape == (m, k)
+    tm = min(tile_m, m)
+    tk = min(tile_k, k)
+
+    grid = (pl.cdiv(m, tm), pl.cdiv(k, tk))
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, n), lambda i, j: (i, 0)),  # X: reused along j
+            pl.BlockSpec((n, tk), lambda i, j: (0, j)),  # W: broadcast along i
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),  # Y
+        ],
+        out_specs=pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, w, y)
+
+
+def _gemm_redundant_kernel(x_ref, w_ref, y_ref, z_ref, flag_ref, *, n: int):
+    """FT-mode tile: the §3.1 consecutive-row duplication as tile
+    duplication — two independent accumulations of the same tile plus an
+    equality check, the same 2× compute-for-detection trade the hardware
+    makes. `flag_ref` accumulates the number of mismatching elements."""
+    acc_a = y_ref[...].astype(jnp.float64)
+    acc_b = y_ref[...].astype(jnp.float64)
+    xs = x_ref[...].astype(jnp.float64)
+    ws = w_ref[...].astype(jnp.float64)
+
+    def step(t, accs):
+        a, b = accs
+        xt = jax.lax.dynamic_slice_in_dim(xs, t, 1, axis=1)
+        wt = jax.lax.dynamic_slice_in_dim(ws, t, 1, axis=0)
+        # Primary and replica rows: same data, independent FMA chains.
+        a = _fp16_round(xt * wt + a)
+        b = _fp16_round(wt * xt + b)
+        return (a, b)
+
+    acc_a, acc_b = jax.lax.fori_loop(0, n, step, (acc_a, acc_b))
+    # Edge tiles are padded; pad lanes may read NaN, and NaN != NaN would
+    # count as a mismatch. Two NaNs compare equal for the checker (a real
+    # single-copy NaN corruption still trips `!=`).
+    neq = (acc_a != acc_b) & ~(jnp.isnan(acc_a) & jnp.isnan(acc_b))
+    z_ref[...] = acc_a.astype(jnp.float32)
+    flag_ref[0, 0] = jnp.sum(neq.astype(jnp.float32))
+
+
+@jax.jit
+def redmule_gemm_redundant(x, w, y):
+    """FT-mode GEMM: returns (z, mismatch_count). A non-zero count is the
+    checker's detection signal (always 0 without injected faults)."""
+    m, n = x.shape
+    _, k = w.shape
+    tm = min(TILE_M, m)
+    tk = min(TILE_K, k)
+    grid = (pl.cdiv(m, tm), pl.cdiv(k, tk))
+    z, flags = pl.pallas_call(
+        functools.partial(_gemm_redundant_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, tk), lambda i, j: (0, j)),
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, y)
+    return z, jnp.sum(flags)

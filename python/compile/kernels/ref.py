@@ -1,0 +1,71 @@
+"""Pure-numpy correctness oracle for the RedMulE GEMM kernels.
+
+The contract shared by the hardware model (``rust/src/golden``), the Pallas
+kernel (:mod:`compile.kernels.redmule`) and this oracle is:
+
+    Z[m, k] = fp16-FMA-chain over ascending n of
+              (X[m, n] * W[n, k]) accumulated onto Y[m, k]
+
+with a **single round-to-nearest-even to binary16 per FMA step**. The
+oracle implements each step in ``float64``: the FP16 product is exact in
+f64, the addition rounds once to f64 (53 bits), and the cast to f16 rounds
+again — by Figueroa's innocuous-double-rounding theorem (53 >= 2*11 + 2)
+the pair equals one direct rounding, so this loop is bit-identical to a
+true single-rounded FP16 FMA without having implemented one.
+
+Everything here is deliberately independent of JAX so that a bug in the
+kernel and a bug in the oracle cannot share a root cause.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gemm_ref_exact(x: np.ndarray, w: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Bit-exact reference: FP16 single-rounded FMA chain, ascending n.
+
+    Args:
+        x: (m, n) float16
+        w: (n, k) float16
+        y: (m, k) float16
+
+    Returns:
+        (m, k) float16, bit-exact to the hardware accumulation order.
+    """
+    x = np.asarray(x, dtype=np.float16)
+    w = np.asarray(w, dtype=np.float16)
+    y = np.asarray(y, dtype=np.float16)
+    m, n = x.shape
+    n2, k = w.shape
+    assert n == n2, f"inner dims disagree: {n} vs {n2}"
+    assert y.shape == (m, k)
+
+    # Vectorized over (m, k); sequential (ordered) over n.
+    acc = y.astype(np.float64)
+    xf = x.astype(np.float64)
+    wf = w.astype(np.float64)
+    for t in range(n):
+        step = xf[:, t : t + 1] * wf[t : t + 1, :] + acc  # product exact, one f64 rounding
+        acc = step.astype(np.float16).astype(np.float64)  # innocuous 2nd rounding
+    return acc.astype(np.float16)
+
+
+def gemm_ref_f64(x: np.ndarray, w: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Loose reference: full-precision matmul, rounded once at the end.
+
+    Not bit-comparable to the hardware order (FP16 accumulation is not
+    associative) — used for `allclose` sanity bounds only.
+    """
+    zf = (
+        np.asarray(y, dtype=np.float64)
+        + np.asarray(x, dtype=np.float64) @ np.asarray(w, dtype=np.float64)
+    )
+    return zf.astype(np.float16)
+
+
+def random_fp16(shape, seed: int, mag: float = 1.0) -> np.ndarray:
+    """Uniform FP16 values in [-mag, mag] — the campaign's workload
+    distribution (well-conditioned for FP16 accumulation)."""
+    rng = np.random.default_rng(seed)
+    return ((rng.random(shape) * 2.0 - 1.0) * mag).astype(np.float16)

@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: TinyML training on RedMulE's numeric contract.
+
+RedMulE's motivating workload (the RedMulE paper targets "on-chip linear
+algebra and TinyML training acceleration") is small-model training where
+every matrix product runs on the accelerator. This module builds exactly
+that compute graph: a 2-layer MLP classifier whose **forward and backward
+matmuls all go through the Layer-1 Pallas kernel** — i.e. FP16 RedMulE
+semantics — while the parameter master copies and elementwise glue stay in
+f32, the standard mixed-precision TinyML recipe.
+
+The backward pass is written out by hand (pallas_call has no autodiff
+rule, and the explicit form mirrors how a RedMulE-based runtime would
+schedule the accelerator: six GEMM offloads per step).
+
+Everything is shape-static so `aot.py` can lower `train_step` once and the
+Rust driver (`examples/tinyml_training.rs`) can run hundreds of steps
+against the same artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.redmule import redmule_gemm
+
+# Static architecture of the example classifier.
+BATCH = 32
+IN_DIM = 16
+HIDDEN = 32
+CLASSES = 4
+LEARNING_RATE = 0.1
+
+
+def _fp16_vals(v):
+    """Quantize a f32 tensor to FP16 values (kept on an f32 carrier) —
+    what the DMA would deliver to TCDM before an offload."""
+    return v.astype(jnp.float16).astype(jnp.float32)
+
+
+def gemm(x, w, y):
+    """One accelerator offload: Z = Y + X·W in RedMulE FP16 order.
+    Operands are quantized to FP16 values first, as staging to TCDM does."""
+    return redmule_gemm(_fp16_vals(x), _fp16_vals(w), _fp16_vals(y))
+
+
+def init_params(seed: int = 0):
+    """He-initialized f32 master parameters."""
+    rng = np.random.default_rng(seed)
+    w1 = (rng.standard_normal((IN_DIM, HIDDEN)) * np.sqrt(2.0 / IN_DIM)).astype(np.float32)
+    b1 = np.zeros((HIDDEN,), np.float32)
+    w2 = (rng.standard_normal((HIDDEN, CLASSES)) * np.sqrt(2.0 / HIDDEN)).astype(np.float32)
+    b2 = np.zeros((CLASSES,), np.float32)
+    return w1, b1, w2, b2
+
+
+def forward(w1, b1, w2, b2, x):
+    """Forward pass; returns (logits, hidden activations, pre-activation)."""
+    y1 = jnp.broadcast_to(b1[None, :], (x.shape[0], HIDDEN))
+    h_pre = gemm(x, w1, y1)  # offload 1
+    h = jax.nn.relu(h_pre)
+    y2 = jnp.broadcast_to(b2[None, :], (x.shape[0], CLASSES))
+    logits = gemm(h, w2, y2)  # offload 2
+    return logits, h, h_pre
+
+
+def train_step(w1, b1, w2, b2, x, labels_onehot):
+    """One SGD step. Returns (w1', b1', w2', b2', loss).
+
+    Six RedMulE offloads: 2 forward + 4 backward GEMMs. The elementwise
+    softmax/ReLU glue runs on the host cores in f32, as it would in the
+    PULP cluster.
+    """
+    b = x.shape[0]
+    logits, h, h_pre = forward(w1, b1, w2, b2, x)
+
+    # Softmax cross-entropy in f32 (host-side glue).
+    logits_f32 = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits_f32, axis=-1)
+    loss = -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))
+
+    # Backward.
+    dlogits = (jax.nn.softmax(logits_f32, axis=-1) - labels_onehot) / b
+    zeros_hc = jnp.zeros((HIDDEN, CLASSES), jnp.float32)
+    dw2 = gemm(h.T, dlogits, zeros_hc)  # offload 3
+    db2 = jnp.sum(dlogits, axis=0)
+    zeros_bh = jnp.zeros((b, HIDDEN), jnp.float32)
+    dh = gemm(dlogits, w2.T, zeros_bh)  # offload 4
+    dh = dh * (h_pre > 0).astype(jnp.float32)
+    zeros_ih = jnp.zeros((IN_DIM, HIDDEN), jnp.float32)
+    dw1 = gemm(x.T, dh, zeros_ih)  # offload 5 (offload 6 is folded: x.T
+    db1 = jnp.sum(dh, axis=0)  # reuse makes the 6th GEMM a reduction)
+
+    lr = jnp.float32(LEARNING_RATE)
+    return (
+        w1 - lr * dw1,
+        b1 - lr * db1,
+        w2 - lr * dw2,
+        b2 - lr * db2,
+        loss,
+    )
+
+
+def predict(w1, b1, w2, b2, x):
+    """Inference pass (2 offloads), returns class ids."""
+    logits, _, _ = forward(w1, b1, w2, b2, x)
+    return jnp.argmax(logits, axis=-1)
+
+
+def spiral_batch(seed: int, batch: int = BATCH):
+    """The synthetic workload: a 4-arm spiral embedded in IN_DIM features
+    (2 informative + noise), the classic tiny-classifier benchmark."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, CLASSES, size=batch)
+    t = rng.random(batch) * 2.0 + 0.5
+    theta = labels * (2 * np.pi / CLASSES) + t * 0.8
+    xy = np.stack([t * np.cos(theta), t * np.sin(theta)], axis=1)
+    feats = np.concatenate(
+        [xy, rng.standard_normal((batch, IN_DIM - 2)) * 0.02], axis=1
+    ).astype(np.float32)
+    onehot = np.eye(CLASSES, dtype=np.float32)[labels]
+    return feats, onehot, labels

@@ -1,0 +1,76 @@
+"""Hybrid-FP8 input path: quantizer properties and kernel composition."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fp8 import fp8_grid, quantize_fp8, FORMATS
+from compile.kernels.redmule import redmule_gemm
+from compile.kernels.ref import gemm_ref_exact, random_fp16
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_grid_points_are_fixed_points(fmt):
+    g = fp8_grid(fmt)
+    q = quantize_fp8(g.astype(np.float32), fmt)
+    np.testing.assert_array_equal(q.astype(np.float64), g)
+    qn = quantize_fp8((-g).astype(np.float32), fmt)
+    np.testing.assert_array_equal(qn.astype(np.float64), -g)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_quantization_snaps_to_nearest_grid_point(fmt):
+    g = fp8_grid(fmt)
+    full = np.concatenate([-g[::-1], g])
+    rng = np.random.default_rng(1)
+    v = ((rng.random(4000) * 2 - 1) * 600).astype(np.float32)
+    q = quantize_fp8(v, fmt).astype(np.float64)
+    # Every output is on the grid...
+    for qi in q:
+        assert np.abs(full - qi).min() == 0.0, qi
+    # ...and is among the two nearest neighbours (RTNE tie handling).
+    for vi, qi in zip(v.astype(np.float64), q):
+        d = np.abs(full - vi)
+        nearest = np.sort(d)[:2]
+        assert abs(abs(qi - vi) - nearest[0]) <= nearest[1] - nearest[0] + 1e-12
+
+
+@pytest.mark.parametrize("fmt,maxv", [("e4m3", 448.0), ("e5m2", 57344.0)])
+def test_saturation(fmt, maxv):
+    v = np.array([1e6, -1e6, maxv * 1.01], np.float32)
+    q = quantize_fp8(v, fmt)
+    np.testing.assert_array_equal(q, [maxv, -maxv, maxv])
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_monotone(fmt):
+    v = np.linspace(-500, 500, 5001, dtype=np.float32)
+    q = quantize_fp8(v, fmt)
+    assert (np.diff(q) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), fmt=st.sampled_from(FORMATS))
+def test_fp8_gemm_matches_oracle_on_quantized_inputs(seed, fmt):
+    """The hybrid path: quantize X/W, then the FP16 GEMM — kernel and
+    oracle must agree bit-for-bit (FP8 values are exact FP16 values)."""
+    m, n, k = 12, 16, 16
+    x = quantize_fp8(random_fp16((m, n), seed).astype(np.float32), fmt)
+    w = quantize_fp8(random_fp16((n, k), seed + 1).astype(np.float32), fmt)
+    y = random_fp16((m, k), seed + 2)
+    z = np.asarray(redmule_gemm(x, w, y.astype(np.float32))).astype(np.float16)
+    ref = gemm_ref_exact(
+        x.astype(np.float16), w.astype(np.float16), y
+    )
+    np.testing.assert_array_equal(z.view(np.uint16), ref.view(np.uint16))
+
+
+def test_fp8_values_are_exact_fp16_values():
+    for fmt in FORMATS:
+        g = fp8_grid(fmt)
+        as16 = g.astype(np.float16).astype(np.float64)
+        np.testing.assert_array_equal(as16, g, err_msg=f"{fmt} grid not FP16-exact")

@@ -1,0 +1,155 @@
+"""Layer-1 correctness: the Pallas kernel against the numpy oracle.
+
+The bit-exactness contract is the core correctness signal of the whole
+reproduction: the Rust golden model, the cycle-level simulator and the
+PJRT-executed artifact all claim to compute the *same bits* — and they all
+anchor to this oracle. Hypothesis sweeps shapes and seeds.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.redmule import redmule_gemm, redmule_gemm_redundant
+from compile.kernels.ref import gemm_ref_exact, gemm_ref_f64, random_fp16
+
+
+def run_kernel(x, w, y, **kw):
+    z = redmule_gemm(
+        x.astype(np.float32), w.astype(np.float32), y.astype(np.float32), **kw
+    )
+    return np.asarray(z).astype(np.float16)
+
+
+def bits(a):
+    return np.asarray(a, dtype=np.float16).view(np.uint16)
+
+
+class TestGemmKernelExact:
+    @pytest.mark.parametrize(
+        "m,n,k",
+        [
+            (12, 16, 16),  # the paper's campaign workload
+            (1, 1, 1),
+            (12, 12, 12),  # exactly one tile
+            (24, 16, 24),  # multi-tile, divisible
+            (13, 17, 19),  # multi-tile with ragged edges
+            (5, 7, 3),
+            (48, 96, 96),  # perf workload
+            (12, 256, 12),  # long accumulation chain (double-rounding trap)
+        ],
+    )
+    def test_bit_exact_vs_oracle(self, m, n, k):
+        x = random_fp16((m, n), seed=m * 1000 + n)
+        w = random_fp16((n, k), seed=n * 1000 + k)
+        y = random_fp16((m, k), seed=m * 1000 + k)
+        np.testing.assert_array_equal(
+            bits(run_kernel(x, w, y)), bits(gemm_ref_exact(x, w, y))
+        )
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 30),
+        n=st.integers(1, 40),
+        k=st.integers(1, 30),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shape_sweep(self, m, n, k, seed):
+        x = random_fp16((m, n), seed=seed)
+        w = random_fp16((n, k), seed=seed + 1)
+        y = random_fp16((m, k), seed=seed + 2)
+        np.testing.assert_array_equal(
+            bits(run_kernel(x, w, y)), bits(gemm_ref_exact(x, w, y))
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mag=st.sampled_from([0.001, 1.0, 64.0, 1000.0]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_magnitude_sweep(self, mag, seed):
+        """Subnormals, large magnitudes, overflow to inf — all must match
+        the oracle bit for bit (inf/NaN propagation included)."""
+        m, n, k = 8, 24, 8
+        x = random_fp16((m, n), seed=seed, mag=mag)
+        w = random_fp16((n, k), seed=seed + 1, mag=mag)
+        y = random_fp16((m, k), seed=seed + 2, mag=mag)
+        np.testing.assert_array_equal(
+            bits(run_kernel(x, w, y)), bits(gemm_ref_exact(x, w, y))
+        )
+
+    def test_special_values_propagate(self):
+        x = np.zeros((2, 3), np.float16)
+        w = np.zeros((3, 2), np.float16)
+        y = np.zeros((2, 2), np.float16)
+        x[0, 0] = np.float16(np.inf)
+        w[0, 0] = np.float16(2.0)
+        y[1, 1] = np.float16(-0.0)
+        np.testing.assert_array_equal(
+            bits(run_kernel(x, w, y)), bits(gemm_ref_exact(x, w, y))
+        )
+
+    def test_identity_weight_is_exact_passthrough(self):
+        m = n = 12
+        x = random_fp16((m, n), seed=3)
+        w = np.eye(n, dtype=np.float16)
+        y = np.zeros((m, n), np.float16)
+        np.testing.assert_array_equal(bits(run_kernel(x, w, y)), bits(x))
+
+    def test_order_sensitivity_is_real(self):
+        """FP16 accumulation is not associative: the loose f64 reference
+        must differ from the exact-order result on some element for a long
+        chain — otherwise the bit-exact tests above prove nothing."""
+        m, n, k = 8, 128, 8
+        x = random_fp16((m, n), seed=11)
+        w = random_fp16((n, k), seed=12)
+        y = random_fp16((m, k), seed=13)
+        exact = gemm_ref_exact(x, w, y)
+        loose = gemm_ref_f64(x, w, y)
+        assert (bits(exact) != bits(loose)).any()
+        # ... yet they agree to FP16-accumulation tolerance.
+        np.testing.assert_allclose(
+            exact.astype(np.float64), loose.astype(np.float64), atol=0.35, rtol=0.02
+        )
+
+    def test_tile_size_does_not_change_bits(self):
+        m, n, k = 24, 16, 24
+        x = random_fp16((m, n), seed=21)
+        w = random_fp16((n, k), seed=22)
+        y = random_fp16((m, k), seed=23)
+        a = run_kernel(x, w, y, tile_m=12, tile_k=12)
+        b = run_kernel(x, w, y, tile_m=8, tile_k=6)
+        c = run_kernel(x, w, y, tile_m=24, tile_k=24)
+        np.testing.assert_array_equal(bits(a), bits(b))
+        np.testing.assert_array_equal(bits(a), bits(c))
+
+
+class TestRedundantKernel:
+    @pytest.mark.parametrize("m,n,k", [(12, 16, 16), (13, 17, 19), (1, 1, 1)])
+    def test_matches_oracle_with_zero_flag(self, m, n, k):
+        x = random_fp16((m, n), seed=31)
+        w = random_fp16((n, k), seed=32)
+        y = random_fp16((m, k), seed=33)
+        z, flag = redmule_gemm_redundant(
+            x.astype(np.float32), w.astype(np.float32), y.astype(np.float32)
+        )
+        np.testing.assert_array_equal(
+            bits(np.asarray(z).astype(np.float16)), bits(gemm_ref_exact(x, w, y))
+        )
+        assert float(flag) == 0.0, "clean duplicated compute must agree"
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_hypothesis_flag_always_zero_clean(self, seed):
+        m, n, k = 12, 16, 16
+        x = random_fp16((m, n), seed=seed)
+        w = random_fp16((n, k), seed=seed + 1)
+        y = random_fp16((m, k), seed=seed + 2)
+        _, flag = redmule_gemm_redundant(
+            x.astype(np.float32), w.astype(np.float32), y.astype(np.float32)
+        )
+        assert float(flag) == 0.0

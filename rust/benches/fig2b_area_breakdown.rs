@@ -1,0 +1,68 @@
+//! Bench: regenerate **Figure 2b** — the area breakdown of the three
+//! RedMulE versions with the FT overhead highlighted (the hatched bars),
+//! plus the published totals for comparison.
+//!
+//! ```text
+//! cargo bench --bench fig2b_area_breakdown
+//! ```
+
+use redmule_ft::area::{area_report, published};
+use redmule_ft::redmule::{Protection, RedMuleConfig};
+
+fn main() {
+    let cfg = RedMuleConfig::paper();
+    let base = area_report(cfg, Protection::Baseline);
+
+    println!("Figure 2b — area breakdown (GE model vs GF12LP+ published)\n");
+    for p in [Protection::Baseline, Protection::Data, Protection::Full] {
+        let r = area_report(cfg, p);
+        println!("{}", r.render());
+        let published_total = match p {
+            Protection::Baseline => published::BASELINE_KGE,
+            Protection::Data => published::DATA_KGE,
+            _ => published::FULL_KGE,
+        };
+        println!(
+            "model total {:.1} kGE vs published {:.0} kGE ({:+.1} % model error)",
+            r.total_kge(),
+            published_total,
+            100.0 * (r.total_kge() - published_total) / published_total
+        );
+        println!(
+            "FT overhead: {:.1} kGE hatched, {:+.2} % vs baseline (paper: {:+.1} %)\n",
+            r.ft_overhead_kge(),
+            r.overhead_vs(&base),
+            match p {
+                Protection::Baseline => 0.0,
+                Protection::Data => published::DATA_OVERHEAD_PCT,
+                _ => published::FULL_OVERHEAD_PCT,
+            }
+        );
+    }
+
+    // ASCII bar chart in the figure's style.
+    println!("kGE (hatched '#' = FT overhead, '=' = baseline logic)");
+    for p in [Protection::Baseline, Protection::Data, Protection::Full] {
+        let r = area_report(cfg, p);
+        let base_units = ((r.total_kge() - r.ft_overhead_kge()) / 10.0).round() as usize;
+        let ft_units = (r.ft_overhead_kge() / 10.0).round() as usize;
+        println!(
+            "{:<9} |{}{}| {:.0} kGE",
+            p.name(),
+            "=".repeat(base_units),
+            "#".repeat(ft_units),
+            r.total_kge()
+        );
+    }
+
+    // Model-error bounds double as the bench's pass criteria.
+    for (p, pub_kge) in [
+        (Protection::Baseline, published::BASELINE_KGE),
+        (Protection::Data, published::DATA_KGE),
+        (Protection::Full, published::FULL_KGE),
+    ] {
+        let err = (area_report(cfg, p).total_kge() - pub_kge).abs() / pub_kge;
+        assert!(err < 0.02, "{p:?}: model error {:.1} % > 2 %", err * 100.0);
+    }
+    println!("\nfig2b OK (model within 2 % of all three published totals)");
+}

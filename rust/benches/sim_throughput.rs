@@ -1,0 +1,72 @@
+//! Bench: simulator hot-path throughput — the engineering metric that
+//! bounds the 3×1M-injection Table-1 reproduction (EXPERIMENTS.md §Perf).
+//!
+//! Reports cycles/s of the cycle-level model and end-to-end injected
+//! runs/s of the campaign engine, for each build.
+//!
+//! ```text
+//! cargo bench --bench sim_throughput
+//! ```
+
+use redmule_ft::campaign::{Campaign, CampaignConfig};
+use redmule_ft::cluster::System;
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+
+fn main() {
+    let cfg = RedMuleConfig::paper();
+    let spec = GemmSpec::paper_workload();
+    let p = GemmProblem::random(&spec, 1);
+
+    println!("sim_throughput — paper workload (12x16x16), single thread\n");
+
+    // 1. Raw stepping rate (fault-free runs, including re-staging).
+    for (prot, mode) in [
+        (Protection::Baseline, ExecMode::Performance),
+        (Protection::Full, ExecMode::FaultTolerant),
+    ] {
+        let mut sys = System::new(cfg, prot);
+        // Warm-up + measure.
+        let r = sys.run_gemm(&p, mode).unwrap();
+        let cycles_per_run = r.cycles;
+        let started = std::time::Instant::now();
+        let n = 2_000u64;
+        for _ in 0..n {
+            let r = sys.run_gemm(&p, mode).unwrap();
+            std::hint::black_box(r.cycles);
+        }
+        let secs = started.elapsed().as_secs_f64();
+        let runs_s = n as f64 / secs;
+        println!(
+            "{:<22} {:>8.0} runs/s  ({} cyc/run, {:>9.2} Mcyc/s)",
+            format!("{}/{}", prot.name(), mode.name()),
+            runs_s,
+            cycles_per_run,
+            runs_s * cycles_per_run as f64 / 1e6
+        );
+    }
+
+    // 2. Campaign engine end-to-end (sampling + injection + classify).
+    println!();
+    let mut total_runs = 0u64;
+    let mut total_secs = 0.0;
+    for prot in [Protection::Baseline, Protection::Data, Protection::Full] {
+        let mut cc = CampaignConfig::table1(prot, 10_000, 3);
+        cc.threads = 1;
+        let r = Campaign::run(&cc).unwrap();
+        println!(
+            "campaign [{:<8}]: {:>8.0} injections/s",
+            prot.name(),
+            r.runs_per_sec()
+        );
+        total_runs += r.total;
+        total_secs += r.wall_seconds;
+    }
+    let agg = total_runs as f64 / total_secs;
+    println!(
+        "\naggregate: {agg:.0} injections/s -> full 3x1M Table-1 in ~{:.0} s single-threaded",
+        3_000_000.0 / agg
+    );
+    assert!(agg > 2_000.0, "campaign engine too slow: {agg:.0} runs/s");
+    println!("sim_throughput OK");
+}

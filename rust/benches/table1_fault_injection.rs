@@ -1,0 +1,50 @@
+//! Bench: regenerate **Table 1** — the paper's fault-injection results for
+//! the three builds on the (12×16×16) workload.
+//!
+//! ```text
+//! cargo bench --bench table1_fault_injection            # 20k/column
+//! TABLE1_INJECTIONS=1000000 cargo bench --bench table1_fault_injection
+//! ```
+//!
+//! Measured-vs-published rows are printed side by side; the campaign's own
+//! throughput (runs/s) is reported so the full-scale 3M-run reproduction
+//! can be budgeted.
+
+use redmule_ft::campaign::Table1;
+
+fn main() {
+    let injections: u64 = std::env::var("TABLE1_INJECTIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let seed: u64 = std::env::var("TABLE1_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2025);
+
+    eprintln!("table1_fault_injection: {injections} injections per column, seed {seed}");
+    let started = std::time::Instant::now();
+    let t = Table1::run(injections, seed, None).expect("campaign");
+    let secs = started.elapsed().as_secs_f64();
+
+    println!("{}", t.render());
+    let total_runs: u64 = t.columns.iter().map(|c| c.total).sum();
+    println!(
+        "bench: {} total injected runs in {:.1} s ({:.0} runs/s)",
+        total_runs,
+        secs,
+        total_runs as f64 / secs
+    );
+
+    // Shape assertions (the claims the paper makes of this table).
+    let base = &t.columns[0];
+    let data = &t.columns[1];
+    let full = &t.columns[2];
+    assert!(t.vulnerability_reduction() > 4.0, "data protection factor");
+    assert_eq!(full.functional_errors(), 0, "full protection");
+    assert_eq!(base.correct_with_retry, 0, "baseline cannot retry");
+    assert!(
+        data.correct_with_retry > 0 && full.correct_with_retry > 0,
+        "retry mechanism exercised"
+    );
+}

@@ -1,0 +1,237 @@
+//! Textual floorplan of the PULP cluster with RedMulE-FT (Figure 2a).
+//!
+//! The paper implements the whole cluster in a placed-and-routed
+//! 1400 µm × 850 µm block in GlobalFoundries 12LP+. We reproduce the
+//! *structure* of that figure: each cluster block gets an area from the GE
+//! model (logic) or macro estimates (SRAM), blocks are packed into the
+//! published die outline, and the result is rendered as ASCII art with a
+//! per-block legend — the closest textual equivalent of the paper's
+//! rendered floorplan.
+
+use super::{area_report, AreaReport};
+use crate::redmule::{Protection, RedMuleConfig};
+
+/// Published block outline (µm).
+pub const DIE_W_UM: f64 = 1400.0;
+pub const DIE_H_UM: f64 = 850.0;
+
+/// Approximate logic density for GF 12LP+ at ~70 % placement utilization
+/// (µm² per GE). Calibrated so the cluster inventory fills the published
+/// outline.
+pub const UM2_PER_KGE: f64 = 205.0;
+
+/// SRAM macro density (µm² per KiB), denser than random logic.
+pub const UM2_PER_KIB_SRAM: f64 = 1450.0;
+
+/// One placed block.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: &'static str,
+    pub tag: char,
+    pub area_um2: f64,
+    /// Filled by `place`: (x, y, w, h) in µm.
+    pub rect: (f64, f64, f64, f64),
+}
+
+/// The cluster inventory (§2.2 + §3): 8 RV32 cores, shared instruction
+/// cache, 256 KiB ECC TCDM in 16 banks, logarithmic interconnect, DMA,
+/// event unit / peripherals, AXI boundary, and RedMulE-FT itself.
+pub fn cluster_blocks(cfg: RedMuleConfig, protection: Protection) -> (Vec<Block>, AreaReport) {
+    let redmule = area_report(cfg, protection);
+    let logic = |kge: f64| kge * UM2_PER_KGE;
+    let sram = |kib: f64| kib * UM2_PER_KIB_SRAM;
+
+    let blocks = vec![
+        Block {
+            name: "8x RV32 cores",
+            tag: 'C',
+            area_um2: logic(8.0 * 45.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "I$ + prefetch",
+            tag: 'I',
+            area_um2: logic(60.0) + sram(16.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "TCDM banks (256 KiB, SECDED)",
+            tag: 'M',
+            // 39/32 storage expansion for the ECC bits.
+            area_um2: sram(256.0 * 39.0 / 32.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "log. interconnect + ECC",
+            tag: 'X',
+            area_um2: logic(95.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "DMA engine",
+            tag: 'D',
+            area_um2: logic(70.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "event unit + peripherals",
+            tag: 'E',
+            area_um2: logic(55.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "AXI plugs + cluster bus",
+            tag: 'A',
+            area_um2: logic(75.0),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+        Block {
+            name: "RedMulE-FT",
+            tag: 'R',
+            area_um2: logic(redmule.total_kge()),
+            rect: (0.0, 0.0, 0.0, 0.0),
+        },
+    ];
+    (blocks, redmule)
+}
+
+/// Slice-and-dice treemap placement into the die outline: recursively
+/// split the block list into two area-balanced halves and the rectangle
+/// along its longer side, proportionally. Always exactly tiles the die —
+/// the same visual structure as the published placed-and-routed figure.
+pub fn place(blocks: &mut [Block]) {
+    blocks.sort_by(|a, b| b.area_um2.partial_cmp(&a.area_um2).unwrap());
+    slice_dice(blocks, (0.0, 0.0, DIE_W_UM, DIE_H_UM));
+}
+
+fn slice_dice(blocks: &mut [Block], rect: (f64, f64, f64, f64)) {
+    let (x, y, w, h) = rect;
+    match blocks.len() {
+        0 => {}
+        1 => blocks[0].rect = rect,
+        n => {
+            let total: f64 = blocks.iter().map(|b| b.area_um2).sum();
+            // Split point: first prefix reaching half the area.
+            let mut acc = 0.0;
+            let mut split = 1;
+            for (i, b) in blocks.iter().enumerate() {
+                acc += b.area_um2;
+                if acc >= total / 2.0 || i == n - 2 {
+                    split = i + 1;
+                    break;
+                }
+            }
+            let frac = blocks[..split].iter().map(|b| b.area_um2).sum::<f64>() / total;
+            let (ra, rb) = if w >= h {
+                let wa = w * frac;
+                ((x, y, wa, h), (x + wa, y, w - wa, h))
+            } else {
+                let ha = h * frac;
+                ((x, y, w, ha), (x, y + ha, w, h - ha))
+            };
+            let (left, right) = blocks.split_at_mut(split);
+            slice_dice(left, ra);
+            slice_dice(right, rb);
+        }
+    }
+}
+
+/// Render the placed floorplan as ASCII (1 cell ≈ 20 µm × 20 µm).
+pub fn render(blocks: &[Block]) -> String {
+    const CELL: f64 = 20.0;
+    let cols = (DIE_W_UM / CELL) as usize;
+    let rows = (DIE_H_UM / CELL / 2.0) as usize; // chars are ~2:1 tall
+    let mut grid = vec![vec!['.'; cols]; rows];
+    for b in blocks {
+        let (x, y, w, h) = b.rect;
+        let c0 = (x / CELL) as usize;
+        let c1 = (((x + w) / CELL) as usize).min(cols);
+        let r0 = (y / CELL / 2.0) as usize;
+        let r1 = (((y + h) / CELL / 2.0) as usize).min(rows);
+        for r in r0..r1 {
+            for c in c0..c1 {
+                grid[r][c] = b.tag;
+            }
+        }
+    }
+    let mut s = String::new();
+    s.push_str(&format!(
+        "PULP cluster floorplan — {:.0} µm × {:.0} µm (GF 12LP+, 500 MHz)\n",
+        DIE_W_UM, DIE_H_UM
+    ));
+    s.push('+');
+    s.push_str(&"-".repeat(cols));
+    s.push_str("+\n");
+    for row in &grid {
+        s.push('|');
+        s.extend(row.iter());
+        s.push_str("|\n");
+    }
+    s.push('+');
+    s.push_str(&"-".repeat(cols));
+    s.push_str("+\n");
+    s.push_str("legend:\n");
+    let mut sorted: Vec<&Block> = blocks.iter().collect();
+    sorted.sort_by(|a, b| b.area_um2.partial_cmp(&a.area_um2).unwrap());
+    for b in sorted {
+        s.push_str(&format!(
+            "  {} {:<34} {:>9.0} µm²  ({:>5.1} %)\n",
+            b.tag,
+            b.name,
+            b.area_um2,
+            100.0 * b.area_um2 / (DIE_W_UM * DIE_H_UM)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_roughly_fills_the_published_outline() {
+        let (blocks, _) = cluster_blocks(RedMuleConfig::paper(), Protection::Full);
+        let total: f64 = blocks.iter().map(|b| b.area_um2).sum();
+        let die = DIE_W_UM * DIE_H_UM;
+        let fill = total / die;
+        assert!(
+            (0.6..=1.4).contains(&fill),
+            "inventory fills {:.0} % of the die",
+            fill * 100.0
+        );
+    }
+
+    #[test]
+    fn placement_stays_inside_the_die() {
+        let (mut blocks, _) = cluster_blocks(RedMuleConfig::paper(), Protection::Full);
+        place(&mut blocks);
+        for b in &blocks {
+            let (x, y, w, h) = b.rect;
+            assert!(x >= -1e-6 && y >= -1e-6);
+            assert!(x + w <= DIE_W_UM + 1e-6, "{} sticks out in x", b.name);
+            assert!(y + h <= DIE_H_UM + 1e-6, "{} sticks out in y", b.name);
+            assert!(w > 0.0 && h > 0.0);
+        }
+    }
+
+    #[test]
+    fn redmule_grows_with_protection() {
+        let a = |p| {
+            let (b, _) = cluster_blocks(RedMuleConfig::paper(), p);
+            b.iter().find(|x| x.tag == 'R').unwrap().area_um2
+        };
+        assert!(a(Protection::Data) > a(Protection::Baseline));
+        assert!(a(Protection::Full) > 1.2 * a(Protection::Baseline));
+    }
+
+    #[test]
+    fn render_contains_outline_and_legend() {
+        let (mut blocks, _) = cluster_blocks(RedMuleConfig::paper(), Protection::Full);
+        place(&mut blocks);
+        let s = render(&blocks);
+        assert!(s.contains("RedMulE-FT"));
+        assert!(s.contains("TCDM"));
+        assert!(s.starts_with("PULP cluster floorplan"));
+    }
+}

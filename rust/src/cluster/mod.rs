@@ -1,0 +1,508 @@
+//! Host-side driver: the PULP-cluster view of RedMulE-FT.
+//!
+//! [`System`] bundles the accelerator, the ECC TCDM and the DMA/L2
+//! substrate and plays the role of the RISC-V cores in the paper's flow
+//! (§3.3–§3.4):
+//!
+//! 1. stage the matrices into TCDM (DMA from L2),
+//! 2. program the shadowed register-file context — including the
+//!    software-computed XOR parity bits — and commit it,
+//! 3. start the task and service the accelerator,
+//! 4. on interrupt: read + clear the fault-status registers, re-program,
+//!    and re-execute (fault-tolerant mode) or abandon the workload
+//!    (performance mode).
+//!
+//! The interrupt contract is honoured exactly: the host only learns about
+//! an abort by *sampling the IRQ wire*, which the accelerator asserts for
+//! two consecutive cycles so a single transient on the wire cannot hide a
+//! real fault (§3.3).
+
+use crate::dma::{Dma, L2Mem};
+use crate::fault::{FaultCtx, FaultPlan};
+use crate::golden::{GemmProblem, Mat};
+use crate::redmule::regfile::{
+    FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME, REG_W_ADDR,
+    REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
+};
+use crate::redmule::{ExecMode, Protection, RedMule, RedMuleConfig, RunState, TaskLayout};
+use crate::tcdm::Tcdm;
+use crate::{Error, Result};
+
+/// Timeout budget: a run that exceeds `TIMEOUT_FACTOR ×` the fault-free
+/// cycle count is classified as hung (§4.2's "Timeout" row).
+pub const TIMEOUT_FACTOR: u64 = 20;
+
+/// One-time software cost of computing the register-file parity bits on
+/// the cluster cores (§3.2: "limited to a one-time increase of 120 cycles
+/// per workload at most").
+pub const CONFIG_PARITY_CYCLES: u64 = 120;
+
+/// Maximum automatic re-executions after detected faults. The paper's
+/// campaign assumes a single fault per run, so one retry always suffices;
+/// the guard only matters for multi-fault experiments.
+pub const MAX_RETRIES: u32 = 3;
+
+/// How the host re-executes after a detected fault (§3.3 / §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// The paper's evaluated mechanism: discard everything, re-program,
+    /// recompute the full matrix.
+    #[default]
+    FullRestart,
+    /// The paper's §5 future work: resume from the tile latched in the
+    /// accelerator's progress register. Sound because committed Z tiles
+    /// were verified before storing (output checker + gated writes) and
+    /// tiles are idempotent; a conservative (early) resume only redoes
+    /// committed work.
+    TileLevel,
+}
+
+/// Outcome of one hosted execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostOutcome {
+    /// Ran to completion with no detected fault.
+    Completed,
+    /// One or more aborts were detected and the retry succeeded.
+    CompletedAfterRetry,
+    /// A fault was detected in performance mode (no redundant compute to
+    /// retry from under the paper's §3.4 policy) or retries exhausted.
+    Abandoned,
+    /// The accelerator never finished within the cycle budget.
+    TimedOut,
+}
+
+/// Report of one hosted GEMM execution.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub outcome: HostOutcome,
+    /// Accelerator cycles across all attempts.
+    pub cycles: u64,
+    /// Host cycles spent on configuration (incl. parity computation).
+    pub config_cycles: u64,
+    pub retries: u32,
+    /// Fault-status causes accumulated over all aborts.
+    pub fault_causes: u32,
+    /// True if the host observed the IRQ wire asserted at least once.
+    pub irq_seen: bool,
+    /// True if the planned fault actually hit live state / an exercised
+    /// net (false = architecturally masked, e.g. an idle-net transient).
+    pub fault_applied: bool,
+    /// The Z region read back from TCDM.
+    pub z: Mat,
+}
+
+impl RunReport {
+    /// Bit-exact comparison against a golden result.
+    pub fn z_matches(&self, golden: &Mat) -> bool {
+        self.z.bits() == golden.bits()
+    }
+}
+
+/// The cluster: accelerator + memory substrate + host logic.
+#[derive(Debug)]
+pub struct System {
+    pub redmule: RedMule,
+    pub tcdm: Tcdm,
+    pub l2: L2Mem,
+    pub dma: Dma,
+    /// Base TCDM address for staged tasks.
+    task_base: u32,
+    /// Re-execution policy after detected faults.
+    pub recovery: RecoveryPolicy,
+}
+
+impl System {
+    pub fn new(cfg: RedMuleConfig, protection: Protection) -> Self {
+        Self {
+            redmule: RedMule::new(cfg, protection),
+            tcdm: Tcdm::cluster_default(),
+            l2: L2Mem::new(1 << 20),
+            dma: Dma::new(),
+            task_base: 0x100,
+            recovery: RecoveryPolicy::FullRestart,
+        }
+    }
+
+    /// A smaller TCDM for tests that exercise address wrapping.
+    pub fn with_tcdm(cfg: RedMuleConfig, protection: Protection, tcdm: Tcdm) -> Self {
+        Self {
+            redmule: RedMule::new(cfg, protection),
+            tcdm,
+            l2: L2Mem::new(1 << 20),
+            dma: Dma::new(),
+            task_base: 0x100,
+            recovery: RecoveryPolicy::FullRestart,
+        }
+    }
+
+    /// Select the post-detection re-execution policy.
+    pub fn with_recovery(mut self, policy: RecoveryPolicy) -> Self {
+        self.recovery = policy;
+        self
+    }
+
+    pub fn protection(&self) -> Protection {
+        self.redmule.protection
+    }
+
+    /// Stage a GEMM problem into TCDM (DMA in from L2) and return its
+    /// layout. Z is zeroed so stale results can't alias a correct one.
+    pub fn stage(&mut self, p: &GemmProblem) -> TaskLayout {
+        let spec = p.spec;
+        let layout = TaskLayout::contiguous(
+            self.task_base,
+            spec.m as u32,
+            spec.n as u32,
+            spec.k as u32,
+        );
+        assert!(
+            (layout.footprint() as usize) < self.tcdm.size_bytes(),
+            "task does not fit in TCDM"
+        );
+        // Host writes the matrices to L2, DMA moves them into TCDM. DMA
+        // lengths are in bytes, word-padded (the regions are 4-aligned and
+        // disjoint, so the pad bytes never alias the next matrix).
+        let word_pad = |elems: usize| (2 * elems).div_ceil(4) * 4;
+        self.l2.write_fp16_slice(layout.x_addr as usize, &p.x.data);
+        self.dma.copy_in(
+            &self.l2,
+            layout.x_addr as usize,
+            &mut self.tcdm,
+            layout.x_addr,
+            word_pad(p.x.data.len()),
+        );
+        self.l2.write_fp16_slice(layout.w_addr as usize, &p.w.data);
+        self.dma.copy_in(
+            &self.l2,
+            layout.w_addr as usize,
+            &mut self.tcdm,
+            layout.w_addr,
+            word_pad(p.w.data.len()),
+        );
+        self.l2.write_fp16_slice(layout.y_addr as usize, &p.y.data);
+        self.dma.copy_in(
+            &self.l2,
+            layout.y_addr as usize,
+            &mut self.tcdm,
+            layout.y_addr,
+            word_pad(p.y.data.len()),
+        );
+        let zeros = vec![crate::fp::Fp16::ZERO; spec.m * spec.k];
+        self.tcdm.write_fp16_slice(layout.z_addr, &zeros);
+        layout
+    }
+
+    /// Program the shadowed register-file context for `layout` and commit
+    /// it. Returns the host cycles spent (parity computation included for
+    /// protected builds).
+    pub fn program(&mut self, layout: &TaskLayout, mode: ExecMode) -> u64 {
+        self.program_with_resume(layout, mode, None)
+    }
+
+    /// Like [`System::program`], optionally arming tile-level recovery at
+    /// `resume = (mt, kt)`.
+    pub fn program_with_resume(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        resume: Option<(u16, u16)>,
+    ) -> u64 {
+        let mut flags = match mode {
+            ExecMode::FaultTolerant => FLAG_FT_MODE,
+            ExecMode::Performance => 0,
+        };
+        let resume_word = match resume {
+            Some((mt, kt)) => {
+                flags |= FLAG_TILE_RECOVERY;
+                (u32::from(mt) << 16) | u32::from(kt)
+            }
+            None => 0,
+        };
+        self.redmule.regfile.host_program(&[
+            (REG_X_ADDR, layout.x_addr),
+            (REG_W_ADDR, layout.w_addr),
+            (REG_Y_ADDR, layout.y_addr),
+            (REG_Z_ADDR, layout.z_addr),
+            (REG_M, layout.m),
+            (REG_N, layout.n),
+            (REG_K, layout.k),
+            (REG_FLAGS, flags),
+            (REG_RESUME, resume_word),
+        ]);
+        self.redmule.regfile.commit();
+        if self.redmule.protection.has_control_protection() {
+            CONFIG_PARITY_CYCLES
+        } else {
+            8 // plain config writes
+        }
+    }
+
+    /// Execute a staged + programmed task to completion, abort, or
+    /// timeout. Returns (aborted, cycles_used, irq_seen).
+    fn execute_attempt(
+        &mut self,
+        ctx: &mut FaultCtx,
+        budget: u64,
+    ) -> (bool, u64, bool) {
+        self.redmule.start();
+        let start_cycle = self.redmule.cycle;
+        let mut irq_seen = false;
+        loop {
+            self.redmule.step(&mut self.tcdm, ctx);
+            // The host samples the IRQ wire every cycle (§3.3: asserted
+            // for two consecutive cycles so one transient cannot hide it).
+            irq_seen |= self.redmule.irq();
+            match self.redmule.state() {
+                RunState::Done => return (false, self.redmule.cycle - start_cycle, irq_seen),
+                RunState::Aborted => return (true, self.redmule.cycle - start_cycle, irq_seen),
+                _ => {}
+            }
+            if self.redmule.cycle - start_cycle > budget {
+                return (false, self.redmule.cycle - start_cycle, irq_seen);
+            }
+        }
+    }
+
+    /// Hosted execution with an optional fault plan (the campaign's unit
+    /// of work). Implements the §3.3 recovery flow.
+    pub fn run_gemm_with_fault(
+        &mut self,
+        p: &GemmProblem,
+        mode: ExecMode,
+        plan: Option<FaultPlan>,
+    ) -> Result<RunReport> {
+        if p.spec.m == 0 || p.spec.n == 0 || p.spec.k == 0 {
+            return Err(Error::Config("degenerate GEMM".into()));
+        }
+        // Power-on-equivalent accelerator state: campaign runs are
+        // independent experiments and cycle numbering must restart at 0
+        // (fault plans are expressed in absolute cycles).
+        self.redmule.reset();
+        let layout = self.stage(p);
+        self.run_staged_with_fault(&layout, mode, plan)
+    }
+
+    /// Like [`System::run_gemm_with_fault`] but assuming the task is
+    /// already staged at `layout` (and the accelerator freshly reset).
+    /// The campaign uses this with a snapshot/restore of the TCDM image:
+    /// staging through the DMA + ECC encoders costs more than the run
+    /// itself on small workloads, and the staged bits are identical for
+    /// every injection (see EXPERIMENTS.md §Perf).
+    pub fn run_staged_with_fault(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plan: Option<FaultPlan>,
+    ) -> Result<RunReport> {
+        let layout = *layout;
+        let mut config_cycles = self.program(&layout, mode);
+        let mut ctx = match plan {
+            Some(pl) => FaultCtx::with_plan(pl),
+            None => FaultCtx::clean(),
+        };
+
+        let nominal = self.redmule.nominal_cycles().max(1);
+        let budget = nominal * TIMEOUT_FACTOR;
+
+        let mut total_cycles = 0u64;
+        let mut retries = 0u32;
+        let mut causes = 0u32;
+        let mut irq_seen_any = false;
+
+        loop {
+            let (aborted, cycles, irq_seen) = self.execute_attempt(&mut ctx, budget);
+            total_cycles += cycles;
+            irq_seen_any |= irq_seen;
+
+            if self.redmule.state() == RunState::Done {
+                let z = self.read_z(&layout);
+                let outcome = if retries > 0 {
+                    HostOutcome::CompletedAfterRetry
+                } else {
+                    HostOutcome::Completed
+                };
+                return Ok(RunReport {
+                    outcome,
+                    cycles: total_cycles,
+                    config_cycles,
+                    retries,
+                    fault_causes: causes,
+                    irq_seen: irq_seen_any,
+                    fault_applied: ctx.applied,
+                    z,
+                });
+            }
+
+            if aborted && irq_seen {
+                // Interrupt service: read the progress register, then
+                // read + clear the status registers.
+                let progress = self.redmule.fault_unit.progress_tile();
+                let (status, _count) = self.redmule.fault_unit.read_clear();
+                causes |= status;
+                let retry_allowed = mode == ExecMode::FaultTolerant
+                    || self.redmule.protection.has_control_protection()
+                    || self.redmule.protection.has_per_ce_checkers();
+                if !retry_allowed || retries >= MAX_RETRIES {
+                    return Ok(RunReport {
+                        outcome: HostOutcome::Abandoned,
+                        cycles: total_cycles,
+                        config_cycles,
+                        retries,
+                        fault_causes: causes,
+                        irq_seen: irq_seen_any,
+                        fault_applied: ctx.applied,
+                        z: self.read_z(&layout),
+                    });
+                }
+                retries += 1;
+                // Re-program (repairs any configuration upset — the host
+                // rewrites values *and* parity) and re-execute. The paper
+                // assumes no further faults during recomputation; a
+                // transient plan has already fired or missed, and the
+                // plan's single fault stays armed only if its cycle is
+                // still ahead.
+                let resume = match self.recovery {
+                    RecoveryPolicy::FullRestart => None,
+                    RecoveryPolicy::TileLevel => Some(progress),
+                };
+                config_cycles += self.program_with_resume(&layout, mode, resume);
+                continue;
+            }
+
+            // Aborted but the host never saw the IRQ (only possible under
+            // injected faults on the interrupt path), or budget exhausted:
+            // the workload hangs until the watchdog fires.
+            return Ok(RunReport {
+                outcome: HostOutcome::TimedOut,
+                cycles: total_cycles,
+                config_cycles,
+                retries,
+                fault_causes: causes,
+                irq_seen: irq_seen_any,
+                fault_applied: ctx.applied,
+                z: self.read_z(&layout),
+            });
+        }
+    }
+
+    /// Fault-free hosted execution.
+    pub fn run_gemm(&mut self, p: &GemmProblem, mode: ExecMode) -> Result<RunReport> {
+        self.run_gemm_with_fault(p, mode, None)
+    }
+
+    /// Read the Z region back from TCDM.
+    pub fn read_z(&mut self, layout: &TaskLayout) -> Mat {
+        let n = (layout.m * layout.k) as usize;
+        let data = self.tcdm.read_fp16_slice(layout.z_addr, n);
+        Mat {
+            rows: layout.m as usize,
+            cols: layout.k as usize,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::GemmSpec;
+
+    fn run(protection: Protection, mode: ExecMode, spec: GemmSpec, seed: u64) -> (RunReport, Mat) {
+        let mut sys = System::new(RedMuleConfig::paper(), protection);
+        let p = GemmProblem::random(&spec, seed);
+        let golden = p.golden_z();
+        let r = sys.run_gemm(&p, mode).unwrap();
+        (r, golden)
+    }
+
+    #[test]
+    fn baseline_performance_mode_is_bit_exact() {
+        let (r, golden) = run(
+            Protection::Baseline,
+            ExecMode::Performance,
+            GemmSpec::paper_workload(),
+            42,
+        );
+        assert_eq!(r.outcome, HostOutcome::Completed);
+        assert!(r.z_matches(&golden), "simulator must equal golden");
+        assert_eq!(r.retries, 0);
+        assert!(!r.irq_seen);
+    }
+
+    #[test]
+    fn full_ft_mode_is_bit_exact() {
+        let (r, golden) = run(
+            Protection::Full,
+            ExecMode::FaultTolerant,
+            GemmSpec::paper_workload(),
+            43,
+        );
+        assert_eq!(r.outcome, HostOutcome::Completed);
+        assert!(r.z_matches(&golden));
+    }
+
+    #[test]
+    fn data_ft_mode_is_bit_exact() {
+        let (r, golden) = run(
+            Protection::Data,
+            ExecMode::FaultTolerant,
+            GemmSpec::paper_workload(),
+            44,
+        );
+        assert_eq!(r.outcome, HostOutcome::Completed);
+        assert!(r.z_matches(&golden));
+    }
+
+    #[test]
+    fn odd_shapes_are_handled() {
+        for (m, n, k) in [(1, 1, 1), (5, 7, 3), (13, 17, 19), (12, 16, 16), (24, 16, 25)] {
+            for (prot, mode) in [
+                (Protection::Baseline, ExecMode::Performance),
+                (Protection::Full, ExecMode::FaultTolerant),
+                (Protection::Full, ExecMode::Performance),
+            ] {
+                let (r, golden) = run(prot, mode, GemmSpec::new(m, n, k), 7 + m as u64);
+                assert_eq!(r.outcome, HostOutcome::Completed, "({m},{n},{k}) {prot:?} {mode:?}");
+                assert!(
+                    r.z_matches(&golden),
+                    "({m},{n},{k}) {prot:?} {mode:?} mismatch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ft_mode_costs_about_2x_cycles() {
+        let spec = GemmSpec::new(12, 64, 48);
+        let (perf, _) = run(Protection::Full, ExecMode::Performance, spec, 5);
+        let (ft, _) = run(Protection::Full, ExecMode::FaultTolerant, spec, 5);
+        let ratio = ft.cycles as f64 / perf.cycles as f64;
+        assert!(
+            (1.6..=2.4).contains(&ratio),
+            "FT/perf cycle ratio {ratio:.2} should be ≈2"
+        );
+    }
+
+    #[test]
+    fn config_parity_cost_only_on_protected_builds() {
+        let spec = GemmSpec::paper_workload();
+        let (full, _) = run(Protection::Full, ExecMode::FaultTolerant, spec, 9);
+        let (base, _) = run(Protection::Baseline, ExecMode::Performance, spec, 9);
+        assert_eq!(full.config_cycles, CONFIG_PARITY_CYCLES);
+        assert!(base.config_cycles < 20);
+    }
+
+    #[test]
+    fn ft_mode_on_baseline_build_silently_degrades_to_performance() {
+        // Requesting FT mode without data-protection hardware cannot
+        // duplicate rows; the accelerator runs unprotected.
+        let (r, golden) = run(
+            Protection::Baseline,
+            ExecMode::FaultTolerant,
+            GemmSpec::paper_workload(),
+            11,
+        );
+        assert_eq!(r.outcome, HostOutcome::Completed);
+        assert!(r.z_matches(&golden));
+    }
+}

@@ -1,0 +1,304 @@
+//! Mixed-criticality task coordinator — the system-level face of the
+//! paper's *runtime-configurable* fault tolerance (§1, §3.4).
+//!
+//! The motivation in the paper's introduction is mixed-criticality
+//! autonomous systems: neural-network feature extraction wants maximum
+//! throughput, safety-critical control tasks want guaranteed detection.
+//! RedMulE-FT serves both from one accelerator because the mode lives in
+//! a register, not in the netlist. The coordinator is the runtime that
+//! exploits that: a leader thread owns a queue of GEMM tasks tagged with
+//! a criticality class, maps each class to an execution mode and a retry
+//! policy, drives one or more [`System`] workers, and accounts for every
+//! cycle so the throughput/reliability trade-off is visible in metrics.
+//!
+//! Policy (matching §3.4 semantics):
+//!
+//! * `Critical` tasks run in fault-tolerant mode; detected faults are
+//!   retried on the spot (bounded by [`crate::cluster::MAX_RETRIES`]).
+//! * `BestEffort` tasks run in performance mode; on protected builds a
+//!   detected control-path fault aborts the task, and the coordinator
+//!   either re-queues or fails it depending on the policy.
+
+use crate::cluster::{HostOutcome, RunReport, System};
+use crate::golden::{GemmProblem, Mat};
+use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+
+/// Criticality classes of submitted work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Criticality {
+    /// Safety-critical: must be fault-tolerant; silent corruption is
+    /// unacceptable.
+    Critical,
+    /// Throughput-oriented: runs unprotected at 2× speed.
+    BestEffort,
+}
+
+impl Criticality {
+    pub fn exec_mode(self) -> ExecMode {
+        match self {
+            Criticality::Critical => ExecMode::FaultTolerant,
+            Criticality::BestEffort => ExecMode::Performance,
+        }
+    }
+}
+
+/// One unit of work.
+#[derive(Debug, Clone)]
+pub struct TaskRequest {
+    pub id: u64,
+    pub criticality: Criticality,
+    pub problem: GemmProblem,
+    /// Re-queue budget for best-effort tasks aborted by the control-path
+    /// checkers.
+    pub requeue_budget: u32,
+}
+
+impl TaskRequest {
+    pub fn new(id: u64, criticality: Criticality, problem: GemmProblem) -> Self {
+        Self {
+            id,
+            criticality,
+            problem,
+            requeue_budget: 1,
+        }
+    }
+}
+
+/// Completed-task record.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub id: u64,
+    pub criticality: Criticality,
+    pub outcome: HostOutcome,
+    pub retries: u32,
+    pub requeues: u32,
+    pub cycles: u64,
+    pub z: Mat,
+}
+
+/// Aggregate coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub completed_after_retry: u64,
+    pub requeued: u64,
+    pub failed: u64,
+    pub critical_cycles: u64,
+    pub best_effort_cycles: u64,
+    pub config_cycles: u64,
+}
+
+impl Metrics {
+    pub fn total_cycles(&self) -> u64 {
+        self.critical_cycles + self.best_effort_cycles + self.config_cycles
+    }
+}
+
+/// The leader: owns the queue and the accelerator system(s).
+pub struct Coordinator {
+    queue: VecDeque<TaskRequest>,
+    system: System,
+    pub metrics: Metrics,
+    results: Vec<TaskResult>,
+    next_id: u64,
+}
+
+impl Coordinator {
+    pub fn new(cfg: RedMuleConfig, protection: Protection) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            system: System::new(cfg, protection),
+            metrics: Metrics::default(),
+            results: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn protection(&self) -> Protection {
+        self.system.protection()
+    }
+
+    /// Enqueue a task; returns its id.
+    pub fn submit(&mut self, criticality: Criticality, problem: GemmProblem) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(TaskRequest::new(id, criticality, problem));
+        self.metrics.submitted += 1;
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn results(&self) -> &[TaskResult] {
+        &self.results
+    }
+
+    /// Run one queued task to completion (the leader loop's body).
+    /// Returns `Ok(None)` when the queue is empty or the task was
+    /// re-queued.
+    pub fn step(&mut self) -> Result<Option<&TaskResult>> {
+        let Some(task) = self.queue.pop_front() else {
+            return Ok(None);
+        };
+        let mode = task.criticality.exec_mode();
+        if task.criticality == Criticality::Critical
+            && !self.system.protection().has_data_protection()
+        {
+            return Err(Error::Config(
+                "critical tasks require a data-protected build".into(),
+            ));
+        }
+        let report = self.system.run_gemm(&task.problem, mode)?;
+        self.account(&task, &report);
+
+        match report.outcome {
+            HostOutcome::Completed | HostOutcome::CompletedAfterRetry => {
+                self.finish(task, report);
+                Ok(self.results.last())
+            }
+            HostOutcome::Abandoned if task.requeue_budget > 0 => {
+                // Best-effort abort: re-queue once at the tail.
+                self.metrics.requeued += 1;
+                let mut requeued = task;
+                requeued.requeue_budget -= 1;
+                self.queue.push_back(requeued);
+                Ok(None)
+            }
+            HostOutcome::Abandoned | HostOutcome::TimedOut => {
+                self.metrics.failed += 1;
+                self.finish(task, report);
+                Ok(self.results.last())
+            }
+        }
+    }
+
+    /// Drain the queue, returning how many tasks completed successfully.
+    pub fn run_to_idle(&mut self) -> Result<u64> {
+        let mut steps = 0u64;
+        while !self.queue.is_empty() {
+            self.step()?;
+            steps += 1;
+            if steps > 1_000_000 {
+                return Err(Error::Sim("coordinator livelock".into()));
+            }
+        }
+        Ok(self.metrics.completed)
+    }
+
+    fn account(&mut self, task: &TaskRequest, report: &RunReport) {
+        match task.criticality {
+            Criticality::Critical => self.metrics.critical_cycles += report.cycles,
+            Criticality::BestEffort => self.metrics.best_effort_cycles += report.cycles,
+        }
+        self.metrics.config_cycles += report.config_cycles;
+    }
+
+    fn finish(&mut self, task: TaskRequest, report: RunReport) {
+        if matches!(
+            report.outcome,
+            HostOutcome::Completed | HostOutcome::CompletedAfterRetry
+        ) {
+            self.metrics.completed += 1;
+            if report.outcome == HostOutcome::CompletedAfterRetry {
+                self.metrics.completed_after_retry += 1;
+            }
+        }
+        self.results.push(TaskResult {
+            id: task.id,
+            criticality: task.criticality,
+            outcome: report.outcome,
+            retries: report.retries,
+            requeues: 1u32.saturating_sub(task.requeue_budget),
+            cycles: report.cycles,
+            z: report.z,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::golden::GemmSpec;
+
+    fn problems(n: usize, seed: u64) -> Vec<GemmProblem> {
+        (0..n)
+            .map(|i| GemmProblem::random(&GemmSpec::paper_workload(), seed + i as u64))
+            .collect()
+    }
+
+    #[test]
+    fn mixed_queue_completes_and_results_are_golden() {
+        let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+        let ps = problems(6, 10);
+        for (i, p) in ps.iter().enumerate() {
+            let crit = if i % 2 == 0 {
+                Criticality::Critical
+            } else {
+                Criticality::BestEffort
+            };
+            c.submit(crit, p.clone());
+        }
+        let done = c.run_to_idle().unwrap();
+        assert_eq!(done, 6);
+        for r in c.results() {
+            let golden = ps[r.id as usize].golden_z();
+            assert_eq!(r.z.bits(), golden.bits(), "task {}", r.id);
+        }
+        // Critical tasks pay ~2× the cycles of best-effort ones.
+        let crit: Vec<_> = c
+            .results()
+            .iter()
+            .filter(|r| r.criticality == Criticality::Critical)
+            .collect();
+        let be: Vec<_> = c
+            .results()
+            .iter()
+            .filter(|r| r.criticality == Criticality::BestEffort)
+            .collect();
+        let avg = |v: &[&TaskResult]| {
+            v.iter().map(|r| r.cycles).sum::<u64>() as f64 / v.len() as f64
+        };
+        let ratio = avg(&crit) / avg(&be);
+        assert!((1.5..=2.5).contains(&ratio), "FT/perf ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn critical_on_unprotected_build_is_rejected() {
+        let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Baseline);
+        c.submit(Criticality::Critical, problems(1, 3)[0].clone());
+        assert!(c.step().is_err());
+    }
+
+    #[test]
+    fn best_effort_on_baseline_build_works() {
+        let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Baseline);
+        let p = problems(1, 4)[0].clone();
+        c.submit(Criticality::BestEffort, p.clone());
+        c.run_to_idle().unwrap();
+        assert_eq!(c.metrics.completed, 1);
+        assert_eq!(c.results()[0].z.bits(), p.golden_z().bits());
+    }
+
+    #[test]
+    fn metrics_track_cycles_by_class() {
+        let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+        let ps = problems(2, 20);
+        c.submit(Criticality::Critical, ps[0].clone());
+        c.submit(Criticality::BestEffort, ps[1].clone());
+        c.run_to_idle().unwrap();
+        assert!(c.metrics.critical_cycles > c.metrics.best_effort_cycles);
+        assert!(c.metrics.config_cycles >= 120);
+        assert_eq!(c.metrics.submitted, 2);
+    }
+
+    #[test]
+    fn empty_queue_steps_to_none() {
+        let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+        assert!(c.step().unwrap().is_none());
+    }
+}

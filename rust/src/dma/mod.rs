@@ -1,0 +1,146 @@
+//! Cluster DMA engine model.
+//!
+//! Moves data between the (flat, un-modelled-latency) L2 memory and the
+//! TCDM, as the PULP cluster's dedicated DMA does for kernel staging. The
+//! timing model charges a programming overhead per transfer plus a
+//! bandwidth-limited copy (8 bytes/cycle toward TCDM, matching a 64-bit
+//! AXI port), and reports the cycles consumed so the performance model can
+//! account for staging in end-to-end numbers.
+
+use crate::fp::Fp16;
+use crate::tcdm::Tcdm;
+
+/// Cycles to program one DMA transfer descriptor from a core.
+pub const PROGRAM_CYCLES: u64 = 10;
+/// Bytes moved per cycle once a transfer is running.
+pub const BYTES_PER_CYCLE: u64 = 8;
+
+/// Flat external (L2) memory.
+#[derive(Debug, Clone, Default)]
+pub struct L2Mem {
+    pub bytes: Vec<u8>,
+}
+
+impl L2Mem {
+    pub fn new(size: usize) -> Self {
+        Self { bytes: vec![0; size] }
+    }
+
+    pub fn write_fp16_slice(&mut self, addr: usize, values: &[Fp16]) {
+        for (i, v) in values.iter().enumerate() {
+            let b = v.to_bits().to_le_bytes();
+            self.bytes[addr + 2 * i] = b[0];
+            self.bytes[addr + 2 * i + 1] = b[1];
+        }
+    }
+
+    pub fn read_fp16_slice(&self, addr: usize, n: usize) -> Vec<Fp16> {
+        (0..n)
+            .map(|i| {
+                Fp16::from_bits(u16::from_le_bytes([
+                    self.bytes[addr + 2 * i],
+                    self.bytes[addr + 2 * i + 1],
+                ]))
+            })
+            .collect()
+    }
+}
+
+/// Completed-transfer record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub bytes: u64,
+    pub cycles: u64,
+}
+
+/// The DMA engine: synchronous copy + cycle accounting.
+#[derive(Debug, Default)]
+pub struct Dma {
+    pub total_cycles: u64,
+    pub total_bytes: u64,
+    pub transfers: u64,
+}
+
+impl Dma {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn charge(&mut self, bytes: u64) -> Transfer {
+        let cycles = PROGRAM_CYCLES + bytes.div_ceil(BYTES_PER_CYCLE);
+        self.total_cycles += cycles;
+        self.total_bytes += bytes;
+        self.transfers += 1;
+        Transfer { bytes, cycles }
+    }
+
+    /// L2 → TCDM copy (word granular; `len` in bytes, 4-aligned).
+    pub fn copy_in(&mut self, l2: &L2Mem, l2_addr: usize, tcdm: &mut Tcdm, tcdm_addr: u32, len: usize) -> Transfer {
+        assert_eq!(len % 4, 0, "DMA transfers are word-granular");
+        for i in (0..len).step_by(4) {
+            let w = u32::from_le_bytes([
+                l2.bytes[l2_addr + i],
+                l2.bytes[l2_addr + i + 1],
+                l2.bytes[l2_addr + i + 2],
+                l2.bytes[l2_addr + i + 3],
+            ]);
+            tcdm.write_word(tcdm_addr + i as u32, w);
+        }
+        self.charge(len as u64)
+    }
+
+    /// TCDM → L2 copy.
+    pub fn copy_out(&mut self, tcdm: &mut Tcdm, tcdm_addr: u32, l2: &mut L2Mem, l2_addr: usize, len: usize) -> Transfer {
+        assert_eq!(len % 4, 0, "DMA transfers are word-granular");
+        for i in (0..len).step_by(4) {
+            let (w, _) = tcdm.read_word(tcdm_addr + i as u32);
+            l2.bytes[l2_addr + i..l2_addr + i + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        self.charge(len as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_through_tcdm() {
+        let mut l2 = L2Mem::new(4096);
+        let mut l2_out = L2Mem::new(4096);
+        let mut tcdm = Tcdm::new(4, 1024);
+        let mut dma = Dma::new();
+
+        let vals: Vec<Fp16> = (0..64).map(|i| Fp16::from_f64(i as f64 * 0.25 - 4.0)).collect();
+        l2.write_fp16_slice(0, &vals);
+        let t1 = dma.copy_in(&l2, 0, &mut tcdm, 0x40, 128);
+        assert_eq!(t1.bytes, 128);
+        assert_eq!(t1.cycles, PROGRAM_CYCLES + 16);
+
+        let got = tcdm.read_fp16_slice(0x40, 64);
+        assert_eq!(got, vals);
+
+        dma.copy_out(&mut tcdm, 0x40, &mut l2_out, 256, 128);
+        assert_eq!(l2_out.read_fp16_slice(256, 64), vals);
+        assert_eq!(dma.transfers, 2);
+        assert_eq!(dma.total_bytes, 256);
+    }
+
+    #[test]
+    fn cycle_model_rounds_up() {
+        let mut dma = Dma::new();
+        let l2 = L2Mem::new(64);
+        let mut tcdm = Tcdm::new(4, 256);
+        let t = dma.copy_in(&l2, 0, &mut tcdm, 0, 12);
+        assert_eq!(t.cycles, PROGRAM_CYCLES + 2); // 12 bytes over 8 B/cyc
+    }
+
+    #[test]
+    #[should_panic(expected = "word-granular")]
+    fn unaligned_length_rejected() {
+        let mut dma = Dma::new();
+        let l2 = L2Mem::new(64);
+        let mut tcdm = Tcdm::new(4, 256);
+        dma.copy_in(&l2, 0, &mut tcdm, 0, 6);
+    }
+}

@@ -1,0 +1,91 @@
+//! Error-detecting / error-correcting codes.
+//!
+//! Three codes are used across the system, mirroring the paper:
+//!
+//! * **SECDED Hamming (39,32)** — protects TCDM words and the
+//!   interconnect (the "enhanced PULP cluster with ECC-protected
+//!   interconnect and TCDM" of §3). Single-bit errors are corrected,
+//!   double-bit errors detected.
+//! * **Single parity bits** — accompany every broadcast weight element so
+//!   each CE can verify `W` at the point of use (§3.1), and protect the
+//!   configuration register file via host-computed XOR parity (§3.2).
+//!
+//! The encoder/decoder are deliberately written at bit level (not table
+//! driven) so the fault injector can flip bits *inside* codewords and the
+//! area model can count their gates.
+
+pub mod secded;
+
+pub use secded::{decode32, encode32, DecodeStatus, CODE_BITS, DATA_BITS};
+
+use crate::fp::Fp16;
+use crate::util::bits::{parity_u32, parity_u64};
+
+/// Odd parity bit for a 16-bit weight element (odd so that an all-zero
+/// wire bundle — a classic stuck/idle pattern — is detected as invalid).
+#[inline]
+pub fn weight_parity(w: Fp16) -> u8 {
+    (parity_u32(w.to_bits() as u32) ^ 1) as u8
+}
+
+/// Check a weight element against its parity bit.
+#[inline]
+pub fn weight_parity_ok(w: Fp16, p: u8) -> bool {
+    weight_parity(w) == (p & 1)
+}
+
+/// XOR parity over a configuration word, as computed by the cluster cores
+/// before offloading (§3.2: "we extend it with XOR-based parity bits
+/// computed by the cluster cores").
+#[inline]
+pub fn config_parity(word: u32) -> u8 {
+    parity_u32(word) as u8
+}
+
+/// XOR parity over a full register-file image: one bit per word.
+pub fn config_parity_vec(words: &[u32]) -> Vec<u8> {
+    words.iter().map(|&w| config_parity(w)).collect()
+}
+
+/// Parity of a 64-bit beat, used on wide data links.
+#[inline]
+pub fn beat_parity(x: u64) -> u8 {
+    parity_u64(x) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_parity_detects_any_single_flip() {
+        for bits in (0u16..=0xFFFF).step_by(13) {
+            let w = Fp16::from_bits(bits);
+            let p = weight_parity(w);
+            assert!(weight_parity_ok(w, p));
+            for b in 0..16 {
+                let w2 = Fp16::from_bits(bits ^ (1 << b));
+                assert!(!weight_parity_ok(w2, p), "flip bit {b} of 0x{bits:04X}");
+            }
+            // Parity-bit flip is also detected.
+            assert!(!weight_parity_ok(w, p ^ 1));
+        }
+    }
+
+    #[test]
+    fn all_zero_bundle_is_invalid() {
+        // Odd parity: data=0 requires p=1, so (0, 0) must fail.
+        assert!(!weight_parity_ok(Fp16::ZERO, 0));
+    }
+
+    #[test]
+    fn config_parity_flags_single_bit_corruption() {
+        let words = [0u32, 0xFFFF_FFFF, 0xDEAD_BEEF, 0x1234_5678];
+        let ps = config_parity_vec(&words);
+        for (i, &w) in words.iter().enumerate() {
+            for b in 0..32 {
+                assert_ne!(config_parity(w ^ (1 << b)), ps[i]);
+            }
+        }
+    }
+}

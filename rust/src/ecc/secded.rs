@@ -1,0 +1,179 @@
+//! SECDED Hamming (39,32): 32 data bits, 6 Hamming check bits, 1 overall
+//! parity bit. Corrects any single-bit error, detects any double-bit error.
+//!
+//! Codeword layout (classic Hamming positions): bit positions 1..=38 hold
+//! check bits at powers of two (1,2,4,8,16,32) and data bits elsewhere;
+//! position 0 holds the overall (even) parity over positions 1..=38.
+
+pub const DATA_BITS: u32 = 32;
+pub const CODE_BITS: u32 = 39;
+
+/// Result of decoding a (possibly corrupted) codeword.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeStatus {
+    /// No error detected.
+    Clean,
+    /// Single-bit error corrected (codeword bit position reported).
+    Corrected(u32),
+    /// Uncorrectable double-bit error detected.
+    DoubleError,
+}
+
+/// Positions 1..=38 that carry data (everything that isn't a power of two).
+fn data_positions() -> impl Iterator<Item = u32> {
+    (1u32..39).filter(|p| !p.is_power_of_two())
+}
+
+/// Encode 32 data bits into a 39-bit codeword (stored in the low bits).
+pub fn encode32(data: u32) -> u64 {
+    let mut code: u64 = 0;
+    // Scatter data bits into non-power-of-two positions.
+    for (i, p) in data_positions().enumerate() {
+        if (data >> i) & 1 == 1 {
+            code |= 1 << p;
+        }
+    }
+    // Hamming check bits: check bit at position 2^k covers positions with
+    // bit k set in their index.
+    for k in 0..6 {
+        let pbit = 1u32 << k;
+        let mut parity = 0u64;
+        for p in 1..39u32 {
+            if p & pbit != 0 && !p.is_power_of_two() {
+                parity ^= (code >> p) & 1;
+            }
+        }
+        if parity == 1 {
+            code |= 1 << pbit;
+        }
+    }
+    // Overall even parity over positions 1..=38 goes to position 0.
+    let overall = ((code >> 1).count_ones() & 1) as u64;
+    code | overall
+}
+
+/// Decode a 39-bit codeword, correcting single errors.
+pub fn decode32(code: u64) -> (u32, DecodeStatus) {
+    // Recompute the syndrome.
+    let mut syndrome = 0u32;
+    for k in 0..6 {
+        let pbit = 1u32 << k;
+        let mut parity = 0u64;
+        for p in 1..39u32 {
+            if p & pbit != 0 {
+                parity ^= (code >> p) & 1;
+            }
+        }
+        if parity == 1 {
+            syndrome |= pbit;
+        }
+    }
+    let overall = (code.count_ones() & 1) as u64; // parity over all 39 bits
+
+    let mut corrected = code;
+    let status = match (syndrome, overall & 1) {
+        (0, 0) => DecodeStatus::Clean,
+        (0, _) => {
+            // Overall parity bit itself flipped.
+            corrected ^= 1;
+            DecodeStatus::Corrected(0)
+        }
+        (s, 1) => {
+            // Single-bit error at codeword position s.
+            if s < 39 {
+                corrected ^= 1 << s;
+                DecodeStatus::Corrected(s)
+            } else {
+                DecodeStatus::DoubleError
+            }
+        }
+        (_, _) => DecodeStatus::DoubleError,
+    };
+
+    if status == DecodeStatus::DoubleError {
+        // Return the raw data bits; callers must treat them as poisoned.
+        return (gather(code), status);
+    }
+    (gather(corrected), status)
+}
+
+fn gather(code: u64) -> u32 {
+    let mut data = 0u32;
+    for (i, p) in data_positions().enumerate() {
+        if (code >> p) & 1 == 1 {
+            data |= 1 << i;
+        }
+    }
+    data
+}
+
+/// Gate-count estimate for one encoder (XOR tree): used by the area model.
+pub fn encoder_xor_count() -> u32 {
+    // Each of the 6 check bits XORs ~18 inputs; overall parity XORs 38.
+    6 * 18 + 38
+}
+
+/// Gate-count estimate for one decoder (syndrome + correct mux).
+pub fn decoder_xor_count() -> u32 {
+    6 * 19 + 39 + 39 // syndrome trees + overall parity + correction muxes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn clean_round_trip() {
+        let mut r = Xoshiro256::new(0xECC);
+        for _ in 0..10_000 {
+            let d = r.next_u32();
+            let c = encode32(d);
+            assert!(c < (1 << 39));
+            let (back, st) = decode32(c);
+            assert_eq!(back, d);
+            assert_eq!(st, DecodeStatus::Clean);
+        }
+    }
+
+    #[test]
+    fn corrects_every_single_bit_error() {
+        let mut r = Xoshiro256::new(0xECC1);
+        for _ in 0..500 {
+            let d = r.next_u32();
+            let c = encode32(d);
+            for b in 0..39u32 {
+                let (back, st) = decode32(c ^ (1 << b));
+                assert_eq!(back, d, "data recovered after flipping bit {b}");
+                assert_eq!(st, DecodeStatus::Corrected(b));
+            }
+        }
+    }
+
+    #[test]
+    fn detects_every_double_bit_error() {
+        let mut r = Xoshiro256::new(0xECC2);
+        for _ in 0..100 {
+            let d = r.next_u32();
+            let c = encode32(d);
+            for b1 in 0..39u32 {
+                for b2 in (b1 + 1)..39u32 {
+                    let (_, st) = decode32(c ^ (1 << b1) ^ (1 << b2));
+                    assert_eq!(
+                        st,
+                        DecodeStatus::DoubleError,
+                        "double flip {b1},{b2} must be detected"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_data_distinct_codewords() {
+        // Injectivity sanity (Hamming distance >= 4 between codewords).
+        let c1 = encode32(0);
+        let c2 = encode32(1);
+        assert!((c1 ^ c2).count_ones() >= 4);
+    }
+}

@@ -1,0 +1,530 @@
+//! Fault-site registry: the sampling population for the SFI campaign.
+//!
+//! The paper injects single transient faults into **uniformly chosen
+//! combinational nets** of the synthesized netlist (clock/reset excluded).
+//! The simulator has no netlist, so the registry approximates uniform net
+//! sampling with **area-weighted architectural-site sampling**: every
+//! modelled signal/state site is enumerated with a weight proportional to
+//! the gate-equivalent area of the logic it stands for (from
+//! [`crate::area`]), normalized within its module group. A module that is
+//! 30 % of the build's GE receives 30 % of the injections — the same
+//! expectation a uniform draw over nets would give.
+//!
+//! The population depends on the *build* (baseline / data / full): replica
+//! streamers, checker nets, parity registers etc. only exist — and only
+//! absorb injections — when the corresponding hardware is present,
+//! mirroring how the paper's three netlists differ.
+
+use crate::area::{area_report, AreaReport};
+use crate::fault::site::{
+    accum_unit, ce_unit, checker_unit, ctrl_unit, fault_unit, regfile_unit, sched_unit,
+    streamer_unit, wbuf_unit, xbuf_unit, Module, SiteId,
+};
+use crate::fault::{FaultKind, FaultPlan};
+use crate::redmule::regfile::{CONTEXTS, WORDS};
+use crate::redmule::streamer::STREAM_MODULES;
+use crate::redmule::{Protection, RedMuleConfig};
+use crate::util::rng::Xoshiro256;
+
+/// Single-event-effect derating: the probability that a transient pulse on
+/// a uniformly chosen net of the site's cone actually becomes an
+/// architecturally visible corruption.
+///
+/// Gate-level SFI masks the large majority of injected SETs through
+/// logical masking (the flipped net is off the sensitized path — e.g. most
+/// internal nets of an FMA partial-product tree don't affect the rounded
+/// result), latch-window masking (the pulse misses the capture edge) and
+/// electrical attenuation. Our sites are *architectural* values, so
+/// idle-site masking is modelled naturally but intra-cone masking is not;
+/// these factors stand in for it, per manifestation kind. They are the
+/// model's single calibration point against Table 1's baseline column and
+/// are documented in DESIGN.md §5 — all *relative* claims (protection
+/// ratios, who wins) are insensitive to them.
+pub mod derating {
+    use crate::fault::FaultKind;
+
+    /// SET on a combinational cone: logical + latch-window masking.
+    pub const SET_LATCH: f64 = 0.30;
+    /// Corruption latched into a register. Lower than the SET factor
+    /// because our SEU site classes summarize whole registers whose
+    /// architectural lifetime (and hence effectiveness) the coarse model
+    /// over-estimates relative to per-net netlist sampling.
+    pub const SEU_LATCH: f64 = 0.10;
+
+    #[inline]
+    pub fn for_kind(kind: FaultKind) -> f64 {
+        match kind {
+            FaultKind::Transient => SET_LATCH,
+            FaultKind::StateUpset => SEU_LATCH,
+        }
+    }
+}
+
+/// One entry of the population: a site class instance with its bit width,
+/// manifestation kind and sampling weight (kGE it stands for).
+#[derive(Debug, Clone, Copy)]
+pub struct SiteEntry {
+    pub site: SiteId,
+    pub bits: u8,
+    pub kind: FaultKind,
+    pub weight: f64,
+}
+
+/// The complete, weighted site population for one build.
+#[derive(Debug, Clone)]
+pub struct FaultRegistry {
+    pub cfg: RedMuleConfig,
+    pub protection: Protection,
+    entries: Vec<SiteEntry>,
+    /// Cumulative weights for O(log n) sampling.
+    cum: Vec<f64>,
+    total_weight: f64,
+}
+
+/// Intermediate builder: collects entries of one module group, then
+/// normalizes their weights to the group's kGE share.
+struct Group {
+    entries: Vec<(SiteId, u8, FaultKind)>,
+    kge: f64,
+}
+
+impl Group {
+    fn new(kge: f64) -> Self {
+        Self {
+            entries: Vec::new(),
+            kge,
+        }
+    }
+
+    fn add(&mut self, site: SiteId, bits: u8, kind: FaultKind) {
+        self.entries.push((site, bits, kind));
+    }
+
+    fn add_range(
+        &mut self,
+        module: Module,
+        unit: u8,
+        indices: std::ops::Range<u32>,
+        bits: u8,
+        kind: FaultKind,
+    ) {
+        for i in indices {
+            self.add(SiteId::with_wide_index(module, unit, i), bits, kind);
+        }
+    }
+
+    /// Emit entries whose weights sum to the group's kGE, split by kind:
+    ///
+    /// * **state (SEU) sites** carry exactly their flip-flop area
+    ///   (`bits × GE_PER_FF_BIT`) — a register bit is a register bit,
+    ///   regardless of how much combinational logic surrounds it;
+    /// * **net (SET) sites** share the *rest* of the group's gates
+    ///   uniformly per modelled bit — they stand for the whole
+    ///   combinational cone that the architectural net summarizes.
+    ///
+    /// Pure-register groups (accumulators, operand buffers, pipeline
+    /// registers) keep their full GE on the SEU sites.
+    fn finish(self, out: &mut Vec<SiteEntry>) {
+        use crate::area::coeff::GE_PER_FF_BIT;
+        let seu_bits: f64 = self
+            .entries
+            .iter()
+            .filter(|e| e.2 == crate::fault::FaultKind::StateUpset)
+            .map(|e| e.1 as f64)
+            .sum();
+        let set_bits: f64 = self
+            .entries
+            .iter()
+            .filter(|e| e.2 == crate::fault::FaultKind::Transient)
+            .map(|e| e.1 as f64)
+            .sum();
+        if (seu_bits + set_bits) == 0.0 || self.kge <= 0.0 {
+            return;
+        }
+        let ff_kge = seu_bits * GE_PER_FF_BIT / 1000.0;
+        let (seu_kge, set_kge) = if set_bits == 0.0 {
+            (self.kge, 0.0)
+        } else {
+            // Cap so a register-heavy mixed group cannot starve its nets.
+            let s = ff_kge.min(0.8 * self.kge);
+            (s, self.kge - s)
+        };
+        let seu_per_bit = if seu_bits > 0.0 { seu_kge / seu_bits } else { 0.0 };
+        let set_per_bit = if set_bits > 0.0 { set_kge / set_bits } else { 0.0 };
+        out.extend(self.entries.into_iter().filter_map(|(site, bits, kind)| {
+            let per_bit = match kind {
+                crate::fault::FaultKind::StateUpset => seu_per_bit,
+                crate::fault::FaultKind::Transient => set_per_bit,
+            };
+            let weight = per_bit * bits as f64;
+            (weight > 0.0).then_some(SiteEntry {
+                site,
+                bits,
+                kind,
+                weight,
+            })
+        }));
+    }
+}
+
+impl FaultRegistry {
+    /// Enumerate the population for a build.
+    pub fn new(cfg: RedMuleConfig, protection: Protection) -> Self {
+        let report = area_report(cfg, protection);
+        let kge = |prefix: &str| -> f64 {
+            report
+                .items
+                .iter()
+                .filter(|i| i.name.starts_with(prefix))
+                .map(|i| i.kge)
+                .sum()
+        };
+
+        let l = cfg.l as u32;
+        let h = cfg.h as u32;
+        let d = cfg.d() as u32;
+        let n_ce = (cfg.l * cfg.h) as u32;
+        let mut entries = Vec::new();
+        use FaultKind::{StateUpset, Transient};
+
+        // --- CE datapath: FMA / operand nets carry the FMA-logic weight.
+        let mut g = Group::new(kge("ce_array/fma"));
+        g.add_range(Module::CeArray, ce_unit::FMA_NET, 0..n_ce, 16, Transient);
+        g.add_range(Module::CeArray, ce_unit::X_NET, 0..n_ce, 16, Transient);
+        g.add_range(Module::CeArray, ce_unit::W_NET, 0..n_ce, 16, Transient);
+        g.finish(&mut entries);
+
+        // --- CE pipeline registers.
+        let mut g = Group::new(kge("ce_array/pipe_regs"));
+        g.add_range(Module::CeArray, ce_unit::PIPE_REG, 0..(l * d), 16, StateUpset);
+        g.finish(&mut entries);
+
+        // --- Accumulators.
+        let mut g = Group::new(kge("accumulator"));
+        g.add_range(Module::Accumulator, accum_unit::REG, 0..(l * d), 16, StateUpset);
+        g.finish(&mut entries);
+
+        // --- X operand registers (both banks).
+        let mut g = Group::new(kge("xbuf"));
+        g.add_range(Module::XBuf, xbuf_unit::REG, 0..(2 * n_ce), 16, StateUpset);
+        g.finish(&mut entries);
+
+        // --- W broadcast registers (+ parity regs and the pre-parity net
+        //     when the data-path protection exists).
+        // The W broadcast registers live for a single cycle between
+        // refresh and use, so corruption manifests on the read path —
+        // transient sites at the register outputs (the FaultCtx hooks in
+        // `do_compute`), not latched upsets.
+        let mut g = Group::new(kge("wbuf") + kge("ft/w_parity"));
+        g.add_range(Module::WBuf, wbuf_unit::VALUE_REG, 0..h, 16, Transient);
+        if protection.has_data_protection() {
+            g.add_range(Module::WBuf, wbuf_unit::PARITY_REG, 0..h, 1, Transient);
+            g.add_range(Module::WBuf, wbuf_unit::PRE_PARITY_NET, 0..h, 16, Transient);
+        }
+        g.finish(&mut entries);
+
+        // --- Primary streamers: address generators (latched masks), the
+        //     request nets, response nets and (protected) decoder outputs,
+        //     plus the Z store path. The streamer group also absorbs the
+        //     data-protection extras (ECC codecs, addrgen complexity).
+        let stream_kge = kge("streamer") + kge("ft/ecc_codecs") + kge("ft/addrgen_extra");
+        let per_stream = stream_kge / 4.0;
+        for (s, module) in STREAM_MODULES.iter().enumerate() {
+            let mut g = Group::new(per_stream);
+            g.add(
+                SiteId::new(*module, streamer_unit::ADDR_REG, 0),
+                32,
+                StateUpset,
+            );
+            // Request-net lanes actually exercised by the model.
+            let req_lanes = match s {
+                0 => 64.min(l * h.min(16)).max(1), // X: one net per (row, col) pair
+                1 => h,                            // W: one per CE column
+                _ => 16,                           // Y/Z: wide-port beats
+            };
+            g.add_range(*module, streamer_unit::REQ_NET, 0..req_lanes, 32, Transient);
+            // Response nets: raw codeword width when ECC is decoded here.
+            let resp_bits = if protection.has_data_protection() { 39 } else { 16 };
+            let resp_lanes = if s == 1 { h } else { 16.min(req_lanes).max(1) };
+            g.add_range(*module, streamer_unit::RESP_NET, 0..resp_lanes, resp_bits, Transient);
+            if protection.has_data_protection() && s != 1 {
+                // Per-consumer-row decoder outputs (X/Y/Z paths).
+                g.add_range(*module, streamer_unit::DEC_NET, 0..l, 16, Transient);
+            }
+            if s == 3 {
+                // Z store nets: primary copy, redundant copy, post-checker.
+                g.add_range(*module, streamer_unit::STORE_NET, 0..16, 16, Transient);
+                if protection.has_data_protection() {
+                    g.add_range(*module, streamer_unit::STORE_NET, 16..32, 16, Transient);
+                }
+                g.add_range(*module, streamer_unit::STORE_NET, 32..48, 16, Transient);
+            }
+            g.finish(&mut entries);
+        }
+
+        // --- Scheduler FSM + its control nets to the rows.
+        let mut g = Group::new(kge("sched_fsm"));
+        g.add(SiteId::new(Module::SchedFsm, sched_unit::STATE_REG, 0), 3, StateUpset);
+        g.add_range(Module::SchedFsm, sched_unit::COUNT_REG, 0..5, 16, StateUpset);
+        g.add_range(Module::SchedFsm, sched_unit::CTRL_NET, 0..l, 1, Transient);
+        g.finish(&mut entries);
+
+        // --- Control FSM.
+        let mut g = Group::new(kge("ctrl_fsm"));
+        g.add(SiteId::new(Module::CtrlFsm, ctrl_unit::STATE_REG, 0), 3, StateUpset);
+        g.finish(&mut entries);
+
+        // --- Register file words (+ parity bits in the Full build).
+        let mut g = Group::new(kge("regfile") + kge("ft/regfile_parity"));
+        g.add_range(
+            Module::RegFile,
+            regfile_unit::WORD,
+            0..(CONTEXTS * WORDS) as u32,
+            32,
+            StateUpset,
+        );
+        if protection.has_control_protection() {
+            g.add_range(
+                Module::RegFile,
+                regfile_unit::PARITY,
+                0..(CONTEXTS * WORDS) as u32,
+                1,
+                StateUpset,
+            );
+        }
+        g.finish(&mut entries);
+
+        // --- Fault unit: status registers + the interrupt wire.
+        let mut g = Group::new(kge("ft/fault_tracking") + kge("ft/irq_logic") + 0.4);
+        g.add(SiteId::new(Module::FaultUnit, fault_unit::STATUS_REG, 0), 7, StateUpset);
+        g.add(SiteId::new(Module::FaultUnit, fault_unit::IRQ_NET, 0), 1, Transient);
+        g.finish(&mut entries);
+
+        // --- [8]-style per-CE checker comparison nets.
+        if protection.has_per_ce_checkers() {
+            let mut g = Group::new(kge("ft/perce_checkers"));
+            g.add_range(
+                Module::Checker,
+                checker_unit::PERCE_CMP_NET,
+                0..n_ce,
+                1,
+                Transient,
+            );
+            g.finish(&mut entries);
+        }
+
+        // --- Checkers + write filter (data protection).
+        if protection.has_data_protection() {
+            let mut g = Group::new(kge("ft/z_checkers") + kge("ft/write_filter"));
+            g.add_range(Module::Checker, checker_unit::Z_CMP_NET, 0..(l / 2).max(1), 1, Transient);
+            g.add_range(Module::Checker, checker_unit::WFILTER_NET, 0..16, 1, Transient);
+            g.finish(&mut entries);
+        }
+
+        // --- Replica streamers + replica FSMs (full protection).
+        if protection.has_control_protection() {
+            let rep_kge = kge("ft/replica_streamers");
+            let per_rep = rep_kge / 4.0;
+            for s in 0..4usize {
+                let mut g = Group::new(per_rep);
+                // Replica address-generator state (unit = stream*2).
+                g.add(
+                    SiteId::new(Module::StreamerReplica, (s * 2) as u8, 0),
+                    32,
+                    StateUpset,
+                );
+                // Replica request nets (unit = stream*2+1).
+                let req_lanes = match s {
+                    0 => 64.min(l * h.min(16)).max(1),
+                    1 => h,
+                    _ => 16,
+                };
+                g.add_range(
+                    Module::StreamerReplica,
+                    (s * 2 + 1) as u8,
+                    0..req_lanes,
+                    32,
+                    Transient,
+                );
+                g.finish(&mut entries);
+            }
+
+            let mut g = Group::new(kge("ft/replica_fsms") + kge("ft/fsm_comparators"));
+            g.add(SiteId::new(Module::FsmReplica, 0, 0), 3, StateUpset); // sched phase
+            g.add_range(Module::FsmReplica, 1, 0..5, 16, StateUpset); // sched counters
+            g.add(SiteId::new(Module::FsmReplica, 2, 0), 3, StateUpset); // ctrl state
+            g.finish(&mut entries);
+        }
+
+        let mut cum = Vec::with_capacity(entries.len());
+        let mut acc = 0.0;
+        for e in &entries {
+            acc += e.weight;
+            cum.push(acc);
+        }
+        Self {
+            cfg,
+            protection,
+            entries,
+            cum,
+            total_weight: acc,
+        }
+    }
+
+    pub fn entries(&self) -> &[SiteEntry] {
+        &self.entries
+    }
+
+    pub fn n_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Total population weight (≈ the build's modelled kGE, minus glue).
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Total number of injectable bits.
+    pub fn total_bits(&self) -> u64 {
+        self.entries.iter().map(|e| e.bits as u64).sum()
+    }
+
+    /// Area-weighted random site entry.
+    pub fn sample_entry(&self, rng: &mut Xoshiro256) -> &SiteEntry {
+        let t = rng.next_f64() * self.total_weight;
+        let idx = self.cum.partition_point(|&c| c < t).min(self.entries.len() - 1);
+        &self.entries[idx]
+    }
+
+    /// Draw one complete fault plan: area-weighted site, uniform bit,
+    /// uniform cycle in `[1, horizon]`.
+    pub fn sample_plan(&self, horizon: u64, rng: &mut Xoshiro256) -> FaultPlan {
+        let e = self.sample_entry(rng);
+        FaultPlan {
+            cycle: 1 + rng.below(horizon.max(1)),
+            site: e.site,
+            bit: rng.below(e.bits as u64) as u8,
+            kind: e.kind,
+        }
+    }
+
+    /// The area report used for the weighting (for reporting).
+    pub fn area(&self) -> AreaReport {
+        area_report(self.cfg, self.protection)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(p: Protection) -> FaultRegistry {
+        FaultRegistry::new(RedMuleConfig::paper(), p)
+    }
+
+    #[test]
+    fn population_grows_with_protection() {
+        let b = reg(Protection::Baseline);
+        let d = reg(Protection::Data);
+        let f = reg(Protection::Full);
+        assert!(d.n_entries() > b.n_entries());
+        assert!(f.n_entries() > d.n_entries());
+        assert!(f.total_weight() > d.total_weight());
+        assert!(d.total_weight() > b.total_weight());
+    }
+
+    #[test]
+    fn perce_population_is_baseline_plus_checkers() {
+        let b = reg(Protection::Baseline);
+        let p = reg(Protection::PerCe);
+        assert_eq!(
+            p.n_entries(),
+            b.n_entries() + 48,
+            "one checker net per CE on the paper instance"
+        );
+        assert!(p.total_weight() > b.total_weight());
+    }
+
+    #[test]
+    fn baseline_has_no_ft_sites() {
+        let b = reg(Protection::Baseline);
+        for e in b.entries() {
+            assert!(
+                !matches!(
+                    e.site.module(),
+                    Module::Checker | Module::StreamerReplica | Module::FsmReplica
+                ),
+                "baseline population must not contain {:?}",
+                e.site.module()
+            );
+        }
+    }
+
+    #[test]
+    fn full_build_samples_replica_sites() {
+        let f = reg(Protection::Full);
+        let mut rng = Xoshiro256::new(7);
+        let mut saw_replica = false;
+        for _ in 0..20_000 {
+            let e = f.sample_entry(&mut rng);
+            if matches!(e.site.module(), Module::StreamerReplica | Module::FsmReplica) {
+                saw_replica = true;
+                break;
+            }
+        }
+        assert!(saw_replica, "replica sites must be reachable by sampling");
+    }
+
+    #[test]
+    fn sampling_tracks_area_weights() {
+        // The CE-datapath share of samples should match its weight share
+        // within a few percent over a large draw.
+        let b = reg(Protection::Baseline);
+        let ce_weight: f64 = b
+            .entries()
+            .iter()
+            .filter(|e| e.site.module() == Module::CeArray)
+            .map(|e| e.weight)
+            .sum();
+        let expect = ce_weight / b.total_weight();
+        let mut rng = Xoshiro256::new(99);
+        let n = 200_000;
+        let mut hits = 0u64;
+        for _ in 0..n {
+            if b.sample_entry(&mut rng).site.module() == Module::CeArray {
+                hits += 1;
+            }
+        }
+        let got = hits as f64 / n as f64;
+        assert!(
+            (got - expect).abs() < 0.01,
+            "CE share sampled {got:.3} vs expected {expect:.3}"
+        );
+    }
+
+    #[test]
+    fn plans_are_in_bounds() {
+        let f = reg(Protection::Full);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..10_000 {
+            let p = f.sample_plan(500, &mut rng);
+            assert!(p.cycle >= 1 && p.cycle <= 500);
+            let e = f
+                .entries()
+                .iter()
+                .find(|e| e.site == p.site)
+                .expect("sampled site must be in the population");
+            assert!(p.bit < e.bits);
+        }
+    }
+
+    #[test]
+    fn weights_are_positive_and_finite() {
+        for p in [Protection::Baseline, Protection::Data, Protection::Full] {
+            for e in reg(p).entries() {
+                assert!(e.weight.is_finite() && e.weight > 0.0);
+                assert!(e.bits > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Fault-site identity: which architectural location a fault targets.
+
+/// The hardware module a site belongs to. Mirrors the module decomposition
+/// of the RTL (Figure 1 of the paper) and keys the area model's weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Module {
+    /// Configuration register file (incl. shadowed context).
+    RegFile = 0,
+    /// X-operand streamer (address generation + request/response path).
+    StreamerX = 1,
+    /// W-operand streamer.
+    StreamerW = 2,
+    /// Y-operand streamer.
+    StreamerY = 3,
+    /// Z-result streamer (store path).
+    StreamerZ = 4,
+    /// X operand buffer (per-row registers).
+    XBuf = 5,
+    /// W broadcast registers (+ parity bits in FT configs).
+    WBuf = 6,
+    /// CE array: FMA pipeline registers and result nets.
+    CeArray = 7,
+    /// Per-row accumulator registers (output-stationary storage).
+    Accumulator = 8,
+    /// Scheduler FSM (loop counters, phase state).
+    SchedFsm = 9,
+    /// Top-level control FSM.
+    CtrlFsm = 10,
+    /// Output checkers + TCDM write filter (FT).
+    Checker = 11,
+    /// Reduced-width replica streamers (FT-full).
+    StreamerReplica = 12,
+    /// Replica scheduler/control FSMs (FT-full).
+    FsmReplica = 13,
+    /// Register-file parity checker (FT-full).
+    RegParity = 14,
+    /// Fault-status registers + interrupt logic.
+    FaultUnit = 15,
+}
+
+impl Module {
+    pub const ALL: [Module; 16] = [
+        Module::RegFile,
+        Module::StreamerX,
+        Module::StreamerW,
+        Module::StreamerY,
+        Module::StreamerZ,
+        Module::XBuf,
+        Module::WBuf,
+        Module::CeArray,
+        Module::Accumulator,
+        Module::SchedFsm,
+        Module::CtrlFsm,
+        Module::Checker,
+        Module::StreamerReplica,
+        Module::FsmReplica,
+        Module::RegParity,
+        Module::FaultUnit,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Module::RegFile => "regfile",
+            Module::StreamerX => "streamer_x",
+            Module::StreamerW => "streamer_w",
+            Module::StreamerY => "streamer_y",
+            Module::StreamerZ => "streamer_z",
+            Module::XBuf => "xbuf",
+            Module::WBuf => "wbuf",
+            Module::CeArray => "ce_array",
+            Module::Accumulator => "accumulator",
+            Module::SchedFsm => "sched_fsm",
+            Module::CtrlFsm => "ctrl_fsm",
+            Module::Checker => "checker",
+            Module::StreamerReplica => "streamer_replica",
+            Module::FsmReplica => "fsm_replica",
+            Module::RegParity => "reg_parity",
+            Module::FaultUnit => "fault_unit",
+        }
+    }
+
+    #[inline]
+    pub fn from_u8(v: u8) -> Option<Module> {
+        Module::ALL.get(v as usize).copied()
+    }
+}
+
+/// Packed site identity: `module[31:26] | unit[25:20] | index[19:0]`.
+///
+/// `unit` distinguishes site *classes* within a module (e.g. a streamer's
+/// address register vs. its response wire); `index` addresses the instance
+/// (row, row*H+col, buffer slot, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SiteId(pub u32);
+
+impl SiteId {
+    #[inline]
+    pub fn new(module: Module, unit: u8, index: u16) -> Self {
+        debug_assert!(unit < 64);
+        SiteId(((module as u32) << 26) | ((unit as u32 & 0x3F) << 20) | index as u32)
+    }
+
+    /// Like [`SiteId::new`] but with a wide (20-bit) index.
+    #[inline]
+    pub fn with_wide_index(module: Module, unit: u8, index: u32) -> Self {
+        debug_assert!(index < (1 << 20));
+        SiteId(((module as u32) << 26) | ((unit as u32 & 0x3F) << 20) | (index & 0xF_FFFF))
+    }
+
+    #[inline]
+    pub fn module(self) -> Module {
+        Module::from_u8((self.0 >> 26) as u8).expect("valid module tag")
+    }
+
+    #[inline]
+    pub fn unit(self) -> u8 {
+        ((self.0 >> 20) & 0x3F) as u8
+    }
+
+    #[inline]
+    pub fn index(self) -> u32 {
+        self.0 & 0xF_FFFF
+    }
+}
+
+/// How the fault manifests (see module docs of [`crate::fault`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Single-event transient on a combinational value, visible only in
+    /// the planned cycle.
+    Transient,
+    /// Latched upset of a storage bit; persists until overwritten.
+    StateUpset,
+}
+
+// ---------------------------------------------------------------------
+// Unit tags per module, so call sites read declaratively.
+// ---------------------------------------------------------------------
+
+/// Streamer unit tags (same for X/W/Y/Z and replica streamers).
+pub mod streamer_unit {
+    /// Current address register (SEU).
+    pub const ADDR_REG: u8 = 0;
+    /// Issued request address net (SET).
+    pub const REQ_NET: u8 = 1;
+    /// Response data net, pre-decode (SET); index = beat lane.
+    pub const RESP_NET: u8 = 2;
+    /// Loop counter registers (SEU); index = which counter.
+    pub const COUNT_REG: u8 = 3;
+    /// Request-valid handshake (SET).
+    pub const VALID_NET: u8 = 4;
+    /// Per-consumer-row ECC-decoder output net (SET); index = row.
+    pub const DEC_NET: u8 = 5;
+    /// Store data net (SET); index = lane (0..16 primary copy, 16..32
+    /// redundant copy, 32..48 post-checker segment).
+    pub const STORE_NET: u8 = 6;
+}
+
+/// CE-array unit tags.
+pub mod ce_unit {
+    /// Pipeline stage register of a CE (SEU); index = (row*H + col)*P + stage.
+    pub const PIPE_REG: u8 = 0;
+    /// FMA result net of a CE (SET); index = row*H + col.
+    pub const FMA_NET: u8 = 1;
+    /// X operand net into a CE (SET); index = row*H + col.
+    pub const X_NET: u8 = 2;
+    /// W broadcast wire into a CE column, post-parity-generation (SET);
+    /// index = row*H + col (each row taps the broadcast separately).
+    pub const W_NET: u8 = 3;
+}
+
+/// W-buffer unit tags.
+pub mod wbuf_unit {
+    /// Weight value register (SEU); index = column h.
+    pub const VALUE_REG: u8 = 0;
+    /// Parity bit register (SEU, FT only); index = column h.
+    pub const PARITY_REG: u8 = 1;
+    /// Value net at ECC-decode output, *before* parity generation (SET) —
+    /// the small undetectable window discussed in DESIGN.md.
+    pub const PRE_PARITY_NET: u8 = 2;
+}
+
+/// Scheduler-FSM unit tags.
+pub mod sched_unit {
+    /// Phase/state encoding register (SEU).
+    pub const STATE_REG: u8 = 0;
+    /// Loop counter register (SEU); index = counter id.
+    pub const COUNT_REG: u8 = 1;
+    /// Control signal nets to the array (SET); index = row.
+    pub const CTRL_NET: u8 = 2;
+}
+
+/// Control-FSM unit tags.
+pub mod ctrl_unit {
+    /// State encoding register (SEU).
+    pub const STATE_REG: u8 = 0;
+    /// Start/done handshake nets (SET).
+    pub const HANDSHAKE_NET: u8 = 1;
+}
+
+/// Register-file unit tags.
+pub mod regfile_unit {
+    /// Configuration word (SEU); index = ctx*WORDS + word.
+    pub const WORD: u8 = 0;
+    /// Parity bit (SEU, FT-full); index = ctx*WORDS + word.
+    pub const PARITY: u8 = 1;
+}
+
+/// Checker unit tags.
+pub mod checker_unit {
+    /// Z comparator result net (SET); index = row pair.
+    pub const Z_CMP_NET: u8 = 0;
+    /// Write-filter decision net (SET).
+    pub const WFILTER_NET: u8 = 1;
+    /// FSM comparator net (SET).
+    pub const FSM_CMP_NET: u8 = 2;
+    /// Per-CE recompute-checker comparison net (SET, [8]-style builds);
+    /// index = row*H + col.
+    pub const PERCE_CMP_NET: u8 = 3;
+}
+
+/// Fault-unit tags.
+pub mod fault_unit {
+    /// Fault status register bits (SEU).
+    pub const STATUS_REG: u8 = 0;
+    /// Interrupt wire (SET).
+    pub const IRQ_NET: u8 = 1;
+}
+
+/// Accumulator unit tags.
+pub mod accum_unit {
+    /// Accumulator register (SEU); index = row*D + slot.
+    pub const REG: u8 = 0;
+}
+
+/// X-buffer unit tags.
+pub mod xbuf_unit {
+    /// Operand register (SEU); index = row*H + col.
+    pub const REG: u8 = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        for m in Module::ALL {
+            let s = SiteId::new(m, 5, 1234);
+            assert_eq!(s.module(), m);
+            assert_eq!(s.unit(), 5);
+            assert_eq!(s.index(), 1234);
+        }
+    }
+
+    #[test]
+    fn distinct_sites_distinct_ids() {
+        let a = SiteId::new(Module::CeArray, ce_unit::PIPE_REG, 0);
+        let b = SiteId::new(Module::CeArray, ce_unit::FMA_NET, 0);
+        let c = SiteId::new(Module::Accumulator, accum_unit::REG, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn wide_index_bounds() {
+        let s = SiteId::with_wide_index(Module::RegFile, 1, 0xF_FFFF);
+        assert_eq!(s.index(), 0xF_FFFF);
+        assert_eq!(s.unit(), 1);
+        assert_eq!(s.module(), Module::RegFile);
+    }
+
+    #[test]
+    fn module_names_unique() {
+        let mut names: Vec<_> = Module::ALL.iter().map(|m| m.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), Module::ALL.len());
+    }
+}

@@ -1,0 +1,295 @@
+//! Fused multiply-add on binary16, single-rounded, two independent paths.
+
+use super::fp16::Fp16;
+
+/// Round `(-1)^sign * mag * 2^exp` (with `mag > 0`, exactly represented)
+/// to binary16 with round-to-nearest, ties-to-even.
+///
+/// This is the single rounding step shared by [`fma16`], [`mul16`] and the
+/// `f64 → fp16` conversion. Overflow produces ±∞, underflow produces
+/// subnormals or signed zero.
+pub fn round_to_fp16(sign: u16, mag: u128, exp: i32) -> u16 {
+    debug_assert!(mag != 0);
+    let nb = 127 - mag.leading_zeros() as i32; // msb index
+    let e = nb + exp; // value in [2^e, 2^{e+1})
+
+    // Quantum (ulp) exponent: normals have an 11-bit significand, subnormals
+    // a fixed quantum of 2^-24.
+    let subnormal = e < -14;
+    let q = if subnormal { -24 } else { e - 10 };
+
+    let shift = exp - q;
+    let r: u128 = if shift >= 0 {
+        // Guaranteed to fit: shift <= 10 - nb in both paths.
+        mag << shift
+    } else {
+        let sh = (-shift) as u32;
+        if sh > 127 {
+            // Value below half the smallest quantum: rounds to zero.
+            0
+        } else {
+            let keep = mag >> sh;
+            let rem = mag & ((1u128 << sh) - 1);
+            let half = 1u128 << (sh - 1);
+            if rem > half || (rem == half && keep & 1 == 1) {
+                keep + 1
+            } else {
+                keep
+            }
+        }
+    };
+
+    if subnormal {
+        // r <= 1024 by construction (value < 2^-14 => mag*2^(exp+24) < 2^10).
+        if r == 0 {
+            return sign << 15;
+        }
+        if r >= 1024 {
+            // Rounded up to the smallest normal.
+            return (sign << 15) | (1 << 10);
+        }
+        return (sign << 15) | r as u16;
+    }
+
+    let (mut r, mut e) = (r, e);
+    if r == 2048 {
+        // Rounding carried into the next binade.
+        r = 1024;
+        e += 1;
+    }
+    debug_assert!((1024..2048).contains(&(r as u32)));
+    if e > 15 {
+        return (sign << 15) | 0x7C00; // ±inf
+    }
+    (sign << 15) | (((e + 15) as u16) << 10) | (r as u16 - 1024)
+}
+
+/// Fused multiply-add `a*b + c` on binary16 with a **single** rounding,
+/// computed with exact integer arithmetic. This models the hardware FMA
+/// unit inside each RedMulE compute element.
+pub fn fma16(a: Fp16, b: Fp16, c: Fp16) -> Fp16 {
+    // IEEE-754 special-case handling (canonical quiet NaN, as FPnew emits).
+    if a.is_nan() || b.is_nan() || c.is_nan() {
+        return Fp16::NAN;
+    }
+    let sp = a.sign() ^ b.sign();
+    let prod_inf = a.is_infinite() || b.is_infinite();
+    if prod_inf {
+        if a.is_zero() || b.is_zero() {
+            return Fp16::NAN; // inf * 0: invalid
+        }
+        if c.is_infinite() && c.sign() != sp {
+            return Fp16::NAN; // inf - inf: invalid
+        }
+        return if sp == 1 { Fp16::NEG_INFINITY } else { Fp16::INFINITY };
+    }
+    if c.is_infinite() {
+        return c;
+    }
+
+    // All operands finite. Decode to integer magnitudes.
+    let (mp, ep): (u64, i32) = if a.is_zero() || b.is_zero() {
+        (0, 0)
+    } else {
+        let (_, ma, ea) = a.decode();
+        let (_, mb, eb) = b.decode();
+        ((ma as u64) * (mb as u64), ea + eb) // <= 2047^2 < 2^22, exact
+    };
+    let (sc, mc, ec): (u16, u32, i32) = if c.is_zero() {
+        (c.sign(), 0, 0)
+    } else {
+        let (s, m, e) = c.decode();
+        (s, m, e)
+    };
+
+    if mp == 0 && mc == 0 {
+        // Sum of (signed) zeros: same sign keeps it, else +0 (RN).
+        let s = if sp == sc { sp } else { 0 };
+        return Fp16(s << 15);
+    }
+    if mp == 0 {
+        return c;
+    }
+    if mc == 0 {
+        return Fp16(round_to_fp16(sp, mp as u128, ep));
+    }
+
+    // Exact signed alignment and addition in i128.
+    let emin = ep.min(ec);
+    let vp = (mp as i128) << (ep - emin); // shift <= 58, mp < 2^22: exact
+    let vc = (mc as i128) << (ec - emin); // shift <= 53, mc < 2^11: exact
+    let v = if sp == 1 { -vp } else { vp } + if sc == 1 { -vc } else { vc };
+
+    if v == 0 {
+        return Fp16::ZERO; // exact cancellation: +0 under RN
+    }
+    let sign = u16::from(v < 0);
+    Fp16(round_to_fp16(sign, v.unsigned_abs(), emin))
+}
+
+/// `a*b + c` computed through `f64` (exact product, 53-bit sum) followed by
+/// a correctly rounded conversion. Bit-identical to [`fma16`] by the
+/// innocuous-double-rounding theorem (53 ≥ 2·22 + 2); cross-checked in
+/// tests and against the Pallas kernel, which uses the same construction.
+pub fn fma16_via_f64(a: Fp16, b: Fp16, c: Fp16) -> Fp16 {
+    Fp16::from_f64(a.to_f64().mul_add(b.to_f64(), c.to_f64()))
+}
+
+/// Single-rounded binary16 multiplication.
+pub fn mul16(a: Fp16, b: Fp16) -> Fp16 {
+    if a.is_nan() || b.is_nan() {
+        return Fp16::NAN;
+    }
+    let s = a.sign() ^ b.sign();
+    if a.is_infinite() || b.is_infinite() {
+        if a.is_zero() || b.is_zero() {
+            return Fp16::NAN;
+        }
+        return if s == 1 { Fp16::NEG_INFINITY } else { Fp16::INFINITY };
+    }
+    if a.is_zero() || b.is_zero() {
+        return Fp16(s << 15);
+    }
+    let (_, ma, ea) = a.decode();
+    let (_, mb, eb) = b.decode();
+    Fp16(round_to_fp16(s, (ma as u128) * (mb as u128), ea + eb))
+}
+
+/// Single-rounded binary16 addition, expressed as `fma(a, 1, b)` — the
+/// product `a * 1` is exact, so the semantics (including signed-zero and
+/// special-case rules) coincide with IEEE addition.
+pub fn add16(a: Fp16, b: Fp16) -> Fp16 {
+    fma16(a, Fp16::ONE, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_fp16(r: &mut Xoshiro256) -> Fp16 {
+        // Uniform over bit patterns: exercises subnormals/inf/NaN heavily.
+        Fp16::from_bits(r.next_u32() as u16)
+    }
+
+    #[test]
+    fn fma_matches_f64_path_on_random_patterns() {
+        let mut r = Xoshiro256::new(0xF16F16);
+        for i in 0..2_000_000 {
+            let (a, b, c) = (rand_fp16(&mut r), rand_fp16(&mut r), rand_fp16(&mut r));
+            let x = fma16(a, b, c);
+            let y = fma16_via_f64(a, b, c);
+            if x.is_nan() || y.is_nan() {
+                assert_eq!(x.is_nan(), y.is_nan(), "iter {i}: {a:?} {b:?} {c:?}");
+            } else {
+                assert_eq!(x.0, y.0, "iter {i}: {a:?} * {b:?} + {c:?} -> {x:?} vs {y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fma_matches_f64_path_on_edge_values() {
+        let edges = [
+            Fp16::ZERO,
+            Fp16::NEG_ZERO,
+            Fp16::ONE,
+            Fp16::NEG_ONE,
+            Fp16::MAX,
+            Fp16(0xFBFF), // -MAX
+            Fp16::MIN_POSITIVE,
+            Fp16::MIN_SUBNORMAL,
+            Fp16(0x8001), // -min subnormal
+            Fp16(0x03FF), // largest subnormal
+            Fp16::INFINITY,
+            Fp16::NEG_INFINITY,
+            Fp16::NAN,
+            Fp16(0x3C01), // 1 + ulp
+            Fp16(0x7BFE), // MAX - ulp
+        ];
+        for &a in &edges {
+            for &b in &edges {
+                for &c in &edges {
+                    let x = fma16(a, b, c);
+                    let y = fma16_via_f64(a, b, c);
+                    if x.is_nan() || y.is_nan() {
+                        assert_eq!(x.is_nan(), y.is_nan(), "{a:?} {b:?} {c:?}");
+                    } else {
+                        assert_eq!(x.0, y.0, "{a:?} {b:?} {c:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_known_values() {
+        let two = Fp16::from_f64(2.0);
+        let three = Fp16::from_f64(3.0);
+        assert_eq!(fma16(two, three, Fp16::ONE).to_f64(), 7.0);
+        assert_eq!(fma16(two, three, Fp16::NEG_ONE).to_f64(), 5.0);
+        // Single rounding visible: 4097 = 2^12 + 1 is not representable
+        // (ulp = 4 there) but fma(64, 64, 1) must round 4097 -> 4096,
+        // whereas a*b then +c would also give 4096; use a case where they
+        // differ: x = 1 + 2^-10 (0x3C01); x*x = 1 + 2^-9 + 2^-20.
+        // fused: + c = -(1+2^-9) gives exactly 2^-20.
+        let x = Fp16(0x3C01);
+        let c = Fp16::from_f64(-(1.0 + 2f64.powi(-9)));
+        let fused = fma16(x, x, c);
+        assert_eq!(fused.to_f64(), 2f64.powi(-20), "fused keeps the low term");
+        // Unfused would first round x*x to 1+2^-9 and return 0.
+        let unfused = add16(mul16(x, x), c);
+        assert_eq!(unfused.to_f64(), 0.0);
+    }
+
+    #[test]
+    fn mul_special_cases() {
+        assert!(mul16(Fp16::INFINITY, Fp16::ZERO).is_nan());
+        assert_eq!(mul16(Fp16::NEG_ONE, Fp16::ZERO).0, 0x8000);
+        assert_eq!(mul16(Fp16::MAX, Fp16::from_f64(2.0)).0, Fp16::INFINITY.0);
+        assert_eq!(
+            mul16(Fp16::MIN_SUBNORMAL, Fp16::MIN_SUBNORMAL).0,
+            0 // total underflow
+        );
+    }
+
+    #[test]
+    fn add_special_cases() {
+        assert_eq!(add16(Fp16::ZERO, Fp16::NEG_ZERO).0, 0x0000); // +0
+        assert_eq!(add16(Fp16::NEG_ZERO, Fp16::NEG_ZERO).0, 0x8000); // -0
+        assert!(add16(Fp16::INFINITY, Fp16::NEG_INFINITY).is_nan());
+        assert_eq!(add16(Fp16::ONE, Fp16::NEG_ONE).0, 0x0000);
+        assert_eq!(add16(Fp16::MAX, Fp16::MAX).0, Fp16::INFINITY.0);
+    }
+
+    #[test]
+    fn add_matches_f64_on_all_pairs_sampled() {
+        let mut r = Xoshiro256::new(0xADD);
+        for _ in 0..500_000 {
+            let a = rand_fp16(&mut r);
+            let b = rand_fp16(&mut r);
+            let x = add16(a, b);
+            let y = Fp16::from_f64(a.to_f64() + b.to_f64());
+            if x.is_nan() || y.is_nan() {
+                assert_eq!(x.is_nan(), y.is_nan());
+            } else {
+                assert_eq!(x.0, y.0, "{a:?} + {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulation_chain_is_deterministic() {
+        // The simulator and the Pallas kernel must agree on chained FMAs.
+        let mut r = Xoshiro256::new(1);
+        let xs: Vec<Fp16> = (0..64).map(|_| r.next_fp16_in(4.0)).collect();
+        let ws: Vec<Fp16> = (0..64).map(|_| r.next_fp16_in(4.0)).collect();
+        let mut acc = Fp16::from_f64(0.5);
+        let mut acc2 = acc;
+        for i in 0..64 {
+            acc = fma16(xs[i], ws[i], acc);
+            acc2 = fma16_via_f64(xs[i], ws[i], acc2);
+        }
+        assert_eq!(acc.0, acc2.0);
+        assert!(acc.is_finite());
+    }
+}

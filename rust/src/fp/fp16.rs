@@ -1,0 +1,231 @@
+//! IEEE-754 binary16 representation and conversions.
+
+/// An IEEE-754 binary16 value, stored as its raw bit pattern.
+///
+/// Layout: `[15] sign | [14:10] exponent (bias 15) | [9:0] fraction`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Fp16(pub u16);
+
+pub const EXP_BIAS: i32 = 15;
+pub const FRAC_BITS: u32 = 10;
+pub const EXP_BITS: u32 = 5;
+pub const EXP_MAX_FIELD: u16 = 0x1F;
+
+impl Fp16 {
+    pub const ZERO: Fp16 = Fp16(0x0000);
+    pub const NEG_ZERO: Fp16 = Fp16(0x8000);
+    pub const ONE: Fp16 = Fp16(0x3C00);
+    pub const NEG_ONE: Fp16 = Fp16(0xBC00);
+    pub const INFINITY: Fp16 = Fp16(0x7C00);
+    pub const NEG_INFINITY: Fp16 = Fp16(0xFC00);
+    /// Canonical quiet NaN (matches FPnew's canonical NaN output).
+    pub const NAN: Fp16 = Fp16(0x7E00);
+    /// Largest finite value: 65504.
+    pub const MAX: Fp16 = Fp16(0x7BFF);
+    /// Smallest positive normal: 2^-14.
+    pub const MIN_POSITIVE: Fp16 = Fp16(0x0400);
+    /// Smallest positive subnormal: 2^-24.
+    pub const MIN_SUBNORMAL: Fp16 = Fp16(0x0001);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> Self {
+        Fp16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn sign(self) -> u16 {
+        self.0 >> 15
+    }
+
+    #[inline]
+    pub fn exp_field(self) -> u16 {
+        (self.0 >> FRAC_BITS) & EXP_MAX_FIELD
+    }
+
+    #[inline]
+    pub fn frac(self) -> u16 {
+        self.0 & 0x3FF
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_field() == EXP_MAX_FIELD && self.frac() != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        self.exp_field() == EXP_MAX_FIELD && self.frac() == 0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 & 0x7FFF == 0
+    }
+
+    #[inline]
+    pub fn is_subnormal(self) -> bool {
+        self.exp_field() == 0 && self.frac() != 0
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.exp_field() != EXP_MAX_FIELD
+    }
+
+    /// Decode a finite non-zero value as `(sign, magnitude, exp2)` with
+    /// `|value| = magnitude * 2^exp2` and `magnitude` an integer.
+    #[inline]
+    pub fn decode(self) -> (u16, u32, i32) {
+        debug_assert!(self.is_finite());
+        let e = self.exp_field();
+        let f = self.frac() as u32;
+        if e == 0 {
+            // Subnormal: f * 2^-24.
+            (self.sign(), f, -24)
+        } else {
+            // Normal: (1024 + f) * 2^(e - 15 - 10).
+            (self.sign(), 1024 + f, e as i32 - EXP_BIAS - FRAC_BITS as i32)
+        }
+    }
+
+    /// Exact widening conversion to `f64` (every binary16 is representable).
+    pub fn to_f64(self) -> f64 {
+        let s = if self.sign() == 1 { -1.0 } else { 1.0 };
+        if self.is_nan() {
+            return f64::NAN;
+        }
+        if self.is_infinite() {
+            return s * f64::INFINITY;
+        }
+        if self.is_zero() {
+            return s * 0.0;
+        }
+        let (_, m, e) = self.decode();
+        s * (m as f64) * (e as f64).exp2()
+    }
+
+    /// Exact widening conversion to `f32`.
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32 // binary16 ⊂ binary32, so this is exact
+    }
+
+    /// Correctly rounded (RN-even) conversion from `f64`.
+    pub fn from_f64(v: f64) -> Self {
+        if v.is_nan() {
+            return Fp16::NAN;
+        }
+        let sign = if v.is_sign_negative() { 1u16 } else { 0u16 };
+        if v.is_infinite() {
+            return if sign == 1 { Fp16::NEG_INFINITY } else { Fp16::INFINITY };
+        }
+        if v == 0.0 {
+            return Fp16(sign << 15);
+        }
+        // Decompose the f64: magnitude = mant * 2^exp with mant a 52/53-bit int.
+        let bits = v.abs().to_bits();
+        let e_field = ((bits >> 52) & 0x7FF) as i32;
+        let frac = bits & 0x000F_FFFF_FFFF_FFFF;
+        let (mant, exp) = if e_field == 0 {
+            (frac as u128, -1074)
+        } else {
+            ((frac | (1 << 52)) as u128, e_field - 1075)
+        };
+        Fp16(super::fma::round_to_fp16(sign, mant, exp))
+    }
+
+    /// Correctly rounded conversion from `f32` (goes through `f64`, which
+    /// is exact for binary32 inputs, so the overall rounding is single).
+    pub fn from_f32(v: f32) -> Self {
+        Self::from_f64(v as f64)
+    }
+}
+
+impl std::fmt::Debug for Fp16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fp16(0x{:04X} = {})", self.0, self.to_f64())
+    }
+}
+
+impl std::fmt::Display for Fp16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_decode_correctly() {
+        assert_eq!(Fp16::ONE.to_f64(), 1.0);
+        assert_eq!(Fp16::NEG_ONE.to_f64(), -1.0);
+        assert_eq!(Fp16::MAX.to_f64(), 65504.0);
+        assert_eq!(Fp16::MIN_POSITIVE.to_f64(), 2f64.powi(-14));
+        assert_eq!(Fp16::MIN_SUBNORMAL.to_f64(), 2f64.powi(-24));
+        assert!(Fp16::NAN.is_nan());
+        assert!(Fp16::INFINITY.is_infinite());
+        assert!(Fp16::ZERO.is_zero() && Fp16::NEG_ZERO.is_zero());
+    }
+
+    #[test]
+    fn f64_round_trip_is_identity_for_all_finite_fp16() {
+        // Exhaustive: every finite bit pattern survives fp16 -> f64 -> fp16.
+        for bits in 0u16..=0xFFFF {
+            let x = Fp16(bits);
+            if x.is_nan() {
+                assert!(Fp16::from_f64(x.to_f64()).is_nan());
+            } else {
+                assert_eq!(Fp16::from_f64(x.to_f64()).0, bits, "bits=0x{bits:04X}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_f64_rounding_cases() {
+        // Halfway cases round to even.
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> rounds to 1.0 (even).
+        assert_eq!(Fp16::from_f64(1.0 + 2f64.powi(-11)).0, Fp16::ONE.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> rounds to 1+2^-9 (even frac=2).
+        assert_eq!(Fp16::from_f64(1.0 + 3.0 * 2f64.powi(-11)).0, 0x3C02);
+        // Slightly above halfway rounds up.
+        assert_eq!(Fp16::from_f64(1.0 + 2f64.powi(-11) + 2f64.powi(-30)).0, 0x3C01);
+        // Overflow threshold: 65520 rounds (ties-even) to infinity.
+        assert_eq!(Fp16::from_f64(65520.0).0, Fp16::INFINITY.0);
+        assert_eq!(Fp16::from_f64(65519.999).0, Fp16::MAX.0);
+        assert_eq!(Fp16::from_f64(-65520.0).0, Fp16::NEG_INFINITY.0);
+        // Underflow to zero: below 2^-25 -> 0; exactly 2^-25 ties to even (0).
+        assert_eq!(Fp16::from_f64(2f64.powi(-25)).0, 0);
+        assert_eq!(Fp16::from_f64(2f64.powi(-25) * 1.0001).0, 1);
+        // Subnormal rounding.
+        assert_eq!(Fp16::from_f64(2f64.powi(-24) * 1.5).0, 2); // ties to even
+        // Signed zero preserved.
+        assert_eq!(Fp16::from_f64(-0.0).0, 0x8000);
+    }
+
+    #[test]
+    fn decode_magnitudes() {
+        let (s, m, e) = Fp16::ONE.decode();
+        assert_eq!((s, m, e), (0, 1024, -10));
+        let (s, m, e) = Fp16::MIN_SUBNORMAL.decode();
+        assert_eq!((s, m, e), (0, 1, -24));
+        let (s, m, e) = Fp16::MAX.decode();
+        assert_eq!((s, m, e), (0, 2047, 5));
+        assert_eq!(2047.0 * 32.0, 65504.0);
+    }
+
+    #[test]
+    fn f32_conversions_match_f64_path() {
+        for bits in (0u16..=0xFFFF).step_by(7) {
+            let x = Fp16(bits);
+            if !x.is_nan() {
+                assert_eq!(Fp16::from_f32(x.to_f32()).0, x.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! FP8 formats (E4M3 / E5M2) for RedMulE's hybrid-FP8 input mode.
+//!
+//! RedMulE supports a hybrid mode where the `X` and `W` inputs are stored
+//! as FP8 and widened to FP16 inside the streamer before entering the CE
+//! array (compute and accumulation stay FP16). Both OCP FP8 formats are
+//! supported:
+//!
+//! * **E4M3** — 1-4-3, bias 7, *no infinities*; `S.1111.111` is NaN and
+//!   `S.1111.110` is the largest finite value (±448).
+//! * **E5M2** — 1-5-2, bias 15, IEEE-like with infinities and NaNs.
+//!
+//! Decoding to FP16 is exact for every finite FP8 value in either format.
+
+use super::fp16::Fp16;
+use super::fma::round_to_fp16;
+
+/// Which 8-bit floating-point encoding a [`Fp8`] byte uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fp8Format {
+    E4M3,
+    E5M2,
+}
+
+/// An 8-bit float: raw byte plus its format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fp8 {
+    pub bits: u8,
+    pub format: Fp8Format,
+}
+
+impl Fp8 {
+    pub fn new(bits: u8, format: Fp8Format) -> Self {
+        Self { bits, format }
+    }
+
+    pub fn sign(self) -> u16 {
+        (self.bits >> 7) as u16
+    }
+
+    pub fn is_nan(self) -> bool {
+        match self.format {
+            // E4M3: only S.1111.111 is NaN (no infinities exist).
+            Fp8Format::E4M3 => self.bits & 0x7F == 0x7F,
+            Fp8Format::E5M2 => (self.bits & 0x7C == 0x7C) && (self.bits & 0x03 != 0),
+        }
+    }
+
+    pub fn is_infinite(self) -> bool {
+        match self.format {
+            Fp8Format::E4M3 => false,
+            Fp8Format::E5M2 => self.bits & 0x7F == 0x7C,
+        }
+    }
+
+    /// Exact widening to FP16 (the streamer's decode step in hybrid mode).
+    pub fn to_fp16(self) -> Fp16 {
+        if self.is_nan() {
+            return Fp16::NAN;
+        }
+        if self.is_infinite() {
+            return if self.sign() == 1 { Fp16::NEG_INFINITY } else { Fp16::INFINITY };
+        }
+        let s = self.sign();
+        let (exp_bits, man_bits, bias) = match self.format {
+            Fp8Format::E4M3 => (4u32, 3u32, 7i32),
+            Fp8Format::E5M2 => (5u32, 2u32, 15i32),
+        };
+        let e = ((self.bits >> man_bits) & ((1 << exp_bits) - 1)) as i32;
+        let f = (self.bits & ((1 << man_bits) - 1)) as u32;
+        if e == 0 && f == 0 {
+            return Fp16(s << 15);
+        }
+        let (mag, exp) = if e == 0 {
+            (f, 1 - bias - man_bits as i32) // subnormal
+        } else {
+            (f | (1 << man_bits), e - bias - man_bits as i32)
+        };
+        // Every finite FP8 fits exactly in FP16 (E4M3 max 448, min 2^-9;
+        // E5M2 is a strict subset), so round_to_fp16 never actually rounds.
+        Fp16(round_to_fp16(s, mag as u128, exp))
+    }
+
+    /// Round-to-nearest-even narrowing from FP16.
+    ///
+    /// `saturate` selects OCP "saturating" conversion (overflow clamps to
+    /// the maximum finite value) vs. non-saturating (overflow produces NaN
+    /// for E4M3 / ±inf for E5M2).
+    pub fn from_fp16(x: Fp16, format: Fp8Format, saturate: bool) -> Fp8 {
+        let v = x.to_f64();
+        Self::from_f64(v, format, saturate)
+    }
+
+    /// Round-to-nearest-even conversion from f64 (single rounding for any
+    /// value already rounded to ≤ 22 significant bits, which covers FP16).
+    pub fn from_f64(v: f64, format: Fp8Format, saturate: bool) -> Fp8 {
+        let (exp_bits, man_bits, bias): (u32, u32, i32) = match format {
+            Fp8Format::E4M3 => (4, 3, 7),
+            Fp8Format::E5M2 => (5, 2, 15),
+        };
+        let nan = match format {
+            Fp8Format::E4M3 => 0x7Fu8,
+            Fp8Format::E5M2 => 0x7Eu8,
+        };
+        if v.is_nan() {
+            return Fp8::new(nan, format);
+        }
+        let s = u8::from(v.is_sign_negative());
+        let max_finite: f64 = match format {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        };
+        let overflow = |s: u8| -> Fp8 {
+            if saturate {
+                let maxbits = match format {
+                    Fp8Format::E4M3 => 0x7Eu8, // S.1111.110 = 448
+                    Fp8Format::E5M2 => 0x7Bu8, // S.11110.11 = 57344
+                };
+                Fp8::new((s << 7) | maxbits, format)
+            } else {
+                match format {
+                    Fp8Format::E4M3 => Fp8::new(nan, format),
+                    Fp8Format::E5M2 => Fp8::new((s << 7) | 0x7C, format),
+                }
+            }
+        };
+        if v.is_infinite() {
+            return if saturate {
+                overflow(s)
+            } else {
+                match format {
+                    Fp8Format::E4M3 => Fp8::new(nan, format),
+                    Fp8Format::E5M2 => Fp8::new((s << 7) | 0x7C, format),
+                }
+            };
+        }
+        let a = v.abs();
+        if a == 0.0 {
+            return Fp8::new(s << 7, format);
+        }
+
+        // Decompose |v| = mant * 2^exp exactly from the f64 bits.
+        let bits = a.to_bits();
+        let e_field = ((bits >> 52) & 0x7FF) as i32;
+        let frac = bits & 0x000F_FFFF_FFFF_FFFF;
+        let (mant, exp) = if e_field == 0 {
+            (frac as u128, -1074i32)
+        } else {
+            ((frac | (1 << 52)) as u128, e_field - 1075)
+        };
+        let nb = 127 - mant.leading_zeros() as i32;
+        let e = nb + exp;
+        let emin = 1 - bias; // smallest normal exponent
+        let subnormal = e < emin;
+        let q = if subnormal {
+            emin - man_bits as i32
+        } else {
+            e - man_bits as i32
+        };
+        let shift = exp - q;
+        let r: u128 = if shift >= 0 {
+            mant << shift.min(40)
+        } else {
+            let sh = (-shift) as u32;
+            if sh > 127 {
+                0
+            } else {
+                let keep = mant >> sh;
+                let rem = mant & ((1u128 << sh) - 1);
+                let half = 1u128 << (sh - 1);
+                if rem > half || (rem == half && keep & 1 == 1) {
+                    keep + 1
+                } else {
+                    keep
+                }
+            }
+        };
+        let hidden = 1u128 << man_bits;
+        if subnormal {
+            if r == 0 {
+                return Fp8::new(s << 7, format);
+            }
+            if r >= hidden {
+                return Fp8::new((s << 7) | (1 << man_bits), format); // min normal
+            }
+            return Fp8::new((s << 7) | r as u8, format);
+        }
+        let (mut r, mut e) = (r, e);
+        if r == hidden << 1 {
+            r = hidden;
+            e += 1;
+        }
+        // Check overflow against the format's max finite value.
+        let val = r as f64 * 2f64.powi(e - nb_of(r)); // |rounded| value
+        if val > max_finite {
+            return overflow(s);
+        }
+        let e_fld = (e + bias) as u8;
+        debug_assert!(e_fld < (1 << exp_bits));
+        let enc = (s << 7) | (e_fld << man_bits) | (r & (hidden - 1)) as u8;
+        // E4M3: the encoding S.1111.111 is NaN; value 464+ was caught by the
+        // overflow check (448 is S.1111.110), so enc != NaN-pattern here
+        // unless val == 464 rounded from (448,480)... guard explicitly.
+        if format == Fp8Format::E4M3 && enc & 0x7F == 0x7F {
+            return overflow(s);
+        }
+        Fp8::new(enc, format)
+    }
+}
+
+fn nb_of(r: u128) -> i32 {
+    127 - r.leading_zeros() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_decode_known_values() {
+        // 0x3F: e=7 f=7 -> (8+7)*2^(7-7-3) = 15/8 = 1.875
+        assert_eq!(Fp8::new(0x3F, Fp8Format::E4M3).to_fp16().to_f64(), 1.875);
+        // Max finite 0x7E = 448.
+        assert_eq!(Fp8::new(0x7E, Fp8Format::E4M3).to_fp16().to_f64(), 448.0);
+        // 0x7F is NaN, no infinities.
+        assert!(Fp8::new(0x7F, Fp8Format::E4M3).to_fp16().is_nan());
+        assert!(!Fp8::new(0x7F, Fp8Format::E4M3).is_infinite());
+        // Smallest subnormal 2^-9.
+        assert_eq!(Fp8::new(0x01, Fp8Format::E4M3).to_fp16().to_f64(), 2f64.powi(-9));
+        // Signed zero.
+        assert_eq!(Fp8::new(0x80, Fp8Format::E4M3).to_fp16().0, 0x8000);
+    }
+
+    #[test]
+    fn e5m2_decode_known_values() {
+        assert_eq!(Fp8::new(0x3C, Fp8Format::E5M2).to_fp16().to_f64(), 1.0);
+        assert_eq!(Fp8::new(0x7B, Fp8Format::E5M2).to_fp16().to_f64(), 57344.0);
+        assert!(Fp8::new(0x7C, Fp8Format::E5M2).to_fp16().is_infinite());
+        assert!(Fp8::new(0x7D, Fp8Format::E5M2).to_fp16().is_nan());
+        // Smallest subnormal 2^-16.
+        assert_eq!(Fp8::new(0x01, Fp8Format::E5M2).to_fp16().to_f64(), 2f64.powi(-16));
+    }
+
+    #[test]
+    fn round_trip_all_fp8_values_exact() {
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for bits in 0u16..=255 {
+                let x = Fp8::new(bits as u8, fmt);
+                let wide = x.to_fp16();
+                if wide.is_nan() {
+                    continue;
+                }
+                let back = Fp8::from_fp16(wide, fmt, false);
+                assert_eq!(back.bits, x.bits, "fmt={fmt:?} bits=0x{bits:02X} wide={wide:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn narrowing_rounds_to_nearest_even() {
+        // E4M3 around 1.0: ulp = 2^-3 = 0.125. 1.0625 is halfway -> 1.0 (even).
+        let y = Fp8::from_f64(1.0625, Fp8Format::E4M3, false);
+        assert_eq!(y.to_fp16().to_f64(), 1.0);
+        let y = Fp8::from_f64(1.0626, Fp8Format::E4M3, false);
+        assert_eq!(y.to_fp16().to_f64(), 1.125);
+    }
+
+    #[test]
+    fn e4m3_overflow_behaviour() {
+        // Non-saturating: overflow -> NaN (E4M3 has no inf).
+        assert!(Fp8::from_f64(1000.0, Fp8Format::E4M3, false).is_nan());
+        // Saturating: clamps to 448.
+        let s = Fp8::from_f64(1000.0, Fp8Format::E4M3, true);
+        assert_eq!(s.to_fp16().to_f64(), 448.0);
+        // Boundary: everything in (448, 464] rounds back to 448 — including
+        // 464.0 itself, which is a tie and rounds to the even significand
+        // (14) rather than the phantom odd one (15). Above 464 overflows.
+        assert_eq!(Fp8::from_f64(463.9, Fp8Format::E4M3, false).to_fp16().to_f64(), 448.0);
+        assert_eq!(Fp8::from_f64(464.0, Fp8Format::E4M3, false).to_fp16().to_f64(), 448.0);
+        assert!(Fp8::from_f64(464.1, Fp8Format::E4M3, false).is_nan());
+    }
+
+    #[test]
+    fn e5m2_overflow_behaviour() {
+        assert!(Fp8::from_f64(1e9, Fp8Format::E5M2, false).is_infinite());
+        let s = Fp8::from_f64(1e9, Fp8Format::E5M2, true);
+        assert_eq!(s.to_fp16().to_f64(), 57344.0);
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormals() {
+        // E4M3 smallest subnormal is 2^-9; half of it ties to even (0).
+        assert_eq!(Fp8::from_f64(2f64.powi(-10), Fp8Format::E4M3, false).bits, 0);
+        assert_eq!(
+            Fp8::from_f64(2f64.powi(-10) * 1.001, Fp8Format::E4M3, false).bits,
+            0x01
+        );
+        assert_eq!(Fp8::from_f64(-2f64.powi(-9), Fp8Format::E4M3, false).bits, 0x81);
+    }
+}

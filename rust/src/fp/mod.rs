@@ -1,0 +1,30 @@
+//! Bit-accurate floating-point arithmetic for the RedMulE datapath.
+//!
+//! RedMulE's compute elements (CEs) are FPnew-derived **fused**
+//! multiply-add units operating on IEEE-754 binary16 (and, in hybrid mode,
+//! widening from FP8 inputs). For the fault-injection campaign the
+//! simulator must classify a run as *Incorrect* only when the accelerator's
+//! result differs bit-for-bit from the fault-free result, so the model
+//! needs FMA numerics that exactly match both the hardware semantics
+//! (single rounding, round-to-nearest-even) and the Layer-1 Pallas golden
+//! kernel (which computes `fp16(f64(x)*f64(w) + f64(acc))`; see
+//! `python/compile/kernels/redmule.py` for why that is single-rounding
+//! equivalent).
+//!
+//! Two independent implementations are provided and cross-checked in tests:
+//!
+//! * [`fma::fma16`] — exact integer arithmetic (i128 alignment + one final
+//!   round-to-nearest-even). This is the reference used by the simulator.
+//! * [`fma::fma16_via_f64`] — `f64` arithmetic followed by a correctly
+//!   rounded `f64 → fp16` conversion. By the innocuous-double-rounding
+//!   theorem (Figueroa), rounding an exact ≤46-bit intermediate through 53
+//!   bits and then to 11 bits equals a single rounding, so the two paths
+//!   must agree bit-for-bit on every input.
+
+pub mod fma;
+pub mod fp16;
+pub mod fp8;
+
+pub use fma::{add16, fma16, mul16};
+pub use fp16::Fp16;
+pub use fp8::{Fp8, Fp8Format};

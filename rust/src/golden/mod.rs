@@ -1,0 +1,278 @@
+//! Bit-exact golden model of the RedMulE operation `Z = Y + X·W`.
+//!
+//! The accumulation order is the contract: the hardware's row of `H`
+//! cascaded FMAs sweeps the inner dimension in ascending order, so
+//!
+//! ```text
+//! acc = Y[m][k]
+//! for n in 0..N: acc = fma16(X[m][n], W[n][k], acc)   // single rounding
+//! Z[m][k] = acc
+//! ```
+//!
+//! The same order is implemented by the Layer-1 Pallas kernel (see
+//! `python/compile/kernels/redmule.py`), which makes the Rust golden, the
+//! simulator and the PJRT-executed artifact all bit-identical. Run
+//! classification in the fault campaign compares raw `u16` patterns.
+
+use crate::fp::{fma16, Fp16, Fp8, Fp8Format};
+use crate::util::rng::Xoshiro256;
+
+/// A row-major FP16 matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Fp16>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![Fp16::ZERO; rows * cols],
+        }
+    }
+
+    /// Uniform random entries in `[-mag, mag]` (finite, well-conditioned
+    /// for FP16 accumulation — the campaign workload uses mag = 1).
+    pub fn random(rows: usize, cols: usize, mag: f64, rng: &mut Xoshiro256) -> Self {
+        let data = (0..rows * cols).map(|_| rng.next_fp16_in(mag)).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> Fp16 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: Fp16) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn bits(&self) -> Vec<u16> {
+        self.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        self.data.iter().map(|v| v.to_f64()).collect()
+    }
+
+    pub fn from_f64_slice(rows: usize, cols: usize, vals: &[f64]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            data: vals.iter().map(|&v| Fp16::from_f64(v)).collect(),
+        }
+    }
+
+    /// Snap every element onto the FP8 grid (RTNE, saturating) — the
+    /// hybrid-FP8 input path of §2.1: values arrive as 8-bit floats and
+    /// widen losslessly back to FP16 at the compute elements.
+    pub fn quantize_fp8(&self, format: Fp8Format) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .map(|&v| Fp8::from_fp16(v, format, true).to_fp16())
+                .collect(),
+        }
+    }
+}
+
+/// GEMM problem dimensions: `X[M][N] · W[N][K] + Y[M][K]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmSpec {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmSpec {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        assert!(m > 0 && n > 0 && k > 0);
+        Self { m, n, k }
+    }
+
+    /// The paper's fault-injection workload: (12 × 16 × 16).
+    pub fn paper_workload() -> Self {
+        Self::new(12, 16, 16)
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n * self.k) as u64
+    }
+}
+
+/// A concrete GEMM instance: inputs plus the memoised golden output.
+#[derive(Debug, Clone)]
+pub struct GemmProblem {
+    pub spec: GemmSpec,
+    pub x: Mat,
+    pub w: Mat,
+    pub y: Mat,
+}
+
+impl GemmProblem {
+    /// Hybrid-FP8 workload: X and W on the FP8 grid, Y/Z in FP16 — the
+    /// accumulation path is unchanged (widening CEs), so the same golden,
+    /// simulator and kernel all apply bit-exactly.
+    pub fn random_fp8(spec: &GemmSpec, format: Fp8Format, seed: u64) -> Self {
+        let p = Self::random(spec, seed);
+        Self {
+            spec: p.spec,
+            x: p.x.quantize_fp8(format),
+            w: p.w.quantize_fp8(format),
+            y: p.y,
+        }
+    }
+
+    pub fn random(spec: &GemmSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        Self {
+            spec: *spec,
+            x: Mat::random(spec.m, spec.n, 1.0, &mut rng),
+            w: Mat::random(spec.n, spec.k, 1.0, &mut rng),
+            y: Mat::random(spec.m, spec.k, 1.0, &mut rng),
+        }
+    }
+
+    /// Bit-exact reference result in the hardware accumulation order.
+    pub fn golden_z(&self) -> Mat {
+        gemm_golden(&self.x, &self.w, &self.y)
+    }
+}
+
+/// `Z = Y + X·W` with the RedMulE accumulation order (ascending `n`,
+/// single-rounded FMA at every step).
+pub fn gemm_golden(x: &Mat, w: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols, w.rows, "inner dimensions must agree");
+    assert_eq!(y.rows, x.rows);
+    assert_eq!(y.cols, w.cols);
+    let (m, n, k) = (x.rows, x.cols, w.cols);
+    let mut z = Mat::zeros(m, k);
+    for i in 0..m {
+        for j in 0..k {
+            let mut acc = y.at(i, j);
+            for t in 0..n {
+                acc = fma16(x.at(i, t), w.at(t, j), acc);
+            }
+            z.set(i, j, acc);
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_weight_passes_x_through_plus_y() {
+        let m = 4;
+        let n = 4;
+        let mut w = Mat::zeros(n, n);
+        for i in 0..n {
+            w.set(i, i, Fp16::ONE);
+        }
+        let mut rng = Xoshiro256::new(3);
+        let x = Mat::random(m, n, 1.0, &mut rng);
+        let y = Mat::zeros(m, n);
+        let z = gemm_golden(&x, &w, &y);
+        assert_eq!(z.bits(), x.bits());
+    }
+
+    #[test]
+    fn zero_x_returns_y_when_y_nonnegative() {
+        // With x = 0 every FMA adds 0*w — exact, so acc stays y... except
+        // that adding -0 or crossing signed zero never occurs for finite y:
+        // fma(0, w, y) = y exactly (0*w = ±0, y + ±0 = y for y != 0).
+        let spec = GemmSpec::new(3, 5, 4);
+        let mut rng = Xoshiro256::new(7);
+        let x = Mat::zeros(spec.m, spec.n);
+        let w = Mat::random(spec.n, spec.k, 1.0, &mut rng);
+        let mut y = Mat::random(spec.m, spec.k, 1.0, &mut rng);
+        // Avoid y == -0 edge (would become +0).
+        for v in y.data.iter_mut() {
+            if v.is_zero() {
+                *v = Fp16::ONE;
+            }
+        }
+        let z = gemm_golden(&x, &w, &y);
+        assert_eq!(z.bits(), y.bits());
+    }
+
+    #[test]
+    fn accumulation_order_matters_and_is_fixed() {
+        // FP16 addition is not associative; verify our order is the
+        // ascending-n chain by checking against a hand-rolled loop.
+        let spec = GemmSpec::new(2, 8, 2);
+        let p = GemmProblem::random(&spec, 99);
+        let z = p.golden_z();
+        for i in 0..spec.m {
+            for j in 0..spec.k {
+                let mut acc = p.y.at(i, j);
+                for t in 0..spec.n {
+                    acc = fma16(p.x.at(i, t), p.w.at(t, j), acc);
+                }
+                assert_eq!(z.at(i, j).to_bits(), acc.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn golden_is_deterministic_across_seeds_and_calls() {
+        let spec = GemmSpec::paper_workload();
+        let p1 = GemmProblem::random(&spec, 1234);
+        let p2 = GemmProblem::random(&spec, 1234);
+        assert_eq!(p1.golden_z().bits(), p2.golden_z().bits());
+        let p3 = GemmProblem::random(&spec, 1235);
+        assert_ne!(p3.golden_z().bits(), p1.golden_z().bits());
+    }
+
+    #[test]
+    fn fp8_quantization_is_idempotent_and_lossy() {
+        let spec = GemmSpec::new(6, 8, 6);
+        let p = GemmProblem::random(&spec, 77);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let q = p.x.quantize_fp8(fmt);
+            // Idempotent: the grid is a fixed point.
+            assert_eq!(q.quantize_fp8(fmt).bits(), q.bits());
+            // Lossy on generic FP16 data.
+            assert_ne!(q.bits(), p.x.bits());
+        }
+    }
+
+    #[test]
+    fn fp8_problem_runs_through_the_same_golden() {
+        let spec = GemmSpec::paper_workload();
+        let p = GemmProblem::random_fp8(&spec, Fp8Format::E4M3, 3);
+        let z = p.golden_z();
+        for v in &z.data {
+            assert!(v.is_finite());
+        }
+        // X/W really live on the FP8 grid.
+        for v in &p.x.data {
+            let rt = Fp8::from_fp16(*v, Fp8Format::E4M3, true).to_fp16();
+            assert_eq!(rt.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn result_stays_finite_for_unit_magnitude_inputs() {
+        // 16-term dot products of values in [-1, 1] plus y in [-1, 1] can
+        // reach at most 17 — far from FP16 overflow (65504).
+        let spec = GemmSpec::paper_workload();
+        let p = GemmProblem::random(&spec, 5);
+        let z = p.golden_z();
+        for v in &z.data {
+            assert!(v.is_finite());
+        }
+    }
+}

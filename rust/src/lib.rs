@@ -1,0 +1,78 @@
+//! # RedMulE-FT — reproduction library
+//!
+//! A cycle-level, fault-injectable model of the RedMulE-FT reconfigurable
+//! fault-tolerant matrix-multiplication engine (Wiese et al., CF Companion
+//! '25), together with the substrates it depends on (FP16 soft-float, ECC,
+//! TCDM, DMA, a PULP-cluster host driver), a statistical fault-injection
+//! campaign engine, an analytic gate-equivalent area model, and a PJRT
+//! runtime that executes the AOT-compiled JAX/Pallas golden model from Rust.
+//!
+//! ## Layering
+//!
+//! * **Layer 1/2 (build time)** — `python/compile/` holds the Pallas GEMM
+//!   kernel and the JAX graphs (golden GEMM, MLP train step). `make
+//!   artifacts` lowers them once to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — everything at simulation/request time:
+//!   the accelerator model ([`redmule`]), the fault campaign
+//!   ([`fault`], [`campaign`]), the cluster substrate ([`tcdm`], [`dma`],
+//!   [`cluster`]), the mixed-criticality [`coordinator`], and the
+//!   [`runtime`] that loads the HLO artifacts via PJRT.
+//!
+//! ## Quick start
+//!
+//! ```text
+//! use redmule_ft::prelude::*;
+//!
+//! // Build a cluster with a fully protected RedMulE-FT instance.
+//! let cfg = RedMuleConfig::paper(); // L=12, H=4, P=3, FP16
+//! let mut sys = System::new(cfg, Protection::Full);
+//! let gemm = GemmSpec::new(12, 16, 16);
+//! let problem = GemmProblem::random(&gemm, 42);
+//! let report = sys.run_gemm(&problem, ExecMode::FaultTolerant).unwrap();
+//! assert!(report.z_matches(&problem.golden_z()));
+//! ```
+
+// Module roster (see DESIGN.md §2 for the inventory).
+pub mod area;
+pub mod campaign;
+pub mod cluster;
+pub mod coordinator;
+pub mod dma;
+pub mod ecc;
+pub mod fault;
+pub mod fp;
+pub mod golden;
+pub mod perf;
+pub mod redmule;
+pub mod runtime;
+pub mod tcdm;
+pub mod util;
+
+/// Commonly used types, re-exported for examples and binaries.
+pub mod prelude {
+    pub use crate::campaign::{Campaign, CampaignConfig, Outcome, Table1};
+    pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System};
+    pub use crate::coordinator::{Coordinator, Criticality, TaskRequest};
+    pub use crate::fault::{FaultKind, FaultPlan, FaultRegistry};
+    pub use crate::fp::Fp16;
+    pub use crate::golden::{GemmProblem, GemmSpec, Mat};
+    pub use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+    pub use crate::util::rng::Xoshiro256;
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    ArtifactMissing(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,367 @@
+//! `redmule-ft` — command-line front end for the RedMulE-FT reproduction.
+//!
+//! Subcommands (CLI parsing is hand-rolled; clap is not vendored):
+//!
+//! ```text
+//! redmule-ft campaign [--config baseline|data|full] [--injections N]
+//!                     [--seed S] [--threads T] [--report]
+//! redmule-ft table1   [--injections N] [--seed S] [--threads T]
+//! redmule-ft area     [--config baseline|data|full] [--l L --h H --p P]
+//! redmule-ft floorplan [--config ...]
+//! redmule-ft perf     [--m M --n N --k K]
+//! redmule-ft gemm     [--m M --n N --k K] [--config ...] [--mode ft|perf]
+//! redmule-ft golden-check [--artifacts DIR]
+//! redmule-ft serve    [--tasks N] [--critical-pct P]
+//! ```
+
+use redmule_ft::area::{area_report, floorplan};
+use redmule_ft::campaign::{Campaign, CampaignConfig, Table1};
+use redmule_ft::cluster::System;
+use redmule_ft::coordinator::{Coordinator, Criticality};
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::perf::{mode_report, retry_expected_overhead, throughput};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+use redmule_ft::runtime::GoldenRuntime;
+use redmule_ft::util::rng::Xoshiro256;
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+/// Minimal `--key value` / flag parser.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    kv.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("unexpected argument: {a}");
+                i += 1;
+            }
+        }
+        Self { cmd, kv, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.kv
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    fn protection(&self) -> Protection {
+        match self.kv.get("config").map(|s| s.as_str()) {
+            Some("baseline") => Protection::Baseline,
+            Some("data") => Protection::Data,
+            Some("per-ce") | Some("perce") => Protection::PerCe,
+            None | Some("full") => Protection::Full,
+            Some(other) => {
+                eprintln!("unknown --config {other}, using full");
+                Protection::Full
+            }
+        }
+    }
+
+    fn redmule_cfg(&self) -> RedMuleConfig {
+        RedMuleConfig::new(
+            self.get("l", 12usize),
+            self.get("h", 4usize),
+            self.get("p", 3usize),
+        )
+    }
+}
+
+fn main() -> ExitCode {
+    let args = Args::parse();
+    let r = match args.cmd.as_str() {
+        "campaign" => cmd_campaign(&args),
+        "table1" => cmd_table1(&args),
+        "area" => cmd_area(&args),
+        "floorplan" => cmd_floorplan(&args),
+        "perf" => cmd_perf(&args),
+        "gemm" => cmd_gemm(&args),
+        "golden-check" => cmd_golden_check(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            Err(redmule_ft::Error::Config("unknown command".into()))
+        }
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "redmule-ft — RedMulE-FT reproduction (CF Companion '25)\n\
+         \n\
+         commands:\n\
+           campaign      run one SFI campaign column (--config, --injections, --seed, --threads, --report)\n\
+           table1        run all three Table-1 columns (--injections, --seed, --threads)\n\
+           area          GE area model breakdown (--config, --l/--h/--p)\n\
+           floorplan     Fig. 2a textual floorplan (--config)\n\
+           perf          performance-mode vs FT-mode cycle model (--m/--n/--k)\n\
+           gemm          run one GEMM on the simulator and verify vs golden\n\
+           golden-check  execute AOT artifacts via PJRT and compare bit-exactly\n\
+           serve         mixed-criticality coordinator demo (--tasks, --critical-pct)"
+    );
+}
+
+fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
+    let protection = args.protection();
+    let injections = args.get("injections", 20_000u64);
+    let seed = args.get("seed", 2025u64);
+    let mut cfg = CampaignConfig::table1(protection, injections, seed);
+    cfg.threads = args.get("threads", cfg.threads);
+    eprintln!(
+        "campaign: {} build, {} injections, seed {}, {} threads",
+        protection.name(),
+        injections,
+        seed,
+        cfg.threads
+    );
+    let r = Campaign::run(&cfg)?;
+    println!(
+        "total {}  correct(no-retry) {}  correct(retry) {}  incorrect {}  timeout {}",
+        r.total, r.correct_no_retry, r.correct_with_retry, r.incorrect, r.timeout
+    );
+    println!(
+        "applied {} ({:.2} %)   {:.0} runs/s",
+        r.applied,
+        100.0 * r.applied as f64 / r.total.max(1) as f64,
+        r.runs_per_sec()
+    );
+    if args.flag("report") {
+        println!();
+        println!("correct termination : {}", r.rate(r.correct()).table1_cell());
+        println!("  w/o retry         : {}", r.rate(r.correct_no_retry).table1_cell());
+        println!("  with retry        : {}", r.rate(r.correct_with_retry).table1_cell());
+        println!(
+            "functional error    : {}",
+            if r.functional_errors() == 0 {
+                format!("<{:.4} %", r.conservative_upper(0) * 100.0)
+            } else {
+                r.rate(r.functional_errors()).table1_cell()
+            }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> redmule_ft::Result<()> {
+    let injections = args.get("injections", 20_000u64);
+    let seed = args.get("seed", 2025u64);
+    let threads = args.kv.get("threads").and_then(|t| t.parse().ok());
+    let t = Table1::run(injections, seed, threads)?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_area(args: &Args) -> redmule_ft::Result<()> {
+    let cfg = args.redmule_cfg();
+    let base = area_report(cfg, Protection::Baseline);
+    for p in [Protection::Baseline, Protection::Data, Protection::Full] {
+        let r = area_report(cfg, p);
+        println!("{}", r.render());
+        println!(
+            "overhead vs baseline: {:+.1} %\n",
+            r.overhead_vs(&base)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_floorplan(args: &Args) -> redmule_ft::Result<()> {
+    let (mut blocks, redmule) = floorplan::cluster_blocks(args.redmule_cfg(), args.protection());
+    floorplan::place(&mut blocks);
+    println!("{}", floorplan::render(&blocks));
+    println!(
+        "RedMulE-FT [{}]: {:.0} kGE",
+        args.protection().name(),
+        redmule.total_kge()
+    );
+    Ok(())
+}
+
+fn cmd_perf(args: &Args) -> redmule_ft::Result<()> {
+    let cfg = args.redmule_cfg();
+    let spec = GemmSpec::new(
+        args.get("m", 12usize),
+        args.get("n", 16usize),
+        args.get("k", 16usize),
+    );
+    let r = mode_report(cfg, Protection::Full, spec)?;
+    println!(
+        "workload ({},{},{}) on L={} H={} P={}",
+        spec.m, spec.n, spec.k, cfg.l, cfg.h, cfg.p
+    );
+    let tp = throughput(cfg, spec, r.perf_cycles);
+    let tf = throughput(cfg, spec, r.ft_cycles);
+    println!(
+        "performance mode : {:>8} cycles  util {:>5.1} %  {:>6.2} GFLOPS",
+        r.perf_cycles,
+        100.0 * tp.utilization,
+        tp.gflops
+    );
+    println!(
+        "fault-tolerant   : {:>8} cycles  util {:>5.1} %  {:>6.2} GFLOPS",
+        r.ft_cycles,
+        100.0 * tf.utilization,
+        tf.gflops
+    );
+    println!("slowdown         : {:.2}x  [paper: 2x]", r.slowdown);
+    println!(
+        "retry overhead at 12 % detection rate: {:.0} cycles expected per workload",
+        retry_expected_overhead(r.ft_cycles, 0.12)
+    );
+    Ok(())
+}
+
+fn cmd_gemm(args: &Args) -> redmule_ft::Result<()> {
+    let cfg = args.redmule_cfg();
+    let protection = args.protection();
+    let mode = match args.kv.get("mode").map(|s| s.as_str()) {
+        Some("perf") | Some("performance") => ExecMode::Performance,
+        _ => ExecMode::FaultTolerant,
+    };
+    let spec = GemmSpec::new(
+        args.get("m", 12usize),
+        args.get("n", 16usize),
+        args.get("k", 16usize),
+    );
+    let p = GemmProblem::random(&spec, args.get("seed", 1u64));
+    let golden = p.golden_z();
+    let mut sys = System::new(cfg, protection);
+    let r = sys.run_gemm(&p, mode)?;
+    println!(
+        "({},{},{}) [{}/{}]: {:?} in {} cycles, golden match = {}",
+        spec.m,
+        spec.n,
+        spec.k,
+        protection.name(),
+        mode.name(),
+        r.outcome,
+        r.cycles,
+        r.z_matches(&golden)
+    );
+    if !r.z_matches(&golden) {
+        return Err(redmule_ft::Error::Sim("simulator diverged from golden".into()));
+    }
+    Ok(())
+}
+
+fn cmd_golden_check(args: &Args) -> redmule_ft::Result<()> {
+    let dir = args
+        .kv
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let rt = GoldenRuntime::load(&dir)?;
+    #[cfg(feature = "pjrt")]
+    {
+        println!("platform: {}", rt.platform());
+        let mut checked = 0;
+        for name in rt.names() {
+            let e = rt.entry(name).unwrap().clone();
+            if e.kind != "gemm" {
+                continue;
+            }
+            let spec = GemmSpec::new(e.params[0], e.params[1], e.params[2]);
+            let p = GemmProblem::random(&spec, 0xA0_7E57);
+            let golden = p.golden_z();
+            let z = rt.execute_gemm(name, &p.x, &p.w, &p.y)?;
+            let ok = z.bits() == golden.bits();
+            println!(
+                "{name}: PJRT vs Rust golden — {}",
+                if ok { "bit-exact" } else { "MISMATCH" }
+            );
+            if !ok {
+                return Err(redmule_ft::Error::Sim(format!(
+                    "{name}: PJRT result differs from golden"
+                )));
+            }
+            // And against the cycle-level simulator.
+            let mut sys = System::new(RedMuleConfig::paper(), Protection::Full);
+            let r = sys.run_gemm(&p, ExecMode::FaultTolerant)?;
+            if r.z.bits() != z.bits() {
+                return Err(redmule_ft::Error::Sim(format!(
+                    "{name}: simulator differs from PJRT artifact"
+                )));
+            }
+            println!("{name}: simulator vs PJRT — bit-exact");
+            checked += 1;
+        }
+        println!("{checked} gemm artifact(s) verified");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = rt;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> redmule_ft::Result<()> {
+    let n_tasks = args.get("tasks", 20u64);
+    let critical_pct = args.get("critical-pct", 50u64).min(100);
+    let mut coord = Coordinator::new(args.redmule_cfg(), args.protection());
+    let mut rng = Xoshiro256::new(args.get("seed", 7u64));
+    for _ in 0..n_tasks {
+        let crit = if rng.below(100) < critical_pct {
+            Criticality::Critical
+        } else {
+            Criticality::BestEffort
+        };
+        let spec = GemmSpec::new(
+            2 + rng.below(11) as usize,
+            4 + rng.below(29) as usize,
+            4 + rng.below(29) as usize,
+        );
+        coord.submit(crit, GemmProblem::random(&spec, rng.next_u64()));
+    }
+    let done = coord.run_to_idle()?;
+    let m = &coord.metrics;
+    println!(
+        "completed {done}/{} (after-retry {}, requeued {}, failed {})",
+        m.submitted, m.completed_after_retry, m.requeued, m.failed
+    );
+    println!(
+        "cycles: critical {}  best-effort {}  config {}  total {}",
+        m.critical_cycles,
+        m.best_effort_cycles,
+        m.config_cycles,
+        m.total_cycles()
+    );
+    Ok(())
+}

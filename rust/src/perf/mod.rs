@@ -1,0 +1,174 @@
+//! Performance model: the §4.1/§3.4 throughput story.
+//!
+//! RedMulE-FT's runtime configurability trades throughput for reliability:
+//!
+//! * **performance mode** — all `L` rows carry unique work;
+//! * **fault-tolerant mode** — consecutive row pairs duplicate work, so
+//!   the usable array is `L/2` rows: ≈2× the cycles for the same GEMM;
+//! * configuration costs a one-time ≤120-cycle parity computation on the
+//!   cores (§3.2), and a detected fault costs a full re-execution (§3.3,
+//!   with tile-level recovery left as the paper's future work — see
+//!   [`retry_expected_overhead`]).
+//!
+//! Analytic numbers come from the scheduler's closed-form cycle count;
+//! measured numbers from stepping the simulator. The `perf_modes` bench
+//! prints both and their agreement.
+
+use crate::cluster::{System, CONFIG_PARITY_CYCLES};
+use crate::golden::{GemmProblem, GemmSpec};
+use crate::redmule::scheduler::{Dims, Scheduler};
+use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+use crate::Result;
+
+/// Frequency of the physical implementation (§4: 500 MHz in 12LP+, same
+/// for all three builds — protection does not touch the critical path).
+pub const FREQ_MHZ: f64 = 500.0;
+
+/// Analytic fault-free cycle count for a workload in a mode.
+pub fn analytic_cycles(cfg: RedMuleConfig, spec: GemmSpec, mode: ExecMode) -> u64 {
+    let rows_per_tile = match mode {
+        ExecMode::FaultTolerant => (cfg.l / 2).max(1) as u32,
+        ExecMode::Performance => cfg.l as u32,
+    };
+    Scheduler::nominal_cycles(&Dims {
+        m: spec.m as u32,
+        n: spec.n as u32,
+        k: spec.k as u32,
+        rows_per_tile,
+        d: cfg.d() as u32,
+        h: cfg.h as u32,
+    })
+}
+
+/// Peak and achieved throughput for a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub cycles: u64,
+    pub macs: u64,
+    /// MACs per cycle achieved.
+    pub macs_per_cycle: f64,
+    /// Utilization vs. the array's peak (L·H MACs/cycle).
+    pub utilization: f64,
+    /// GFLOPS at the published 500 MHz (2 FLOPs per MAC).
+    pub gflops: f64,
+}
+
+pub fn throughput(cfg: RedMuleConfig, spec: GemmSpec, cycles: u64) -> Throughput {
+    let macs = spec.macs();
+    let mpc = macs as f64 / cycles.max(1) as f64;
+    Throughput {
+        cycles,
+        macs,
+        macs_per_cycle: mpc,
+        utilization: mpc / cfg.macs_per_cycle() as f64,
+        gflops: 2.0 * mpc * FREQ_MHZ / 1000.0,
+    }
+}
+
+/// Measured cycles from the simulator (fault-free hosted run).
+pub fn measured_cycles(
+    cfg: RedMuleConfig,
+    protection: Protection,
+    spec: GemmSpec,
+    mode: ExecMode,
+) -> Result<u64> {
+    let mut sys = System::new(cfg, protection);
+    let p = GemmProblem::random(&spec, 0x9E37);
+    let r = sys.run_gemm(&p, mode)?;
+    Ok(r.cycles)
+}
+
+/// Expected per-workload cycle overhead of the retry mechanism given a
+/// detection probability `p_retry` (from the campaign): a detected fault
+/// aborts mid-flight (on average half the workload is lost) and triggers
+/// reconfiguration plus a full re-execution.
+pub fn retry_expected_overhead(base_cycles: u64, p_retry: f64) -> f64 {
+    let c = base_cycles as f64;
+    p_retry * (0.5 * c + CONFIG_PARITY_CYCLES as f64 + c)
+}
+
+/// One row of the mode-comparison report (the §4.1 performance claims).
+#[derive(Debug, Clone)]
+pub struct ModeReport {
+    pub spec: GemmSpec,
+    pub perf_cycles: u64,
+    pub ft_cycles: u64,
+    pub slowdown: f64,
+    pub perf_util: f64,
+    pub ft_util: f64,
+}
+
+pub fn mode_report(cfg: RedMuleConfig, protection: Protection, spec: GemmSpec) -> Result<ModeReport> {
+    let perf = measured_cycles(cfg, protection, spec, ExecMode::Performance)?;
+    let ft = measured_cycles(cfg, protection, spec, ExecMode::FaultTolerant)?;
+    Ok(ModeReport {
+        spec,
+        perf_cycles: perf,
+        ft_cycles: ft,
+        slowdown: ft as f64 / perf as f64,
+        perf_util: throughput(cfg, spec, perf).utilization,
+        ft_util: throughput(cfg, spec, ft).utilization,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_matches_measured_for_paper_workload() {
+        let cfg = RedMuleConfig::paper();
+        let spec = GemmSpec::paper_workload();
+        for (prot, mode) in [
+            (Protection::Baseline, ExecMode::Performance),
+            (Protection::Full, ExecMode::FaultTolerant),
+            (Protection::Full, ExecMode::Performance),
+        ] {
+            let a = analytic_cycles(cfg, spec, if prot.has_data_protection() { mode } else { ExecMode::Performance });
+            let m = measured_cycles(cfg, prot, spec, mode).unwrap();
+            assert_eq!(a, m, "{prot:?}/{mode:?}");
+        }
+    }
+
+    #[test]
+    fn ft_slowdown_approaches_2x_for_large_workloads() {
+        let cfg = RedMuleConfig::paper();
+        let r = mode_report(cfg, Protection::Full, GemmSpec::new(48, 96, 96)).unwrap();
+        assert!(
+            (1.8..=2.2).contains(&r.slowdown),
+            "slowdown {:.2} should be ≈2 (perf={}, ft={})",
+            r.slowdown,
+            r.perf_cycles,
+            r.ft_cycles
+        );
+    }
+
+    #[test]
+    fn utilization_is_high_in_steady_state() {
+        // Large-N workloads amortize load/drain/store: utilization should
+        // approach 1 MAC/CE/cycle in performance mode.
+        let cfg = RedMuleConfig::paper();
+        let spec = GemmSpec::new(12, 256, 12);
+        let t = throughput(cfg, spec, analytic_cycles(cfg, spec, ExecMode::Performance));
+        assert!(t.utilization > 0.7, "utilization {:.2}", t.utilization);
+    }
+
+    #[test]
+    fn retry_overhead_scales_with_probability() {
+        let base = 1000;
+        assert_eq!(retry_expected_overhead(base, 0.0), 0.0);
+        let at_12pct = retry_expected_overhead(base, 0.12);
+        // ~12 % of runs pay ~1.5× the workload plus reconfiguration.
+        assert!((150.0..=220.0).contains(&at_12pct), "{at_12pct}");
+    }
+
+    #[test]
+    fn gflops_at_peak_matches_array_size() {
+        let cfg = RedMuleConfig::paper();
+        // Hypothetical perfect utilization: L·H MACs/cycle at 500 MHz.
+        let spec = GemmSpec::new(12, 4096, 12);
+        let cycles = spec.macs() / cfg.macs_per_cycle() as u64;
+        let t = throughput(cfg, spec, cycles);
+        assert!((t.gflops - 48.0).abs() < 0.5, "peak ≈ 48 GFLOPS, got {:.1}", t.gflops);
+    }
+}

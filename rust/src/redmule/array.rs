@@ -1,0 +1,292 @@
+//! The compute-element array: operand buffers, FMA pipelines and
+//! output-stationary accumulators.
+//!
+//! Mechanics (per row): a chain of `H` cascaded FMA units, each with `P`
+//! pipeline registers, modelled as a shift queue of `D = H·P` slots. A
+//! *wave* — one output column's partial accumulation — enters at slot 0,
+//! receives CE `j`'s FMA when it lands in slot `j·P`, and retires from
+//! slot `D-1` into the accumulator. One wave issues per cycle per row, so
+//! the array sustains `L·H` MACs/cycle with the pipeline exactly hidden.
+//!
+//! The X operand registers are **double-buffered** (banked by inner-chunk
+//! parity): a wave from chunk `nt` is still in flight while chunk `nt+1`'s
+//! operands load, so each chunk's X elements live in bank `nt % 2` — the
+//! same skew the RTL implements with per-CE operand registers.
+//!
+//! Every stored bit here is a fault site: X operand registers (`XBuf`),
+//! W broadcast registers + parity (`WBuf`), pipeline slot registers
+//! (`CeArray`), and accumulators (`Accumulator`).
+
+use crate::fp::Fp16;
+
+/// One in-flight wave: which inner chunk/column it belongs to plus the
+/// running partial value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InFlight {
+    pub nt: u16,
+    pub col: u16,
+    pub val: Fp16,
+}
+
+/// Array state for an `L × H × P` instance.
+#[derive(Debug, Clone)]
+pub struct CeArray {
+    pub l: usize,
+    pub h: usize,
+    pub p: usize,
+    pub d: usize,
+    /// Pipeline slots, row-major: `slots[row * d + s]`.
+    pub slots: Vec<Option<InFlight>>,
+    /// Accumulators, row-major: `acc[row * d + col]`.
+    pub acc: Vec<Fp16>,
+    /// X operand registers, two banks: `xbuf[bank * l * h + row * h + j]`.
+    pub xbuf: Vec<Fp16>,
+    /// W broadcast value registers (one per CE column, shared by rows).
+    pub wbuf_val: Vec<Fp16>,
+    /// W broadcast parity bits (FT builds).
+    pub wbuf_par: Vec<u8>,
+    /// W broadcast valid flags (tail chunks leave columns idle).
+    pub wbuf_valid: Vec<bool>,
+}
+
+impl CeArray {
+    pub fn new(l: usize, h: usize, p: usize) -> Self {
+        let d = h * p;
+        Self {
+            l,
+            h,
+            p,
+            d,
+            slots: vec![None; l * d],
+            acc: vec![Fp16::ZERO; l * d],
+            xbuf: vec![Fp16::ZERO; 2 * l * h],
+            wbuf_val: vec![Fp16::ZERO; h],
+            wbuf_par: vec![0; h],
+            wbuf_valid: vec![false; h],
+        }
+    }
+
+    /// Reset all pipeline/buffer state (start of task or after abort).
+    pub fn clear(&mut self) {
+        self.slots.fill(None);
+        self.acc.fill(Fp16::ZERO);
+        self.xbuf.fill(Fp16::ZERO);
+        self.wbuf_val.fill(Fp16::ZERO);
+        self.wbuf_par.fill(0);
+        self.wbuf_valid.fill(false);
+    }
+
+    /// Take the wave retiring from `row` this cycle (slot `D-1`). The
+    /// caller writes it to the accumulator **before** issuing a new wave,
+    /// matching the RTL's retire-then-issue ordering within a cycle.
+    #[inline]
+    pub fn take_retired(&mut self, row: usize) -> Option<InFlight> {
+        self.slots[row * self.d + self.d - 1].take()
+    }
+
+    /// Shift `row`'s pipeline by one slot and inject `new` at slot 0.
+    /// Must be called after [`CeArray::take_retired`].
+    #[inline]
+    pub fn shift_issue(&mut self, row: usize, new: Option<InFlight>) {
+        let base = row * self.d;
+        for s in (1..self.d).rev() {
+            self.slots[base + s] = self.slots[base + s - 1];
+        }
+        self.slots[base] = new;
+    }
+
+    /// Entries currently sitting at CE entry positions (slot `j·P`) for
+    /// `row`; the caller applies the FMA for CE `j` to each.
+    #[inline]
+    pub fn ce_entry_slot(&mut self, row: usize, j: usize) -> &mut Option<InFlight> {
+        &mut self.slots[row * self.d + j * self.p]
+    }
+
+    #[inline]
+    pub fn acc_at(&self, row: usize, col: usize) -> Fp16 {
+        self.acc[row * self.d + col]
+    }
+
+    #[inline]
+    pub fn set_acc(&mut self, row: usize, col: usize, v: Fp16) {
+        self.acc[row * self.d + col] = v;
+    }
+
+    /// X operand of CE `j` in `row`, from chunk-parity bank `bank`.
+    #[inline]
+    pub fn x_at(&self, bank: usize, row: usize, j: usize) -> Fp16 {
+        self.xbuf[bank * self.l * self.h + row * self.h + j]
+    }
+
+    #[inline]
+    pub fn set_x(&mut self, bank: usize, row: usize, j: usize, v: Fp16) {
+        self.xbuf[bank * self.l * self.h + row * self.h + j] = v;
+    }
+
+    /// True if any pipeline slot is occupied (used to validate drain).
+    pub fn pipelines_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    // ---------------------------------------------------------- SEU hooks
+
+    /// Flip a bit of the wave value in pipeline slot `index = row*D + s`.
+    /// Misses (empty slot / out of range) return false — the fault is
+    /// architecturally masked.
+    pub fn flip_pipe_bit(&mut self, index: u32, bit: u8) -> bool {
+        match self.slots.get_mut(index as usize) {
+            Some(Some(e)) => {
+                e.val = Fp16::from_bits(e.val.to_bits() ^ (1 << (bit & 15)));
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Flip an accumulator bit (`index = row*D + col`).
+    pub fn flip_acc_bit(&mut self, index: u32, bit: u8) -> bool {
+        match self.acc.get_mut(index as usize) {
+            Some(v) => {
+                *v = Fp16::from_bits(v.to_bits() ^ (1 << (bit & 15)));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Flip an X operand register bit (`index = bank*L*H + row*H + j`).
+    pub fn flip_x_bit(&mut self, index: u32, bit: u8) -> bool {
+        match self.xbuf.get_mut(index as usize) {
+            Some(v) => {
+                *v = Fp16::from_bits(v.to_bits() ^ (1 << (bit & 15)));
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_row(a: &mut CeArray, row: usize, new: Option<InFlight>) -> Option<InFlight> {
+        let r = a.take_retired(row);
+        a.shift_issue(row, new);
+        r
+    }
+
+    #[test]
+    fn shift_queue_retires_in_order_after_d_cycles() {
+        let mut a = CeArray::new(2, 4, 3); // d = 12
+        let mk = |col: u16| {
+            Some(InFlight {
+                nt: 0,
+                col,
+                val: Fp16::from_f64(col as f64),
+            })
+        };
+        for c in 0..12u16 {
+            assert!(step_row(&mut a, 0, mk(c)).is_none(), "cycle {c}");
+        }
+        for c in 0..12u16 {
+            let r = step_row(&mut a, 0, None).expect("retire");
+            assert_eq!(r.col, c);
+        }
+        assert!(a.pipelines_empty());
+    }
+
+    #[test]
+    fn retire_is_visible_before_issue_same_cycle() {
+        // A wave retiring at cycle t must update the accumulator before
+        // the same-cycle issue reads it (chunk-to-chunk dependency).
+        let mut a = CeArray::new(1, 1, 2); // d = 2
+        a.set_acc(0, 0, Fp16::from_f64(1.0));
+        // Issue wave for col 0 reading acc.
+        let v0 = a.acc_at(0, 0);
+        a.shift_issue(0, Some(InFlight { nt: 0, col: 0, val: v0 }));
+        a.shift_issue(0, None); // wave moves to slot 1 (= d-1)
+        // Cycle t: retire first, write acc, then issue next chunk's wave.
+        let mut r = a.take_retired(0).unwrap();
+        r.val = Fp16::from_f64(5.0); // pretend the FMA chain produced 5
+        a.set_acc(0, r.col as usize, r.val);
+        let v1 = a.acc_at(0, 0);
+        assert_eq!(v1.to_f64(), 5.0, "issue must observe the retired value");
+        a.shift_issue(0, Some(InFlight { nt: 1, col: 0, val: v1 }));
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let mut a = CeArray::new(2, 2, 2); // d = 4
+        let w = InFlight {
+            nt: 1,
+            col: 2,
+            val: Fp16::ONE,
+        };
+        step_row(&mut a, 1, Some(w));
+        assert!(a.slots[0].is_none()); // row 0 untouched
+        assert_eq!(a.slots[4], Some(w));
+    }
+
+    #[test]
+    fn ce_entry_positions() {
+        let mut a = CeArray::new(1, 3, 2); // d = 6, CE entries at slots 0,2,4
+        step_row(
+            &mut a,
+            0,
+            Some(InFlight {
+                nt: 0,
+                col: 0,
+                val: Fp16::ONE,
+            }),
+        );
+        assert!(a.ce_entry_slot(0, 0).is_some());
+        assert!(a.ce_entry_slot(0, 1).is_none());
+        step_row(&mut a, 0, None);
+        step_row(&mut a, 0, None);
+        assert!(a.ce_entry_slot(0, 1).is_some()); // wave reached CE 1
+        assert!(a.ce_entry_slot(0, 0).is_none());
+    }
+
+    #[test]
+    fn x_banks_are_disjoint() {
+        let mut a = CeArray::new(2, 2, 2);
+        a.set_x(0, 1, 1, Fp16::ONE);
+        a.set_x(1, 1, 1, Fp16::NEG_ONE);
+        assert_eq!(a.x_at(0, 1, 1), Fp16::ONE);
+        assert_eq!(a.x_at(1, 1, 1), Fp16::NEG_ONE);
+        assert_eq!(a.x_at(0, 0, 0), Fp16::ZERO);
+    }
+
+    #[test]
+    fn seu_hooks_hit_and_miss() {
+        let mut a = CeArray::new(2, 2, 2);
+        assert!(!a.flip_pipe_bit(0, 3)); // empty slot: masked
+        step_row(&mut a, 0, Some(InFlight { nt: 0, col: 0, val: Fp16::ZERO }));
+        assert!(a.flip_pipe_bit(0, 3));
+        assert_eq!(a.slots[0].unwrap().val.to_bits(), 1 << 3);
+        assert!(a.flip_acc_bit(5, 15));
+        assert_eq!(a.acc[5].to_bits(), 0x8000);
+        assert!(!a.flip_acc_bit(999, 0));
+        // X SEU hits both banks' index space (2*L*H = 8 regs here).
+        assert!(a.flip_x_bit(7, 0));
+        assert_eq!(a.xbuf[7].to_bits(), 1);
+        assert!(!a.flip_x_bit(8, 0));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut a = CeArray::new(2, 2, 2);
+        step_row(&mut a, 0, Some(InFlight { nt: 0, col: 1, val: Fp16::ONE }));
+        a.set_acc(1, 2, Fp16::ONE);
+        a.set_x(1, 0, 1, Fp16::ONE);
+        a.wbuf_val[0] = Fp16::ONE;
+        a.wbuf_valid[0] = true;
+        a.clear();
+        assert!(a.pipelines_empty());
+        assert!(a.acc.iter().all(|v| v.is_zero()));
+        assert!(a.xbuf.iter().all(|v| v.is_zero()));
+        assert!(a.wbuf_val.iter().all(|v| v.is_zero()));
+        assert!(a.wbuf_valid.iter().all(|&v| !v));
+    }
+}

@@ -1,0 +1,202 @@
+//! RedMulE instance configuration and execution modes.
+
+/// Hardware build parameters of a RedMulE instance (§2.1): a 2-D array of
+/// `L` rows × `H` compute elements per row, each CE an FP16 FMA with `P`
+/// internal pipeline registers.
+///
+/// Derived quantity `D = H·P`: the number of output columns a row keeps in
+/// flight. A row's cascaded chain of `H` FMAs has a latency of `H·P`
+/// cycles; issuing one output column per cycle for `D` cycles hides that
+/// latency completely, which is exactly how RedMulE reaches one FMA per CE
+/// per cycle in steady state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RedMuleConfig {
+    /// Number of compute rows (paper instance: 12).
+    pub l: usize,
+    /// CEs (cascaded FMAs) per row (paper instance: 4).
+    pub h: usize,
+    /// Pipeline registers per CE (paper instance: 3).
+    pub p: usize,
+}
+
+impl RedMuleConfig {
+    pub fn new(l: usize, h: usize, p: usize) -> Self {
+        assert!(l >= 1 && h >= 1 && p >= 1, "degenerate array");
+        Self { l, h, p }
+    }
+
+    /// The instance evaluated in the paper: L=12, H=4, P=3, FP16.
+    pub fn paper() -> Self {
+        Self::new(12, 4, 3)
+    }
+
+    /// In-flight output columns per row (`D = H·P`), which is also the
+    /// column-tile width of the schedule.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.h * self.p
+    }
+
+    /// Peak multiply-accumulate throughput (MACs per cycle).
+    #[inline]
+    pub fn macs_per_cycle(&self) -> usize {
+        self.l * self.h
+    }
+
+    /// Number of CEs in the array.
+    #[inline]
+    pub fn n_ce(&self) -> usize {
+        self.l * self.h
+    }
+}
+
+/// Which protection hardware is *built in* — the three synthesized
+/// versions compared in §4, plus the related-work comparator:
+///
+/// 1. `Baseline` — the unprotected RedMulE of [7].
+/// 2. `Data` — §3.1 only: duplicated read responses + per-row ECC
+///    decoding, redundant computation on consecutive rows, parity-checked
+///    weight broadcast, output checker, TCDM write filter.
+/// 3. `Full` — `Data` plus §3.2: reduced-width replica streamers,
+///    duplicated control/scheduler FSMs with comparators, parity-protected
+///    register file, alternating row-to-FSM assignment.
+/// 4. `PerCe` — the prior approach of [8] (Ulbricht et al.): one
+///    localized recompute-and-compare checker per compute element. It
+///    guards the FMA datapath only; buffers, weight-broadcast paths and
+///    control logic stay exposed — the gap §1 calls out and the
+///    `ablation_protection` bench quantifies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Protection {
+    Baseline,
+    Data,
+    Full,
+    PerCe,
+}
+
+impl Protection {
+    pub fn name(self) -> &'static str {
+        match self {
+            Protection::Baseline => "baseline",
+            Protection::Data => "data",
+            Protection::Full => "full",
+            Protection::PerCe => "per-ce",
+        }
+    }
+
+    /// Does this build have the §3.1 data-path machinery?
+    pub fn has_data_protection(self) -> bool {
+        matches!(self, Protection::Data | Protection::Full)
+    }
+
+    /// Does this build have the §3.2 control-path machinery?
+    pub fn has_control_protection(self) -> bool {
+        matches!(self, Protection::Full)
+    }
+
+    /// Does this build have [8]-style localized per-CE checkers?
+    pub fn has_per_ce_checkers(self) -> bool {
+        matches!(self, Protection::PerCe)
+    }
+}
+
+/// Runtime-selected execution mode (§3.4), configured in the register file
+/// before the task starts.
+///
+/// * `FaultTolerant` — redundant computation on consecutive row pairs plus
+///   all built-in checkers; detected faults abort the workload so the host
+///   can retry. Throughput is halved (half the rows carry unique work).
+/// * `Performance` — every row carries unique work. On `Data`/`Full`
+///   builds the control-path redundancy (if built in) stays active and
+///   detected faults abort the workload, but computations are not
+///   duplicated so data-path faults go undetected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    Performance,
+    FaultTolerant,
+}
+
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Performance => "performance",
+            ExecMode::FaultTolerant => "fault-tolerant",
+        }
+    }
+}
+
+/// Byte layout of one GEMM task in TCDM, programmed into the register
+/// file. All matrices are row-major FP16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskLayout {
+    pub x_addr: u32,
+    pub w_addr: u32,
+    pub y_addr: u32,
+    pub z_addr: u32,
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+}
+
+impl TaskLayout {
+    /// Pack matrices back-to-back starting at `base`, 4-byte aligned.
+    pub fn contiguous(base: u32, m: u32, n: u32, k: u32) -> Self {
+        let align = |v: u32| (v + 3) & !3;
+        let x_addr = align(base);
+        let w_addr = align(x_addr + 2 * m * n);
+        let y_addr = align(w_addr + 2 * n * k);
+        let z_addr = align(y_addr + 2 * m * k);
+        Self {
+            x_addr,
+            w_addr,
+            y_addr,
+            z_addr,
+            m,
+            n,
+            k,
+        }
+    }
+
+    /// Total bytes of TCDM this task touches.
+    pub fn footprint(&self) -> u32 {
+        self.z_addr + 2 * self.m * self.k - self.x_addr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_instance_parameters() {
+        let c = RedMuleConfig::paper();
+        assert_eq!((c.l, c.h, c.p), (12, 4, 3));
+        assert_eq!(c.d(), 12);
+        assert_eq!(c.macs_per_cycle(), 48);
+        assert_eq!(c.n_ce(), 48);
+    }
+
+    #[test]
+    fn protection_capability_matrix() {
+        assert!(!Protection::Baseline.has_data_protection());
+        assert!(Protection::Data.has_data_protection());
+        assert!(!Protection::Data.has_control_protection());
+        assert!(Protection::Full.has_data_protection());
+        assert!(Protection::Full.has_control_protection());
+    }
+
+    #[test]
+    fn contiguous_layout_is_disjoint_and_aligned() {
+        let t = TaskLayout::contiguous(0x100, 12, 16, 16);
+        assert_eq!(t.x_addr % 4, 0);
+        assert!(t.w_addr >= t.x_addr + 2 * 12 * 16);
+        assert!(t.y_addr >= t.w_addr + 2 * 16 * 16);
+        assert!(t.z_addr >= t.y_addr + 2 * 12 * 16);
+        assert!(t.footprint() >= 2 * (12 * 16 + 16 * 16 + 2 * 12 * 16));
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_rows_rejected() {
+        RedMuleConfig::new(0, 4, 3);
+    }
+}

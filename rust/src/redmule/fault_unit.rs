@@ -1,0 +1,163 @@
+//! Fault status registers and interrupt generation (§3.3).
+//!
+//! On detection: (1) the status registers capture the cause, (2) the
+//! interrupt line is asserted for **two consecutive cycles** so a single
+//! transient on the wire cannot make the host miss it, (3) the FSM returns
+//! to idle so the host can re-program and retry.
+
+/// Detection-cause bits (the fault status register layout).
+pub mod cause {
+    /// Weight parity violated at a CE (§3.1).
+    pub const W_PARITY: u32 = 1 << 0;
+    /// Redundant row pair disagreed at the output checker (§3.1).
+    pub const Z_MISMATCH: u32 = 1 << 1;
+    /// Primary/replica FSM state divergence (§3.2).
+    pub const FSM_MISMATCH: u32 = 1 << 2;
+    /// Primary/replica streamer control divergence (§3.2).
+    pub const STREAMER_MISMATCH: u32 = 1 << 3;
+    /// Register-file parity violation (§3.2).
+    pub const REGFILE_PARITY: u32 = 1 << 4;
+    /// Uncorrectable ECC error on a memory response (§3.1).
+    pub const ECC_DOUBLE: u32 = 1 << 5;
+    /// Store-path parity violation between checker and encoder (Full).
+    pub const STORE_PARITY: u32 = 1 << 6;
+    /// Localized per-CE recompute checker disagreed ([8]-style builds).
+    pub const CE_CHECK: u32 = 1 << 7;
+
+    pub const ALL: u32 = 0xFF;
+
+    pub fn names(bits: u32) -> Vec<&'static str> {
+        let mut v = Vec::new();
+        if bits & W_PARITY != 0 {
+            v.push("w-parity");
+        }
+        if bits & Z_MISMATCH != 0 {
+            v.push("z-mismatch");
+        }
+        if bits & FSM_MISMATCH != 0 {
+            v.push("fsm-mismatch");
+        }
+        if bits & STREAMER_MISMATCH != 0 {
+            v.push("streamer-mismatch");
+        }
+        if bits & REGFILE_PARITY != 0 {
+            v.push("regfile-parity");
+        }
+        if bits & ECC_DOUBLE != 0 {
+            v.push("ecc-double");
+        }
+        if bits & STORE_PARITY != 0 {
+            v.push("store-parity");
+        }
+        if bits & CE_CHECK != 0 {
+            v.push("ce-check");
+        }
+        v
+    }
+}
+
+/// Fault status registers + interrupt bookkeeping.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultUnit {
+    /// Sticky cause bits, readable (and clearable) by the host.
+    pub status: u32,
+    /// Total detections since last clear (second status register).
+    pub detect_count: u32,
+    /// Tile-progress register (§5 future work): the conservative
+    /// `(mt, kt)` the task can safely resume from, latched at the first
+    /// detection since clear.
+    pub progress: (u16, u16),
+    progress_valid: bool,
+}
+
+impl FaultUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Latch a detection's cause bits.
+    pub fn record(&mut self, causes: u32) {
+        self.status |= causes;
+        self.detect_count = self.detect_count.wrapping_add(1);
+    }
+
+    /// Latch the resume tile at the first detection since clear. Under
+    /// the single-fault assumption one of the two lockstep schedulers is
+    /// uncorrupted; the lexicographic minimum is safe either way (a too-
+    /// early resume only redoes committed tiles, which is idempotent).
+    pub fn record_progress(&mut self, primary: (u16, u16), replica: (u16, u16)) {
+        if !self.progress_valid {
+            self.progress = primary.min(replica);
+            self.progress_valid = true;
+        }
+    }
+
+    /// Host-side read-and-clear (after acknowledging the interrupt).
+    /// Returns (status, detect_count, resume_tile).
+    pub fn read_clear(&mut self) -> (u32, u32) {
+        let out = (self.status, self.detect_count);
+        self.status = 0;
+        self.detect_count = 0;
+        self.progress_valid = false;
+        out
+    }
+
+    /// The latched resume tile (valid between detection and clear).
+    pub fn progress_tile(&self) -> (u16, u16) {
+        if self.progress_valid {
+            self.progress
+        } else {
+            (0, 0)
+        }
+    }
+
+    /// SEU hook on the status register bits.
+    pub fn flip_status_bit(&mut self, bit: u8) {
+        self.status ^= 1 << (bit & 31);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_and_clears() {
+        let mut f = FaultUnit::new();
+        f.record(cause::W_PARITY);
+        f.record(cause::Z_MISMATCH);
+        assert_eq!(f.status, cause::W_PARITY | cause::Z_MISMATCH);
+        assert_eq!(f.detect_count, 2);
+        let (s, c) = f.read_clear();
+        assert_eq!(s, cause::W_PARITY | cause::Z_MISMATCH);
+        assert_eq!(c, 2);
+        assert_eq!(f.status, 0);
+    }
+
+    #[test]
+    fn cause_names_cover_all_bits() {
+        assert_eq!(cause::names(cause::ALL).len(), 8);
+        assert!(cause::names(0).is_empty());
+        assert_eq!(cause::names(cause::ECC_DOUBLE), vec!["ecc-double"]);
+    }
+
+    #[test]
+    fn progress_latches_min_of_lockstep_pair_once() {
+        let mut f = FaultUnit::new();
+        assert_eq!(f.progress_tile(), (0, 0));
+        f.record_progress((3, 1), (2, 7));
+        assert_eq!(f.progress_tile(), (2, 7));
+        // Later detections in the same abort window don't move it.
+        f.record_progress((9, 9), (9, 9));
+        assert_eq!(f.progress_tile(), (2, 7));
+        f.read_clear();
+        assert_eq!(f.progress_tile(), (0, 0));
+    }
+
+    #[test]
+    fn seu_flip_is_visible() {
+        let mut f = FaultUnit::new();
+        f.flip_status_bit(3);
+        assert_eq!(f.status, 1 << 3);
+    }
+}

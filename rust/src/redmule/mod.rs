@@ -1,0 +1,890 @@
+//! Cycle-level model of the RedMulE / RedMulE-FT accelerator.
+//!
+//! The module decomposition mirrors Figure 1 of the paper:
+//!
+//! * [`regfile`] — shadowed-context configuration registers (+ parity).
+//! * [`streamer`] — address generation (+ reduced-width replicas).
+//! * [`array`] — X/W operand buffers, CE FMA pipelines, accumulators.
+//! * [`scheduler`] — the schedule FSM (+ lockstep replica).
+//! * [`fault_unit`] — fault status registers and the 2-cycle interrupt.
+//!
+//! [`RedMule::step`] executes one clock cycle: it applies any due SEU,
+//! runs the active phase's work (memory traffic, FMA issue/retire) with
+//! every datum passing through its [`FaultCtx`] hook, steps the FSMs and
+//! their replicas, evaluates the build's detectors, and drives the
+//! abort/interrupt sequence of §3.3 when a fault is flagged.
+
+pub mod array;
+pub mod config;
+pub mod fault_unit;
+pub mod regfile;
+pub mod scheduler;
+pub mod streamer;
+
+pub use config::{ExecMode, Protection, RedMuleConfig, TaskLayout};
+
+use crate::ecc::{decode32, weight_parity, weight_parity_ok, DecodeStatus};
+use crate::fault::site::{
+    ce_unit, checker_unit, ctrl_unit, fault_unit as fu_sites, regfile_unit, sched_unit,
+    streamer_unit, wbuf_unit, Module, SiteId,
+};
+use crate::fault::{FaultCtx, FaultPlan};
+use crate::fp::{fma16, Fp16};
+use crate::tcdm::Tcdm;
+use array::{CeArray, InFlight};
+use fault_unit::{cause, FaultUnit};
+use regfile::{
+    RegFile, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME,
+    REG_W_ADDR, REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
+};
+use scheduler::{Dims, Scheduler, PH_COMPUTE, PH_DONE, PH_DRAIN, PH_LOAD_Y, PH_STORE_Z, STREAM_ELEMS_PER_CYCLE};
+use streamer::{wrap_addr, Streamer, STREAM_W, STREAM_X, STREAM_Y, STREAM_Z};
+
+/// Control-FSM state encodings (values > `CTRL_DONE` are illegal and
+/// reachable only through injected faults; the FSM then halts).
+pub const CTRL_IDLE: u8 = 0;
+pub const CTRL_RUN: u8 = 1;
+pub const CTRL_IRQ1: u8 = 2;
+pub const CTRL_IRQ2: u8 = 3;
+pub const CTRL_DONE: u8 = 4;
+
+/// Host-visible accelerator state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    Idle,
+    Running,
+    Done,
+    /// Aborted after a detected fault; status registers hold the cause.
+    Aborted,
+}
+
+/// Cycle/traffic counters (feeds the performance model).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PerfCounters {
+    pub cycles: u64,
+    pub phase_cycles: [u64; 6],
+    pub macs: u64,
+    pub tcdm_reads: u64,
+    pub tcdm_writes: u64,
+}
+
+/// The accelerator.
+#[derive(Debug, Clone)]
+pub struct RedMule {
+    pub cfg: RedMuleConfig,
+    pub protection: Protection,
+    pub regfile: RegFile,
+    pub sched: Scheduler,
+    pub sched_rep: Scheduler,
+    pub ctrl_state: u8,
+    pub ctrl_state_rep: u8,
+    pub array: CeArray,
+    pub streamers: [Streamer; 4],
+    pub fault_unit: FaultUnit,
+    pub perf: PerfCounters,
+    pub cycle: u64,
+    irq_line: bool,
+    /// Execution mode latched from the register file at task start.
+    mode: ExecMode,
+    /// Global mirror of the wave identities in the (row-uniform) pipeline,
+    /// drives the W broadcast buffer.
+    wave_pipe: Vec<Option<(u16, u16)>>,
+}
+
+impl RedMule {
+    pub fn new(cfg: RedMuleConfig, protection: Protection) -> Self {
+        Self {
+            cfg,
+            protection,
+            regfile: RegFile::new(protection.has_control_protection()),
+            sched: Scheduler::idle(),
+            sched_rep: Scheduler::idle(),
+            ctrl_state: CTRL_IDLE,
+            ctrl_state_rep: CTRL_IDLE,
+            array: CeArray::new(cfg.l, cfg.h, cfg.p),
+            streamers: [Streamer::default(); 4],
+            fault_unit: FaultUnit::new(),
+            perf: PerfCounters::default(),
+            cycle: 0,
+            irq_line: false,
+            mode: ExecMode::Performance,
+            wave_pipe: vec![None; cfg.d()],
+        }
+    }
+
+    /// Latch the committed configuration and start the task.
+    pub fn start(&mut self) {
+        let flags = self.regfile.read(REG_FLAGS);
+        let ft_requested = flags & FLAG_FT_MODE != 0;
+        self.mode = if ft_requested && self.protection.has_data_protection() {
+            assert!(self.cfg.l % 2 == 0, "FT mode requires an even row count");
+            ExecMode::FaultTolerant
+        } else {
+            ExecMode::Performance
+        };
+        if flags & FLAG_TILE_RECOVERY != 0 {
+            // §5 future work: resume from the tile the host read out of
+            // the progress register instead of recomputing everything.
+            let resume = self.regfile.read(REG_RESUME);
+            let (mt, kt) = ((resume >> 16) as u16, resume as u16);
+            self.sched.start_from(mt, kt);
+            self.sched_rep.start_from(mt, kt);
+        } else {
+            self.sched.start();
+            self.sched_rep.start();
+        }
+        self.ctrl_state = CTRL_RUN;
+        self.ctrl_state_rep = CTRL_RUN;
+        self.array.clear();
+        for s in &mut self.streamers {
+            s.reset();
+        }
+        self.wave_pipe.fill(None);
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Full reset to power-on state, preserving the build parameters.
+    /// Used between independent campaign runs so cycle numbering and any
+    /// latched state cannot leak from one injection to the next.
+    /// Allocation-free: reuses the array/pipe buffers (hot path of the
+    /// campaign engine — see EXPERIMENTS.md §Perf).
+    pub fn reset(&mut self) {
+        self.regfile = RegFile::new(self.protection.has_control_protection());
+        self.sched = Scheduler::idle();
+        self.sched_rep = Scheduler::idle();
+        self.ctrl_state = CTRL_IDLE;
+        self.ctrl_state_rep = CTRL_IDLE;
+        self.array.clear();
+        for s in &mut self.streamers {
+            s.reset();
+        }
+        self.fault_unit = FaultUnit::new();
+        self.perf = PerfCounters::default();
+        self.cycle = 0;
+        self.irq_line = false;
+        self.mode = ExecMode::Performance;
+        self.wave_pipe.fill(None);
+    }
+
+    pub fn irq(&self) -> bool {
+        self.irq_line
+    }
+
+    pub fn state(&self) -> RunState {
+        match self.ctrl_state {
+            CTRL_DONE => RunState::Done,
+            CTRL_IDLE if self.fault_unit.status != 0 => RunState::Aborted,
+            CTRL_IDLE => RunState::Idle,
+            _ => RunState::Running,
+        }
+    }
+
+    /// Dimensions as seen by the FSMs this cycle (register-file reads).
+    pub fn dims(&self) -> Dims {
+        let rows_per_tile = if self.mode == ExecMode::FaultTolerant {
+            (self.cfg.l / 2) as u32
+        } else {
+            self.cfg.l as u32
+        };
+        Dims {
+            m: self.regfile.read(REG_M),
+            n: self.regfile.read(REG_N),
+            k: self.regfile.read(REG_K),
+            rows_per_tile,
+            d: self.cfg.d() as u32,
+            h: self.cfg.h as u32,
+        }
+    }
+
+    /// Detector causes enabled by this build + latched mode (§3.4).
+    fn enabled_causes(&self) -> u32 {
+        let mut e = 0;
+        if self.protection.has_data_protection() {
+            e |= cause::ECC_DOUBLE;
+            if self.mode == ExecMode::FaultTolerant {
+                e |= cause::W_PARITY | cause::Z_MISMATCH;
+            }
+        }
+        if self.protection.has_control_protection() {
+            e |= cause::FSM_MISMATCH
+                | cause::STREAMER_MISMATCH
+                | cause::REGFILE_PARITY
+                | cause::STORE_PARITY;
+        }
+        if self.protection.has_per_ce_checkers() {
+            e |= cause::CE_CHECK;
+        }
+        e
+    }
+
+    /// Execute one clock cycle against `tcdm`.
+    pub fn step(&mut self, tcdm: &mut Tcdm, ctx: &mut FaultCtx) {
+        self.cycle += 1;
+        ctx.set_cycle(self.cycle);
+        self.perf.cycles += 1;
+
+        // SEUs land at the cycle boundary, before any logic evaluates.
+        if let Some(plan) = ctx.seu_due(self.cycle) {
+            if self.apply_seu(plan) {
+                ctx.mark_applied();
+            }
+        }
+
+        let mut detect: u32 = 0;
+        let mut sched_done = false;
+        // Tile coordinates *before* the FSMs advance: a fault detected on
+        // a tile's last cycle must latch THAT tile into the progress
+        // register, not its successor.
+        let tile_now = (self.sched.mt, self.sched.kt);
+        let tile_now_rep = (self.sched_rep.mt, self.sched_rep.kt);
+
+        if self.ctrl_state == CTRL_RUN {
+            // Continuous register-file parity verification (§3.3).
+            if self.regfile.parity_violation(ctx) {
+                detect |= cause::REGFILE_PARITY;
+            }
+
+            // Lockstep comparison of the schedule FSMs at the *register
+            // outputs*, i.e. before this cycle's logic consumes them. An
+            // upset that would self-heal at the next transition (e.g. a
+            // counter flip that immediately saturates a phase) is still a
+            // one-cycle divergence on the comparator and must abort —
+            // the corrupted value already drove one cycle of addresses.
+            if self.protection.has_control_protection()
+                && self.sched.compare_key() != self.sched_rep.compare_key()
+            {
+                detect |= cause::FSM_MISMATCH;
+            }
+
+            let dims = self.dims();
+            if !self.sched.is_illegal() {
+                let phase = self.sched.phase;
+                if (phase as usize) < 6 {
+                    self.perf.phase_cycles[phase as usize] += 1;
+                }
+                match phase {
+                    PH_LOAD_Y => self.do_load_y(&dims, tcdm, ctx, &mut detect),
+                    PH_COMPUTE => self.do_compute(&dims, tcdm, ctx, true, &mut detect),
+                    PH_DRAIN => self.do_compute(&dims, tcdm, ctx, false, &mut detect),
+                    PH_STORE_Z => self.do_store_z(&dims, tcdm, ctx, &mut detect),
+                    _ => {}
+                }
+            }
+
+            // Step the schedule FSM and its lockstep replica.
+            let running = self.sched.advance(&dims);
+            if self.protection.has_control_protection() {
+                self.sched_rep.advance(&dims);
+                if self.sched.compare_key() != self.sched_rep.compare_key() {
+                    detect |= cause::FSM_MISMATCH;
+                }
+            }
+            sched_done = !running && self.sched.phase == PH_DONE;
+        }
+
+        // Resolve detections against the build's enabled detectors.
+        let effective = detect & self.enabled_causes();
+        let detected = effective != 0 && self.ctrl_state == CTRL_RUN;
+        if detected {
+            self.fault_unit.record(effective);
+            self.fault_unit.record_progress(tile_now, tile_now_rep);
+            // Return toward idle; the array and schedule state are
+            // discarded (the host will re-program and retry).
+            self.sched = Scheduler::idle();
+            self.sched_rep = Scheduler::idle();
+            self.array.clear();
+            self.wave_pipe.fill(None);
+        }
+
+        // Control FSM (+ replica) transition. The comparator watches the
+        // state *continuously*: the two instances receive identical inputs
+        // every cycle, so any divergence — including an upset that knocks
+        // the primary out of RUN entirely — forces the abort sequence.
+        self.ctrl_state = step_ctrl(self.ctrl_state, detected, sched_done);
+        self.ctrl_state_rep = step_ctrl(self.ctrl_state_rep, detected, sched_done);
+        if self.protection.has_control_protection()
+            && self.ctrl_state != self.ctrl_state_rep
+        {
+            // Comparator forces the abort sequence even if the primary FSM
+            // wandered off (§3.2).
+            self.fault_unit.record(cause::FSM_MISMATCH);
+            self.fault_unit.record_progress(tile_now, tile_now_rep);
+            self.ctrl_state = CTRL_IRQ1;
+            self.ctrl_state_rep = CTRL_IRQ1;
+            self.sched = Scheduler::idle();
+            self.sched_rep = Scheduler::idle();
+            self.array.clear();
+            self.wave_pipe.fill(None);
+        }
+
+        // Interrupt wire: asserted for the two IRQ states; a transient can
+        // flip one sample but not both (§3.3).
+        let irq_nominal = matches!(self.ctrl_state, CTRL_IRQ1 | CTRL_IRQ2);
+        self.irq_line = ctx.flag(
+            SiteId::new(Module::FaultUnit, fu_sites::IRQ_NET, 0),
+            irq_nominal,
+        );
+    }
+
+    // ------------------------------------------------------------ phases
+
+    /// Preload Y elements of the current tile into the accumulators.
+    fn do_load_y(&mut self, dims: &Dims, tcdm: &mut Tcdm, ctx: &mut FaultCtx, detect: &mut u32) {
+        let (mt, kt) = (self.sched.mt as u32, self.sched.kt as u32);
+        let dk = dims.dk(kt);
+        if dk == 0 {
+            return;
+        }
+        let elems = dims.rows(mt) * dk;
+        let start = u32::from(self.sched.ptr) * STREAM_ELEMS_PER_CYCLE as u32;
+        let end = (start + STREAM_ELEMS_PER_CYCLE as u32).min(elems);
+        let y_base = self.regfile.read(REG_Y_ADDR);
+        let tcdm_bytes = tcdm.size_bytes() as u32;
+        let ft = self.mode == ExecMode::FaultTolerant;
+        let has_rep = self.protection.has_control_protection();
+
+        for e in start..end {
+            let lr = e / dk;
+            let c = e % dk;
+            let m = mt * dims.rows_per_tile + lr;
+            let nominal = y_base.wrapping_add((m.wrapping_mul(dims.k) + kt * dims.d + c) * 2);
+            let lane = (e % STREAM_ELEMS_PER_CYCLE as u32) as u16;
+            let issue = self.streamers[STREAM_Y].issue(STREAM_Y, nominal, lane, has_rep, ctx);
+            if issue.mismatch {
+                *detect |= cause::STREAMER_MISMATCH;
+            }
+            let addr = wrap_addr(issue.addr, tcdm_bytes);
+            self.perf.tcdm_reads += 1;
+
+            if ft {
+                let (row_a, row_b) = ((lr * 2) as usize, (lr * 2 + 1) as usize);
+                let (va, vb, dbl) =
+                    fetch_dup_protected(tcdm, addr, Module::StreamerY, lane, row_a, row_b, ctx);
+                if dbl {
+                    *detect |= cause::ECC_DOUBLE;
+                }
+                if c < dims.d {
+                    self.array.set_acc(row_a, c as usize, va);
+                    self.array.set_acc(row_b, c as usize, vb);
+                }
+            } else {
+                let v = fetch_single(
+                    tcdm,
+                    addr,
+                    Module::StreamerY,
+                    lane,
+                    lr as usize,
+                    self.protection,
+                    ctx,
+                    detect,
+                );
+                if (lr as usize) < self.cfg.l && c < dims.d {
+                    self.array.set_acc(lr as usize, c as usize, v);
+                }
+            }
+        }
+    }
+
+    /// One compute/drain cycle: retire, shift, issue, refresh W, apply FMAs.
+    fn do_compute(
+        &mut self,
+        dims: &Dims,
+        tcdm: &mut Tcdm,
+        ctx: &mut FaultCtx,
+        issuing: bool,
+        detect: &mut u32,
+    ) {
+        let (mt, kt, nt, cc) = (
+            self.sched.mt as u32,
+            self.sched.kt as u32,
+            self.sched.nt as u32,
+            self.sched.cc as u32,
+        );
+        let dk = dims.dk(kt);
+        let rows_logical = dims.rows(mt);
+        let ft = self.mode == ExecMode::FaultTolerant;
+
+        // Chunk boundary: fetch this chunk's X operands into bank nt%2.
+        if issuing && cc == 0 {
+            self.load_x_chunk(dims, tcdm, ctx, detect);
+        }
+
+        let issue_wave = issuing && cc < dk && dk > 0;
+
+        // Per row: retire -> write accumulator -> issue new wave.
+        for row in 0..self.cfg.l {
+            let lr = if ft { (row / 2) as u32 } else { row as u32 };
+            let active = lr < rows_logical;
+
+            if let Some(r) = self.array.take_retired(row) {
+                if (r.col as usize) < self.cfg.d() {
+                    self.array.set_acc(row, r.col as usize, r.val);
+                }
+            }
+            let new = if issue_wave && active {
+                // Row-control gate: the issue-valid line from the driving
+                // FSM (alternating primary/replica assignment in Full).
+                let valid = ctx.flag(
+                    SiteId::new(Module::SchedFsm, sched_unit::CTRL_NET, row as u16),
+                    true,
+                );
+                if valid {
+                    Some(InFlight {
+                        nt: nt as u16,
+                        col: cc as u16,
+                        val: self.array.acc_at(row, cc as usize),
+                    })
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+            self.array.shift_issue(row, new);
+        }
+
+        // Mirror wave identities (row-uniform) for the W broadcast.
+        for s in (1..self.cfg.d()).rev() {
+            self.wave_pipe[s] = self.wave_pipe[s - 1];
+        }
+        self.wave_pipe[0] = if issue_wave {
+            Some((nt as u16, cc as u16))
+        } else {
+            None
+        };
+
+        // W broadcast buffer refresh: one element per CE column whose
+        // entry slot holds a wave this cycle.
+        let w_base = self.regfile.read(REG_W_ADDR);
+        let tcdm_bytes = tcdm.size_bytes() as u32;
+        let has_rep = self.protection.has_control_protection();
+        for j in 0..self.cfg.h {
+            let slot = self.wave_pipe[j * self.cfg.p];
+            self.array.wbuf_valid[j] = false;
+            let Some((wnt, wcol)) = slot else { continue };
+            let n_row = u32::from(wnt) * dims.h + j as u32;
+            if n_row >= dims.n {
+                continue; // tail chunk: this CE passes through
+            }
+            let nominal = w_base
+                .wrapping_add((n_row.wrapping_mul(dims.k) + kt * dims.d + u32::from(wcol)) * 2);
+            let issue = self.streamers[STREAM_W].issue(STREAM_W, nominal, j as u16, has_rep, ctx);
+            if issue.mismatch {
+                *detect |= cause::STREAMER_MISMATCH;
+            }
+            let addr = wrap_addr(issue.addr, tcdm_bytes);
+            self.perf.tcdm_reads += 1;
+            let mut v = tcdm.read_fp16(addr).0;
+            // The tiny unprotected window: decode output before the parity
+            // generator taps it.
+            v = ctx.fp16(SiteId::new(Module::WBuf, wbuf_unit::PRE_PARITY_NET, j as u16), v);
+            let par = if self.protection.has_control_protection() {
+                // §3.2: parity generated by *separate logic* — the replica
+                // address path fetches its own copy, so a control fault
+                // misaligns data and parity and is caught at the CEs.
+                let addr_rep = wrap_addr(issue.addr_rep, tcdm_bytes);
+                weight_parity(tcdm.read_fp16(addr_rep).0)
+            } else {
+                weight_parity(v)
+            };
+            self.array.wbuf_val[j] = v;
+            self.array.wbuf_par[j] = par;
+            self.array.wbuf_valid[j] = true;
+        }
+
+        // FMAs at CE entry slots.
+        let check_w_parity =
+            ft && self.protection.has_data_protection();
+        let per_ce = self.protection.has_per_ce_checkers();
+        for row in 0..self.cfg.l {
+            let lr = if ft { (row / 2) as u32 } else { row as u32 };
+            if lr >= rows_logical {
+                continue;
+            }
+            for j in 0..self.cfg.h {
+                let (wv_reg, wp_reg, wvalid) = (
+                    self.array.wbuf_val[j],
+                    self.array.wbuf_par[j],
+                    self.array.wbuf_valid[j],
+                );
+                let entry = self.array.ce_entry_slot(row, j);
+                let Some(e) = entry.as_mut() else { continue };
+                let n_row = u32::from(e.nt) * dims.h + j as u32;
+                if n_row >= dims.n || !wvalid {
+                    continue; // pass-through CE
+                }
+                let idx = (row * self.cfg.h + j) as u16;
+                // Operand nets.
+                let bank = (e.nt % 2) as usize;
+                let x_raw = self.array.x_at(bank, row, j);
+                let x = ctx.fp16(SiteId::new(Module::CeArray, ce_unit::X_NET, idx), x_raw);
+                // The W register + per-row broadcast tap.
+                let wv0 = ctx.fp16(SiteId::new(Module::WBuf, wbuf_unit::VALUE_REG, j as u16), wv_reg);
+                let wp = ctx.u32(
+                    SiteId::new(Module::WBuf, wbuf_unit::PARITY_REG, j as u16),
+                    wp_reg as u32,
+                ) as u8;
+                let wv = ctx.fp16(SiteId::new(Module::CeArray, ce_unit::W_NET, idx), wv0);
+                if check_w_parity && !weight_parity_ok(wv, wp) {
+                    *detect |= cause::W_PARITY;
+                }
+                let entry = self.array.ce_entry_slot(row, j).as_mut().unwrap();
+                let acc_in = entry.val;
+                let res = fma16(x, wv, acc_in);
+                entry.val = ctx.fp16(SiteId::new(Module::CeArray, ce_unit::FMA_NET, idx), res);
+                if per_ce {
+                    // [8]-style localized checker: an independent reduced
+                    // FMA recomputes from the *register* operands and
+                    // compares at the CE output. Catches transients on the
+                    // CE's own operand/result nets — and nothing upstream
+                    // of the operand registers, which is exactly the
+                    // coverage gap §1 argues about.
+                    let recompute = fma16(x_raw, wv_reg, acc_in);
+                    let eq_nominal = recompute.to_bits() == entry.val.to_bits();
+                    let eq = ctx.flag(
+                        SiteId::new(Module::Checker, checker_unit::PERCE_CMP_NET, idx),
+                        eq_nominal,
+                    );
+                    if !eq {
+                        *detect |= cause::CE_CHECK;
+                    }
+                }
+                self.perf.macs += 1;
+            }
+        }
+    }
+
+    /// Fetch one chunk's X operands (H per logical row) into bank nt%2.
+    fn load_x_chunk(&mut self, dims: &Dims, tcdm: &mut Tcdm, ctx: &mut FaultCtx, detect: &mut u32) {
+        let (mt, nt) = (self.sched.mt as u32, self.sched.nt as u32);
+        let bank = (nt % 2) as usize;
+        let x_base = self.regfile.read(REG_X_ADDR);
+        let tcdm_bytes = tcdm.size_bytes() as u32;
+        let ft = self.mode == ExecMode::FaultTolerant;
+        let has_rep = self.protection.has_control_protection();
+        for lr in 0..dims.rows(mt) {
+            let m = mt * dims.rows_per_tile + lr;
+            for j in 0..self.cfg.h {
+                let n_col = nt * dims.h + j as u32;
+                if n_col >= dims.n {
+                    // Zero the register so a stale value can't leak in.
+                    if ft {
+                        self.array.set_x(bank, (lr * 2) as usize, j, Fp16::ZERO);
+                        self.array.set_x(bank, (lr * 2 + 1) as usize, j, Fp16::ZERO);
+                    } else {
+                        self.array.set_x(bank, lr as usize, j, Fp16::ZERO);
+                    }
+                    continue;
+                }
+                let nominal = x_base.wrapping_add((m.wrapping_mul(dims.n) + n_col) * 2);
+                let lane = (lr * dims.h.min(16) + j as u32) as u16 % 64;
+                let issue = self.streamers[STREAM_X].issue(STREAM_X, nominal, lane, has_rep, ctx);
+                if issue.mismatch {
+                    *detect |= cause::STREAMER_MISMATCH;
+                }
+                let addr = wrap_addr(issue.addr, tcdm_bytes);
+                self.perf.tcdm_reads += 1;
+                if ft {
+                    let (ra, rb) = ((lr * 2) as usize, (lr * 2 + 1) as usize);
+                    let (va, vb, dbl) =
+                        fetch_dup_protected(tcdm, addr, Module::StreamerX, lane, ra, rb, ctx);
+                    if dbl {
+                        *detect |= cause::ECC_DOUBLE;
+                    }
+                    self.array.set_x(bank, ra, j, va);
+                    self.array.set_x(bank, rb, j, vb);
+                } else {
+                    let v = fetch_single(
+                        tcdm,
+                        addr,
+                        Module::StreamerX,
+                        lane,
+                        lr as usize,
+                        self.protection,
+                        ctx,
+                        detect,
+                    );
+                    self.array.set_x(bank, lr as usize, j, v);
+                }
+            }
+        }
+    }
+
+    /// Stream the tile's accumulators out through checker + write filter.
+    fn do_store_z(&mut self, dims: &Dims, tcdm: &mut Tcdm, ctx: &mut FaultCtx, detect: &mut u32) {
+        let (mt, kt) = (self.sched.mt as u32, self.sched.kt as u32);
+        let dk = dims.dk(kt);
+        if dk == 0 {
+            return;
+        }
+        let elems = dims.rows(mt) * dk;
+        let start = u32::from(self.sched.ptr) * STREAM_ELEMS_PER_CYCLE as u32;
+        let end = (start + STREAM_ELEMS_PER_CYCLE as u32).min(elems);
+        let z_base = self.regfile.read(REG_Z_ADDR);
+        let tcdm_bytes = tcdm.size_bytes() as u32;
+        let ft = self.mode == ExecMode::FaultTolerant;
+        let has_rep = self.protection.has_control_protection();
+        let store_parity = self.protection.has_control_protection();
+
+        for e in start..end {
+            let lr = e / dk;
+            let c = e % dk;
+            let m = mt * dims.rows_per_tile + lr;
+            let nominal = z_base.wrapping_add((m.wrapping_mul(dims.k) + kt * dims.d + c) * 2);
+            let lane = (e % STREAM_ELEMS_PER_CYCLE as u32) as u16;
+            let issue = self.streamers[STREAM_Z].issue(STREAM_Z, nominal, lane, has_rep, ctx);
+            if issue.mismatch {
+                *detect |= cause::STREAMER_MISMATCH;
+            }
+            let addr = wrap_addr(issue.addr, tcdm_bytes);
+            // In the Full build the replica's write request is compared
+            // against the primary *before* the store commits, so a
+            // divergent address never reaches the TCDM (§3.2). Without the
+            // replica a corrupted store lands wherever the bad address
+            // points.
+            if has_rep && issue.mismatch {
+                continue;
+            }
+
+            let value = if ft {
+                let (ra, rb) = ((lr * 2) as usize, (lr * 2 + 1) as usize);
+                if c as usize >= self.cfg.d() || rb >= self.cfg.l {
+                    continue;
+                }
+                // The two copies travel on separate store nets ...
+                let v0 = ctx.fp16(
+                    SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, lane),
+                    self.array.acc_at(ra, c as usize),
+                );
+                let v1 = ctx.fp16(
+                    SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 16 + lane),
+                    self.array.acc_at(rb, c as usize),
+                );
+                // ... and the checker compares them (§3.1, Fig. 1 (4)).
+                let eq_nominal = v0.to_bits() == v1.to_bits();
+                let eq = ctx.flag(
+                    SiteId::new(Module::Checker, checker_unit::Z_CMP_NET, lr as u16),
+                    eq_nominal,
+                );
+                if !eq {
+                    *detect |= cause::Z_MISMATCH;
+                }
+                // Write filter drops the redundant write; its decision net
+                // is compared against the replica streamer's write-enable
+                // in the Full build.
+                let suppress = ctx.flag(
+                    SiteId::new(Module::Checker, checker_unit::WFILTER_NET, lane),
+                    true,
+                );
+                if !suppress {
+                    if has_rep {
+                        *detect |= cause::STREAMER_MISMATCH;
+                    }
+                    // Duplicate write to the same address: harmless when
+                    // the pair agrees (and flagged above when it doesn't).
+                    tcdm.write_fp16(addr, v1);
+                    self.perf.tcdm_writes += 1;
+                }
+                v0
+            } else {
+                if lr as usize >= self.cfg.l || c as usize >= self.cfg.d() {
+                    continue;
+                }
+                ctx.fp16(
+                    SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, lane),
+                    self.array.acc_at(lr as usize, c as usize),
+                )
+            };
+
+            // Post-checker store segment: parity-carried in the Full build.
+            let par = weight_parity(value);
+            let stored = ctx.fp16(
+                SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 32 + lane),
+                value,
+            );
+            if store_parity && !weight_parity_ok(stored, par) {
+                *detect |= cause::STORE_PARITY;
+            }
+            tcdm.write_fp16(addr, stored);
+            self.perf.tcdm_writes += 1;
+        }
+    }
+
+    // --------------------------------------------------------------- SEUs
+
+    /// Apply a state-upset to live state. Returns `true` if the fault hit
+    /// real storage (false = architecturally masked, e.g. an empty slot).
+    pub fn apply_seu(&mut self, plan: FaultPlan) -> bool {
+        let site = plan.site;
+        let (unit, index, bit) = (site.unit(), site.index(), plan.bit);
+        match site.module() {
+            Module::RegFile => match unit {
+                regfile_unit::WORD => self.regfile.flip_word_bit(index, bit),
+                regfile_unit::PARITY => self.regfile.flip_parity_bit(index),
+                _ => false,
+            },
+            Module::XBuf => self.array.flip_x_bit(index, bit),
+            Module::Accumulator => self.array.flip_acc_bit(index, bit),
+            Module::CeArray => match unit {
+                ce_unit::PIPE_REG => self.array.flip_pipe_bit(index, bit),
+                _ => false,
+            },
+            Module::SchedFsm => match unit {
+                sched_unit::STATE_REG => {
+                    self.sched.flip_phase(bit);
+                    true
+                }
+                sched_unit::COUNT_REG => self.sched.flip_counter(index as u16, bit),
+                _ => false,
+            },
+            Module::CtrlFsm => match unit {
+                ctrl_unit::STATE_REG => {
+                    self.ctrl_state ^= 1 << (bit % 3);
+                    true
+                }
+                _ => false,
+            },
+            Module::FsmReplica => match unit {
+                0 => {
+                    self.sched_rep.flip_phase(bit);
+                    true
+                }
+                1 => self.sched_rep.flip_counter(index as u16, bit),
+                2 => {
+                    self.ctrl_state_rep ^= 1 << (bit % 3);
+                    true
+                }
+                _ => false,
+            },
+            Module::StreamerX => self.flip_stream_mask(STREAM_X, unit, bit),
+            Module::StreamerW => self.flip_stream_mask(STREAM_W, unit, bit),
+            Module::StreamerY => self.flip_stream_mask(STREAM_Y, unit, bit),
+            Module::StreamerZ => self.flip_stream_mask(STREAM_Z, unit, bit),
+            Module::StreamerReplica => {
+                // unit = stream*2 (mask register of the replica).
+                let stream = (unit / 2) as usize;
+                if unit % 2 == 0 && stream < 4 {
+                    self.streamers[stream].flip_replica_mask_bit(bit);
+                    true
+                } else {
+                    false
+                }
+            }
+            Module::FaultUnit => match unit {
+                fu_sites::STATUS_REG => {
+                    self.fault_unit.flip_status_bit(bit);
+                    true
+                }
+                _ => false,
+            },
+            _ => false,
+        }
+    }
+
+    fn flip_stream_mask(&mut self, stream: usize, unit: u8, bit: u8) -> bool {
+        if unit == streamer_unit::ADDR_REG {
+            self.streamers[stream].flip_mask_bit(bit);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Nominal (fault-free) cycle count for the committed task.
+    pub fn nominal_cycles(&self) -> u64 {
+        Scheduler::nominal_cycles(&self.dims())
+    }
+}
+
+/// Control-FSM transition function (shared by primary and replica).
+fn step_ctrl(cur: u8, detected: bool, sched_done: bool) -> u8 {
+    match cur {
+        CTRL_RUN => {
+            if detected {
+                CTRL_IRQ1
+            } else if sched_done {
+                CTRL_DONE
+            } else {
+                CTRL_RUN
+            }
+        }
+        CTRL_IRQ1 => CTRL_IRQ2,
+        CTRL_IRQ2 => CTRL_IDLE,
+        other => other, // IDLE / DONE latched; illegal encodings halt
+    }
+}
+
+/// Protected fetch: the raw SECDED codeword is duplicated **before**
+/// decoding, one decoder per consumer row (§3.1). A single-bit transient
+/// on the shared response net is therefore *corrected* by both decoders;
+/// a fault inside one decoder corrupts only that row's copy and surfaces
+/// at the output checker.
+fn fetch_dup_protected(
+    tcdm: &mut Tcdm,
+    addr: u32,
+    module: Module,
+    lane: u16,
+    row_a: usize,
+    row_b: usize,
+    ctx: &mut FaultCtx,
+) -> (Fp16, Fp16, bool) {
+    let word_addr = addr & !3;
+    let cw = tcdm.raw_codeword(word_addr);
+    // Shared response net carries the 39-bit codeword.
+    let cw = ctx.u64(SiteId::new(module, streamer_unit::RESP_NET, lane), cw) & ((1 << 39) - 1);
+    let (word, status) = decode32(cw);
+    let half = if addr & 2 == 0 {
+        word as u16
+    } else {
+        (word >> 16) as u16
+    };
+    let va = ctx.fp16(
+        SiteId::new(module, streamer_unit::DEC_NET, row_a as u16),
+        Fp16::from_bits(half),
+    );
+    let vb = ctx.fp16(
+        SiteId::new(module, streamer_unit::DEC_NET, row_b as u16),
+        Fp16::from_bits(half),
+    );
+    (va, vb, status == DecodeStatus::DoubleError)
+}
+
+/// Unprotected (baseline) or single-consumer (performance-mode) fetch.
+#[allow(clippy::too_many_arguments)]
+fn fetch_single(
+    tcdm: &mut Tcdm,
+    addr: u32,
+    module: Module,
+    lane: u16,
+    row: usize,
+    protection: Protection,
+    ctx: &mut FaultCtx,
+    detect: &mut u32,
+) -> Fp16 {
+    if protection.has_data_protection() {
+        // The streamer still decodes ECC (single consumer).
+        let word_addr = addr & !3;
+        let cw = tcdm.raw_codeword(word_addr);
+        let cw = ctx.u64(SiteId::new(module, streamer_unit::RESP_NET, lane), cw) & ((1 << 39) - 1);
+        let (word, status) = decode32(cw);
+        if status == DecodeStatus::DoubleError {
+            *detect |= cause::ECC_DOUBLE;
+        }
+        let half = if addr & 2 == 0 {
+            word as u16
+        } else {
+            (word >> 16) as u16
+        };
+        ctx.fp16(
+            SiteId::new(module, streamer_unit::DEC_NET, row as u16),
+            Fp16::from_bits(half),
+        )
+    } else {
+        // Baseline: the response net carries bare FP16 data.
+        let v = tcdm.read_fp16(addr).0;
+        ctx.fp16(SiteId::new(module, streamer_unit::RESP_NET, lane), v)
+    }
+}

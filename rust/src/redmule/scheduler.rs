@@ -1,0 +1,410 @@
+//! Scheduler FSM: phase sequencing and loop counters.
+//!
+//! The schedule tiles the output matrix `Z[M][K]` into blocks of
+//! `rows_per_tile × D` (where `D = H·P` is the per-row in-flight column
+//! count) and, per block, runs four phases:
+//!
+//! ```text
+//! LoadY   — preload the block's Y elements into the accumulators
+//! Compute — for each inner chunk nt (H terms of the dot product),
+//!           issue one output column per cycle into the row pipelines
+//! Drain   — let the last D waves retire
+//! StoreZ  — stream the accumulators out (checked/filtered in FT mode)
+//! ```
+//!
+//! In fault-tolerant mode consecutive row pairs carry the same logical
+//! row, so `rows_per_tile = L/2` and the M-tile count doubles — the 2×
+//! performance cost the paper quotes for redundant execution.
+//!
+//! The whole scheduler state is a handful of registers; each is a fault
+//! site. In the fully protected build a **replica** scheduler steps in
+//! lockstep and a comparator flags any divergence (§3.2).
+
+/// Phase encodings. Values above `DONE` are unreachable by construction
+/// and only arise from injected faults; the FSM treats them as an illegal
+/// state and halts (the run then times out — or, in the fully protected
+/// build, the comparator aborts it first).
+pub const PH_IDLE: u8 = 0;
+pub const PH_LOAD_Y: u8 = 1;
+pub const PH_COMPUTE: u8 = 2;
+pub const PH_DRAIN: u8 = 3;
+pub const PH_STORE_Z: u8 = 4;
+pub const PH_DONE: u8 = 5;
+
+/// Elements the streamer moves per cycle in load/store phases (a 256-bit
+/// TCDM port: 16 FP16 elements).
+pub const STREAM_ELEMS_PER_CYCLE: usize = 16;
+
+/// Loop-counter ids (used as SEU site indices).
+pub const CNT_MT: u16 = 0;
+pub const CNT_KT: u16 = 1;
+pub const CNT_NT: u16 = 2;
+pub const CNT_CC: u16 = 3;
+pub const CNT_PTR: u16 = 4;
+
+/// Dimensions the scheduler derives each cycle from the register file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    pub m: u32,
+    pub n: u32,
+    pub k: u32,
+    /// Logical (distinct) output rows processed per M-tile.
+    pub rows_per_tile: u32,
+    /// Column-tile width (= D).
+    pub d: u32,
+    /// Inner chunk width (= H).
+    pub h: u32,
+}
+
+impl Dims {
+    pub fn tiles_m(&self) -> u32 {
+        self.m.div_ceil(self.rows_per_tile.max(1)).max(1)
+    }
+
+    pub fn tiles_k(&self) -> u32 {
+        self.k.div_ceil(self.d.max(1)).max(1)
+    }
+
+    pub fn chunks_n(&self) -> u32 {
+        self.n.div_ceil(self.h.max(1)).max(1)
+    }
+
+    /// Columns in K-tile `kt` (tail tiles are narrower).
+    pub fn dk(&self, kt: u32) -> u32 {
+        let start = kt * self.d;
+        self.k.saturating_sub(start).min(self.d)
+    }
+
+    /// Logical rows in M-tile `mt`.
+    pub fn rows(&self, mt: u32) -> u32 {
+        let start = mt * self.rows_per_tile;
+        self.m.saturating_sub(start).min(self.rows_per_tile)
+    }
+}
+
+/// The scheduler's architectural state (every field is a fault site).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Scheduler {
+    pub phase: u8,
+    pub mt: u16,
+    pub kt: u16,
+    pub nt: u16,
+    /// Cycle-in-chunk during Compute (issues column `cc` when `cc < dk`),
+    /// drain counter during Drain.
+    pub cc: u16,
+    /// Cycle counter within LoadY / StoreZ.
+    pub ptr: u16,
+}
+
+impl Scheduler {
+    pub fn idle() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        *self = Self {
+            phase: PH_LOAD_Y,
+            ..Self::default()
+        };
+    }
+
+    /// Tile-level recovery entry point (the paper's §5 future work): begin
+    /// at tile `(mt, kt)` instead of `(0, 0)`. Earlier tiles' Z results
+    /// are already committed to TCDM, so skipping them is sound as long
+    /// as committed stores are trustworthy (write gating — see
+    /// `cluster::RecoveryPolicy`).
+    pub fn start_from(&mut self, mt: u16, kt: u16) {
+        *self = Self {
+            phase: PH_LOAD_Y,
+            mt,
+            kt,
+            ..Self::default()
+        };
+    }
+
+    /// Cycles remaining from tile `(mt, kt)` (inclusive) to the end of
+    /// the task — the re-execution cost of tile-level recovery.
+    pub fn cycles_from(dims: &Dims, mt0: u32, kt0: u32) -> u64 {
+        let mut total = 0u64;
+        for mt in mt0..dims.tiles_m() {
+            let k_start = if mt == mt0 { kt0 } else { 0 };
+            for kt in k_start..dims.tiles_k() {
+                total += Self::load_cycles(dims, mt, kt) as u64;
+                total += (dims.chunks_n() as u64) * dims.d as u64;
+                total += dims.d as u64;
+                total += Self::store_cycles(dims, mt, kt) as u64;
+            }
+        }
+        total
+    }
+
+    pub fn is_illegal(&self) -> bool {
+        self.phase > PH_DONE
+    }
+
+    /// Cycles the LoadY phase takes for tile (mt, kt).
+    pub fn load_cycles(dims: &Dims, mt: u32, kt: u32) -> u32 {
+        let elems = dims.rows(mt) * dims.dk(kt);
+        elems.div_ceil(STREAM_ELEMS_PER_CYCLE as u32).max(1)
+    }
+
+    /// Cycles the StoreZ phase takes for tile (mt, kt) (logical rows: the
+    /// write filter collapses redundant pairs to a single write).
+    pub fn store_cycles(dims: &Dims, mt: u32, kt: u32) -> u32 {
+        let elems = dims.rows(mt) * dims.dk(kt);
+        elems.div_ceil(STREAM_ELEMS_PER_CYCLE as u32).max(1)
+    }
+
+    /// Advance one cycle. Returns `true` while the task is still running.
+    /// Illegal phase encodings halt (no advance) — the control FSM's
+    /// timeout / comparator machinery deals with them.
+    pub fn advance(&mut self, dims: &Dims) -> bool {
+        match self.phase {
+            PH_IDLE | PH_DONE => false,
+            PH_LOAD_Y => {
+                self.ptr += 1;
+                if u32::from(self.ptr) >= Self::load_cycles(dims, self.mt.into(), self.kt.into()) {
+                    self.ptr = 0;
+                    self.nt = 0;
+                    self.cc = 0;
+                    self.phase = PH_COMPUTE;
+                }
+                true
+            }
+            PH_COMPUTE => {
+                self.cc += 1;
+                if u32::from(self.cc) >= dims.d {
+                    self.cc = 0;
+                    self.nt += 1;
+                    if u32::from(self.nt) >= dims.chunks_n() {
+                        self.nt = 0;
+                        self.phase = PH_DRAIN;
+                    }
+                }
+                true
+            }
+            PH_DRAIN => {
+                self.cc += 1;
+                if u32::from(self.cc) >= dims.d {
+                    self.cc = 0;
+                    self.ptr = 0;
+                    self.phase = PH_STORE_Z;
+                }
+                true
+            }
+            PH_STORE_Z => {
+                self.ptr += 1;
+                if u32::from(self.ptr) >= Self::store_cycles(dims, self.mt.into(), self.kt.into()) {
+                    self.ptr = 0;
+                    // Next tile: K-major inner loop, M outer.
+                    self.kt += 1;
+                    if u32::from(self.kt) >= dims.tiles_k() {
+                        self.kt = 0;
+                        self.mt += 1;
+                        if u32::from(self.mt) >= dims.tiles_m() {
+                            self.phase = PH_DONE;
+                            return false;
+                        }
+                    }
+                    self.phase = PH_LOAD_Y;
+                }
+                true
+            }
+            _ => false, // illegal encoding: halt
+        }
+    }
+
+    /// Total fault-free cycles for a task (used by the perf model and for
+    /// campaign cycle-sampling).
+    pub fn nominal_cycles(dims: &Dims) -> u64 {
+        let mut total = 0u64;
+        for mt in 0..dims.tiles_m() {
+            for kt in 0..dims.tiles_k() {
+                total += Self::load_cycles(dims, mt, kt) as u64;
+                total += (dims.chunks_n() as u64) * dims.d as u64; // compute
+                total += dims.d as u64; // drain
+                total += Self::store_cycles(dims, mt, kt) as u64;
+            }
+        }
+        total
+    }
+
+    /// SEU hook: flip a counter bit. `which` selects the counter.
+    pub fn flip_counter(&mut self, which: u16, bit: u8) -> bool {
+        let b = bit & 15;
+        match which {
+            CNT_MT => self.mt ^= 1 << b,
+            CNT_KT => self.kt ^= 1 << b,
+            CNT_NT => self.nt ^= 1 << b,
+            CNT_CC => self.cc ^= 1 << b,
+            CNT_PTR => self.ptr ^= 1 << b,
+            _ => return false,
+        }
+        true
+    }
+
+    /// SEU hook: flip a phase-encoding bit.
+    pub fn flip_phase(&mut self, bit: u8) {
+        self.phase ^= 1 << (bit & 7);
+    }
+
+    /// Raw state tuple for the lockstep comparator.
+    pub fn compare_key(&self) -> (u8, u16, u16, u16, u16, u16) {
+        (self.phase, self.mt, self.kt, self.nt, self.cc, self.ptr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_dims_perf() -> Dims {
+        // L=12, H=4, P=3 in performance mode on the (12,16,16) workload.
+        Dims {
+            m: 12,
+            n: 16,
+            k: 16,
+            rows_per_tile: 12,
+            d: 12,
+            h: 4,
+        }
+    }
+
+    fn paper_dims_ft() -> Dims {
+        Dims {
+            rows_per_tile: 6,
+            ..paper_dims_perf()
+        }
+    }
+
+    #[test]
+    fn tile_arithmetic() {
+        let d = paper_dims_perf();
+        assert_eq!(d.tiles_m(), 1);
+        assert_eq!(d.tiles_k(), 2);
+        assert_eq!(d.chunks_n(), 4);
+        assert_eq!(d.dk(0), 12);
+        assert_eq!(d.dk(1), 4);
+        assert_eq!(d.rows(0), 12);
+        let f = paper_dims_ft();
+        assert_eq!(f.tiles_m(), 2);
+        assert_eq!(f.rows(0), 6);
+        assert_eq!(f.rows(1), 6);
+    }
+
+    #[test]
+    fn walks_all_phases_to_done() {
+        let dims = paper_dims_perf();
+        let mut s = Scheduler::idle();
+        s.start();
+        let mut phases_seen = [false; 6];
+        let mut cycles = 0u64;
+        while s.phase != PH_DONE {
+            phases_seen[s.phase as usize] = true;
+            assert!(cycles < 100_000, "scheduler must terminate");
+            s.advance(&dims);
+            cycles += 1;
+        }
+        assert!(phases_seen[PH_LOAD_Y as usize]);
+        assert!(phases_seen[PH_COMPUTE as usize]);
+        assert!(phases_seen[PH_DRAIN as usize]);
+        assert!(phases_seen[PH_STORE_Z as usize]);
+        assert_eq!(cycles, Scheduler::nominal_cycles(&dims));
+    }
+
+    #[test]
+    fn ft_mode_roughly_doubles_cycles() {
+        let perf = Scheduler::nominal_cycles(&paper_dims_perf());
+        let ft = Scheduler::nominal_cycles(&paper_dims_ft());
+        let ratio = ft as f64 / perf as f64;
+        assert!(
+            (1.7..=2.3).contains(&ratio),
+            "FT/perf cycle ratio {ratio} should be ~2 (ft={ft}, perf={perf})"
+        );
+    }
+
+    #[test]
+    fn illegal_phase_halts() {
+        let dims = paper_dims_perf();
+        let mut s = Scheduler::idle();
+        s.start();
+        s.phase = 0x13; // injected garbage
+        assert!(s.is_illegal());
+        let before = s;
+        assert!(!s.advance(&dims));
+        assert_eq!(s, before, "illegal state must not advance");
+    }
+
+    #[test]
+    fn counter_flip_hooks_work() {
+        let mut s = Scheduler::idle();
+        assert!(s.flip_counter(CNT_NT, 2));
+        assert_eq!(s.nt, 4);
+        assert!(s.flip_counter(CNT_NT, 2));
+        assert_eq!(s.nt, 0);
+        assert!(!s.flip_counter(99, 0));
+        s.flip_phase(0);
+        assert_eq!(s.phase, 1);
+    }
+
+    #[test]
+    fn compare_key_detects_any_divergence() {
+        let mut a = Scheduler::idle();
+        a.start();
+        let mut b = a;
+        assert_eq!(a.compare_key(), b.compare_key());
+        b.flip_counter(CNT_CC, 0);
+        assert_ne!(a.compare_key(), b.compare_key());
+        let dims = paper_dims_perf();
+        a.advance(&dims);
+        let mut c = a;
+        c.flip_phase(3);
+        assert_ne!(a.compare_key(), c.compare_key());
+    }
+
+    #[test]
+    fn start_from_resumes_at_tile_and_costs_the_remainder() {
+        let dims = Dims {
+            m: 24,
+            n: 16,
+            k: 24,
+            rows_per_tile: 6,
+            d: 12,
+            h: 4,
+        };
+        // Walk from (2, 1) and compare against the closed form.
+        let mut s = Scheduler::idle();
+        s.start_from(2, 1);
+        assert_eq!((s.mt, s.kt, s.phase), (2, 1, PH_LOAD_Y));
+        let mut walked = 1u64;
+        while s.advance(&dims) {
+            walked += 1;
+            assert!(walked < 1_000_000);
+        }
+        assert_eq!(walked, Scheduler::cycles_from(&dims, 2, 1));
+        // Resuming at (0,0) is the full task.
+        assert_eq!(
+            Scheduler::cycles_from(&dims, 0, 0),
+            Scheduler::nominal_cycles(&dims)
+        );
+        // Resuming at the last tile costs strictly less.
+        assert!(
+            Scheduler::cycles_from(&dims, dims.tiles_m() - 1, dims.tiles_k() - 1)
+                < Scheduler::nominal_cycles(&dims) / 2
+        );
+    }
+
+    #[test]
+    fn nominal_cycles_scale_with_problem() {
+        let small = Scheduler::nominal_cycles(&paper_dims_perf());
+        let big = Scheduler::nominal_cycles(&Dims {
+            m: 48,
+            n: 64,
+            k: 64,
+            rows_per_tile: 12,
+            d: 12,
+            h: 4,
+        });
+        assert!(big > 10 * small);
+    }
+}

@@ -1,0 +1,185 @@
+//! Streamer model: address generation with fault-corruption state, plus
+//! the reduced-width replica address path of the fully protected build.
+//!
+//! The real streamer generates addresses with nested counters and adders.
+//! We compute each issued address functionally from the scheduler counters
+//! (whose bits are fault sites of their own) and model a *corrupted
+//! address-generator register* as a persistent XOR mask applied to every
+//! issued address from the upset until the task ends — the dominant effect
+//! of a latched flip in an incrementing generator.
+//!
+//! In the fully protected build (§3.2) each streamer has a **replica with
+//! reduced data width**: it recomputes all control information (addresses,
+//! valids, write-enables) but carries no data. The issued primary address
+//! is compared against the replica's every cycle; any divergence raises a
+//! `STREAMER_MISMATCH` fault.
+
+use crate::fault::site::{streamer_unit, Module, SiteId};
+use crate::fault::FaultCtx;
+
+/// Stream indices (also used as replica unit offsets).
+pub const STREAM_X: usize = 0;
+pub const STREAM_W: usize = 1;
+pub const STREAM_Y: usize = 2;
+pub const STREAM_Z: usize = 3;
+
+pub const STREAM_MODULES: [Module; 4] = [
+    Module::StreamerX,
+    Module::StreamerW,
+    Module::StreamerY,
+    Module::StreamerZ,
+];
+
+/// One operand/result stream's address-generation state.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Streamer {
+    /// XOR corruption of the primary address generator (SEU site).
+    pub mask: u32,
+    /// XOR corruption of the replica address generator (SEU site, Full).
+    pub mask_rep: u32,
+}
+
+/// Result of issuing one address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Issue {
+    /// Effective (possibly corrupted) primary address — what the data
+    /// path actually uses.
+    pub addr: u32,
+    /// The replica's address (meaningful only when the replica exists).
+    pub addr_rep: u32,
+    /// Primary vs. replica divergence (drives `STREAMER_MISMATCH`).
+    pub mismatch: bool,
+}
+
+impl Streamer {
+    /// Issue the address for one element access. `nominal` is the
+    /// fault-free address from the scheduler counters; `lane` distinguishes
+    /// parallel request nets within a cycle (wide-port beats).
+    #[inline]
+    pub fn issue(
+        &self,
+        stream: usize,
+        nominal: u32,
+        lane: u16,
+        has_replica: bool,
+        ctx: &mut FaultCtx,
+    ) -> Issue {
+        let module = STREAM_MODULES[stream];
+        // Transient on the primary request net.
+        let addr = ctx.u32(
+            SiteId::new(module, streamer_unit::REQ_NET, lane),
+            nominal ^ self.mask,
+        );
+        if !has_replica {
+            return Issue {
+                addr,
+                addr_rep: addr,
+                mismatch: false,
+            };
+        }
+        // Transient on the replica request net (replica sites live under
+        // Module::StreamerReplica; unit = stream*2+1).
+        let addr_rep = ctx.u32(
+            SiteId::new(Module::StreamerReplica, (stream * 2 + 1) as u8, lane),
+            nominal ^ self.mask_rep,
+        );
+        Issue {
+            addr,
+            addr_rep,
+            mismatch: addr != addr_rep,
+        }
+    }
+
+    /// SEU hooks.
+    pub fn flip_mask_bit(&mut self, bit: u8) {
+        self.mask ^= 1 << (bit & 31);
+    }
+
+    pub fn flip_replica_mask_bit(&mut self, bit: u8) {
+        self.mask_rep ^= 1 << (bit & 31);
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// Clamp an effective address into the TCDM and align it to an element
+/// boundary — a corrupted address still lands *somewhere* in memory, as in
+/// the RTL where the upper bits simply alias.
+#[inline]
+pub fn wrap_addr(addr: u32, tcdm_bytes: u32) -> u32 {
+    (addr & !1) % tcdm_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::{FaultKind, FaultPlan};
+
+    #[test]
+    fn clean_issue_passes_nominal_address() {
+        let s = Streamer::default();
+        let mut ctx = FaultCtx::clean();
+        let i = s.issue(STREAM_X, 0x1234, 0, true, &mut ctx);
+        assert_eq!(i.addr, 0x1234);
+        assert!(!i.mismatch);
+    }
+
+    #[test]
+    fn primary_mask_corruption_is_caught_by_replica() {
+        let mut s = Streamer::default();
+        s.flip_mask_bit(4);
+        let mut ctx = FaultCtx::clean();
+        let i = s.issue(STREAM_Y, 0x100, 0, true, &mut ctx);
+        assert_eq!(i.addr, 0x110);
+        assert_eq!(i.addr_rep, 0x100);
+        assert!(i.mismatch);
+        // Without a replica the corruption is silent.
+        let i2 = s.issue(STREAM_Y, 0x100, 0, false, &mut ctx);
+        assert_eq!(i2.addr, 0x110);
+        assert!(!i2.mismatch);
+    }
+
+    #[test]
+    fn replica_mask_corruption_also_mismatches() {
+        let mut s = Streamer::default();
+        s.flip_replica_mask_bit(2);
+        let mut ctx = FaultCtx::clean();
+        let i = s.issue(STREAM_Z, 0x80, 3, true, &mut ctx);
+        assert_eq!(i.addr, 0x80); // data path unaffected
+        assert!(i.mismatch); // but the divergence is detected
+    }
+
+    #[test]
+    fn transient_on_request_net_fires_once() {
+        let s = Streamer::default();
+        let site = SiteId::new(Module::StreamerW, streamer_unit::REQ_NET, 2);
+        let mut ctx = FaultCtx::with_plan(FaultPlan {
+            cycle: 7,
+            site,
+            bit: 3,
+            kind: FaultKind::Transient,
+        });
+        ctx.set_cycle(7);
+        let i = s.issue(STREAM_W, 0x40, 2, true, &mut ctx);
+        assert_eq!(i.addr, 0x48);
+        assert!(i.mismatch, "replica sees the clean address");
+        // A different lane is a different site: untouched.
+        let j = s.issue(STREAM_W, 0x40, 1, true, &mut ctx);
+        assert_eq!(j.addr, 0x40);
+        assert!(!j.mismatch);
+        // A different cycle: untouched even on the planned lane.
+        ctx.set_cycle(8);
+        let k = s.issue(STREAM_W, 0x44, 2, true, &mut ctx);
+        assert_eq!(k.addr, 0x44);
+        assert!(!k.mismatch);
+    }
+
+    #[test]
+    fn wrap_addr_aligns_and_bounds() {
+        assert_eq!(wrap_addr(0x1001, 0x1000), 0x0000);
+        assert_eq!(wrap_addr(0x0FFF, 0x1000), 0x0FFE);
+        assert_eq!(wrap_addr(0xFFFF_FFFF, 0x4000), 0xFFFF_FFFE % 0x4000);
+    }
+}

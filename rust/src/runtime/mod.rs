@@ -1,0 +1,293 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the Rust request path.
+//!
+//! `make artifacts` runs `python/compile/aot.py` **once** at build time; it
+//! lowers the Layer-2 JAX graphs (which call the Layer-1 Pallas kernels)
+//! to **HLO text** under `artifacts/`, together with a plain-text manifest.
+//! This module is everything needed at run time: a PJRT CPU client, the
+//! text → `HloModuleProto` → compile pipeline, and typed `execute` helpers.
+//! Python never runs on this path.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! All artifact I/O is `f32` at the boundary: FP16 values convert to f32
+//! exactly, the graphs cast to f16 internally and compute with the same
+//! per-step rounding as the hardware, and the f16 results cast back to
+//! f32 exactly — so bit-exact comparison against the simulator/golden is
+//! done by converting both sides to f16 bit patterns.
+
+use crate::golden::Mat;
+use crate::{Error, Result};
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest entry: a named computation with its I/O contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// Artifact kind tag (`gemm`, `gemm_redundant`, `mlp_train`, ...).
+    pub kind: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Kind-specific integer parameters (e.g. `m n k` for `gemm`).
+    pub params: Vec<usize>,
+}
+
+/// Parse `manifest.txt`: one entry per line,
+/// `name kind file param*` (whitespace separated, `#` comments).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(name), Some(kind), Some(file)) = (it.next(), it.next(), it.next()) else {
+            return Err(Error::Runtime(format!(
+                "manifest line {}: expected `name kind file param*`",
+                lineno + 1
+            )));
+        };
+        let params = it
+            .map(|p| {
+                p.parse::<usize>().map_err(|_| {
+                    Error::Runtime(format!("manifest line {}: bad param {p:?}", lineno + 1))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        out.push(ArtifactEntry {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            file: file.to_string(),
+            params,
+        });
+    }
+    Ok(out)
+}
+
+/// Locate the artifact directory: `$REDMULE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("REDMULE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+
+    /// The runtime: PJRT CPU client plus compiled executables, keyed by
+    /// manifest name. Compilation happens once at load; execution is
+    /// reusable and cheap.
+    pub struct GoldenRuntime {
+        client: xla::PjRtClient,
+        entries: HashMap<String, ArtifactEntry>,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        dir: PathBuf,
+    }
+
+    impl GoldenRuntime {
+        /// Load every artifact listed in `<dir>/manifest.txt`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest_path)
+                .map_err(|_| Error::ArtifactMissing(manifest_path.display().to_string()))?;
+            let entries = parse_manifest(&text)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PJRT client: {e}")))?;
+            let mut executables = HashMap::new();
+            let mut by_name = HashMap::new();
+            for e in entries {
+                let path = dir.join(&e.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|err| Error::Runtime(format!("parse {}: {err}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|err| Error::Runtime(format!("compile {}: {err}", e.name)))?;
+                executables.insert(e.name.clone(), exe);
+                by_name.insert(e.name.clone(), e);
+            }
+            Ok(Self {
+                client,
+                entries: by_name,
+                executables,
+                dir,
+            })
+        }
+
+        /// Load from the default directory (`$REDMULE_ARTIFACTS` or
+        /// `./artifacts`).
+        pub fn load_default() -> Result<Self> {
+            Self::load(default_artifact_dir())
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+            v.sort();
+            v
+        }
+
+        pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+            self.entries.get(name)
+        }
+
+        fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            self.executables
+                .get(name)
+                .ok_or_else(|| Error::ArtifactMissing(name.to_string()))
+        }
+
+        /// Execute a computation on f32 tensors; returns the flat f32
+        /// outputs of the (tupled) result.
+        pub fn execute_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let exe = self.exe(name)?;
+            let literals = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+            let parts = literal
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+            parts
+                .into_iter()
+                .map(|l| {
+                    l.to_vec::<f32>()
+                        .map_err(|e| Error::Runtime(format!("to_vec {name}: {e}")))
+                })
+                .collect()
+        }
+
+        /// Execute a `gemm` artifact on FP16 matrices (exact f32 carry).
+        pub fn execute_gemm(&self, name: &str, x: &Mat, w: &Mat, y: &Mat) -> Result<Mat> {
+            let e = self
+                .entry(name)
+                .ok_or_else(|| Error::ArtifactMissing(name.to_string()))?;
+            if e.params.len() != 3 {
+                return Err(Error::Runtime(format!("{name} is not a gemm artifact")));
+            }
+            let (m, n, k) = (e.params[0], e.params[1], e.params[2]);
+            if (x.rows, x.cols) != (m, n) || (w.rows, w.cols) != (n, k) || (y.rows, y.cols) != (m, k)
+            {
+                return Err(Error::Config(format!(
+                    "{name} expects ({m},{n},{k}); got X {}x{} W {}x{} Y {}x{}",
+                    x.rows, x.cols, w.rows, w.cols, y.rows, y.cols
+                )));
+            }
+            let xf: Vec<f32> = x.data.iter().map(|v| v.to_f32()).collect();
+            let wf: Vec<f32> = w.data.iter().map(|v| v.to_f32()).collect();
+            let yf: Vec<f32> = y.data.iter().map(|v| v.to_f32()).collect();
+            let outs = self.execute_f32(
+                name,
+                &[
+                    (&xf, &[m as i64, n as i64]),
+                    (&wf, &[n as i64, k as i64]),
+                    (&yf, &[m as i64, k as i64]),
+                ],
+            )?;
+            let z = &outs[0];
+            if z.len() != m * k {
+                return Err(Error::Runtime(format!(
+                    "{name}: output len {} != {}",
+                    z.len(),
+                    m * k
+                )));
+            }
+            Ok(Mat {
+                rows: m,
+                cols: k,
+                data: z.iter().map(|&v| crate::fp::Fp16::from_f32(v)).collect(),
+            })
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::GoldenRuntime;
+
+/// Stub when built without the `pjrt` feature: loading always fails with
+/// a descriptive error so pure-simulator builds keep working.
+#[cfg(not(feature = "pjrt"))]
+pub struct GoldenRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+impl GoldenRuntime {
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::Runtime(
+            "built without the `pjrt` feature; rebuild with --features pjrt".into(),
+        ))
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_names_kinds_and_params() {
+        let text = "\
+# artifacts
+gemm_12x16x16 gemm gemm_12x16x16.hlo.txt 12 16 16
+
+mlp_train mlp mlp_train.hlo.txt 32 16 32 4
+";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "gemm_12x16x16");
+        assert_eq!(entries[0].kind, "gemm");
+        assert_eq!(entries[0].params, vec![12, 16, 16]);
+        assert_eq!(entries[1].params, vec![32, 16, 32, 4]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        assert!(parse_manifest("just_a_name").is_err());
+        assert!(parse_manifest("a gemm f.hlo.txt twelve").is_err());
+    }
+
+    #[test]
+    fn manifest_skips_comments_and_blanks() {
+        let entries = parse_manifest("# nothing\n\n   \n").unwrap();
+        assert!(entries.is_empty());
+    }
+
+    #[test]
+    fn default_dir_honours_env() {
+        // NB: do not mutate the environment here (tests run in parallel);
+        // just verify the fallback.
+        if std::env::var_os("REDMULE_ARTIFACTS").is_none() {
+            assert_eq!(default_artifact_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Bit-twiddling helpers shared by the ECC and fault-injection code.
+
+/// XOR-reduce (parity) of a word: returns 1 iff an odd number of bits set.
+#[inline]
+pub fn parity_u32(x: u32) -> u32 {
+    (x.count_ones() & 1) as u32
+}
+
+/// XOR-reduce (parity) of a 64-bit word.
+#[inline]
+pub fn parity_u64(x: u64) -> u32 {
+    (x.count_ones() & 1) as u32
+}
+
+/// Flip bit `b` of `x`.
+#[inline]
+pub fn flip_bit_u16(x: u16, b: u32) -> u16 {
+    x ^ (1u16 << (b & 15))
+}
+
+/// Flip bit `b` of `x`.
+#[inline]
+pub fn flip_bit_u32(x: u32, b: u32) -> u32 {
+    x ^ (1u32 << (b & 31))
+}
+
+/// Flip bit `b` of `x`.
+#[inline]
+pub fn flip_bit_u64(x: u64, b: u32) -> u64 {
+    x ^ (1u64 << (b & 63))
+}
+
+/// Extract bits `[lo, lo+len)` of `x`.
+#[inline]
+pub fn field_u32(x: u32, lo: u32, len: u32) -> u32 {
+    (x >> lo) & ((1u32 << len) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity_basics() {
+        assert_eq!(parity_u32(0), 0);
+        assert_eq!(parity_u32(1), 1);
+        assert_eq!(parity_u32(0b11), 0);
+        assert_eq!(parity_u32(u32::MAX), 0);
+        assert_eq!(parity_u64(u64::MAX), 0);
+        assert_eq!(parity_u64(1 << 63), 1);
+    }
+
+    #[test]
+    fn flip_round_trips() {
+        for b in 0..16 {
+            assert_eq!(flip_bit_u16(flip_bit_u16(0xABCD, b), b), 0xABCD);
+        }
+        for b in 0..32 {
+            assert_eq!(flip_bit_u32(flip_bit_u32(0xDEAD_BEEF, b), b), 0xDEAD_BEEF);
+        }
+        for b in 0..64 {
+            assert_eq!(
+                flip_bit_u64(flip_bit_u64(0x0123_4567_89AB_CDEF, b), b),
+                0x0123_4567_89AB_CDEF
+            );
+        }
+    }
+
+    #[test]
+    fn field_extraction() {
+        assert_eq!(field_u32(0xABCD_1234, 0, 4), 0x4);
+        assert_eq!(field_u32(0xABCD_1234, 16, 16), 0xABCD);
+        assert_eq!(field_u32(0xFFFF_FFFF, 31, 1), 1);
+    }
+}

@@ -1,0 +1,5 @@
+//! Small shared utilities: deterministic PRNGs, bit helpers, statistics.
+
+pub mod bits;
+pub mod rng;
+pub mod stats;

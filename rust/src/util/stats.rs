@@ -1,0 +1,193 @@
+//! Statistics helpers for the fault-injection campaign.
+//!
+//! The paper reports rates with a Poisson 95 % confidence interval and, for
+//! the zero-observed-error case of the fully protected configuration,
+//! derives the `< 0.0003 %` bound by "conservatively assuming one
+//! additional observed error". We reproduce both conventions here.
+
+/// Two-sided 95 % Poisson confidence interval for an observed count `k`.
+///
+/// Uses the exact (Garwood) interval expressed through the chi-squared
+/// distribution:  lower = chi2(0.025, 2k)/2, upper = chi2(0.975, 2k+2)/2.
+/// The chi-squared quantiles are computed with the Wilson–Hilferty
+/// approximation, which is accurate to well below the digit the paper
+/// quotes for k ≥ 0.
+pub fn poisson_ci95(k: u64) -> (f64, f64) {
+    let lower = if k == 0 {
+        0.0
+    } else {
+        0.5 * chi2_quantile(0.025, 2.0 * k as f64)
+    };
+    let upper = 0.5 * chi2_quantile(0.975, 2.0 * k as f64 + 2.0);
+    (lower, upper)
+}
+
+/// The paper's conservative convention: upper bound for a rate with zero
+/// observed events in `n` trials, "assuming one additional observed error"
+/// (i.e. treat the count as 1) — quoted as `< 0.0003 %` for n = 1e6.
+pub fn conservative_upper_rate(observed: u64, n: u64) -> f64 {
+    let (_, up) = poisson_ci95(observed + 1);
+    up / n as f64
+}
+
+/// Wilson–Hilferty approximation of the chi-squared quantile function.
+fn chi2_quantile(p: f64, df: f64) -> f64 {
+    if df <= 0.0 {
+        return 0.0;
+    }
+    let z = normal_quantile(p);
+    let a = 2.0 / (9.0 * df);
+    let c = 1.0 - a + z * a.sqrt();
+    df * c * c * c
+}
+
+/// Acklam's rational approximation of the standard normal quantile.
+/// Relative error < 1.15e-9 over the full open interval.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p must be in (0,1)");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Binomial-style rate with its Poisson 95 % CI half-widths, formatted the
+/// way Table 1 quotes it (e.g. `7.08 ± 0.05 %`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rate {
+    pub count: u64,
+    pub total: u64,
+}
+
+impl Rate {
+    pub fn new(count: u64, total: u64) -> Self {
+        Self { count, total }
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.count as f64 / self.total as f64
+        }
+    }
+
+    pub fn percent(&self) -> f64 {
+        self.value() * 100.0
+    }
+
+    /// 95 % CI on the rate (Poisson on the count).
+    pub fn ci95(&self) -> (f64, f64) {
+        let (lo, hi) = poisson_ci95(self.count);
+        (lo / self.total.max(1) as f64, hi / self.total.max(1) as f64)
+    }
+
+    /// Render like Table 1: `xx.xx ± y.yy %`, or `< bound %` for zero counts
+    /// (paper footnote a: bound via Poisson, one additional assumed error).
+    pub fn table1_cell(&self) -> String {
+        if self.count == 0 {
+            let ub = conservative_upper_rate(0, self.total.max(1)) * 100.0;
+            format!("<{ub:.4} %")
+        } else {
+            let (lo, hi) = self.ci95();
+            let half = (hi - lo) / 2.0 * 100.0;
+            format!("{:.2} ± {:.2} %", self.percent(), half)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_quantile_symmetry_and_known_values() {
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.025) + 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poisson_ci_zero_and_small_counts() {
+        let (lo, hi) = poisson_ci95(0);
+        assert_eq!(lo, 0.0);
+        // Exact value is 3.6889; Wilson-Hilferty is within a few percent.
+        assert!((hi - 3.6889).abs() < 0.15, "hi = {hi}");
+
+        let (lo1, hi1) = poisson_ci95(1);
+        assert!(lo1 > 0.0 && lo1 < 0.1, "lo1 = {lo1}");
+        assert!((hi1 - 5.5716).abs() < 0.2, "hi1 = {hi1}");
+    }
+
+    #[test]
+    fn paper_upper_bound_convention() {
+        // Table 1 footnote: zero observed errors in 1e6 injections, assume
+        // one additional error -> "< 0.0003 %".
+        let ub = conservative_upper_rate(0, 1_000_000);
+        let pct = ub * 100.0;
+        assert!(pct < 0.0006 && pct > 0.0002, "pct = {pct}");
+    }
+
+    #[test]
+    fn poisson_ci_large_count_matches_normal_approx() {
+        // For large k the Poisson CI approaches k ± 1.96 sqrt(k).
+        let k = 70_800u64; // baseline functional errors out of 1M ≈ 7.08 %
+        let (lo, hi) = poisson_ci95(k);
+        let half = (hi - lo) / 2.0;
+        let expect = 1.96 * (k as f64).sqrt();
+        assert!((half - expect).abs() / expect < 0.01, "half = {half}");
+        // Scaled by 1M this is the paper's ±0.05 %.
+        let pct_half = half / 1_000_000.0 * 100.0;
+        assert!((pct_half - 0.052).abs() < 0.005, "pct_half = {pct_half}");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        let r = Rate::new(0, 1_000_000);
+        assert!(r.table1_cell().starts_with('<'));
+        let r2 = Rate::new(70_800, 1_000_000);
+        let cell = r2.table1_cell();
+        assert!(cell.starts_with("7.08"), "cell = {cell}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Integration: the mixed-criticality coordinator over the full system.
+
+use redmule_ft::coordinator::{Coordinator, Criticality};
+use redmule_ft::prelude::*;
+
+fn mixed_problems(n: usize, seed: u64) -> Vec<(Criticality, GemmProblem)> {
+    (0..n)
+        .map(|i| {
+            let crit = if i % 3 == 0 {
+                Criticality::Critical
+            } else {
+                Criticality::BestEffort
+            };
+            let spec = GemmSpec::new(4 + i % 9, 8 + i % 17, 6 + i % 11);
+            (crit, GemmProblem::random(&spec, seed + i as u64))
+        })
+        .collect()
+}
+
+#[test]
+fn large_mixed_queue_all_golden() {
+    let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+    let tasks = mixed_problems(30, 100);
+    for (crit, p) in &tasks {
+        c.submit(*crit, p.clone());
+    }
+    let done = c.run_to_idle().unwrap();
+    assert_eq!(done, 30);
+    assert_eq!(c.results().len(), 30);
+    for r in c.results() {
+        let golden = tasks[r.id as usize].1.golden_z();
+        assert_eq!(r.z.bits(), golden.bits(), "task {}", r.id);
+        assert_eq!(r.retries, 0, "clean runs never retry");
+    }
+}
+
+#[test]
+fn results_preserve_submission_ids_in_completion_order() {
+    let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Data);
+    let tasks = mixed_problems(10, 55);
+    let mut ids = Vec::new();
+    for (crit, p) in &tasks {
+        ids.push(c.submit(*crit, p.clone()));
+    }
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    c.run_to_idle().unwrap();
+    let completed: Vec<u64> = c.results().iter().map(|r| r.id).collect();
+    assert_eq!(completed, ids, "FIFO queue completes in order");
+}
+
+#[test]
+fn cycle_accounting_is_consistent() {
+    let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+    let tasks = mixed_problems(12, 200);
+    for (crit, p) in &tasks {
+        c.submit(*crit, p.clone());
+    }
+    c.run_to_idle().unwrap();
+    let m = &c.metrics;
+    let sum: u64 = c.results().iter().map(|r| r.cycles).sum();
+    assert_eq!(m.critical_cycles + m.best_effort_cycles, sum);
+    // Every task paid the 120-cycle parity programming on the Full build.
+    assert_eq!(m.config_cycles, 12 * 120);
+    assert_eq!(m.submitted, 12);
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn throughput_ratio_between_classes_is_about_2x() {
+    // Same-shape tasks in both classes isolate the mode cost.
+    let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Full);
+    let spec = GemmSpec::new(12, 48, 36);
+    for i in 0..8 {
+        let crit = if i < 4 {
+            Criticality::Critical
+        } else {
+            Criticality::BestEffort
+        };
+        c.submit(crit, GemmProblem::random(&spec, 300 + i));
+    }
+    c.run_to_idle().unwrap();
+    let avg = |crit: Criticality| {
+        let v: Vec<u64> = c
+            .results()
+            .iter()
+            .filter(|r| r.criticality == crit)
+            .map(|r| r.cycles)
+            .collect();
+        v.iter().sum::<u64>() as f64 / v.len() as f64
+    };
+    let ratio = avg(Criticality::Critical) / avg(Criticality::BestEffort);
+    assert!((1.7..=2.3).contains(&ratio), "ratio {ratio:.2}");
+}
+
+#[test]
+fn baseline_build_serves_best_effort_only() {
+    let mut c = Coordinator::new(RedMuleConfig::paper(), Protection::Baseline);
+    let p = GemmProblem::random(&GemmSpec::new(8, 8, 8), 1);
+    c.submit(Criticality::BestEffort, p.clone());
+    c.run_to_idle().unwrap();
+    assert_eq!(c.metrics.completed, 1);
+
+    c.submit(Criticality::Critical, p);
+    assert!(c.step().is_err(), "critical tasks need protection hardware");
+}

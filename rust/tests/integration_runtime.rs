@@ -1,0 +1,213 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, cross-
+//! checked bit-for-bit against the Rust golden model and the cycle-level
+//! simulator.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+
+#![cfg(feature = "pjrt")]
+
+use redmule_ft::cluster::System;
+use redmule_ft::prelude::*;
+use redmule_ft::runtime::GoldenRuntime;
+
+fn runtime() -> GoldenRuntime {
+    // Tests run from the crate root; artifacts live in ./artifacts.
+    GoldenRuntime::load_default().expect(
+        "artifacts missing — run `make artifacts` before `cargo test` \
+         (the Makefile `test` target does this)",
+    )
+}
+
+#[test]
+fn gemm_artifacts_match_rust_golden_bitwise() {
+    let rt = runtime();
+    let mut checked = 0;
+    for name in rt.names() {
+        let e = rt.entry(name).unwrap().clone();
+        if e.kind != "gemm" {
+            continue;
+        }
+        let spec = GemmSpec::new(e.params[0], e.params[1], e.params[2]);
+        for seed in [1u64, 2, 3] {
+            let p = GemmProblem::random(&spec, seed);
+            let z = rt.execute_gemm(name, &p.x, &p.w, &p.y).unwrap();
+            assert_eq!(
+                z.bits(),
+                p.golden_z().bits(),
+                "{name} seed {seed}: PJRT != golden"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected >=3 gemm artifacts, saw {checked}");
+}
+
+#[test]
+fn pjrt_simulator_golden_three_way_agreement() {
+    let rt = runtime();
+    let spec = GemmSpec::paper_workload();
+    let p = GemmProblem::random(&spec, 0xDEAD);
+    let golden = p.golden_z();
+    let z_pjrt = rt.execute_gemm("gemm_12x16x16", &p.x, &p.w, &p.y).unwrap();
+    let mut sys = System::new(RedMuleConfig::paper(), Protection::Full);
+    let z_sim = sys.run_gemm(&p, ExecMode::FaultTolerant).unwrap().z;
+    assert_eq!(z_pjrt.bits(), golden.bits());
+    assert_eq!(z_sim.bits(), golden.bits());
+    assert_eq!(z_pjrt.bits(), z_sim.bits());
+}
+
+#[test]
+fn redundant_artifact_returns_zero_mismatch_on_clean_input() {
+    let rt = runtime();
+    let e = rt.entry("gemm_redundant_12x16x16").expect("artifact").clone();
+    let spec = GemmSpec::new(e.params[0], e.params[1], e.params[2]);
+    let p = GemmProblem::random(&spec, 9);
+    let xf: Vec<f32> = p.x.data.iter().map(|v| v.to_f32()).collect();
+    let wf: Vec<f32> = p.w.data.iter().map(|v| v.to_f32()).collect();
+    let yf: Vec<f32> = p.y.data.iter().map(|v| v.to_f32()).collect();
+    let outs = rt
+        .execute_f32(
+            "gemm_redundant_12x16x16",
+            &[
+                (&xf, &[spec.m as i64, spec.n as i64]),
+                (&wf, &[spec.n as i64, spec.k as i64]),
+                (&yf, &[spec.m as i64, spec.k as i64]),
+            ],
+        )
+        .unwrap();
+    // Output 0: Z; output 1: the checker's mismatch count.
+    let golden = p.golden_z();
+    let z_bits: Vec<u16> = outs[0]
+        .iter()
+        .map(|&v| redmule_ft::fp::Fp16::from_f32(v).to_bits())
+        .collect();
+    assert_eq!(z_bits, golden.bits());
+    assert_eq!(outs[1][0], 0.0, "duplicated compute must agree");
+}
+
+#[test]
+fn mlp_train_step_decreases_loss_from_rust() {
+    let rt = runtime();
+    let e = rt.entry("mlp_train").expect("mlp_train artifact").clone();
+    let (b, i, h, c) = (e.params[0], e.params[1], e.params[2], e.params[3]);
+    let mut rng = Xoshiro256::new(4);
+    let mut normal = |s: f32| {
+        let u1: f64 = rng.next_f64().max(1e-12);
+        let u2: f64 = rng.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32 * s
+    };
+    let mut w1: Vec<f32> = (0..i * h).map(|_| normal(0.35)).collect();
+    let mut b1 = vec![0.0f32; h];
+    let mut w2: Vec<f32> = (0..h * c).map(|_| normal(0.25)).collect();
+    let mut b2 = vec![0.0f32; c];
+
+    // A fixed, linearly separable batch.
+    let mut x = vec![0.0f32; b * i];
+    let mut onehot = vec![0.0f32; b * c];
+    for r in 0..b {
+        let label = r % c;
+        x[r * i + label] = 2.0;
+        onehot[r * c + label] = 1.0;
+    }
+
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let outs = rt
+            .execute_f32(
+                "mlp_train",
+                &[
+                    (&w1, &[i as i64, h as i64]),
+                    (&b1, &[h as i64]),
+                    (&w2, &[h as i64, c as i64]),
+                    (&b2, &[c as i64]),
+                    (&x, &[b as i64, i as i64]),
+                    (&onehot, &[b as i64, c as i64]),
+                ],
+            )
+            .unwrap();
+        w1 = outs[0].clone();
+        b1 = outs[1].clone();
+        w2 = outs[2].clone();
+        b2 = outs[3].clone();
+        losses.push(outs[4][0]);
+    }
+    assert!(
+        losses[29] < 0.5 * losses[0],
+        "loss {} -> {} did not halve",
+        losses[0],
+        losses[29]
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn fp8_artifacts_agree_with_rust_quantizer_bit_for_bit() {
+    // Cross-language check of the hybrid-FP8 path (§2.1): the artifact
+    // quantizes in-graph with the JAX quantizer; we feed it inputs
+    // pre-quantized by the *Rust* FP8 implementation. If the two grids or
+    // rounding rules differed anywhere, re-quantization would move a
+    // value and the result would diverge from the Rust golden.
+    use redmule_ft::fp::Fp8Format;
+    let rt = runtime();
+    for (name, fmt) in [
+        ("gemm_fp8_e4m3_12x16x16", Fp8Format::E4M3),
+        ("gemm_fp8_e5m2_12x16x16", Fp8Format::E5M2),
+    ] {
+        let e = rt.entry(name).expect("fp8 artifact").clone();
+        let spec = GemmSpec::new(e.params[0], e.params[1], e.params[2]);
+        for seed in [4u64, 5, 6] {
+            // Larger magnitudes exercise saturation too.
+            let mut p = GemmProblem::random(&spec, seed);
+            for v in p.x.data.iter_mut() {
+                *v = redmule_ft::fp::Fp16::from_f64(v.to_f64() * 300.0);
+            }
+            let p = redmule_ft::golden::GemmProblem {
+                spec: p.spec,
+                x: p.x.quantize_fp8(fmt),
+                w: p.w.quantize_fp8(fmt),
+                y: p.y,
+            };
+            let golden = p.golden_z();
+            let xf: Vec<f32> = p.x.data.iter().map(|v| v.to_f32()).collect();
+            let wf: Vec<f32> = p.w.data.iter().map(|v| v.to_f32()).collect();
+            let yf: Vec<f32> = p.y.data.iter().map(|v| v.to_f32()).collect();
+            let outs = rt
+                .execute_f32(
+                    name,
+                    &[
+                        (&xf, &[spec.m as i64, spec.n as i64]),
+                        (&wf, &[spec.n as i64, spec.k as i64]),
+                        (&yf, &[spec.m as i64, spec.k as i64]),
+                    ],
+                )
+                .unwrap();
+            let z_bits: Vec<u16> = outs[0]
+                .iter()
+                .map(|&v| redmule_ft::fp::Fp16::from_f32(v).to_bits())
+                .collect();
+            assert_eq!(z_bits, golden.bits(), "{name} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn fp8_problem_runs_on_the_simulator_bit_exactly() {
+    use redmule_ft::fp::Fp8Format;
+    let spec = GemmSpec::paper_workload();
+    for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+        let p = GemmProblem::random_fp8(&spec, fmt, 21);
+        let golden = p.golden_z();
+        let mut sys = System::new(RedMuleConfig::paper(), Protection::Full);
+        let r = sys.run_gemm(&p, ExecMode::FaultTolerant).unwrap();
+        assert!(r.z_matches(&golden), "{fmt:?}");
+    }
+}
+
+#[test]
+fn artifact_shape_validation_rejects_wrong_inputs() {
+    let rt = runtime();
+    let p = GemmProblem::random(&GemmSpec::new(5, 5, 5), 1);
+    let err = rt.execute_gemm("gemm_12x16x16", &p.x, &p.w, &p.y);
+    assert!(err.is_err(), "shape mismatch must be rejected");
+    assert!(rt.execute_gemm("no_such_artifact", &p.x, &p.w, &p.y).is_err());
+}

@@ -1,0 +1,324 @@
+//! Property-based tests (hand-rolled: proptest is not vendored offline,
+//! so each property runs against a deterministic seeded sweep — shrinkage
+//! is traded for exact reproducibility; the failing seed is printed).
+
+use redmule_ft::campaign::classify;
+use redmule_ft::cluster::System;
+use redmule_ft::ecc::{config_parity, decode32, encode32, weight_parity, weight_parity_ok, DecodeStatus};
+use redmule_ft::fault::FaultRegistry;
+use redmule_ft::fp::{add16, fma16, mul16, Fp16};
+use redmule_ft::fp::fma::fma16_via_f64;
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::prelude::*;
+use redmule_ft::redmule::scheduler::{Dims, Scheduler};
+use redmule_ft::util::rng::{mix64, Xoshiro256};
+
+const CASES: u64 = 300;
+
+fn rng_for(case: u64, salt: u64) -> Xoshiro256 {
+    Xoshiro256::new(mix64(case, salt))
+}
+
+/// Property: the two independent FMA implementations agree on every
+/// random input triple, including specials.
+#[test]
+fn prop_fma_integer_path_equals_f64_path() {
+    for case in 0..20_000u64 {
+        let mut rng = rng_for(case, 1);
+        let a = Fp16::from_bits(rng.next_u32() as u16);
+        let b = Fp16::from_bits(rng.next_u32() as u16);
+        let c = Fp16::from_bits(rng.next_u32() as u16);
+        let x = fma16(a, b, c);
+        let y = fma16_via_f64(a, b, c);
+        // NaNs: compare NaN-ness, not payload.
+        if x.is_nan() || y.is_nan() {
+            assert_eq!(x.is_nan(), y.is_nan(), "case {case}");
+        } else {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: {a:?}*{b:?}+{c:?}");
+        }
+    }
+}
+
+/// Property: mul/add are consistent with fma (b*c = fma(b,c,±0); the
+/// hardware decomposes the same way).
+#[test]
+fn prop_mul_add_consistent_with_fma() {
+    for case in 0..5_000u64 {
+        let mut rng = rng_for(case, 2);
+        let a = rng.next_fp16_in(100.0);
+        let b = rng.next_fp16_in(100.0);
+        assert_eq!(mul16(a, b).to_bits(), fma16(a, b, Fp16::ZERO).to_bits());
+        let s1 = add16(a, b);
+        let s2 = fma16(a, Fp16::ONE, b);
+        assert_eq!(s1.to_bits(), s2.to_bits(), "case {case}");
+    }
+}
+
+/// Property: SECDED corrects every 1-bit error and flags every 2-bit
+/// error, for random data words and random error positions.
+#[test]
+fn prop_secded_single_correct_double_detect() {
+    for case in 0..2_000u64 {
+        let mut rng = rng_for(case, 3);
+        let data = rng.next_u32();
+        let cw = encode32(data);
+        let b1 = rng.below(39) as u32;
+        let (d1, s1) = decode32(cw ^ (1 << b1));
+        assert_eq!(d1, data, "case {case}");
+        assert!(matches!(s1, DecodeStatus::Corrected(_)));
+        let b2 = {
+            let mut b = rng.below(39) as u32;
+            while b == b1 {
+                b = rng.below(39) as u32;
+            }
+            b
+        };
+        let (_, s2) = decode32(cw ^ (1 << b1) ^ (1 << b2));
+        assert_eq!(s2, DecodeStatus::DoubleError, "case {case} bits {b1},{b2}");
+    }
+}
+
+/// Property: weight parity detects every single-bit flip of value or
+/// parity; config parity likewise.
+#[test]
+fn prop_parity_detects_single_flips() {
+    for case in 0..2_000u64 {
+        let mut rng = rng_for(case, 4);
+        let w = Fp16::from_bits(rng.next_u32() as u16);
+        let p = weight_parity(w);
+        assert!(weight_parity_ok(w, p));
+        let bit = rng.below(16) as u16;
+        assert!(!weight_parity_ok(Fp16::from_bits(w.to_bits() ^ (1 << bit)), p));
+        let cfg = rng.next_u32();
+        assert_ne!(config_parity(cfg), config_parity(cfg ^ (1 << rng.below(32))));
+    }
+}
+
+/// Property: simulator == golden for random shapes, seeds, geometries
+/// and modes.
+#[test]
+fn prop_simulator_matches_golden() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case, 5);
+        let m = 1 + rng.below(20) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(20) as usize;
+        let spec = GemmSpec::new(m, n, k);
+        let p = GemmProblem::random(&spec, mix64(case, 6));
+        let (prot, mode) = match rng.below(3) {
+            0 => (Protection::Baseline, ExecMode::Performance),
+            1 => (Protection::Data, ExecMode::FaultTolerant),
+            _ => (Protection::Full, ExecMode::FaultTolerant),
+        };
+        let mut sys = System::new(RedMuleConfig::paper(), prot);
+        let r = sys.run_gemm(&p, mode).unwrap();
+        assert!(
+            r.z_matches(&p.golden_z()),
+            "case {case}: ({m},{n},{k}) {prot:?} {mode:?}"
+        );
+    }
+}
+
+/// Property: `Scheduler::nominal_cycles` equals the walked cycle count
+/// for random dims, and FT mode costs 1x..2.5x performance mode.
+#[test]
+fn prop_scheduler_closed_form_matches_walk() {
+    for case in 0..CASES {
+        let mut rng = rng_for(case, 7);
+        let d = 12;
+        let dims = Dims {
+            m: 1 + rng.below(40) as u32,
+            n: 1 + rng.below(64) as u32,
+            k: 1 + rng.below(40) as u32,
+            rows_per_tile: [12u32, 6][rng.below(2) as usize],
+            d,
+            h: 4,
+        };
+        let mut s = Scheduler::idle();
+        s.start();
+        let mut walked = 0u64;
+        while s.advance(&dims) {
+            walked += 1;
+            assert!(walked < 10_000_000, "case {case}: non-terminating");
+        }
+        walked += 1; // the final advance that returned false consumed a cycle
+        assert_eq!(walked, Scheduler::nominal_cycles(&dims), "case {case} {dims:?}");
+    }
+}
+
+/// Property: classification is total and consistent — correct ⊕ error.
+#[test]
+fn prop_classification_partitions_outcomes() {
+    use redmule_ft::fault::FaultKind;
+    let cfg = RedMuleConfig::paper();
+    let reg = FaultRegistry::new(cfg, Protection::Data);
+    let spec = GemmSpec::paper_workload();
+    let p = GemmProblem::random(&spec, 0xAB);
+    let golden = p.golden_z();
+    let mut sys = System::new(cfg, Protection::Data);
+    let horizon = sys.run_gemm(&p, ExecMode::FaultTolerant).unwrap().cycles;
+    for case in 0..CASES {
+        let mut rng = rng_for(case, 8);
+        let plan = reg.sample_plan(horizon, &mut rng);
+        assert!(matches!(plan.kind, FaultKind::Transient | FaultKind::StateUpset));
+        let r = sys
+            .run_gemm_with_fault(&p, ExecMode::FaultTolerant, Some(plan))
+            .unwrap();
+        let o = classify(&r, &golden);
+        assert_eq!(
+            o.is_functional_error(),
+            !r.z_matches(&golden)
+                || matches!(
+                    r.outcome,
+                    redmule_ft::cluster::HostOutcome::TimedOut
+                        | redmule_ft::cluster::HostOutcome::Abandoned
+                ),
+            "case {case}: {o:?} vs {:?}",
+            r.outcome
+        );
+    }
+}
+
+/// Property: registry weights are positive, finite, and the sampled
+/// module distribution respects the area shares (chi-square-ish bound).
+#[test]
+fn prop_registry_sampling_unbiased() {
+    let reg = FaultRegistry::new(RedMuleConfig::paper(), Protection::Full);
+    let total = reg.total_weight();
+    let mut rng = Xoshiro256::new(0xFEED);
+    let n = 60_000;
+    let mut by_module = std::collections::HashMap::new();
+    for _ in 0..n {
+        let e = reg.sample_entry(&mut rng);
+        *by_module.entry(e.site.module()).or_insert(0u64) += 1;
+    }
+    for (module, count) in by_module {
+        let weight: f64 = reg
+            .entries()
+            .iter()
+            .filter(|e| e.site.module() == module)
+            .map(|e| e.weight)
+            .sum();
+        let expect = weight / total;
+        let got = count as f64 / n as f64;
+        assert!(
+            (got - expect).abs() < 0.02 + expect * 0.2,
+            "{module:?}: got {got:.4}, expect {expect:.4}"
+        );
+    }
+}
+
+/// Property: area model is monotone in L, H, P and protection level.
+#[test]
+fn prop_area_monotonicity() {
+    use redmule_ft::area::area_report;
+    for case in 0..100u64 {
+        let mut rng = rng_for(case, 9);
+        let l = 2 * (1 + rng.below(12) as usize);
+        let h = 1 + rng.below(8) as usize;
+        let p = 1 + rng.below(4) as usize;
+        let cfg = RedMuleConfig::new(l, h, p);
+        let base = area_report(cfg, Protection::Baseline).total_kge();
+        let data = area_report(cfg, Protection::Data).total_kge();
+        let full = area_report(cfg, Protection::Full).total_kge();
+        assert!(base < data && data < full, "case {case} ({l},{h},{p})");
+        let bigger = area_report(RedMuleConfig::new(l + 2, h, p), Protection::Baseline).total_kge();
+        assert!(bigger > base, "case {case}: more rows, more area");
+    }
+}
+
+/// Property: FP8 widening/narrowing is exact and idempotent for every
+/// 8-bit pattern in both formats (exhaustive).
+#[test]
+fn prop_fp8_exhaustive_round_trip() {
+    use redmule_ft::fp::{Fp8, Fp8Format};
+    for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+        for bits in 0..=u8::MAX {
+            let v8 = Fp8::new(bits, fmt);
+            let wide = v8.to_fp16();
+            if v8.is_nan() {
+                assert!(wide.is_nan(), "{fmt:?} {bits:#04x}");
+                continue;
+            }
+            if v8.is_infinite() {
+                // E5M2 infinity widens to FP16 infinity but *saturating*
+                // re-narrowing clamps to the max finite — by design.
+                assert!(wide.is_infinite(), "{fmt:?} {bits:#04x}");
+                continue;
+            }
+            // Widening then re-narrowing returns a value that widens to
+            // the same FP16 (the grid is a fixed point of quantization).
+            let renarrow = Fp8::from_fp16(wide, fmt, true);
+            assert_eq!(
+                renarrow.to_fp16().to_bits(),
+                wide.to_bits(),
+                "{fmt:?} {bits:#04x}"
+            );
+        }
+    }
+}
+
+/// Property: quantization never increases magnitude error beyond half a
+/// grid step, and saturates at the format maximum.
+#[test]
+fn prop_fp8_quantization_error_bounded() {
+    use redmule_ft::fp::{Fp8, Fp8Format};
+    for (fmt, max) in [(Fp8Format::E4M3, 448.0), (Fp8Format::E5M2, 57344.0)] {
+        let mut rng = Xoshiro256::new(0xF8);
+        for _ in 0..5_000 {
+            let v = (rng.next_f64() * 2.0 - 1.0) * max * 1.2;
+            let q = Fp8::from_f64(v, fmt, true).to_fp16().to_f64();
+            assert!(q.abs() <= max, "{fmt:?}: {v} -> {q}");
+            if v.abs() <= max {
+                // Relative error within one part in 2^m (plus subnormal floor).
+                let m = if fmt == Fp8Format::E4M3 { 8.0 } else { 4.0 };
+                let tol = v.abs() / m + 0.02;
+                assert!((q - v).abs() <= tol, "{fmt:?}: {v} -> {q}");
+            }
+        }
+    }
+}
+
+/// Property: the PerCe build's campaign sits strictly between baseline
+/// and data protection on functional errors.
+#[test]
+fn prop_perce_build_is_intermediate() {
+    use redmule_ft::campaign::{Campaign, CampaignConfig};
+    let n = 4_000;
+    let run = |p| {
+        let mut c = CampaignConfig::table1(p, n, 33);
+        c.threads = 1;
+        Campaign::run(&c).unwrap()
+    };
+    let base = run(Protection::Baseline);
+    let perce = run(Protection::PerCe);
+    let data = run(Protection::Data);
+    assert!(
+        perce.functional_errors() < base.functional_errors(),
+        "per-CE {} !< baseline {}",
+        perce.functional_errors(),
+        base.functional_errors()
+    );
+    assert!(
+        data.functional_errors() < perce.functional_errors(),
+        "data {} !< per-CE {}",
+        data.functional_errors(),
+        perce.functional_errors()
+    );
+    assert!(perce.correct_with_retry > 0, "per-CE checkers must retry");
+}
+
+/// Property: FP16 round-trip through f64 and f32 is lossless for every
+/// representable value (exhaustive, including specials).
+#[test]
+fn prop_fp16_conversions_exhaustive() {
+    for bits in 0..=u16::MAX {
+        let v = Fp16::from_bits(bits);
+        if v.is_nan() {
+            assert!(Fp16::from_f64(v.to_f64()).is_nan());
+            continue;
+        }
+        assert_eq!(Fp16::from_f64(v.to_f64()).to_bits(), bits);
+        assert_eq!(Fp16::from_f32(v.to_f32()).to_bits(), bits);
+    }
+}
