@@ -66,6 +66,7 @@ fn main() {
     for prot in [
         Protection::Baseline,
         Protection::PerCe,
+        Protection::Abft,
         Protection::Data,
         Protection::Full,
     ] {
@@ -115,14 +116,17 @@ fn main() {
     // than RedMulE-FT's data protection — with comparable area cost.
     let (_, perce_err) = per_module_campaign(Protection::PerCe);
     let (_, data_err_a) = per_module_campaign(Protection::Data);
+    let (_, abft_err) = per_module_campaign(Protection::Abft);
     let cfg = RedMuleConfig::paper();
     let base_area = area_report(cfg, Protection::Baseline);
     println!(
-        "functional errors (un-derated): baseline {base_err}, per-CE [8] {perce_err}, data §3.1 {data_err_a}"
+        "functional errors (un-derated): baseline {base_err}, per-CE [8] {perce_err}, \
+         abft {abft_err}, data §3.1 {data_err_a}"
     );
     println!(
-        "area overhead: per-CE [8] {:+.1} % vs data §3.1 {:+.1} % — localized checkers cost more and protect less\n",
+        "area overhead: per-CE [8] {:+.1} % vs abft {:+.1} % vs data §3.1 {:+.1} % — localized checkers cost more and protect less\n",
         area_report(cfg, Protection::PerCe).overhead_vs(&base_area),
+        area_report(cfg, Protection::Abft).overhead_vs(&base_area),
         area_report(cfg, Protection::Data).overhead_vs(&base_area)
     );
     assert!(perce_err < base_err, "per-CE checkers do help somewhat");
@@ -130,6 +134,10 @@ fn main() {
         data_err_a * 2 < perce_err,
         "system-level protection must beat localized checkers"
     );
+    // ABFT checksums: detect + recover the large-magnitude corruption
+    // classes at performance-mode throughput; residual SDCs below the
+    // rounding tolerance keep it above the replicated builds.
+    assert!(abft_err < base_err, "checksums must cut the error rate");
 
     println!("== Ablation 2: FT area overhead vs array size (§4.1 scaling claim) ==\n");
     println!(

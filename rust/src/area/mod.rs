@@ -30,6 +30,9 @@ pub mod coeff {
     pub const GE_PER_XOR: f64 = 2.0;
     /// One bit of equality comparator (XNOR + AND-tree share).
     pub const GE_PER_CMP_BIT: f64 = 2.5;
+    /// One bit of a carry-lookahead adder lane (the ABFT checksum
+    /// accumulators' add path).
+    pub const GE_PER_ADDER_BIT: f64 = 9.0;
     /// FP16 FMA datapath logic (FPnew-like, single precision mode),
     /// excluding pipeline registers.
     pub const GE_FMA16: f64 = 5400.0;
@@ -206,6 +209,32 @@ pub fn area_report(cfg: RedMuleConfig, protection: Protection) -> AreaReport {
         push("ft/addrgen_extra", 4.4, true);
     }
 
+    // ------------------------------------- ABFT writeback checksum unit
+    if protection.has_abft_checksums() {
+        // L row + D column fixed-point accumulators on the store path:
+        // 48-bit registers, one adder lane each, plus the magnitude
+        // accumulation share and the tolerance compare logic. An order of
+        // magnitude below replication (`Full`): no replica streamers, no
+        // duplicated FSMs, no ECC machinery.
+        let acc_lanes = l + d;
+        let abft_bits = 48.0;
+        push(
+            "ft/abft_acc_regs",
+            acc_lanes * abft_bits * GE_PER_FF_BIT / 1000.0,
+            true,
+        );
+        push(
+            "ft/abft_adders",
+            acc_lanes * abft_bits * GE_PER_ADDER_BIT / 1000.0,
+            true,
+        );
+        push(
+            "ft/abft_compare",
+            (acc_lanes * abft_bits * GE_PER_CMP_BIT + 2.0 * abft_bits * GE_PER_XOR) / 1000.0,
+            true,
+        );
+    }
+
     // ----------------------------- [8]-style localized per-CE checkers
     if protection.has_per_ce_checkers() {
         // One reduced recompute FMA + 16-bit comparator per CE. [8]
@@ -305,10 +334,26 @@ mod tests {
 
     #[test]
     fn ft_items_are_exactly_the_hatched_ones() {
-        let f = paper(Protection::Full);
-        for i in &f.items {
-            assert_eq!(i.ft_overhead, i.name.starts_with("ft/"), "{}", i.name);
+        for p in [Protection::Full, Protection::Abft] {
+            for i in &paper(p).items {
+                assert_eq!(i.ft_overhead, i.name.starts_with("ft/"), "{}", i.name);
+            }
         }
+    }
+
+    #[test]
+    fn abft_overhead_sits_between_data_and_full() {
+        // The Table-1 trade: ABFT costs more than the §3.1 parity/ECC
+        // sprinkle but far less than full replication.
+        let b = paper(Protection::Baseline);
+        let a = paper(Protection::Abft);
+        let d = paper(Protection::Data);
+        let f = paper(Protection::Full);
+        let ovh = a.overhead_vs(&b);
+        assert!(ovh > d.overhead_vs(&b), "abft {ovh:.2}% vs data");
+        assert!(ovh < 0.5 * f.overhead_vs(&b), "abft {ovh:.2}% vs full");
+        assert!((1.0..=8.0).contains(&ovh), "abft overhead {ovh:.2}% out of band");
+        assert!(a.ft_overhead_kge() > 0.0);
     }
 
     #[test]

@@ -24,13 +24,13 @@
 //! additional observed error" — the same procedure as the paper's
 //! footnote a).
 
-use crate::cluster::{HostOutcome, System};
+use crate::cluster::{HostOutcome, RecoveryPolicy, System};
 use crate::fault::FaultRegistry;
 use crate::golden::{GemmProblem, GemmSpec, Mat};
 use crate::redmule::{ExecMode, Protection, RedMuleConfig};
 use crate::util::rng::{mix64, Xoshiro256};
 use crate::util::stats::{conservative_upper_rate, Rate};
-use crate::Result;
+use crate::{Error, Result};
 
 /// Table-1 outcome classes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -89,17 +89,26 @@ pub struct CampaignConfig {
     pub injections: u64,
     pub seed: u64,
     pub threads: usize,
+    /// Host re-execution policy after detected faults.
+    pub recovery: RecoveryPolicy,
 }
 
 impl CampaignConfig {
     /// The paper's configuration for one Table-1 column: the (12×16×16)
     /// workload on the paper instance. Baseline runs unprotected;
-    /// protected builds run in fault-tolerant mode.
+    /// replicated builds run in fault-tolerant mode; the ABFT build runs
+    /// in performance mode (its protection is the checksum layer) with
+    /// selective row-band recovery.
     pub fn table1(protection: Protection, injections: u64, seed: u64) -> Self {
         let mode = if protection.has_data_protection() {
             ExecMode::FaultTolerant
         } else {
             ExecMode::Performance
+        };
+        let recovery = if protection.has_abft_checksums() {
+            RecoveryPolicy::TileLevel
+        } else {
+            RecoveryPolicy::FullRestart
         };
         Self {
             cfg: RedMuleConfig::paper(),
@@ -109,6 +118,7 @@ impl CampaignConfig {
             injections,
             seed,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            recovery,
         }
     }
 }
@@ -194,11 +204,19 @@ impl Campaign {
         let golden = problem.golden_z();
 
         // Horizon for cycle sampling: the fault-free duration of the
-        // workload in the campaign's execution mode.
+        // workload in the campaign's execution mode. The fault-free run
+        // must be bit-exact against golden — anything else means the
+        // build is broken and every classification below would silently
+        // be poisoned, so this is a hard error (not a debug assertion).
         let horizon = {
-            let mut sys = System::new(config.cfg, config.protection);
+            let mut sys = System::new(config.cfg, config.protection).with_recovery(config.recovery);
             let r = sys.run_gemm(&problem, config.mode)?;
-            debug_assert!(r.z_matches(&golden), "fault-free run must be golden");
+            if !r.z_matches(&golden) {
+                return Err(Error::Sim(format!(
+                    "fault-free {} run diverged from golden — campaign aborted",
+                    config.protection.name()
+                )));
+            }
             r.cycles
         };
 
@@ -219,7 +237,8 @@ impl Campaign {
                 let golden = &golden;
                 handles.push(scope.spawn(move || -> Result<CampaignResult> {
                     let mut local = CampaignResult::empty(config.clone());
-                    let mut sys = System::new(config.cfg, config.protection);
+                    let mut sys =
+                        System::new(config.cfg, config.protection).with_recovery(config.recovery);
                     // Stage once, snapshot the TCDM image; every injected
                     // run restores it with a memcpy instead of re-driving
                     // the DMA + ECC encoders (§Perf: staging dominates
@@ -272,18 +291,49 @@ impl Campaign {
 
 // ---------------------------------------------------------------- Table 1
 
-/// The three-column Table 1 of the paper.
+/// The paper's three Table-1 protection columns.
+pub const TABLE1_PROTECTIONS: [Protection; 3] =
+    [Protection::Baseline, Protection::Data, Protection::Full];
+
+/// The extended four-column comparison: the paper's three builds plus the
+/// ABFT error-detecting-code point of the design space.
+pub const TABLE1_PROTECTIONS_ABFT: [Protection; 4] = [
+    Protection::Baseline,
+    Protection::Data,
+    Protection::Full,
+    Protection::Abft,
+];
+
+/// Table 1 of the paper — one campaign column per protection build.
 #[derive(Debug, Clone)]
 pub struct Table1 {
     pub columns: Vec<CampaignResult>,
 }
 
 impl Table1 {
-    /// Run the full Table-1 campaign: baseline, data-protected, fully
+    /// Run the paper's Table-1 campaign: baseline, data-protected, fully
     /// protected — `injections` single-fault runs each.
     pub fn run(injections: u64, seed: u64, threads: Option<usize>) -> Result<Self> {
+        Self::run_protections(&TABLE1_PROTECTIONS, injections, seed, threads)
+    }
+
+    /// Run the extended comparison with the ABFT column appended.
+    pub fn run_with_abft(injections: u64, seed: u64, threads: Option<usize>) -> Result<Self> {
+        Self::run_protections(&TABLE1_PROTECTIONS_ABFT, injections, seed, threads)
+    }
+
+    /// Run one campaign column per listed protection build.
+    pub fn run_protections(
+        protections: &[Protection],
+        injections: u64,
+        seed: u64,
+        threads: Option<usize>,
+    ) -> Result<Self> {
+        if protections.is_empty() {
+            return Err(Error::Config("table1 needs at least one protection column".into()));
+        }
         let mut columns = Vec::new();
-        for protection in [Protection::Baseline, Protection::Data, Protection::Full] {
+        for &protection in protections {
             let mut cfg = CampaignConfig::table1(protection, injections, seed);
             if let Some(t) = threads {
                 cfg.threads = t;
@@ -293,40 +343,89 @@ impl Table1 {
         Ok(Self { columns })
     }
 
-    /// The paper's headline: vulnerability reduction of the data-protected
-    /// build vs. baseline (functional-error rate ratio, ≈11× in §4.2).
-    pub fn vulnerability_reduction(&self) -> f64 {
-        let base = &self.columns[0];
-        let data = &self.columns[1];
+    fn column_of(&self, protection: Protection) -> Option<&CampaignResult> {
+        self.columns.iter().find(|c| c.config.protection == protection)
+    }
+
+    /// Functional-error rate ratio of `column` vs. the baseline column.
+    /// Returns `NaN` when the table has no baseline column to compare
+    /// against (never silently substitutes another column).
+    pub fn vulnerability_reduction_of(&self, column: usize) -> f64 {
+        let Some(base) = self.column_of(Protection::Baseline) else {
+            return f64::NAN;
+        };
+        let col = &self.columns[column];
         let base_rate = base.functional_errors() as f64 / base.total.max(1) as f64;
-        let data_rate = data.functional_errors() as f64 / data.total.max(1) as f64;
-        if data_rate == 0.0 {
+        let col_rate = col.functional_errors() as f64 / col.total.max(1) as f64;
+        if col_rate == 0.0 {
             f64::INFINITY
         } else {
-            base_rate / data_rate
+            base_rate / col_rate
+        }
+    }
+
+    /// The paper's headline: vulnerability reduction of the data-protected
+    /// build vs. baseline (functional-error rate ratio, ≈11× in §4.2).
+    /// `NaN` when the table lacks a Data or Baseline column.
+    pub fn vulnerability_reduction(&self) -> f64 {
+        match self
+            .columns
+            .iter()
+            .position(|c| c.config.protection == Protection::Data)
+        {
+            Some(idx) => self.vulnerability_reduction_of(idx),
+            None => f64::NAN,
+        }
+    }
+
+    /// Column header for a protection build.
+    fn header(p: Protection) -> &'static str {
+        match p {
+            Protection::Baseline => "Baseline",
+            Protection::Data => "Data Protection",
+            Protection::Full => "Full Protection",
+            Protection::PerCe => "Per-CE [8]",
+            Protection::Abft => "ABFT Checksums",
+        }
+    }
+
+    /// Published Table-1 cells for a protection build (rows: correct,
+    /// w/o retry, with retry, functional error, incorrect, timeout).
+    /// Builds outside the paper's table have no published column.
+    fn published_cells(p: Protection) -> [&'static str; 6] {
+        match p {
+            Protection::Baseline => {
+                ["92.92 %", "92.92 %", "0.00 %", "7.08 %", "6.97 %", "0.11 %"]
+            }
+            Protection::Data => {
+                ["99.36 %", "88.01 %", "11.35 %", "0.65 %", "0.46 %", "0.19 %"]
+            }
+            Protection::Full => [
+                ">99.9997 %",
+                "87.4457 %",
+                "12.5543 %",
+                "<0.0003 %",
+                "<0.0003 %",
+                "<0.0003 %",
+            ],
+            _ => ["-", "-", "-", "-", "-", "-"],
         }
     }
 
     /// Render the paper's Table 1 with our measured numbers (plus the
-    /// published values alongside for comparison).
+    /// published values alongside for comparison), one column per
+    /// campaign build.
     pub fn render(&self) -> String {
-        let pub_rows: [(&str, [&str; 3]); 6] = [
-            ("Correct Termination", ["92.92 %", "99.36 %", ">99.9997 %"]),
-            ("  w/o Retry", ["92.92 %", "88.01 %", "87.4457 %"]),
-            ("  with Retry", ["0.00 %", "11.35 %", "12.5543 %"]),
-            ("Functional Error", ["7.08 %", "0.65 %", "<0.0003 %"]),
-            ("  Incorrect", ["6.97 %", "0.46 %", "<0.0003 %"]),
-            ("  Timeout", ["0.11 %", "0.19 %", "<0.0003 %"]),
-        ];
         let mut s = String::new();
         s.push_str(&format!(
             "Table 1 — fault-injection results ({} injections per column, seed {})\n",
             self.columns[0].total, self.columns[0].config.seed
         ));
-        s.push_str(&format!(
-            "{:<24} {:>22} {:>22} {:>22}\n",
-            "", "Baseline", "Data Protection", "Full Protection"
-        ));
+        s.push_str(&format!("{:<24}", ""));
+        for c in &self.columns {
+            s.push_str(&format!(" {:>22}", Self::header(c.config.protection)));
+        }
+        s.push('\n');
         let cell = |c: &CampaignResult, count: u64, upper_if_zero: bool| -> String {
             if upper_if_zero && count == 0 {
                 format!("<{:.4} %", c.conservative_upper(0) * 100.0)
@@ -375,9 +474,12 @@ impl Table1 {
                 s.push_str(&format!(" {:>22}", c));
             }
             s.push('\n');
-            s.push_str(&format!("{:<24}", format!("  [paper: {}]", pub_rows[i].0)));
-            for p in pub_rows[i].1 {
-                s.push_str(&format!(" {:>22}", p));
+            s.push_str(&format!("{:<24}", format!("  [paper: {}]", name.trim())));
+            for c in &self.columns {
+                s.push_str(&format!(
+                    " {:>22}",
+                    Self::published_cells(c.config.protection)[i]
+                ));
             }
             s.push('\n');
         }
@@ -385,29 +487,49 @@ impl Table1 {
         use crate::area::{area_report, published};
         let base = area_report(RedMuleConfig::paper(), Protection::Baseline);
         s.push_str(&format!("{:<24}", "Area Overhead (model)"));
-        for p in [Protection::Baseline, Protection::Data, Protection::Full] {
-            let r = area_report(RedMuleConfig::paper(), p);
+        for c in &self.columns {
+            let r = area_report(c.config.cfg, c.config.protection);
             s.push_str(&format!(" {:>21.1} %", r.overhead_vs(&base)));
         }
         s.push('\n');
-        s.push_str(&format!(
-            "{:<24} {:>21.1} % {:>21.1} % {:>21.1} %\n",
-            "  [paper]",
-            0.0,
-            published::DATA_OVERHEAD_PCT,
-            published::FULL_OVERHEAD_PCT
-        ));
-        s.push_str(&format!(
-            "\nvulnerability reduction (data vs baseline): {:.1}x   [paper: 11x]\n",
-            self.vulnerability_reduction()
-        ));
-        let full = &self.columns[2];
-        s.push_str(&format!(
-            "full protection: {} functional errors in {} injections (upper bound {:.5} %)\n",
-            full.functional_errors(),
-            full.total,
-            full.conservative_upper(full.functional_errors()) * 100.0
-        ));
+        s.push_str(&format!("{:<24}", "  [paper]"));
+        for c in &self.columns {
+            let p = match c.config.protection {
+                Protection::Baseline => "0.0 %".to_string(),
+                Protection::Data => format!("{:.1} %", published::DATA_OVERHEAD_PCT),
+                Protection::Full => format!("{:.1} %", published::FULL_OVERHEAD_PCT),
+                _ => "-".to_string(),
+            };
+            s.push_str(&format!(" {:>22}", p));
+        }
+        s.push('\n');
+        s.push('\n');
+        if self.column_of(Protection::Baseline).is_some() {
+            for (i, c) in self.columns.iter().enumerate() {
+                if c.config.protection == Protection::Baseline {
+                    continue;
+                }
+                let note = match c.config.protection {
+                    Protection::Data => "   [paper: 11x]",
+                    _ => "",
+                };
+                let reduction = self.vulnerability_reduction_of(i);
+                s.push_str(&format!(
+                    "vulnerability reduction ({} vs baseline): {:.1}x{}\n",
+                    c.config.protection.name(),
+                    reduction,
+                    note
+                ));
+            }
+        }
+        if let Some(full) = self.column_of(Protection::Full) {
+            s.push_str(&format!(
+                "full protection: {} functional errors in {} injections (upper bound {:.5} %)\n",
+                full.functional_errors(),
+                full.total,
+                full.conservative_upper(full.functional_errors()) * 100.0
+            ));
+        }
         s
     }
 }
@@ -424,17 +546,108 @@ mod tests {
 
     #[test]
     fn campaign_is_deterministic_across_thread_counts() {
-        let mut c1 = CampaignConfig::table1(Protection::Data, 200, 7);
-        c1.threads = 1;
-        let mut c4 = c1.clone();
-        c4.threads = 4;
-        let r1 = Campaign::run(&c1).unwrap();
-        let r4 = Campaign::run(&c4).unwrap();
-        assert_eq!(r1.correct_no_retry, r4.correct_no_retry);
-        assert_eq!(r1.correct_with_retry, r4.correct_with_retry);
-        assert_eq!(r1.incorrect, r4.incorrect);
-        assert_eq!(r1.timeout, r4.timeout);
-        assert_eq!(r1.applied, r4.applied);
+        // Covers both a replicated column and the ABFT column: the ABFT
+        // writeback verification + band recovery must be as thread-layout
+        // independent as the abort/retry flow.
+        for protection in [Protection::Data, Protection::Abft] {
+            let mut c1 = CampaignConfig::table1(protection, 200, 7);
+            c1.threads = 1;
+            let mut c4 = c1.clone();
+            c4.threads = 4;
+            let r1 = Campaign::run(&c1).unwrap();
+            let r4 = Campaign::run(&c4).unwrap();
+            assert_eq!(r1.correct_no_retry, r4.correct_no_retry, "{protection:?}");
+            assert_eq!(r1.correct_with_retry, r4.correct_with_retry, "{protection:?}");
+            assert_eq!(r1.incorrect, r4.incorrect, "{protection:?}");
+            assert_eq!(r1.timeout, r4.timeout, "{protection:?}");
+            assert_eq!(r1.applied, r4.applied, "{protection:?}");
+        }
+    }
+
+    #[test]
+    fn mini_table1_regression_pins_counts_across_all_four_modes() {
+        // Mini-Table-1 regression pin, in two layers:
+        //
+        // 1. For a fixed seed the outcome 4-tuple of every protection
+        //    mode must be identical across runs and thread layouts (the
+        //    campaign derives each injection from (seed, index) alone).
+        // 2. When the committed pin file exists, the counts are
+        //    additionally pinned to its literals, so ANY behavioral
+        //    change to sampling, the engine or classification fails
+        //    with a diff. On a fresh tree without the file the measured
+        //    baseline is printed, ready to commit.
+        let pin_path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/mini_table1_pins.txt");
+        let mut measured = String::new();
+        for protection in [
+            Protection::Baseline,
+            Protection::Data,
+            Protection::Full,
+            Protection::Abft,
+        ] {
+            let mut a_cfg = CampaignConfig::table1(protection, 400, 0xBEEF);
+            a_cfg.threads = 2;
+            let mut b_cfg = a_cfg.clone();
+            b_cfg.threads = 5;
+            let a = Campaign::run(&a_cfg).unwrap();
+            let b = Campaign::run(&b_cfg).unwrap();
+            let counts = (a.correct_no_retry, a.correct_with_retry, a.incorrect, a.timeout);
+            assert_eq!(
+                counts,
+                (b.correct_no_retry, b.correct_with_retry, b.incorrect, b.timeout),
+                "{protection:?} counts must be reproducible"
+            );
+            measured.push_str(&format!(
+                "{} {} {} {} {}\n",
+                protection.name(),
+                a.correct_no_retry,
+                a.correct_with_retry,
+                a.incorrect,
+                a.timeout
+            ));
+            assert_eq!(a.total, 400);
+            assert_eq!(a.correct() + a.functional_errors(), a.total);
+            match protection {
+                Protection::Baseline => {
+                    assert_eq!(a.correct_with_retry, 0, "baseline cannot retry");
+                    assert!(a.functional_errors() > 0, "baseline must show errors");
+                }
+                Protection::Full => {
+                    assert_eq!(a.functional_errors(), 0, "full protection holds");
+                }
+                _ => {}
+            }
+        }
+        match std::fs::read_to_string(pin_path) {
+            Ok(expected) => assert_eq!(
+                measured, expected,
+                "outcome counts diverged from the pinned baseline in {pin_path}"
+            ),
+            Err(_) => eprintln!(
+                "mini_table1 pins not found; commit the measured baseline to \
+                 {pin_path}:\n{measured}"
+            ),
+        }
+    }
+
+    #[test]
+    fn abft_reduces_functional_errors_vs_baseline() {
+        let n = 2_000;
+        let base = mini(Protection::Baseline, n);
+        let abft = mini(Protection::Abft, n);
+        assert!(
+            abft.functional_errors() < base.functional_errors(),
+            "abft must measurably cut functional errors: {} vs {}",
+            abft.functional_errors(),
+            base.functional_errors()
+        );
+        assert!(
+            abft.correct_with_retry > 0,
+            "checksum detections must drive recoveries"
+        );
+        // The coverage ordering of the design space: checksums beat
+        // nothing, replication beats checksums.
+        let data = mini(Protection::Data, n);
+        assert!(data.functional_errors() <= abft.functional_errors());
     }
 
     #[test]
@@ -502,6 +715,7 @@ mod tests {
             fault_causes: 0,
             irq_seen: false,
             fault_applied: true,
+            abft: None,
             z: z.clone(),
         };
         assert_eq!(

@@ -19,10 +19,11 @@
 
 use crate::dma::{Dma, L2Mem};
 use crate::fault::{FaultCtx, FaultPlan};
-use crate::golden::{GemmProblem, Mat};
+use crate::golden::{abft_tolerance, AbftMismatch, GemmProblem, Mat};
+use crate::redmule::fault_unit::cause;
 use crate::redmule::regfile::{
-    FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME, REG_W_ADDR,
-    REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
+    FLAG_ABFT, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME,
+    REG_W_ADDR, REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
 };
 use crate::redmule::{ExecMode, Protection, RedMule, RedMuleConfig, RunState, TaskLayout};
 use crate::tcdm::Tcdm;
@@ -57,6 +58,20 @@ pub enum RecoveryPolicy {
     TileLevel,
 }
 
+/// ABFT bookkeeping of one hosted execution (`Protection::Abft` only).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AbftRunInfo {
+    /// Writeback verifications that found a checksum mismatch.
+    pub detections: u32,
+    /// Recoveries that recomputed only the located row band.
+    pub band_recomputes: u32,
+    /// Recoveries that fell back to a full re-execution (the corruption
+    /// could not be localized to rows — e.g. a corrupted operand that
+    /// perturbs data and carried checksum consistently, caught by the
+    /// column checks only).
+    pub full_restarts: u32,
+}
+
 /// Outcome of one hosted execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HostOutcome {
@@ -87,7 +102,11 @@ pub struct RunReport {
     /// True if the planned fault actually hit live state / an exercised
     /// net (false = architecturally masked, e.g. an idle-net transient).
     pub fault_applied: bool,
-    /// The Z region read back from TCDM.
+    /// ABFT verification/recovery bookkeeping (`Some` only on
+    /// `Protection::Abft` builds).
+    pub abft: Option<AbftRunInfo>,
+    /// The Z region read back from TCDM (the data region only on ABFT
+    /// builds — carried checksums are stripped).
     pub z: Mat,
 }
 
@@ -147,7 +166,22 @@ impl System {
 
     /// Stage a GEMM problem into TCDM (DMA in from L2) and return its
     /// layout. Z is zeroed so stale results can't alias a correct one.
+    ///
+    /// On `Protection::Abft` builds the host transparently stages the
+    /// ABFT-augmented problem (checksum row of X, checksum column of W,
+    /// bordered Y): the returned layout has `m+1` rows and `k+1` columns
+    /// and the accelerator carries the checksums through the GEMM as one
+    /// extra row/column of tiles. [`System::run_staged_with_fault`]
+    /// verifies and strips them at writeback.
     pub fn stage(&mut self, p: &GemmProblem) -> TaskLayout {
+        if self.protection().has_abft_checksums() {
+            let augmented = p.augment_abft();
+            return self.stage_inner(&augmented);
+        }
+        self.stage_inner(p)
+    }
+
+    fn stage_inner(&mut self, p: &GemmProblem) -> TaskLayout {
         let spec = p.spec;
         let layout = TaskLayout::contiguous(
             self.task_base,
@@ -211,6 +245,9 @@ impl System {
             ExecMode::FaultTolerant => FLAG_FT_MODE,
             ExecMode::Performance => 0,
         };
+        if self.redmule.protection.has_abft_checksums() {
+            flags |= FLAG_ABFT;
+        }
         let resume_word = match resume {
             Some((mt, kt)) => {
                 flags |= FLAG_TILE_RECOVERY;
@@ -234,6 +271,77 @@ impl System {
             CONFIG_PARITY_CYCLES
         } else {
             8 // plain config writes
+        }
+    }
+
+    /// Program a row-band sub-task of an ABFT layout: rows `r0..=r1` of
+    /// the augmented matrices, all columns. X/Y/Z rows are contiguous in
+    /// the row-major layout, so the band is itself a smaller contiguous
+    /// GEMM at offset base addresses and goes through the ordinary
+    /// programming sequence.
+    fn program_abft_band(&mut self, layout: &TaskLayout, mode: ExecMode, r0: u32, r1: u32) -> u64 {
+        let band = TaskLayout {
+            x_addr: layout.x_addr + r0 * layout.n * 2,
+            w_addr: layout.w_addr,
+            y_addr: layout.y_addr + r0 * layout.k * 2,
+            z_addr: layout.z_addr + r0 * layout.k * 2,
+            m: r1 - r0 + 1,
+            n: layout.n,
+            k: layout.k,
+        };
+        self.program(&band, mode)
+    }
+
+    /// ABFT writeback verification: compare the checksum unit's observed
+    /// row/column sums against the carried checksums in the Z region.
+    /// After a band recompute (`band = Some((r0, r1))`) only those rows
+    /// are checked — their carried checksums regenerated with the band,
+    /// while the column accumulations are stale by construction.
+    fn abft_check(&mut self, layout: &TaskLayout, band: Option<(u32, u32)>) -> AbftMismatch {
+        let m_aug = layout.m as usize;
+        let k_aug = layout.k as usize;
+        let n = layout.n as usize;
+        let k_data = k_aug - 1;
+        let mut mm = AbftMismatch::default();
+        let (r0, r1) = match band {
+            Some((a, b)) => (a as usize, b as usize),
+            None => (0, m_aug - 1),
+        };
+        for i in r0..=r1 {
+            let addr = layout.z_addr + ((i * k_aug + k_data) * 2) as u32;
+            let carried = self.tcdm.read_fp16(addr).0;
+            let unit_row = i - r0; // band sub-tasks index rows from 0
+            let obs = self.redmule.abft.row_sum(unit_row);
+            let tol = abft_tolerance(n, k_data, self.redmule.abft.row_abs(unit_row));
+            let dev = (obs - carried.to_f64()).abs();
+            if !carried.is_finite() || !dev.is_finite() || dev > tol {
+                mm.rows.push(i);
+            }
+        }
+        if band.is_none() {
+            for j in 0..k_data {
+                let addr = layout.z_addr + (((m_aug - 1) * k_aug + j) * 2) as u32;
+                let carried = self.tcdm.read_fp16(addr).0;
+                let obs = self.redmule.abft.col_sum(j);
+                let tol = abft_tolerance(n, m_aug - 1, self.redmule.abft.col_abs(j));
+                let dev = (obs - carried.to_f64()).abs();
+                if !carried.is_finite() || !dev.is_finite() || dev > tol {
+                    mm.cols.push(j);
+                }
+            }
+        }
+        mm
+    }
+
+    /// The host-visible result: on ABFT builds the carried checksum
+    /// row/column are stripped, leaving the data region.
+    fn final_z(&mut self, layout: &TaskLayout) -> Mat {
+        let z = self.read_z(layout);
+        if self.protection().has_abft_checksums() && z.rows >= 2 && z.cols >= 2 {
+            let (data, _, _) = crate::golden::split_abft_z(&z);
+            data
+        } else {
+            z
         }
     }
 
@@ -295,6 +403,7 @@ impl System {
         plan: Option<FaultPlan>,
     ) -> Result<RunReport> {
         let layout = *layout;
+        let abft = self.protection().has_abft_checksums();
         let mut config_cycles = self.program(&layout, mode);
         let mut ctx = match plan {
             Some(pl) => FaultCtx::with_plan(pl),
@@ -308,6 +417,9 @@ impl System {
         let mut retries = 0u32;
         let mut causes = 0u32;
         let mut irq_seen_any = false;
+        let mut abft_info = AbftRunInfo::default();
+        // Rows of the current ABFT band re-execution (None = full task).
+        let mut band: Option<(u32, u32)> = None;
 
         loop {
             let (aborted, cycles, irq_seen) = self.execute_attempt(&mut ctx, budget);
@@ -315,7 +427,52 @@ impl System {
             irq_seen_any |= irq_seen;
 
             if self.redmule.state() == RunState::Done {
-                let z = self.read_z(&layout);
+                if abft {
+                    // Writeback verification: observed row/column sums
+                    // from the checksum unit vs. the carried checksums.
+                    let mm = self.abft_check(&layout, band);
+                    config_cycles += (layout.m + layout.k) as u64;
+                    if !mm.is_clean() {
+                        causes |= cause::ABFT_CHECKSUM;
+                        abft_info.detections += 1;
+                        if retries >= MAX_RETRIES {
+                            return Ok(RunReport {
+                                outcome: HostOutcome::Abandoned,
+                                cycles: total_cycles,
+                                config_cycles,
+                                retries,
+                                fault_causes: causes,
+                                irq_seen: irq_seen_any,
+                                fault_applied: ctx.applied,
+                                abft: Some(abft_info),
+                                z: self.final_z(&layout),
+                            });
+                        }
+                        retries += 1;
+                        if self.recovery == RecoveryPolicy::TileLevel && !mm.rows.is_empty() {
+                            // Selective recovery: recompute only the row
+                            // band covering the located rows. Inputs are
+                            // pristine in TCDM; rows are contiguous in
+                            // row-major layout, so the band is itself a
+                            // smaller contiguous GEMM.
+                            let r0 = mm.rows[0] as u32;
+                            let r1 = *mm.rows.last().unwrap() as u32;
+                            band = Some((r0, r1));
+                            abft_info.band_recomputes += 1;
+                            config_cycles += self.program_abft_band(&layout, mode, r0, r1);
+                        } else {
+                            // Column-only mismatch (corruption consistent
+                            // along rows, e.g. an upset operand feeding a
+                            // whole row) cannot be localized: recompute
+                            // the full task.
+                            band = None;
+                            abft_info.full_restarts += 1;
+                            config_cycles += self.program(&layout, mode);
+                        }
+                        continue;
+                    }
+                }
+                let z = self.final_z(&layout);
                 let outcome = if retries > 0 {
                     HostOutcome::CompletedAfterRetry
                 } else {
@@ -329,6 +486,7 @@ impl System {
                     fault_causes: causes,
                     irq_seen: irq_seen_any,
                     fault_applied: ctx.applied,
+                    abft: abft.then_some(abft_info),
                     z,
                 });
             }
@@ -351,7 +509,8 @@ impl System {
                         fault_causes: causes,
                         irq_seen: irq_seen_any,
                         fault_applied: ctx.applied,
-                        z: self.read_z(&layout),
+                        abft: abft.then_some(abft_info),
+                        z: self.final_z(&layout),
                     });
                 }
                 retries += 1;
@@ -380,7 +539,8 @@ impl System {
                 fault_causes: causes,
                 irq_seen: irq_seen_any,
                 fault_applied: ctx.applied,
-                z: self.read_z(&layout),
+                abft: abft.then_some(abft_info),
+                z: self.final_z(&layout),
             });
         }
     }
@@ -469,6 +629,37 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn abft_build_is_bit_exact_and_strips_checksums() {
+        let (r, golden) = run(
+            Protection::Abft,
+            ExecMode::Performance,
+            GemmSpec::paper_workload(),
+            45,
+        );
+        assert_eq!(r.outcome, HostOutcome::Completed);
+        assert_eq!((r.z.rows, r.z.cols), (12, 16), "checksums must be stripped");
+        assert!(r.z_matches(&golden), "ABFT data region must equal golden");
+        assert_eq!(r.retries, 0, "fault-free ABFT run must not retry");
+        assert_eq!(r.abft, Some(AbftRunInfo::default()));
+        assert!(!r.irq_seen);
+    }
+
+    #[test]
+    fn abft_runs_at_performance_speed() {
+        // No row duplication: the ABFT run costs ~the baseline run of the
+        // augmented (m+1, n, k+1) workload, far below the FT-mode 2x.
+        let spec = GemmSpec::new(12, 64, 48);
+        let (abft, _) = run(Protection::Abft, ExecMode::Performance, spec, 5);
+        let (ft, _) = run(Protection::Full, ExecMode::FaultTolerant, spec, 5);
+        assert!(
+            (abft.cycles as f64) < 0.75 * ft.cycles as f64,
+            "abft {} vs ft {} cycles",
+            abft.cycles,
+            ft.cycles
+        );
     }
 
     #[test]

@@ -146,11 +146,13 @@ impl Coordinator {
             return Ok(None);
         };
         let mode = task.criticality.exec_mode();
+        let protection = self.system.protection();
         if task.criticality == Criticality::Critical
-            && !self.system.protection().has_data_protection()
+            && !protection.has_data_protection()
+            && !protection.has_abft_checksums()
         {
             return Err(Error::Config(
-                "critical tasks require a data-protected build".into(),
+                "critical tasks require a data-protected or ABFT build".into(),
             ));
         }
         let report = self.system.run_gemm(&task.problem, mode)?;

@@ -300,6 +300,26 @@ impl FaultRegistry {
         g.add(SiteId::new(Module::FaultUnit, fault_unit::IRQ_NET, 0), 1, Transient);
         g.finish(&mut entries);
 
+        // --- ABFT checksum unit: store-path taps + accumulator bank.
+        if protection.has_abft_checksums() {
+            let mut g = Group::new(kge("ft/abft"));
+            g.add_range(
+                Module::Checker,
+                checker_unit::ABFT_TAP_NET,
+                0..16,
+                16,
+                Transient,
+            );
+            g.add_range(
+                Module::Checker,
+                checker_unit::ABFT_ACC_REG,
+                0..(l + d),
+                crate::redmule::abft::ABFT_ACC_BITS,
+                StateUpset,
+            );
+            g.finish(&mut entries);
+        }
+
         // --- [8]-style per-CE checker comparison nets.
         if protection.has_per_ce_checkers() {
             let mut g = Group::new(kge("ft/perce_checkers"));
@@ -431,6 +451,23 @@ mod tests {
         assert!(f.n_entries() > d.n_entries());
         assert!(f.total_weight() > d.total_weight());
         assert!(d.total_weight() > b.total_weight());
+    }
+
+    #[test]
+    fn abft_population_is_baseline_plus_checksum_unit() {
+        let b = reg(Protection::Baseline);
+        let a = reg(Protection::Abft);
+        // 16 tap nets + L+D accumulator registers on the paper instance.
+        assert_eq!(a.n_entries(), b.n_entries() + 16 + 24);
+        assert!(a.total_weight() > b.total_weight());
+        assert!(
+            a.entries()
+                .iter()
+                .any(|e| e.site.module() == Module::Checker
+                    && e.site.unit() == crate::fault::site::checker_unit::ABFT_ACC_REG
+                    && e.kind == FaultKind::StateUpset),
+            "accumulator SEU sites must be in the population"
+        );
     }
 
     #[test]

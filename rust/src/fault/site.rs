@@ -218,6 +218,12 @@ pub mod checker_unit {
     /// Per-CE recompute-checker comparison net (SET, [8]-style builds);
     /// index = row*H + col.
     pub const PERCE_CMP_NET: u8 = 3;
+    /// ABFT checksum-unit input tap on the store path (SET, `Abft`
+    /// builds); index = store lane.
+    pub const ABFT_TAP_NET: u8 = 4;
+    /// ABFT checksum accumulator register (SEU, `Abft` builds); index =
+    /// accumulator instance (row bank first, then column bank).
+    pub const ABFT_ACC_REG: u8 = 5;
 }
 
 /// Fault-unit tags.

@@ -14,8 +14,121 @@
 //! simulator and the PJRT-executed artifact all bit-identical. Run
 //! classification in the fault campaign compares raw `u16` patterns.
 
-use crate::fp::{fma16, Fp16, Fp8, Fp8Format};
+use crate::fp::{add16, fma16, Fp16, Fp8, Fp8Format};
 use crate::util::rng::Xoshiro256;
+
+// ------------------------------------------------------------------ ABFT
+//
+// Algorithm-based fault tolerance (Huang & Abraham) for `Z = Y + X·W`:
+// augment X with one extra row of column sums and W with one extra column
+// of row sums, so the GEMM itself produces a checksum row/column of Z.
+// Verification compares the *observed* row/column sums of the computed Z
+// against the carried checksums. Two layers are provided:
+//
+// * **Exact checksums** ([`ChecksumWord`], [`Mat::abft_checksums`],
+//   [`Mat::abft_verify`]) over a known matrix image: an exact fixed-point
+//   value sum plus a bit-pattern sum, so *every* single-bit corruption of
+//   a stored element is detected and located. Used to protect matrix
+//   images at rest (and to test the machinery itself).
+// * **Carried checksums with a rounding tolerance**
+//   ([`abft_tolerance`]): the checksum row/column computed *through* the
+//   FP16 pipeline differs from the observed exact sums by accumulated
+//   rounding error, so online verification at writeback uses a
+//   calibrated tolerance. Corruptions below the tolerance escape — the
+//   fundamental coverage limit of floating-point ABFT (FT-GEMM, Wu et
+//   al. 2023) that the campaign quantifies against replication.
+
+/// Fractional bits of the exact fixed-point checksum arithmetic. Every
+/// finite FP16 value is an integer multiple of 2^-24, so sums in this
+/// representation are exact and order-independent.
+pub const FX_FRAC_BITS: u32 = 24;
+
+/// Exact fixed-point image of an FP16 value (units of 2^-24). Non-finite
+/// values map to a sentinel far outside any finite sum so that a
+/// corruption to Inf/NaN can never cancel.
+#[inline]
+pub fn fp16_to_fixed(v: Fp16) -> i64 {
+    if v.is_finite() {
+        // |v| <= 65504, so |v|*2^24 < 2^41: exact in f64 and in range.
+        (v.to_f64() * (1u64 << FX_FRAC_BITS) as f64) as i64
+    } else {
+        (1i64 << 45) + v.to_bits() as i64
+    }
+}
+
+/// Scale an exact fixed-point sum back to a real value.
+#[inline]
+pub fn fixed_to_f64(fx: i64) -> f64 {
+    fx as f64 / (1u64 << FX_FRAC_BITS) as f64
+}
+
+/// One exact checksum: fixed-point value sum + bit-pattern sum. The value
+/// sum carries the ABFT arithmetic meaning; the bit sum guarantees that
+/// even value-preserving corruptions (±0 sign flips, NaN payloads) are
+/// caught.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChecksumWord {
+    pub fx: i64,
+    pub bits: i64,
+}
+
+impl ChecksumWord {
+    #[inline]
+    pub fn accumulate(&mut self, v: Fp16) {
+        self.fx += fp16_to_fixed(v);
+        self.bits += v.to_bits() as i64;
+    }
+}
+
+/// Exact row + column checksums of a matrix image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AbftChecksums {
+    pub row: Vec<ChecksumWord>,
+    pub col: Vec<ChecksumWord>,
+}
+
+/// Result of an ABFT verification: the rows/columns whose checksums
+/// disagree (empty = clean).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AbftMismatch {
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+}
+
+impl AbftMismatch {
+    pub fn is_clean(&self) -> bool {
+        self.rows.is_empty() && self.cols.is_empty()
+    }
+
+    /// The located cell, when the mismatch pattern pins down exactly one:
+    /// a single corrupted element fails exactly one row and one column.
+    pub fn located(&self) -> Option<(usize, usize)> {
+        match (self.rows.as_slice(), self.cols.as_slice()) {
+            ([r], [c]) => Some((*r, *c)),
+            _ => None,
+        }
+    }
+}
+
+/// FP16 unit roundoff (2^-11), the grain of the checksum tolerance.
+pub const EPS16: f64 = 1.0 / 2048.0;
+
+/// Calibrated safety factor of [`abft_tolerance`]. Fault-free checksum
+/// deviations measured over the campaign workload distribution stay below
+/// ~0.6× the F=1 tolerance (tail over ~2000 problems); factor 4 leaves
+/// ~7× margin while still detecting every corruption that moves a row or
+/// column sum by more than a few FP16 ulps of its magnitude.
+pub const ABFT_TOL_FACTOR: f64 = 4.0;
+
+/// Rounding tolerance for comparing an observed (exact) row/column sum of
+/// Z against the checksum carried through the FP16 pipeline. `inner` is
+/// the GEMM inner dimension (accumulation chain length), `terms` the
+/// number of elements summed, `abs_sum` the sum of their magnitudes
+/// (which scales the reachable ulp sizes).
+#[inline]
+pub fn abft_tolerance(inner: usize, terms: usize, abs_sum: f64) -> f64 {
+    ABFT_TOL_FACTOR * EPS16 * (inner + terms + 1) as f64 * (1.0 + abs_sum)
+}
 
 /// A row-major FP16 matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -67,6 +180,61 @@ impl Mat {
             rows,
             cols,
             data: vals.iter().map(|&v| Fp16::from_f64(v)).collect(),
+        }
+    }
+
+    /// FP16 row sums (one per row), folded in ascending column order with
+    /// single-rounded adds — the encode step for the W column checksum
+    /// and Y row checksums of the ABFT augmentation.
+    pub fn row_sums_fp16(&self) -> Vec<Fp16> {
+        (0..self.rows)
+            .map(|i| {
+                let mut acc = Fp16::ZERO;
+                for j in 0..self.cols {
+                    acc = add16(acc, self.at(i, j));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// FP16 column sums (one per column), folded in ascending row order.
+    pub fn col_sums_fp16(&self) -> Vec<Fp16> {
+        (0..self.cols)
+            .map(|j| {
+                let mut acc = Fp16::ZERO;
+                for i in 0..self.rows {
+                    acc = add16(acc, self.at(i, j));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Exact row/column checksums of this matrix image (encode).
+    pub fn abft_checksums(&self) -> AbftChecksums {
+        let mut row = vec![ChecksumWord::default(); self.rows];
+        let mut col = vec![ChecksumWord::default(); self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.at(i, j);
+                row[i].accumulate(v);
+                col[j].accumulate(v);
+            }
+        }
+        AbftChecksums { row, col }
+    }
+
+    /// Verify this matrix image against previously encoded checksums.
+    /// Any single corrupted element fails exactly its row and its column,
+    /// so [`AbftMismatch::located`] pins it down.
+    pub fn abft_verify(&self, reference: &AbftChecksums) -> AbftMismatch {
+        assert_eq!(reference.row.len(), self.rows, "checksum shape mismatch");
+        assert_eq!(reference.col.len(), self.cols, "checksum shape mismatch");
+        let now = self.abft_checksums();
+        AbftMismatch {
+            rows: (0..self.rows).filter(|&i| now.row[i] != reference.row[i]).collect(),
+            cols: (0..self.cols).filter(|&j| now.col[j] != reference.col[j]).collect(),
         }
     }
 
@@ -147,6 +315,74 @@ impl GemmProblem {
     pub fn golden_z(&self) -> Mat {
         gemm_golden(&self.x, &self.w, &self.y)
     }
+
+    /// The ABFT-augmented problem: X gains a checksum row (column sums),
+    /// W a checksum column (row sums), Y both plus the corner (fold of
+    /// Y's column sums). The `(m+1) × (k+1)` result's data region is
+    /// bit-identical to this problem's [`GemmProblem::golden_z`] — the
+    /// extra row/column rides along through the same pipeline — while
+    /// `Z_aug[i][k]` ≈ the i-th row sum of Z and `Z_aug[m][j]` ≈ the j-th
+    /// column sum, within [`abft_tolerance`].
+    pub fn augment_abft(&self) -> GemmProblem {
+        let (m, n, k) = (self.spec.m, self.spec.n, self.spec.k);
+        let mut x = Mat::zeros(m + 1, n);
+        for i in 0..m {
+            for j in 0..n {
+                x.set(i, j, self.x.at(i, j));
+            }
+        }
+        for (j, v) in self.x.col_sums_fp16().into_iter().enumerate() {
+            x.set(m, j, v);
+        }
+        let mut w = Mat::zeros(n, k + 1);
+        for i in 0..n {
+            for j in 0..k {
+                w.set(i, j, self.w.at(i, j));
+            }
+        }
+        for (i, v) in self.w.row_sums_fp16().into_iter().enumerate() {
+            w.set(i, k, v);
+        }
+        let mut y = Mat::zeros(m + 1, k + 1);
+        for i in 0..m {
+            for j in 0..k {
+                y.set(i, j, self.y.at(i, j));
+            }
+        }
+        for (i, v) in self.y.row_sums_fp16().into_iter().enumerate() {
+            y.set(i, k, v);
+        }
+        let y_col_sums = self.y.col_sums_fp16();
+        let mut corner = Fp16::ZERO;
+        for (j, v) in y_col_sums.into_iter().enumerate() {
+            y.set(m, j, v);
+            corner = add16(corner, v);
+        }
+        y.set(m, k, corner);
+        GemmProblem {
+            spec: GemmSpec::new(m + 1, n, k + 1),
+            x,
+            w,
+            y,
+        }
+    }
+}
+
+/// Split an ABFT-augmented result into its data region and the carried
+/// checksum column (`Z_aug[0..m][k]`) and row (`Z_aug[m][0..k]`). The
+/// corner `Z_aug[m][k]` is returned with the checksum column (index `m`).
+pub fn split_abft_z(z_aug: &Mat) -> (Mat, Vec<Fp16>, Vec<Fp16>) {
+    assert!(z_aug.rows >= 2 && z_aug.cols >= 2, "not an augmented result");
+    let (m, k) = (z_aug.rows - 1, z_aug.cols - 1);
+    let mut data = Mat::zeros(m, k);
+    for i in 0..m {
+        for j in 0..k {
+            data.set(i, j, z_aug.at(i, j));
+        }
+    }
+    let carried_rows = (0..=m).map(|i| z_aug.at(i, k)).collect();
+    let carried_cols = (0..k).map(|j| z_aug.at(m, j)).collect();
+    (data, carried_rows, carried_cols)
 }
 
 /// `Z = Y + X·W` with the RedMulE accumulation order (ascending `n`,
@@ -262,6 +498,91 @@ mod tests {
             let rt = Fp8::from_fp16(*v, Fp8Format::E4M3, true).to_fp16();
             assert_eq!(rt.to_bits(), v.to_bits());
         }
+    }
+
+    #[test]
+    fn abft_augmented_data_region_is_bit_exact() {
+        for (m, n, k) in [(12, 16, 16), (1, 1, 1), (5, 7, 3), (13, 17, 19)] {
+            let p = GemmProblem::random(&GemmSpec::new(m, n, k), 0xAB + m as u64);
+            let golden = p.golden_z();
+            let aug = p.augment_abft();
+            assert_eq!((aug.spec.m, aug.spec.n, aug.spec.k), (m + 1, n, k + 1));
+            let z_aug = aug.golden_z();
+            let (data, carried_rows, carried_cols) = split_abft_z(&z_aug);
+            assert_eq!(data.bits(), golden.bits(), "({m},{n},{k})");
+            assert_eq!(carried_rows.len(), m + 1);
+            assert_eq!(carried_cols.len(), k);
+        }
+    }
+
+    #[test]
+    fn abft_carried_checksums_are_within_tolerance() {
+        for (m, n, k) in [(12, 16, 16), (5, 7, 3), (24, 33, 17), (12, 64, 48)] {
+            let p = GemmProblem::random(&GemmSpec::new(m, n, k), 7_000 + n as u64);
+            let z_aug = p.augment_abft().golden_z();
+            let (data, carried_rows, carried_cols) = split_abft_z(&z_aug);
+            for i in 0..m {
+                let obs: f64 = (0..k).map(|j| data.at(i, j).to_f64()).sum();
+                let abs: f64 = (0..k).map(|j| data.at(i, j).to_f64().abs()).sum();
+                let dev = (obs - carried_rows[i].to_f64()).abs();
+                let tol = abft_tolerance(n, k, abs);
+                assert!(dev <= tol, "row {i} of ({m},{n},{k}): dev {dev} > tol {tol}");
+            }
+            for j in 0..k {
+                let obs: f64 = (0..m).map(|i| data.at(i, j).to_f64()).sum();
+                let abs: f64 = (0..m).map(|i| data.at(i, j).to_f64().abs()).sum();
+                let dev = (obs - carried_cols[j].to_f64()).abs();
+                let tol = abft_tolerance(n, m, abs);
+                assert!(dev <= tol, "col {j} of ({m},{n},{k}): dev {dev} > tol {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_checksums_round_trip_clean() {
+        let mut rng = Xoshiro256::new(55);
+        for _ in 0..20 {
+            let m = 1 + rng.below(10) as usize;
+            let k = 1 + rng.below(10) as usize;
+            let mat = Mat::random(m, k, 1.0, &mut rng);
+            let chk = mat.abft_checksums();
+            assert!(mat.abft_verify(&chk).is_clean());
+        }
+    }
+
+    #[test]
+    fn exact_checksums_detect_and_locate_every_single_bit_flip() {
+        let mut rng = Xoshiro256::new(91);
+        let mut mat = Mat::random(6, 5, 1.0, &mut rng);
+        let chk = mat.abft_checksums();
+        for i in 0..6 {
+            for j in 0..5 {
+                for b in 0..16u16 {
+                    let orig = mat.at(i, j);
+                    mat.set(i, j, Fp16::from_bits(orig.to_bits() ^ (1 << b)));
+                    let mm = mat.abft_verify(&chk);
+                    assert_eq!(mm.located(), Some((i, j)), "flip bit {b} of ({i},{j})");
+                    mat.set(i, j, orig);
+                }
+            }
+        }
+        assert!(mat.abft_verify(&chk).is_clean(), "restores must round-trip");
+    }
+
+    #[test]
+    fn fixed_point_conversion_is_exact_and_flags_non_finite() {
+        let mut rng = Xoshiro256::new(123);
+        for _ in 0..5_000 {
+            let v = Fp16::from_bits(rng.next_u32() as u16);
+            if v.is_finite() {
+                assert_eq!(fixed_to_f64(fp16_to_fixed(v)), v.to_f64());
+            } else {
+                assert!(fp16_to_fixed(v) > 1 << 44, "{v:?}");
+            }
+        }
+        assert_eq!(fp16_to_fixed(Fp16::MIN_SUBNORMAL), 1);
+        assert_eq!(fp16_to_fixed(Fp16::ONE), 1 << FX_FRAC_BITS);
+        assert_eq!(fp16_to_fixed(Fp16::ZERO), 0);
     }
 
     #[test]

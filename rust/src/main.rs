@@ -3,10 +3,10 @@
 //! Subcommands (CLI parsing is hand-rolled; clap is not vendored):
 //!
 //! ```text
-//! redmule-ft campaign [--config baseline|data|full] [--injections N]
+//! redmule-ft campaign [--config baseline|data|full|abft|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
-//! redmule-ft table1   [--injections N] [--seed S] [--threads T]
-//! redmule-ft area     [--config baseline|data|full] [--l L --h H --p P]
+//! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
+//! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
 //! redmule-ft floorplan [--config ...]
 //! redmule-ft perf     [--m M --n N --k K]
 //! redmule-ft gemm     [--m M --n N --k K] [--config ...] [--mode ft|perf]
@@ -76,6 +76,7 @@ impl Args {
             Some("baseline") => Protection::Baseline,
             Some("data") => Protection::Data,
             Some("per-ce") | Some("perce") => Protection::PerCe,
+            Some("abft") => Protection::Abft,
             None | Some("full") => Protection::Full,
             Some(other) => {
                 eprintln!("unknown --config {other}, using full");
@@ -128,8 +129,10 @@ fn print_help() {
         "redmule-ft — RedMulE-FT reproduction (CF Companion '25)\n\
          \n\
          commands:\n\
-           campaign      run one SFI campaign column (--config, --injections, --seed, --threads, --report)\n\
-           table1        run all three Table-1 columns (--injections, --seed, --threads)\n\
+           campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
+                         --injections, --seed, --threads, --report)\n\
+           table1        run the Table-1 columns (--injections, --seed, --threads;\n\
+                         --abft appends the ABFT checksum column)\n\
            area          GE area model breakdown (--config, --l/--h/--p)\n\
            floorplan     Fig. 2a textual floorplan (--config)\n\
            perf          performance-mode vs FT-mode cycle model (--m/--n/--k)\n\
@@ -184,7 +187,11 @@ fn cmd_table1(args: &Args) -> redmule_ft::Result<()> {
     let injections = args.get("injections", 20_000u64);
     let seed = args.get("seed", 2025u64);
     let threads = args.kv.get("threads").and_then(|t| t.parse().ok());
-    let t = Table1::run(injections, seed, threads)?;
+    let t = if args.flag("abft") {
+        Table1::run_with_abft(injections, seed, threads)?
+    } else {
+        Table1::run(injections, seed, threads)?
+    };
     println!("{}", t.render());
     Ok(())
 }
@@ -192,7 +199,12 @@ fn cmd_table1(args: &Args) -> redmule_ft::Result<()> {
 fn cmd_area(args: &Args) -> redmule_ft::Result<()> {
     let cfg = args.redmule_cfg();
     let base = area_report(cfg, Protection::Baseline);
-    for p in [Protection::Baseline, Protection::Data, Protection::Full] {
+    for p in [
+        Protection::Baseline,
+        Protection::Data,
+        Protection::Abft,
+        Protection::Full,
+    ] {
         let r = area_report(cfg, p);
         println!("{}", r.render());
         println!(

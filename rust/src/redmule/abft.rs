@@ -1,0 +1,212 @@
+//! ABFT writeback checksum unit (`Protection::Abft`).
+//!
+//! A bank of wide fixed-point accumulators sits on the Z store path: as
+//! each result element streams out, the unit adds its value (and its
+//! magnitude, which scales the verification tolerance) into the running
+//! sum of the element's logical row and column. The host reads the
+//! accumulated sums after task completion and compares them against the
+//! checksum row/column the GEMM carried through the array (see
+//! [`crate::golden::abft_tolerance`] and the recovery flow in
+//! [`crate::cluster`]).
+//!
+//! Sums are exact 2^-24 fixed point ([`crate::golden::fp16_to_fixed`]),
+//! so accumulation order cannot introduce error and an SEU on an
+//! accumulator register is a plain stored-bit flip — both the input tap
+//! nets and the accumulator registers are fault sites with area-derived
+//! weights (`ft/abft*` in [`crate::area`]).
+//!
+//! The model keeps one row accumulator per output row and one column
+//! accumulator per data column of the *task* (the hardware equivalent
+//! tiles this through `L + D` physical accumulators; the area model
+//! charges for the physical bank).
+
+use crate::fp::Fp16;
+use crate::golden::{fixed_to_f64, fp16_to_fixed};
+
+/// Width of one physical accumulator register in bits (fault-site and
+/// area-model width: sign + 16 integer + 24 fractional + margin).
+pub const ABFT_ACC_BITS: u8 = 48;
+
+/// The checksum unit: armed per task with the augmented task dimensions.
+#[derive(Debug, Clone, Default)]
+pub struct AbftUnit {
+    armed: bool,
+    /// Data columns of the task (`k_aug - 1`): the carried checksum
+    /// column itself is excluded from the observed sums.
+    data_cols: usize,
+    /// Rows of the task; the last row (the carried checksum row) is
+    /// excluded from the column sums.
+    rows: usize,
+    row_fx: Vec<i64>,
+    row_abs_fx: Vec<i64>,
+    col_fx: Vec<i64>,
+    col_abs_fx: Vec<i64>,
+}
+
+impl AbftUnit {
+    /// Arm for a task of `m` rows × `k` columns (augmented dimensions,
+    /// both ≥ 1). Clears all accumulators.
+    pub fn arm(&mut self, m: usize, k: usize) {
+        self.armed = true;
+        self.rows = m;
+        self.data_cols = k.saturating_sub(1);
+        self.row_fx = vec![0; m];
+        self.row_abs_fx = vec![0; m];
+        self.col_fx = vec![0; self.data_cols];
+        self.col_abs_fx = vec![0; self.data_cols];
+    }
+
+    /// Disarm (builds without the unit, or tasks without the ABFT flag).
+    pub fn disarm(&mut self) {
+        self.armed = false;
+        self.row_fx.clear();
+        self.row_abs_fx.clear();
+        self.col_fx.clear();
+        self.col_abs_fx.clear();
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Observe one stored element at logical position `(row, col)` of the
+    /// augmented result. Out-of-range coordinates (possible only under
+    /// injected control faults) are ignored, like a store the decoder
+    /// does not claim.
+    #[inline]
+    pub fn observe(&mut self, row: usize, col: usize, v: Fp16) {
+        if !self.armed || row >= self.rows || col >= self.data_cols {
+            return;
+        }
+        let fx = fp16_to_fixed(v);
+        self.row_fx[row] += fx;
+        self.row_abs_fx[row] += fx.abs();
+        if row + 1 < self.rows {
+            self.col_fx[col] += fx;
+            self.col_abs_fx[col] += fx.abs();
+        }
+    }
+
+    /// Observed row sum / magnitude sum (data columns only).
+    pub fn row_sum(&self, row: usize) -> f64 {
+        fixed_to_f64(self.row_fx.get(row).copied().unwrap_or(0))
+    }
+
+    pub fn row_abs(&self, row: usize) -> f64 {
+        fixed_to_f64(self.row_abs_fx.get(row).copied().unwrap_or(0))
+    }
+
+    /// Observed column sum / magnitude sum (data rows only).
+    pub fn col_sum(&self, col: usize) -> f64 {
+        fixed_to_f64(self.col_fx.get(col).copied().unwrap_or(0))
+    }
+
+    pub fn col_abs(&self, col: usize) -> f64 {
+        fixed_to_f64(self.col_abs_fx.get(col).copied().unwrap_or(0))
+    }
+
+    /// SEU hook: flip a stored bit of row accumulator `index`. Returns
+    /// `false` (architecturally masked) when the bank slot is not live.
+    pub fn flip_row_acc_bit(&mut self, index: usize, bit: u8) -> bool {
+        match self.row_fx.get_mut(index) {
+            Some(v) if self.armed => {
+                *v ^= 1i64 << (bit % ABFT_ACC_BITS);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// SEU hook: flip a stored bit of column accumulator `index`.
+    pub fn flip_col_acc_bit(&mut self, index: usize, bit: u8) -> bool {
+        match self.col_fx.get_mut(index) {
+            Some(v) if self.armed => {
+                *v ^= 1i64 << (bit % ABFT_ACC_BITS);
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::add16;
+
+    #[test]
+    fn observes_exact_sums_excluding_checksum_row_and_column() {
+        let mut u = AbftUnit::default();
+        assert!(!u.armed());
+        u.arm(3, 4); // 3 rows (last = checksum row), 3 data cols
+        assert!(u.armed());
+        let v = Fp16::from_f64(1.5);
+        for row in 0..3 {
+            for col in 0..4 {
+                u.observe(row, col, v);
+            }
+        }
+        // Row sums count data columns only (3 of the 4).
+        for row in 0..3 {
+            assert_eq!(u.row_sum(row), 4.5, "row {row}");
+            assert_eq!(u.row_abs(row), 4.5);
+        }
+        // Column sums exclude the checksum row (2 of the 3 rows).
+        for col in 0..3 {
+            assert_eq!(u.col_sum(col), 3.0, "col {col}");
+        }
+        // Out-of-range observations are ignored.
+        u.observe(9, 0, v);
+        u.observe(0, 9, v);
+        assert_eq!(u.row_sum(0), 4.5);
+    }
+
+    #[test]
+    fn negative_values_and_magnitudes() {
+        let mut u = AbftUnit::default();
+        u.arm(2, 3);
+        u.observe(0, 0, Fp16::from_f64(-2.0));
+        u.observe(0, 1, Fp16::from_f64(0.5));
+        assert_eq!(u.row_sum(0), -1.5);
+        assert_eq!(u.row_abs(0), 2.5);
+    }
+
+    #[test]
+    fn accumulation_is_exact_for_fp16_inputs() {
+        // 2^-24 fixed point: the sum of any FP16 values equals the f64
+        // sum exactly (no accumulation-order dependence).
+        let mut u = AbftUnit::default();
+        u.arm(2, 100);
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let mut expect = 0.0f64;
+        let mut fold = Fp16::ZERO;
+        for col in 0..99 {
+            let v = rng.next_fp16_in(1.0);
+            u.observe(0, col, v);
+            expect += v.to_f64();
+            fold = add16(fold, v);
+        }
+        assert_eq!(u.row_sum(0), expect);
+        // ... and generally differs from the FP16 fold (rounding).
+        assert!((u.row_sum(0) - fold.to_f64()).abs() < 0.1);
+    }
+
+    #[test]
+    fn seu_hooks_hit_live_slots_only() {
+        let mut u = AbftUnit::default();
+        assert!(!u.flip_row_acc_bit(0, 3), "disarmed unit has no state");
+        u.arm(4, 5);
+        assert!(u.flip_row_acc_bit(0, 24)); // 2^24 fx = 1.0
+        assert_eq!(u.row_sum(0), 1.0);
+        assert!(u.flip_row_acc_bit(0, 24));
+        assert_eq!(u.row_sum(0), 0.0);
+        assert!(u.flip_col_acc_bit(3, 25));
+        assert_eq!(u.col_sum(3), 2.0);
+        assert!(!u.flip_row_acc_bit(99, 0));
+        assert!(!u.flip_col_acc_bit(99, 0));
+        // Re-arming clears the upset.
+        u.arm(4, 5);
+        assert_eq!(u.col_sum(3), 0.0);
+    }
+}

@@ -51,7 +51,7 @@ impl RedMuleConfig {
 }
 
 /// Which protection hardware is *built in* — the three synthesized
-/// versions compared in §4, plus the related-work comparator:
+/// versions compared in §4, plus two related-work comparators:
 ///
 /// 1. `Baseline` — the unprotected RedMulE of [7].
 /// 2. `Data` — §3.1 only: duplicated read responses + per-row ECC
@@ -65,12 +65,25 @@ impl RedMuleConfig {
 ///    guards the FMA datapath only; buffers, weight-broadcast paths and
 ///    control logic stay exposed — the gap §1 calls out and the
 ///    `ablation_protection` bench quantifies.
+/// 5. `Abft` — algorithm-based fault tolerance (Huang & Abraham; FT-GEMM,
+///    Wu et al. 2023): the classic third point in the replication-vs-code
+///    design space. The host stages row/column checksum vectors with the
+///    operands, the array carries them through the GEMM as one extra
+///    row/column, and a small checksum unit on the writeback path
+///    accumulates the observed row/column sums of `Z` and compares them
+///    against the carried checksums — detecting *and locating* corrupted
+///    output rows so the host can recompute only the affected row band
+///    instead of the whole matrix. No row duplication, so throughput
+///    stays at performance-mode level; coverage is bounded by the FP16
+///    rounding tolerance of the checksum identity (see
+///    [`crate::golden::abft_tolerance`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Protection {
     Baseline,
     Data,
     Full,
     PerCe,
+    Abft,
 }
 
 impl Protection {
@@ -80,6 +93,7 @@ impl Protection {
             Protection::Data => "data",
             Protection::Full => "full",
             Protection::PerCe => "per-ce",
+            Protection::Abft => "abft",
         }
     }
 
@@ -96,6 +110,11 @@ impl Protection {
     /// Does this build have [8]-style localized per-CE checkers?
     pub fn has_per_ce_checkers(self) -> bool {
         matches!(self, Protection::PerCe)
+    }
+
+    /// Does this build have the ABFT writeback checksum unit?
+    pub fn has_abft_checksums(self) -> bool {
+        matches!(self, Protection::Abft)
     }
 }
 
@@ -182,6 +201,14 @@ mod tests {
         assert!(!Protection::Data.has_control_protection());
         assert!(Protection::Full.has_data_protection());
         assert!(Protection::Full.has_control_protection());
+        // ABFT is an error-detecting-code build: no replication machinery.
+        assert!(!Protection::Abft.has_data_protection());
+        assert!(!Protection::Abft.has_control_protection());
+        assert!(!Protection::Abft.has_per_ce_checkers());
+        assert!(Protection::Abft.has_abft_checksums());
+        for p in [Protection::Baseline, Protection::Data, Protection::Full, Protection::PerCe] {
+            assert!(!p.has_abft_checksums(), "{p:?}");
+        }
     }
 
     #[test]

@@ -23,8 +23,11 @@ pub mod cause {
     pub const STORE_PARITY: u32 = 1 << 6;
     /// Localized per-CE recompute checker disagreed ([8]-style builds).
     pub const CE_CHECK: u32 = 1 << 7;
+    /// ABFT row/column checksum verification failed at writeback (`Abft`
+    /// builds; raised by the host driver, not the FSM abort path).
+    pub const ABFT_CHECKSUM: u32 = 1 << 8;
 
-    pub const ALL: u32 = 0xFF;
+    pub const ALL: u32 = 0x1FF;
 
     pub fn names(bits: u32) -> Vec<&'static str> {
         let mut v = Vec::new();
@@ -51,6 +54,9 @@ pub mod cause {
         }
         if bits & CE_CHECK != 0 {
             v.push("ce-check");
+        }
+        if bits & ABFT_CHECKSUM != 0 {
+            v.push("abft-checksum");
         }
         v
     }
@@ -136,9 +142,10 @@ mod tests {
 
     #[test]
     fn cause_names_cover_all_bits() {
-        assert_eq!(cause::names(cause::ALL).len(), 8);
+        assert_eq!(cause::names(cause::ALL).len(), 9);
         assert!(cause::names(0).is_empty());
         assert_eq!(cause::names(cause::ECC_DOUBLE), vec!["ecc-double"]);
+        assert_eq!(cause::names(cause::ABFT_CHECKSUM), vec!["abft-checksum"]);
     }
 
     #[test]

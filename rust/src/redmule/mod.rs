@@ -14,6 +14,7 @@
 //! their replicas, evaluates the build's detectors, and drives the
 //! abort/interrupt sequence of §3.3 when a fault is flagged.
 
+pub mod abft;
 pub mod array;
 pub mod config;
 pub mod fault_unit;
@@ -31,11 +32,12 @@ use crate::fault::site::{
 use crate::fault::{FaultCtx, FaultPlan};
 use crate::fp::{fma16, Fp16};
 use crate::tcdm::Tcdm;
+use abft::AbftUnit;
 use array::{CeArray, InFlight};
 use fault_unit::{cause, FaultUnit};
 use regfile::{
-    RegFile, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME,
-    REG_W_ADDR, REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
+    RegFile, FLAG_ABFT, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N,
+    REG_RESUME, REG_W_ADDR, REG_X_ADDR, REG_Y_ADDR, REG_Z_ADDR,
 };
 use scheduler::{Dims, Scheduler, PH_COMPUTE, PH_DONE, PH_DRAIN, PH_LOAD_Y, PH_STORE_Z, STREAM_ELEMS_PER_CYCLE};
 use streamer::{wrap_addr, Streamer, STREAM_W, STREAM_X, STREAM_Y, STREAM_Z};
@@ -81,6 +83,8 @@ pub struct RedMule {
     pub array: CeArray,
     pub streamers: [Streamer; 4],
     pub fault_unit: FaultUnit,
+    /// ABFT writeback checksum unit (live only on `Protection::Abft`).
+    pub abft: AbftUnit,
     pub perf: PerfCounters,
     pub cycle: u64,
     irq_line: bool,
@@ -104,6 +108,7 @@ impl RedMule {
             array: CeArray::new(cfg.l, cfg.h, cfg.p),
             streamers: [Streamer::default(); 4],
             fault_unit: FaultUnit::new(),
+            abft: AbftUnit::default(),
             perf: PerfCounters::default(),
             cycle: 0,
             irq_line: false,
@@ -122,6 +127,14 @@ impl RedMule {
         } else {
             ExecMode::Performance
         };
+        if self.protection.has_abft_checksums() && flags & FLAG_ABFT != 0 {
+            // Arm the writeback checksum unit with the task's (augmented)
+            // dimensions; accumulators start from zero on every attempt.
+            self.abft
+                .arm(self.regfile.read(REG_M) as usize, self.regfile.read(REG_K) as usize);
+        } else {
+            self.abft.disarm();
+        }
         if flags & FLAG_TILE_RECOVERY != 0 {
             // §5 future work: resume from the tile the host read out of
             // the progress register instead of recomputing everything.
@@ -162,6 +175,7 @@ impl RedMule {
             s.reset();
         }
         self.fault_unit = FaultUnit::new();
+        self.abft.disarm();
         self.perf = PerfCounters::default();
         self.cycle = 0;
         self.irq_line = false;
@@ -710,6 +724,19 @@ impl RedMule {
             }
             tcdm.write_fp16(addr, stored);
             self.perf.tcdm_writes += 1;
+
+            // ABFT checksum unit: tap the committed store value at its
+            // logical (row, column) position. The tap net is a fault site
+            // of its own — a transient here corrupts only the observed
+            // sum (a spurious mismatch), never the stored data.
+            if self.abft.armed() {
+                let tapped = ctx.fp16(
+                    SiteId::new(Module::Checker, checker_unit::ABFT_TAP_NET, lane),
+                    stored,
+                );
+                self.abft
+                    .observe(m as usize, (kt * dims.d + c) as usize, tapped);
+            }
         }
     }
 
@@ -777,6 +804,25 @@ impl RedMule {
                 fu_sites::STATUS_REG => {
                     self.fault_unit.flip_status_bit(bit);
                     true
+                }
+                _ => false,
+            },
+            Module::Checker => match unit {
+                // ABFT accumulator bank: row accumulators first, then the
+                // column bank (hardware indices 0..L+D). The physical slot
+                // holds the logical row/column of the tile currently in
+                // flight, so the upset lands on whatever sum is resident —
+                // an idle slot (tail tile) is architecturally masked.
+                checker_unit::ABFT_ACC_REG => {
+                    let l = self.cfg.l as u32;
+                    let dims = self.dims();
+                    if index < l {
+                        let row = u32::from(self.sched.mt) * dims.rows_per_tile + index;
+                        self.abft.flip_row_acc_bit(row as usize, bit)
+                    } else {
+                        let col = u32::from(self.sched.kt) * dims.d + (index - l);
+                        self.abft.flip_col_acc_bit(col as usize, bit)
+                    }
                 }
                 _ => false,
             },

@@ -22,8 +22,9 @@ pub const REG_M: usize = 4;
 pub const REG_N: usize = 5;
 pub const REG_K: usize = 6;
 /// Flags: bit 0 = fault-tolerant mode (redundant compute), bit 1 =
-/// tile-level recovery enabled (resume from [`REG_RESUME`]); others
-/// reserved.
+/// tile-level recovery enabled (resume from [`REG_RESUME`]), bit 2 =
+/// ABFT checksum mode (the staged task carries one checksum row/column
+/// and the writeback checksum unit is armed); others reserved.
 pub const REG_FLAGS: usize = 7;
 /// Resume tile for tile-level recovery: `mt << 16 | kt` (§5 future work).
 pub const REG_RESUME: usize = 8;
@@ -34,6 +35,7 @@ pub const CONTEXTS: usize = 2;
 
 pub const FLAG_FT_MODE: u32 = 1 << 0;
 pub const FLAG_TILE_RECOVERY: u32 = 1 << 1;
+pub const FLAG_ABFT: u32 = 1 << 2;
 
 /// The register file: `CONTEXTS` shadowed copies of `WORDS` words plus
 /// (in protected builds) one parity bit per word.

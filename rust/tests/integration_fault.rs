@@ -272,7 +272,12 @@ fn tile_recovery_resume_register_is_conservative() {
 
 #[test]
 fn campaign_smoke_all_columns() {
-    for prot in [Protection::Baseline, Protection::Data, Protection::Full] {
+    for prot in [
+        Protection::Baseline,
+        Protection::Data,
+        Protection::Full,
+        Protection::Abft,
+    ] {
         let mut cc = CampaignConfig::table1(prot, 400, 77);
         cc.threads = 2;
         let r = Campaign::run(&cc).unwrap();
