@@ -1,0 +1,133 @@
+//! Bench: ABFT tolerance-factor sweep — the detection-rate vs
+//! false-positive trade of floating-point checksum verification.
+//!
+//! ```text
+//! cargo bench --bench sweep_tolerance
+//! SWEEP_INJECTIONS=20000 cargo bench --bench sweep_tolerance
+//! ```
+//!
+//! For each tolerance safety factor the bench measures, on the paper
+//! workload:
+//!
+//! * **false positives** — fault-free runs whose writeback verification
+//!   flags rounding noise as corruption (wasted recoveries, or abandoned
+//!   workloads once retries run out);
+//! * **detections** — injected runs recovered via checksum mismatch
+//!   (`correct with retry`);
+//! * **escapes** — injected runs ending in silent corruption
+//!   (`incorrect`): corruptions below the tolerance pass unnoticed.
+//!
+//! Self-checks: a zero tolerance flags fault-free noise, the calibrated
+//! default (factor 4) is false-positive free, and opening the tolerance
+//! to effectively-infinite disables *finite-deviation* detection, so
+//! escapes rise toward the unprotected level. (Non-finite corruptions —
+//! an exponent flip driving a checksum to Inf/NaN — are flagged by the
+//! verifier regardless of the factor, so detection shrinks but does not
+//! reach zero.)
+
+use redmule_ft::campaign::{Campaign, CampaignConfig};
+use redmule_ft::cluster::{HostOutcome, RecoveryPolicy, System};
+use redmule_ft::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+
+/// Fault-free runs whose verification fires at this tolerance factor.
+fn false_positives(factor: f64, problems: u64, seed: u64) -> u64 {
+    let cfg = RedMuleConfig::paper();
+    let mut fp = 0;
+    for i in 0..problems {
+        let p = GemmProblem::random(&GemmSpec::paper_workload(), seed ^ (i << 8));
+        let mut sys = System::new(cfg, Protection::Abft)
+            .with_recovery(RecoveryPolicy::TileLevel)
+            .with_abft_tolerance(factor);
+        let r = sys.run_gemm(&p, ExecMode::Performance).expect("fault-free run");
+        if r.retries > 0 || r.outcome != HostOutcome::Completed {
+            fp += 1;
+        }
+    }
+    fp
+}
+
+fn main() {
+    let injections: u64 = std::env::var("SWEEP_INJECTIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4_000);
+    let seed: u64 = std::env::var("SWEEP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2025);
+    let fp_problems = 150;
+    let factors = [0.0, 1.0, ABFT_TOL_FACTOR, 64.0, 1e9];
+
+    eprintln!(
+        "sweep_tolerance: {injections} injections and {fp_problems} fault-free \
+         problems per factor, seed {seed}"
+    );
+    println!(
+        "{:>10}  {:>8}  {:>10}  {:>9}  {:>8}  {:>8}",
+        "factor", "fp", "detected", "incorrect", "timeout", "runs/s"
+    );
+
+    let mut rows = Vec::new();
+    for &factor in &factors {
+        let fp = false_positives(factor, fp_problems, seed);
+        let mut cc = CampaignConfig::table1(Protection::Abft, injections, seed);
+        cc.abft_tol_factor = factor;
+        let r = Campaign::run(&cc).expect("campaign");
+        println!(
+            "{factor:>10.2}  {fp:>8}  {:>10}  {:>9}  {:>8}  {:>8.0}",
+            r.correct_with_retry,
+            r.incorrect,
+            r.timeout,
+            r.runs_per_sec()
+        );
+        rows.push((factor, fp, r));
+    }
+
+    // Shape assertions: the trade the sweep is meant to quantify.
+    let zero = &rows[0];
+    let default = rows
+        .iter()
+        .find(|(f, _, _)| *f == ABFT_TOL_FACTOR)
+        .expect("default factor row");
+    let open = rows.last().expect("open-tolerance row");
+
+    assert!(
+        zero.1 > 0,
+        "zero tolerance must flag fault-free rounding noise ({} fp)",
+        zero.1
+    );
+    assert_eq!(
+        default.1, 0,
+        "the calibrated factor {ABFT_TOL_FACTOR} must be false-positive free"
+    );
+    assert_eq!(open.1, 0, "an open tolerance cannot fire at all");
+    assert!(
+        default.2.correct_with_retry > 0,
+        "the calibrated factor must drive checksum recoveries"
+    );
+    // An open tolerance only disables finite-deviation checks; Inf/NaN
+    // checksums are still flagged, so detection shrinks but need not
+    // vanish. Same seed => identical fault plans per row, so the
+    // comparison is deterministic, not statistical.
+    assert!(
+        open.2.correct_with_retry <= default.2.correct_with_retry,
+        "detection must not grow as the tolerance opens: {} vs {}",
+        open.2.correct_with_retry,
+        default.2.correct_with_retry
+    );
+    assert!(
+        open.2.incorrect >= default.2.incorrect,
+        "escapes must not shrink as the tolerance opens: {} vs {}",
+        open.2.incorrect,
+        default.2.incorrect
+    );
+    assert!(
+        open.2.incorrect > 0,
+        "with detection disabled the ABFT build must show silent corruption"
+    );
+    println!(
+        "ok: fp {} -> 0 as the factor opens; escapes {} -> {} as detection disables",
+        zero.1, default.2.incorrect, open.2.incorrect
+    );
+}

@@ -2,12 +2,21 @@
 //! behind Table 1 of the paper (§4.2).
 //!
 //! One *injection* = one independent hosted execution of the workload with
-//! a single planned fault drawn from the build's area-weighted site
-//! population ([`crate::fault::FaultRegistry`]): a uniformly random cycle,
-//! an area-weighted site, a uniformly random bit. Clock and reset are not
-//! part of the population (excluded in the paper too), and the single-
-//! fault-per-run policy matches the paper's assumption that "no additional
-//! faults occur during the recomputation phase".
+//! a planned fault drawn from the build's area-weighted site population
+//! ([`crate::fault::FaultRegistry`]): a uniformly random cycle, an
+//! area-weighted site, a uniformly random bit. Clock and reset are not
+//! part of the population (excluded in the paper too). Table-1 campaigns
+//! inject exactly one fault per run — the paper's assumption that "no
+//! additional faults occur during the recomputation phase" — while the
+//! scenario-grid engine in [`sweep`] raises
+//! [`CampaignConfig::faults_per_run`] to N ≥ 1 (independent SEUs or a
+//! multi-bit burst, see [`crate::fault::FaultModel`]).
+//!
+//! Every RNG stream is domain-separated: the problem data and the
+//! per-injection fault draws descend from `mix64(mix64(seed, DOMAIN), ..)`
+//! with distinct domain tags, so no injection index can replay the
+//! problem-generation stream (a pre-PR-2 bug: injection `0xC0FFEE`
+//! correlated its fault plan with the workload data).
 //!
 //! Outcomes are classified exactly as in Table 1 by comparing the TCDM Z
 //! region bit-for-bit against the fault-free golden:
@@ -24,13 +33,53 @@
 //! additional observed error" — the same procedure as the paper's
 //! footnote a).
 
+pub mod sweep;
+
+pub use sweep::{Sweep, SweepCell, SweepConfig, SweepResult};
+
 use crate::cluster::{HostOutcome, RecoveryPolicy, System};
-use crate::fault::FaultRegistry;
-use crate::golden::{GemmProblem, GemmSpec, Mat};
+use crate::fault::{FaultModel, FaultRegistry};
+use crate::golden::{GemmProblem, GemmSpec, Mat, ABFT_TOL_FACTOR};
 use crate::redmule::{ExecMode, Protection, RedMuleConfig};
 use crate::util::rng::{mix64, Xoshiro256};
 use crate::util::stats::{conservative_upper_rate, Rate};
 use crate::{Error, Result};
+
+// ------------------------------------------------- RNG stream domains
+//
+// The campaign derives every random quantity from `(seed, purpose)` so a
+// run is exactly reproducible and thread-layout independent. Purposes are
+// kept apart by domain tags: seeding the problem with `mix64(seed, TAG)`
+// while injection `i` uses `mix64(seed, i)` would make injection
+// `i == TAG` replay the problem stream verbatim — its fault plan drawn
+// from the very numbers that generated the workload data. (That was the
+// pre-PR-2 scheme with `TAG = 0xC0FFEE`; see the regression test
+// `rng_streams_are_domain_separated_at_the_old_collision_index`.)
+
+/// Domain tag of the problem-generation stream.
+pub const DOMAIN_PROBLEM: u64 = 0x5245_444D_5052_4F42; // "REDMPROB"
+/// Domain tag of the per-injection fault-plan streams.
+pub const DOMAIN_INJECT: u64 = 0x5245_444D_494E_4A43; // "REDMINJC"
+
+/// Seed of the `(seed, domain, index)` stream: two mixing rounds keep the
+/// domains apart for every index (a single round cannot — the index would
+/// add onto the same word the domain occupies).
+#[inline]
+pub fn stream_seed(seed: u64, domain: u64, index: u64) -> u64 {
+    mix64(mix64(seed, domain), index)
+}
+
+/// Seed of a campaign's workload-generation RNG.
+#[inline]
+pub fn problem_seed(seed: u64) -> u64 {
+    stream_seed(seed, DOMAIN_PROBLEM, 0)
+}
+
+/// Seed of injection `i`'s fault-plan RNG.
+#[inline]
+pub fn injection_seed(seed: u64, i: u64) -> u64 {
+    stream_seed(seed, DOMAIN_INJECT, i)
+}
 
 /// Table-1 outcome classes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -91,6 +140,13 @@ pub struct CampaignConfig {
     pub threads: usize,
     /// Host re-execution policy after detected faults.
     pub recovery: RecoveryPolicy,
+    /// Faults injected per run (Table 1 uses 1; sweep grids raise it).
+    pub faults_per_run: usize,
+    /// Correlation model of the faults when `faults_per_run > 1`.
+    pub fault_model: FaultModel,
+    /// ABFT verification tolerance safety factor (ABFT builds only; the
+    /// sweep's tolerance axis).
+    pub abft_tol_factor: f64,
 }
 
 impl CampaignConfig {
@@ -119,6 +175,9 @@ impl CampaignConfig {
             seed,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             recovery,
+            faults_per_run: 1,
+            fault_model: FaultModel::Independent,
+            abft_tol_factor: ABFT_TOL_FACTOR,
         }
     }
 }
@@ -132,9 +191,13 @@ pub struct CampaignResult {
     pub correct_with_retry: u64,
     pub incorrect: u64,
     pub timeout: u64,
-    /// Injections whose fault actually perturbed live state / an
-    /// exercised net (the rest were architecturally masked on arrival).
+    /// Injections where at least one fault actually perturbed live state
+    /// / an exercised net (the rest were architecturally masked on
+    /// arrival).
     pub applied: u64,
+    /// Total faults that landed across all runs (equals `applied` on
+    /// single-fault campaigns; larger on multi-fault ones).
+    pub faults_applied: u64,
     /// Wall-clock seconds and throughput of the campaign itself.
     pub wall_seconds: f64,
 }
@@ -162,11 +225,12 @@ impl CampaignResult {
         conservative_upper_rate(count, self.total)
     }
 
-    pub fn add(&mut self, outcome: Outcome, applied: bool) {
+    pub fn add(&mut self, outcome: Outcome, applied_faults: u32) {
         self.total += 1;
-        if applied {
+        if applied_faults > 0 {
             self.applied += 1;
         }
+        self.faults_applied += applied_faults as u64;
         match outcome {
             Outcome::CorrectNoRetry => self.correct_no_retry += 1,
             Outcome::CorrectWithRetry => self.correct_with_retry += 1,
@@ -184,6 +248,7 @@ impl CampaignResult {
             incorrect: 0,
             timeout: 0,
             applied: 0,
+            faults_applied: 0,
             wall_seconds: 0.0,
         }
     }
@@ -193,14 +258,50 @@ impl CampaignResult {
 pub struct Campaign;
 
 impl Campaign {
-    /// Run a full campaign: `config.injections` independent single-fault
+    /// A `System` built to the campaign's recovery + tolerance settings.
+    fn system(config: &CampaignConfig) -> System {
+        System::new(config.cfg, config.protection)
+            .with_recovery(config.recovery)
+            .with_abft_tolerance(config.abft_tol_factor)
+    }
+
+    /// Run a full campaign: `config.injections` independent fault-injected
     /// executions, chunked over `config.threads` worker threads. Fully
     /// deterministic for a given seed (thread count does not change the
-    /// drawn plans — each injection's RNG is seeded by its index).
+    /// drawn plans — each injection's RNG is seeded by its index, in a
+    /// domain-separated stream).
     pub fn run(config: &CampaignConfig) -> Result<CampaignResult> {
+        let problem = GemmProblem::random(&config.spec, problem_seed(config.seed));
+        Self::run_with_problem(config, &problem)
+    }
+
+    /// Like [`Campaign::run`] with a caller-supplied workload: the sweep
+    /// engine shares one problem instance (and hence one golden and one
+    /// staged TCDM image per worker) across every cell of a shape, so
+    /// protection / fault-count / tolerance columns are a controlled
+    /// comparison on identical data.
+    pub fn run_with_problem(
+        config: &CampaignConfig,
+        problem: &GemmProblem,
+    ) -> Result<CampaignResult> {
+        if problem.spec != config.spec {
+            return Err(Error::Config(format!(
+                "campaign spec ({},{},{}) does not match the supplied problem ({},{},{})",
+                config.spec.m, config.spec.n, config.spec.k,
+                problem.spec.m, problem.spec.n, problem.spec.k
+            )));
+        }
+        if config.faults_per_run == 0 {
+            return Err(Error::Config("campaign needs at least one fault per run".into()));
+        }
+        if config.faults_per_run > crate::fault::MAX_PLANS_PER_RUN {
+            return Err(Error::Config(format!(
+                "at most {} faults per run",
+                crate::fault::MAX_PLANS_PER_RUN
+            )));
+        }
         let started = std::time::Instant::now();
         let registry = FaultRegistry::new(config.cfg, config.protection);
-        let problem = GemmProblem::random(&config.spec, mix64(config.seed, 0xC0FFEE));
         let golden = problem.golden_z();
 
         // Horizon for cycle sampling: the fault-free duration of the
@@ -209,8 +310,8 @@ impl Campaign {
         // build is broken and every classification below would silently
         // be poisoned, so this is a hard error (not a debug assertion).
         let horizon = {
-            let mut sys = System::new(config.cfg, config.protection).with_recovery(config.recovery);
-            let r = sys.run_gemm(&problem, config.mode)?;
+            let mut sys = Self::system(config);
+            let r = sys.run_gemm(problem, config.mode)?;
             if !r.z_matches(&golden) {
                 return Err(Error::Sim(format!(
                     "fault-free {} run diverged from golden — campaign aborted",
@@ -233,41 +334,64 @@ impl Campaign {
                     break;
                 }
                 let registry = &registry;
-                let problem = &problem;
                 let golden = &golden;
                 handles.push(scope.spawn(move || -> Result<CampaignResult> {
                     let mut local = CampaignResult::empty(config.clone());
-                    let mut sys =
-                        System::new(config.cfg, config.protection).with_recovery(config.recovery);
+                    let mut sys = Self::system(config);
                     // Stage once, snapshot the TCDM image; every injected
                     // run restores it with a memcpy instead of re-driving
                     // the DMA + ECC encoders (§Perf: staging dominates
                     // per-run cost on the small Table-1 workload).
                     sys.redmule.reset();
-                    let layout = sys.stage(problem);
+                    let layout = sys.stage(problem)?;
                     let pristine = sys.tcdm.clone();
                     sys.tcdm.enable_dirty_tracking();
+                    // Plan buffers, reused across every injection.
+                    let mut plans = Vec::with_capacity(config.faults_per_run);
+                    let mut live = Vec::with_capacity(config.faults_per_run);
                     for i in lo..hi {
                         // Per-injection RNG: deterministic regardless of
-                        // thread layout.
-                        let mut rng = Xoshiro256::new(mix64(config.seed, i));
-                        let plan = registry.sample_plan(horizon, &mut rng);
+                        // thread layout, in its own domain so no index can
+                        // replay the problem-generation stream.
+                        let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
+                        registry.sample_plans_into(
+                            horizon,
+                            config.faults_per_run,
+                            config.fault_model,
+                            &mut rng,
+                            &mut plans,
+                        );
                         // Masking derate (see fault::registry::derating):
                         // an un-latched pulse is a clean run by
                         // construction — the fault-free execution was
                         // verified against golden above, so skip the
-                        // simulation and book the outcome directly.
-                        let latched =
-                            rng.next_f64() < crate::fault::registry::derating::for_kind(plan.kind);
-                        if !latched {
-                            local.add(Outcome::CorrectNoRetry, false);
+                        // simulation when nothing latches. A burst is one
+                        // physical event (one latch draw for the whole
+                        // plan); independent faults latch independently.
+                        use crate::fault::registry::derating;
+                        live.clear();
+                        match config.fault_model {
+                            FaultModel::Burst => {
+                                if rng.next_f64() < derating::for_kind(plans[0].kind) {
+                                    live.extend_from_slice(&plans);
+                                }
+                            }
+                            FaultModel::Independent => {
+                                for &plan in &plans {
+                                    if rng.next_f64() < derating::for_kind(plan.kind) {
+                                        live.push(plan);
+                                    }
+                                }
+                            }
+                        }
+                        if live.is_empty() {
+                            local.add(Outcome::CorrectNoRetry, 0);
                             continue;
                         }
                         sys.tcdm.restore_from(&pristine);
                         sys.redmule.reset();
-                        let report =
-                            sys.run_staged_with_fault(&layout, config.mode, Some(plan))?;
-                        local.add(classify(&report, golden), report.fault_applied);
+                        let report = sys.run_staged_with_faults(&layout, config.mode, &live)?;
+                        local.add(classify(&report, golden), report.faults_applied);
                     }
                     Ok(local)
                 }));
@@ -280,6 +404,7 @@ impl Campaign {
                 result.incorrect += local.incorrect;
                 result.timeout += local.timeout;
                 result.applied += local.applied;
+                result.faults_applied += local.faults_applied;
             }
             Ok(())
         })?;
@@ -545,6 +670,79 @@ mod tests {
     }
 
     #[test]
+    fn rng_streams_are_domain_separated_at_the_old_collision_index() {
+        // Regression for the pre-PR-2 stream collision: the problem was
+        // seeded with `mix64(seed, 0xC0FFEE)` while injection `i` used
+        // `mix64(seed, i)`, so injection 12,648,430 (0xC0FFEE) replayed
+        // the problem-generation stream verbatim and its fault plan was
+        // correlated with the workload data. Under the domain-separated
+        // derivation the two streams must differ — at the old collision
+        // index and around it — for any seed.
+        for seed in [0u64, 1, 7, 2024, 2025, 0xBEEF, 0xDEAD_BEEF] {
+            for index in [0xC0FFEEu64, 0, 1, 0xC0FFEF] {
+                let p = problem_seed(seed);
+                let i = injection_seed(seed, index);
+                assert_ne!(p, i, "seed {seed}: streams collide at index {index:#X}");
+                // The full generator outputs must diverge too, not just
+                // the derived seeds.
+                let mut a = Xoshiro256::new(p);
+                let mut b = Xoshiro256::new(i);
+                let aw: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+                let bw: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+                assert_ne!(aw, bw, "seed {seed}, index {index:#X}: streams replay");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_fault_campaigns_are_deterministic_across_thread_counts() {
+        for (faults, model) in [
+            (2usize, FaultModel::Independent),
+            (3, FaultModel::Independent),
+            (3, FaultModel::Burst),
+        ] {
+            let mut c1 = CampaignConfig::table1(Protection::Data, 150, 9);
+            c1.faults_per_run = faults;
+            c1.fault_model = model;
+            c1.threads = 1;
+            let mut c4 = c1.clone();
+            c4.threads = 4;
+            let r1 = Campaign::run(&c1).unwrap();
+            let r4 = Campaign::run(&c4).unwrap();
+            let t1 = (r1.correct_no_retry, r1.correct_with_retry, r1.incorrect, r1.timeout);
+            let t4 = (r4.correct_no_retry, r4.correct_with_retry, r4.incorrect, r4.timeout);
+            assert_eq!(t1, t4, "{faults} faults / {model:?}");
+            assert_eq!(r1.applied, r4.applied, "{faults} faults / {model:?}");
+            assert_eq!(
+                r1.faults_applied, r4.faults_applied,
+                "{faults} faults / {model:?}"
+            );
+            assert_eq!(r1.total, 150);
+        }
+    }
+
+    #[test]
+    fn multi_fault_runs_stress_the_protection_harder() {
+        // More simultaneous faults cannot make the unprotected build
+        // healthier: at equal injection counts the 3-fault campaign must
+        // apply at least as many faults and produce at least as many
+        // functional errors (statistically, with a deterministic seed).
+        let n = 800;
+        let one = mini(Protection::Baseline, n);
+        let mut cfg = CampaignConfig::table1(Protection::Baseline, n, 2024);
+        cfg.threads = 2;
+        cfg.faults_per_run = 3;
+        let three = Campaign::run(&cfg).unwrap();
+        assert!(three.faults_applied > one.faults_applied);
+        assert!(
+            three.functional_errors() >= one.functional_errors(),
+            "3-fault {} vs 1-fault {}",
+            three.functional_errors(),
+            one.functional_errors()
+        );
+    }
+
+    #[test]
     fn campaign_is_deterministic_across_thread_counts() {
         // Covers both a replicated column and the ABFT column: the ABFT
         // writeback verification + band recovery must be as thread-layout
@@ -714,7 +912,7 @@ mod tests {
             retries: 0,
             fault_causes: 0,
             irq_seen: false,
-            fault_applied: true,
+            faults_applied: 1,
             abft: None,
             z: z.clone(),
         };

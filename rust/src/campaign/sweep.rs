@@ -1,0 +1,448 @@
+//! Scenario-grid sweep campaigns — the scale-out generalization of the
+//! single-cell Table-1 campaign.
+//!
+//! A [`SweepConfig`] spans four axes:
+//!
+//! * **protection build** (baseline / data / full / per-CE / ABFT),
+//! * **GEMM shape** (the workload the faults land in),
+//! * **fault count** per run, under an [`FaultModel`] (independent SEUs
+//!   or one multi-bit burst) — FT-GEMM (arXiv:2305.02444) and the online
+//!   ABFT GPU work (arXiv:2305.01024) both validate ABFT under
+//!   multi-error regimes, not just single upsets,
+//! * **ABFT tolerance factor** (ABFT cells only): the detection-rate vs
+//!   false-positive trade of floating-point checksum verification.
+//!
+//! The grid is the cartesian product of the axes; every *cell* is a full
+//! campaign ([`Campaign::run_with_problem`]) sharing one workload per
+//! shape, so columns differing only in protection, fault count or
+//! tolerance are controlled comparisons on identical data. Cells fan out
+//! over a deterministic worker pool and every cell's campaign is seeded
+//! from the sweep seed and the cell's grid coordinates — never its worker
+//! thread — so the result (and the JSON emitted by
+//! [`SweepResult::to_json`]) is byte-identical for a fixed seed
+//! regardless of `--threads`.
+
+use crate::fault::FaultModel;
+use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
+use crate::redmule::{Protection, RedMuleConfig};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use super::{stream_seed, Campaign, CampaignConfig, CampaignResult};
+
+/// Domain tag of the per-shape workload streams (one problem per shape,
+/// shared by every cell of that shape).
+const DOMAIN_SWEEP_PROBLEM: u64 = 0x5245_444D_5357_5052; // "REDMSWPR"
+/// Domain tag of the per-cell campaign seeds. The tag folds in the shape
+/// and fault-count coordinates only, so cells differing in protection or
+/// tolerance factor see identical fault-plan streams (the same reuse of
+/// one seed across columns as `Table1`).
+const DOMAIN_SWEEP_CELL: u64 = 0x5245_444D_5357_434C; // "REDMSWCL"
+
+/// The sweep grid specification.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub cfg: RedMuleConfig,
+    pub protections: Vec<Protection>,
+    pub shapes: Vec<GemmSpec>,
+    /// Faults per run, each entry one grid column (all ≥ 1).
+    pub fault_counts: Vec<usize>,
+    pub fault_model: FaultModel,
+    /// ABFT tolerance factors. Applied to ABFT cells only; builds without
+    /// checksum hardware ignore the axis (one cell at the default
+    /// factor). Empty = default factor for ABFT cells too.
+    pub tol_factors: Vec<f64>,
+    /// Injections per cell.
+    pub injections: u64,
+    pub seed: u64,
+    /// Worker threads the *cells* fan out over (does not affect results).
+    pub threads: usize,
+}
+
+impl SweepConfig {
+    /// The default smoke grid: the paper's three builds × two shapes ×
+    /// fault count ∈ {1, 2} — 12 cells.
+    pub fn new(injections: u64, seed: u64) -> Self {
+        Self {
+            cfg: RedMuleConfig::paper(),
+            protections: vec![Protection::Baseline, Protection::Data, Protection::Full],
+            shapes: vec![GemmSpec::paper_workload(), GemmSpec::new(6, 8, 8)],
+            fault_counts: vec![1, 2],
+            fault_model: FaultModel::Independent,
+            tol_factors: vec![ABFT_TOL_FACTOR],
+            injections,
+            seed,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// Number of grid cells this configuration expands to.
+    pub fn n_cells(&self) -> usize {
+        let tols = self.tol_factors.len().max(1);
+        self.protections
+            .iter()
+            .map(|p| {
+                let t = if p.has_abft_checksums() { tols } else { 1 };
+                self.shapes.len() * self.fault_counts.len() * t
+            })
+            .sum()
+    }
+}
+
+/// One cell of the grid with its campaign outcome.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub protection: Protection,
+    pub shape: GemmSpec,
+    pub faults: usize,
+    pub tol_factor: f64,
+    pub result: CampaignResult,
+}
+
+/// A completed sweep.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub fault_model: FaultModel,
+    pub injections: u64,
+    pub seed: u64,
+    /// Cells in deterministic grid order (protection-major, then shape,
+    /// fault count, tolerance factor).
+    pub cells: Vec<SweepCell>,
+    pub wall_seconds: f64,
+}
+
+impl SweepResult {
+    pub fn total_runs(&self) -> u64 {
+        self.cells.iter().map(|c| c.result.total).sum()
+    }
+
+    pub fn runs_per_sec(&self) -> f64 {
+        self.total_runs() as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    /// Machine-readable JSON (schema `redmule-ft/sweep-v1`), suitable for
+    /// `BENCH_*.json` trajectory tracking. Deterministic for a fixed seed
+    /// and grid: wall-clock fields are emitted only when `timing` is set,
+    /// so the default output is byte-identical across thread counts.
+    pub fn to_json(&self, timing: bool) -> String {
+        let mut s = String::with_capacity(256 + 512 * self.cells.len());
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"redmule-ft/sweep-v1\",\n");
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"injections_per_cell\": {},\n", self.injections));
+        s.push_str(&format!("  \"fault_model\": \"{}\",\n", self.fault_model.name()));
+        s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
+        if timing {
+            s.push_str(&format!("  \"wall_seconds\": {:.3},\n", self.wall_seconds));
+            s.push_str(&format!("  \"runs_per_sec\": {:.1},\n", self.runs_per_sec()));
+        }
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let r = &c.result;
+            let total = r.total.max(1) as f64;
+            s.push_str("    {");
+            s.push_str(&format!("\"protection\": \"{}\", ", c.protection.name()));
+            s.push_str(&format!("\"mode\": \"{}\", ", r.config.mode.name()));
+            s.push_str(&format!(
+                "\"shape\": {{\"m\": {}, \"n\": {}, \"k\": {}}}, ",
+                c.shape.m, c.shape.n, c.shape.k
+            ));
+            s.push_str(&format!("\"faults\": {}, ", c.faults));
+            s.push_str(&format!("\"tol_factor\": {:?}, ", c.tol_factor));
+            s.push_str(&format!("\"total\": {}, ", r.total));
+            s.push_str(&format!(
+                "\"outcomes\": {{\"correct_no_retry\": {}, \"correct_with_retry\": {}, \
+                 \"incorrect\": {}, \"timeout\": {}}}, ",
+                r.correct_no_retry, r.correct_with_retry, r.incorrect, r.timeout
+            ));
+            s.push_str(&format!(
+                "\"applied\": {}, \"faults_applied\": {}, ",
+                r.applied, r.faults_applied
+            ));
+            s.push_str(&format!(
+                "\"rates\": {{\"correct\": {:.6}, \"functional_error\": {:.6}}}",
+                r.correct() as f64 / total,
+                r.functional_errors() as f64 / total
+            ));
+            if timing {
+                s.push_str(&format!(
+                    ", \"wall_seconds\": {:.3}, \"runs_per_sec\": {:.1}",
+                    r.wall_seconds,
+                    r.runs_per_sec()
+                ));
+            }
+            s.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}");
+        s
+    }
+}
+
+/// Grid coordinates of one cell before it runs.
+#[derive(Debug, Clone, Copy)]
+struct CellSpec {
+    protection: Protection,
+    shape_idx: usize,
+    shape: GemmSpec,
+    faults: usize,
+    tol_factor: f64,
+}
+
+/// The sweep driver.
+pub struct Sweep;
+
+impl Sweep {
+    /// Run the full grid. Deterministic for a fixed seed: cell enumeration
+    /// order, per-shape problems and per-cell campaign seeds depend only
+    /// on the configuration, never on worker-thread scheduling.
+    pub fn run(config: &SweepConfig) -> Result<SweepResult> {
+        if config.protections.is_empty()
+            || config.shapes.is_empty()
+            || config.fault_counts.is_empty()
+        {
+            return Err(Error::Config(
+                "sweep needs at least one protection, shape and fault count".into(),
+            ));
+        }
+        // Validate every axis up front: a bad cell must fail before any
+        // cell burns injection time, not mid-sweep.
+        if config.fault_counts.iter().any(|&n| n == 0) {
+            return Err(Error::Config("sweep fault counts must be >= 1".into()));
+        }
+        if let Some(&n) = config
+            .fault_counts
+            .iter()
+            .find(|&&n| n > crate::fault::MAX_PLANS_PER_RUN)
+        {
+            return Err(Error::Config(format!(
+                "sweep fault count {n} exceeds the per-run maximum of {}",
+                crate::fault::MAX_PLANS_PER_RUN
+            )));
+        }
+        if let Some(&f) = config
+            .tol_factors
+            .iter()
+            .find(|f| !f.is_finite() || **f < 0.0)
+        {
+            return Err(Error::Config(format!(
+                "sweep tolerance factors must be finite and >= 0 (got {f})"
+            )));
+        }
+        let started = std::time::Instant::now();
+
+        let default_tols = [ABFT_TOL_FACTOR];
+        let mut specs: Vec<CellSpec> = Vec::new();
+        for &protection in &config.protections {
+            for (shape_idx, &shape) in config.shapes.iter().enumerate() {
+                for &faults in &config.fault_counts {
+                    let tols: &[f64] =
+                        if protection.has_abft_checksums() && !config.tol_factors.is_empty() {
+                            &config.tol_factors
+                        } else {
+                            &default_tols
+                        };
+                    for &tol_factor in tols {
+                        specs.push(CellSpec {
+                            protection,
+                            shape_idx,
+                            shape,
+                            faults,
+                            tol_factor,
+                        });
+                    }
+                }
+            }
+        }
+
+        // One workload per shape, shared by every cell of that shape.
+        let problems: Vec<GemmProblem> = config
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(si, shape)| {
+                GemmProblem::random(shape, stream_seed(config.seed, DOMAIN_SWEEP_PROBLEM, si as u64))
+            })
+            .collect();
+
+        // Fan the cells out over the worker pool: a shared atomic cursor
+        // hands each worker the next unclaimed cell; results land in
+        // per-cell slots so completion order never reorders the grid.
+        // When the pool is larger than the grid, the leftover threads are
+        // split *inside* the cells' campaigns (the first `threads % cells`
+        // cells get one extra — a function of the cell index, never of
+        // worker scheduling). Sound because the campaign itself is
+        // thread-layout invariant (its determinism tests pin that), so
+        // the output stays byte-identical for any `--threads`.
+        let pool = config.threads.max(1);
+        let threads = pool.min(specs.len());
+        let inner_base = pool / specs.len();
+        let inner_rem = pool % specs.len();
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<SweepCell>>>> =
+            specs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    let inner = (inner_base + usize::from(i < inner_rem)).max(1);
+                    let cell = Self::run_cell(
+                        config,
+                        &specs[i],
+                        &problems[specs[i].shape_idx],
+                        inner,
+                    );
+                    *slots[i].lock().unwrap() = Some(cell);
+                });
+            }
+        });
+
+        let mut cells = Vec::with_capacity(specs.len());
+        for slot in slots {
+            let cell = slot
+                .into_inner()
+                .expect("sweep slot poisoned")
+                .expect("sweep cell never ran")?;
+            cells.push(cell);
+        }
+        Ok(SweepResult {
+            fault_model: config.fault_model,
+            injections: config.injections,
+            seed: config.seed,
+            cells,
+            wall_seconds: started.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run one cell: a campaign seeded from the sweep seed and the cell's
+    /// (shape, fault count) coordinates. The per-build execution mode and
+    /// recovery policy come from [`CampaignConfig::table1`] so sweep cells
+    /// and Table-1 columns are always configured identically.
+    fn run_cell(
+        config: &SweepConfig,
+        spec: &CellSpec,
+        problem: &GemmProblem,
+        threads: usize,
+    ) -> Result<SweepCell> {
+        let tag = ((spec.shape_idx as u64) << 32) | spec.faults as u64;
+        let seed = stream_seed(config.seed, DOMAIN_SWEEP_CELL, tag);
+        let mut cc = CampaignConfig::table1(spec.protection, config.injections, seed);
+        cc.cfg = config.cfg;
+        cc.spec = spec.shape;
+        cc.threads = threads;
+        cc.faults_per_run = spec.faults;
+        cc.fault_model = config.fault_model;
+        cc.abft_tol_factor = spec.tol_factor;
+        let result = Campaign::run_with_problem(&cc, problem)?;
+        Ok(SweepCell {
+            protection: spec.protection,
+            shape: spec.shape,
+            faults: spec.faults,
+            tol_factor: spec.tol_factor,
+            result,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(seed: u64, threads: usize) -> SweepConfig {
+        let mut c = SweepConfig::new(40, seed);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Abft];
+        c.fault_counts = vec![1, 2];
+        c.tol_factors = vec![1.0, ABFT_TOL_FACTOR];
+        c.threads = threads;
+        c
+    }
+
+    #[test]
+    fn grid_expansion_counts_abft_tolerance_cells_only() {
+        let c = tiny(1, 1);
+        // baseline: 1 shape × 2 fault counts × 1 tol; abft: × 2 tols.
+        assert_eq!(c.n_cells(), 2 + 4);
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), c.n_cells());
+        for cell in &r.cells {
+            assert_eq!(cell.result.total, 40);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let a = Sweep::run(&tiny(11, 1)).unwrap();
+        let b = Sweep::run(&tiny(11, 4)).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+    }
+
+    #[test]
+    fn cells_share_problem_and_plan_streams_across_protections() {
+        // Two protections over one shape and fault count: the grid must
+        // give both columns the same campaign seed (controlled
+        // comparison), differing only in the build under test.
+        let mut c = SweepConfig::new(30, 5);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Full];
+        c.fault_counts = vec![2];
+        c.threads = 2;
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), 2);
+        assert_eq!(
+            r.cells[0].result.config.seed, r.cells[1].result.config.seed,
+            "same (shape, faults) cell coordinates must share the stream"
+        );
+        // The protected build must not do worse than the unprotected one.
+        assert!(
+            r.cells[1].result.functional_errors() <= r.cells[0].result.functional_errors()
+        );
+    }
+
+    #[test]
+    fn invalid_axes_are_config_errors_before_any_cell_runs() {
+        let mut c = SweepConfig::new(10, 1);
+        c.protections.clear();
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = SweepConfig::new(10, 1);
+        c.fault_counts = vec![1, 0];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = SweepConfig::new(10, 1);
+        c.fault_counts = vec![1, crate::fault::MAX_PLANS_PER_RUN + 1];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = SweepConfig::new(10, 1);
+        c.protections = vec![Protection::Abft];
+        c.tol_factors = vec![f64::NAN];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let mut c = SweepConfig::new(10, 3);
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.protections = vec![Protection::Baseline];
+        c.fault_counts = vec![1];
+        c.threads = 1;
+        let r = Sweep::run(&c).unwrap();
+        let j = r.to_json(false);
+        for key in [
+            "\"schema\": \"redmule-ft/sweep-v1\"",
+            "\"seed\": 3",
+            "\"injections_per_cell\": 10",
+            "\"fault_model\": \"independent\"",
+            "\"cells\": [",
+            "\"protection\": \"baseline\"",
+            "\"shape\": {\"m\": 4, \"n\": 4, \"k\": 4}",
+            "\"outcomes\": ",
+            "\"rates\": ",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        assert!(!j.contains("wall_seconds"), "timing must be opt-in");
+        // Timing variant adds the fields without breaking the rest.
+        let jt = r.to_json(true);
+        assert!(jt.contains("wall_seconds") && jt.contains("runs_per_sec"));
+    }
+}

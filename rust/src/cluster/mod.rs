@@ -19,7 +19,7 @@
 
 use crate::dma::{Dma, L2Mem};
 use crate::fault::{FaultCtx, FaultPlan};
-use crate::golden::{abft_tolerance, AbftMismatch, GemmProblem, Mat};
+use crate::golden::{abft_tolerance_scaled, AbftMismatch, GemmProblem, Mat, ABFT_TOL_FACTOR};
 use crate::redmule::fault_unit::cause;
 use crate::redmule::regfile::{
     FLAG_ABFT, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME,
@@ -40,7 +40,8 @@ pub const CONFIG_PARITY_CYCLES: u64 = 120;
 
 /// Maximum automatic re-executions after detected faults. The paper's
 /// campaign assumes a single fault per run, so one retry always suffices;
-/// the guard only matters for multi-fault experiments.
+/// the guard bounds the multi-fault sweep runs (N faults can abort up to
+/// N attempts before the retries run out and the host abandons).
 pub const MAX_RETRIES: u32 = 3;
 
 /// How the host re-executes after a detected fault (§3.3 / §5).
@@ -99,9 +100,9 @@ pub struct RunReport {
     pub fault_causes: u32,
     /// True if the host observed the IRQ wire asserted at least once.
     pub irq_seen: bool,
-    /// True if the planned fault actually hit live state / an exercised
-    /// net (false = architecturally masked, e.g. an idle-net transient).
-    pub fault_applied: bool,
+    /// How many of the planned faults landed (multi-fault runs can see a
+    /// subset masked; single-fault runs report 0 or 1).
+    pub faults_applied: u32,
     /// ABFT verification/recovery bookkeeping (`Some` only on
     /// `Protection::Abft` builds).
     pub abft: Option<AbftRunInfo>,
@@ -114,6 +115,12 @@ impl RunReport {
     /// Bit-exact comparison against a golden result.
     pub fn z_matches(&self, golden: &Mat) -> bool {
         self.z.bits() == golden.bits()
+    }
+
+    /// True if any planned fault actually hit live state / an exercised
+    /// net (false = architecturally masked, e.g. an idle-net transient).
+    pub fn fault_applied(&self) -> bool {
+        self.faults_applied > 0
     }
 }
 
@@ -128,18 +135,14 @@ pub struct System {
     task_base: u32,
     /// Re-execution policy after detected faults.
     pub recovery: RecoveryPolicy,
+    /// ABFT verification tolerance safety factor (see
+    /// [`crate::golden::ABFT_TOL_FACTOR`]; the sweep engine varies it).
+    pub abft_tol_factor: f64,
 }
 
 impl System {
     pub fn new(cfg: RedMuleConfig, protection: Protection) -> Self {
-        Self {
-            redmule: RedMule::new(cfg, protection),
-            tcdm: Tcdm::cluster_default(),
-            l2: L2Mem::new(1 << 20),
-            dma: Dma::new(),
-            task_base: 0x100,
-            recovery: RecoveryPolicy::FullRestart,
-        }
+        Self::with_tcdm(cfg, protection, Tcdm::cluster_default())
     }
 
     /// A smaller TCDM for tests that exercise address wrapping.
@@ -151,6 +154,7 @@ impl System {
             dma: Dma::new(),
             task_base: 0x100,
             recovery: RecoveryPolicy::FullRestart,
+            abft_tol_factor: ABFT_TOL_FACTOR,
         }
     }
 
@@ -160,12 +164,21 @@ impl System {
         self
     }
 
+    /// Override the ABFT verification tolerance safety factor.
+    pub fn with_abft_tolerance(mut self, factor: f64) -> Self {
+        self.abft_tol_factor = factor;
+        self
+    }
+
     pub fn protection(&self) -> Protection {
         self.redmule.protection
     }
 
     /// Stage a GEMM problem into TCDM (DMA in from L2) and return its
     /// layout. Z is zeroed so stale results can't alias a correct one.
+    /// A task that does not fit in TCDM is a structured [`Error::Sim`],
+    /// not a panic — sweep grids probe the capacity boundary routinely
+    /// and an exactly-fitting task is legal.
     ///
     /// On `Protection::Abft` builds the host transparently stages the
     /// ABFT-augmented problem (checksum row of X, checksum column of W,
@@ -173,7 +186,7 @@ impl System {
     /// and the accelerator carries the checksums through the GEMM as one
     /// extra row/column of tiles. [`System::run_staged_with_fault`]
     /// verifies and strips them at writeback.
-    pub fn stage(&mut self, p: &GemmProblem) -> TaskLayout {
+    pub fn stage(&mut self, p: &GemmProblem) -> Result<TaskLayout> {
         if self.protection().has_abft_checksums() {
             let augmented = p.augment_abft();
             return self.stage_inner(&augmented);
@@ -181,7 +194,7 @@ impl System {
         self.stage_inner(p)
     }
 
-    fn stage_inner(&mut self, p: &GemmProblem) -> TaskLayout {
+    fn stage_inner(&mut self, p: &GemmProblem) -> Result<TaskLayout> {
         let spec = p.spec;
         let layout = TaskLayout::contiguous(
             self.task_base,
@@ -189,10 +202,25 @@ impl System {
             spec.n as u32,
             spec.k as u32,
         );
-        assert!(
-            (layout.footprint() as usize) < self.tcdm.size_bytes(),
-            "task does not fit in TCDM"
-        );
+        // Fit check against the *end address* (base + footprint), and
+        // inclusive: a task whose last byte lands exactly on the capacity
+        // boundary fits. (The pre-PR-2 check compared the footprint alone
+        // against the capacity with `<`: it ignored the staging base, so
+        // a task with footprint just under the TCDM size slipped past the
+        // check and blew the out-of-range `assert!` inside `Tcdm::locate`
+        // during staging — and the boundary itself was off by one.)
+        let end = layout.x_addr as usize + layout.footprint() as usize;
+        if end > self.tcdm.size_bytes() {
+            return Err(Error::Sim(format!(
+                "task does not fit in TCDM: ({}x{}x{}) at base 0x{:X} ends at \
+                 0x{end:X}, capacity {} bytes",
+                layout.m,
+                layout.n,
+                layout.k,
+                layout.x_addr,
+                self.tcdm.size_bytes()
+            )));
+        }
         // Host writes the matrices to L2, DMA moves them into TCDM. DMA
         // lengths are in bytes, word-padded (the regions are 4-aligned and
         // disjoint, so the pad bytes never alias the next matrix).
@@ -223,7 +251,7 @@ impl System {
         );
         let zeros = vec![crate::fp::Fp16::ZERO; spec.m * spec.k];
         self.tcdm.write_fp16_slice(layout.z_addr, &zeros);
-        layout
+        Ok(layout)
     }
 
     /// Program the shadowed register-file context for `layout` and commit
@@ -312,7 +340,8 @@ impl System {
             let carried = self.tcdm.read_fp16(addr).0;
             let unit_row = i - r0; // band sub-tasks index rows from 0
             let obs = self.redmule.abft.row_sum(unit_row);
-            let tol = abft_tolerance(n, k_data, self.redmule.abft.row_abs(unit_row));
+            let abs = self.redmule.abft.row_abs(unit_row);
+            let tol = abft_tolerance_scaled(self.abft_tol_factor, n, k_data, abs);
             let dev = (obs - carried.to_f64()).abs();
             if !carried.is_finite() || !dev.is_finite() || dev > tol {
                 mm.rows.push(i);
@@ -323,7 +352,8 @@ impl System {
                 let addr = layout.z_addr + (((m_aug - 1) * k_aug + j) * 2) as u32;
                 let carried = self.tcdm.read_fp16(addr).0;
                 let obs = self.redmule.abft.col_sum(j);
-                let tol = abft_tolerance(n, m_aug - 1, self.redmule.abft.col_abs(j));
+                let abs = self.redmule.abft.col_abs(j);
+                let tol = abft_tolerance_scaled(self.abft_tol_factor, n, m_aug - 1, abs);
                 let dev = (obs - carried.to_f64()).abs();
                 if !carried.is_finite() || !dev.is_finite() || dev > tol {
                     mm.cols.push(j);
@@ -379,6 +409,20 @@ impl System {
         mode: ExecMode,
         plan: Option<FaultPlan>,
     ) -> Result<RunReport> {
+        match plan {
+            Some(pl) => self.run_gemm_with_faults(p, mode, std::slice::from_ref(&pl)),
+            None => self.run_gemm_with_faults(p, mode, &[]),
+        }
+    }
+
+    /// Hosted execution with `plans.len()` planned faults (empty = clean
+    /// run). The sweep engine's multi-fault unit of work.
+    pub fn run_gemm_with_faults(
+        &mut self,
+        p: &GemmProblem,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+    ) -> Result<RunReport> {
         if p.spec.m == 0 || p.spec.n == 0 || p.spec.k == 0 {
             return Err(Error::Config("degenerate GEMM".into()));
         }
@@ -386,28 +430,50 @@ impl System {
         // independent experiments and cycle numbering must restart at 0
         // (fault plans are expressed in absolute cycles).
         self.redmule.reset();
-        let layout = self.stage(p);
-        self.run_staged_with_fault(&layout, mode, plan)
+        let layout = self.stage(p)?;
+        self.run_staged_with_faults(&layout, mode, plans)
     }
 
-    /// Like [`System::run_gemm_with_fault`] but assuming the task is
-    /// already staged at `layout` (and the accelerator freshly reset).
-    /// The campaign uses this with a snapshot/restore of the TCDM image:
-    /// staging through the DMA + ECC encoders costs more than the run
-    /// itself on small workloads, and the staged bits are identical for
-    /// every injection (see EXPERIMENTS.md §Perf).
+    /// Single-plan convenience wrapper around
+    /// [`System::run_staged_with_faults`].
     pub fn run_staged_with_fault(
         &mut self,
         layout: &TaskLayout,
         mode: ExecMode,
         plan: Option<FaultPlan>,
     ) -> Result<RunReport> {
+        match plan {
+            Some(pl) => self.run_staged_with_faults(layout, mode, std::slice::from_ref(&pl)),
+            None => self.run_staged_with_faults(layout, mode, &[]),
+        }
+    }
+
+    /// Like [`System::run_gemm_with_faults`] but assuming the task is
+    /// already staged at `layout` (and the accelerator freshly reset).
+    /// The campaign uses this with a snapshot/restore of the TCDM image:
+    /// staging through the DMA + ECC encoders costs more than the run
+    /// itself on small workloads, and the staged bits are identical for
+    /// every injection (see EXPERIMENTS.md §Perf).
+    pub fn run_staged_with_faults(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+    ) -> Result<RunReport> {
+        if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
+            return Err(Error::Config(format!(
+                "at most {} faults per run ({} planned)",
+                crate::fault::MAX_PLANS_PER_RUN,
+                plans.len()
+            )));
+        }
         let layout = *layout;
         let abft = self.protection().has_abft_checksums();
         let mut config_cycles = self.program(&layout, mode);
-        let mut ctx = match plan {
-            Some(pl) => FaultCtx::with_plan(pl),
-            None => FaultCtx::clean(),
+        let mut ctx = if plans.is_empty() {
+            FaultCtx::clean()
+        } else {
+            FaultCtx::with_plans(plans.to_vec())
         };
 
         let nominal = self.redmule.nominal_cycles().max(1);
@@ -443,7 +509,7 @@ impl System {
                                 retries,
                                 fault_causes: causes,
                                 irq_seen: irq_seen_any,
-                                fault_applied: ctx.applied,
+                                faults_applied: ctx.applied_faults(),
                                 abft: Some(abft_info),
                                 z: self.final_z(&layout),
                             });
@@ -485,7 +551,7 @@ impl System {
                     retries,
                     fault_causes: causes,
                     irq_seen: irq_seen_any,
-                    fault_applied: ctx.applied,
+                    faults_applied: ctx.applied_faults(),
                     abft: abft.then_some(abft_info),
                     z,
                 });
@@ -508,18 +574,20 @@ impl System {
                         retries,
                         fault_causes: causes,
                         irq_seen: irq_seen_any,
-                        fault_applied: ctx.applied,
+                        faults_applied: ctx.applied_faults(),
                         abft: abft.then_some(abft_info),
                         z: self.final_z(&layout),
                     });
                 }
                 retries += 1;
                 // Re-program (repairs any configuration upset — the host
-                // rewrites values *and* parity) and re-execute. The paper
-                // assumes no further faults during recomputation; a
-                // transient plan has already fired or missed, and the
-                // plan's single fault stays armed only if its cycle is
-                // still ahead.
+                // rewrites values *and* parity) and re-execute. Cycle
+                // numbering keeps running across attempts, so a transient
+                // plan that already fired (or missed) cannot strike again;
+                // in a multi-fault run only the plans whose cycles are
+                // still ahead stay armed — which is exactly how the sweep
+                // exercises faults *during* the recomputation phase the
+                // paper's single-fault campaign assumes clean.
                 let resume = match self.recovery {
                     RecoveryPolicy::FullRestart => None,
                     RecoveryPolicy::TileLevel => Some(progress),
@@ -538,7 +606,7 @@ impl System {
                 retries,
                 fault_causes: causes,
                 irq_seen: irq_seen_any,
-                fault_applied: ctx.applied,
+                faults_applied: ctx.applied_faults(),
                 abft: abft.then_some(abft_info),
                 z: self.final_z(&layout),
             });

@@ -2,9 +2,9 @@
 //!
 //! The paper's campaign injects **single transient faults into
 //! combinational nets** of the accelerator while it executes a GEMM, then
-//! classifies the run (§4.2). The simulator mirrors that with a fault
-//! *plan* — one `(site, bit, cycle)` triple per run — threaded through the
-//! model as a [`FaultCtx`]:
+//! classifies the run (§4.2). The simulator mirrors that with fault
+//! *plans* — `(site, bit, cycle)` triples — threaded through the model as
+//! a [`FaultCtx`]:
 //!
 //! * **Transient (SET)** sites are combinational values: the model calls
 //!   [`FaultCtx::fp16`] / [`FaultCtx::u32`] / [`FaultCtx::flag`] at the
@@ -17,6 +17,13 @@
 //!   [`crate::redmule::RedMule::apply_seu`]; the flip persists until the
 //!   hardware overwrites it, again matching a latched SET / SEU.
 //!
+//! One context carries **one or more** plans: the paper's Table-1 campaign
+//! uses exactly one per run, while the sweep engine
+//! ([`crate::campaign::sweep`]) injects N ≥ 1 per run — independent SEUs
+//! or a correlated multi-bit burst (see
+//! [`registry::FaultRegistry::sample_plans`]). Plans on the same site and
+//! cycle compose by XOR, like simultaneous strikes on neighbouring nets.
+//!
 //! Site identity is a dense packed [`SiteId`] so the hot path compares one
 //! `u32`. The population of sites for a given configuration — with
 //! area-derived sampling weights — is enumerated in [`registry`].
@@ -24,7 +31,7 @@
 pub mod registry;
 pub mod site;
 
-pub use registry::{FaultRegistry, SiteEntry};
+pub use registry::{FaultModel, FaultRegistry, SiteEntry};
 pub use site::{FaultKind, Module, SiteId};
 
 use crate::fp::Fp16;
@@ -38,15 +45,21 @@ pub struct FaultPlan {
     pub kind: FaultKind,
 }
 
+/// Hard cap on plans per run (the applied-set is tracked in a `u64` mask).
+pub const MAX_PLANS_PER_RUN: usize = 64;
+
 /// Per-run fault context threaded through the simulator.
 ///
-/// Also records whether the planned fault was actually *applied* (the site
+/// Also records which planned faults were actually *applied* (the site
 /// was exercised at the planned cycle), which the campaign uses to report
 /// masking statistics.
 #[derive(Debug, Default)]
 pub struct FaultCtx {
-    plan: Option<FaultPlan>,
+    plans: Vec<FaultPlan>,
+    /// Bitmask over `plans` of the faults that have landed so far.
+    applied_mask: u64,
     pub cycle: u64,
+    /// True if any planned fault hit live state / an exercised net.
     pub applied: bool,
 }
 
@@ -56,50 +69,81 @@ impl FaultCtx {
     }
 
     pub fn with_plan(plan: FaultPlan) -> Self {
+        Self::with_plans(vec![plan])
+    }
+
+    /// A context carrying several plans (multi-fault runs).
+    pub fn with_plans(plans: Vec<FaultPlan>) -> Self {
+        assert!(
+            plans.len() <= MAX_PLANS_PER_RUN,
+            "at most {MAX_PLANS_PER_RUN} faults per run"
+        );
         Self {
-            plan: Some(plan),
+            plans,
+            applied_mask: 0,
             cycle: 0,
             applied: false,
         }
     }
 
-    pub fn plan(&self) -> Option<FaultPlan> {
-        self.plan
+    pub fn plans(&self) -> &[FaultPlan] {
+        &self.plans
     }
 
-    /// Advance to the next cycle (called once per [`RedMule::step`]).
+    pub fn n_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// How many of the planned faults have architecturally landed.
+    pub fn applied_faults(&self) -> u32 {
+        self.applied_mask.count_ones()
+    }
+
+    /// Advance to the next cycle (called once per [`crate::redmule::RedMule::step`]).
     #[inline]
     pub fn set_cycle(&mut self, cycle: u64) {
         self.cycle = cycle;
     }
 
+    /// XOR mask of every transient plan that strikes `site` this cycle,
+    /// with each plan's bit reduced by `width_mask` (15/31/63 for the
+    /// 16/32/64-bit hooks, 0 for single-bit nets — where the XOR fold
+    /// gives strike *parity*). Marks matching plans applied.
     #[inline]
-    fn hit(&mut self, site: SiteId) -> Option<u8> {
-        match self.plan {
-            Some(p) if p.kind == FaultKind::Transient && p.cycle == self.cycle && p.site == site => {
+    fn xor_mask(&mut self, site: SiteId, width_mask: u8) -> u64 {
+        let mut m = 0u64;
+        for i in 0..self.plans.len() {
+            let p = self.plans[i];
+            if p.kind == FaultKind::Transient && p.cycle == self.cycle && p.site == site {
+                m ^= 1u64 << (p.bit & width_mask);
+                self.applied_mask |= 1 << i;
                 self.applied = true;
-                Some(p.bit)
             }
-            _ => None,
         }
+        m
     }
 
     /// Pass a 16-bit datum (FP16) through a potential fault site.
     #[inline]
     pub fn fp16(&mut self, site: SiteId, v: Fp16) -> Fp16 {
-        match self.hit(site) {
-            Some(b) => Fp16::from_bits(v.to_bits() ^ (1 << (b & 15))),
-            None => v,
+        if self.plans.is_empty() {
+            return v;
+        }
+        let m = self.xor_mask(site, 15);
+        if m == 0 {
+            v
+        } else {
+            Fp16::from_bits(v.to_bits() ^ m as u16)
         }
     }
 
     /// Pass a 32-bit word (address, config, counter) through a fault site.
     #[inline]
     pub fn u32(&mut self, site: SiteId, v: u32) -> u32 {
-        match self.hit(site) {
-            Some(b) => v ^ (1 << (b & 31)),
-            None => v,
+        if self.plans.is_empty() {
+            return v;
         }
+        v ^ self.xor_mask(site, 31) as u32
     }
 
     /// Pass a 64-bit codeword through a fault site (bit taken mod 39 by
@@ -107,33 +151,41 @@ impl FaultCtx {
     /// the sampled bit).
     #[inline]
     pub fn u64(&mut self, site: SiteId, v: u64) -> u64 {
-        match self.hit(site) {
-            Some(b) => v ^ (1 << (b & 63)),
-            None => v,
+        if self.plans.is_empty() {
+            return v;
         }
+        v ^ self.xor_mask(site, 63)
     }
 
-    /// Pass a single-bit control signal through a fault site.
+    /// Pass a single-bit control signal through a fault site. An even
+    /// number of simultaneous strikes cancels (XOR parity).
     #[inline]
     pub fn flag(&mut self, site: SiteId, v: bool) -> bool {
-        match self.hit(site) {
-            Some(_) => !v,
-            None => v,
+        if self.plans.is_empty() {
+            return v;
+        }
+        if self.xor_mask(site, 0) != 0 {
+            !v
+        } else {
+            v
         }
     }
 
-    /// True if an SEU is planned for `cycle` (the top level applies it).
+    /// The `i`-th plan, if it is an SEU due at `cycle` (the top level
+    /// applies it). Iterate `0..n_plans()` so multiple SEUs landing on
+    /// the same cycle are all applied.
     #[inline]
-    pub fn seu_due(&self, cycle: u64) -> Option<FaultPlan> {
-        match self.plan {
-            Some(p) if p.kind == FaultKind::StateUpset && p.cycle == cycle => Some(p),
+    pub fn seu_due_at(&self, i: usize, cycle: u64) -> Option<FaultPlan> {
+        match self.plans.get(i) {
+            Some(&p) if p.kind == FaultKind::StateUpset && p.cycle == cycle => Some(p),
             _ => None,
         }
     }
 
-    /// Mark that a planned SEU was actually applied to live state.
+    /// Mark that the `i`-th planned SEU was actually applied to live state.
     #[inline]
-    pub fn mark_applied(&mut self) {
+    pub fn mark_applied_at(&mut self, i: usize) {
+        self.applied_mask |= 1 << (i % MAX_PLANS_PER_RUN);
         self.applied = true;
     }
 }
@@ -162,6 +214,7 @@ mod tests {
         let v = ctx.fp16(site, Fp16::ONE);
         assert_eq!(v.to_bits(), Fp16::ONE.to_bits() ^ 0b100);
         assert!(ctx.applied);
+        assert_eq!(ctx.applied_faults(), 1);
     }
 
     #[test]
@@ -178,8 +231,11 @@ mod tests {
         // Inline hooks ignore SEU plans...
         assert_eq!(ctx.u32(site, 42), 42);
         // ...but the top level sees it pending at cycle 9.
-        assert!(ctx.seu_due(9).is_some());
-        assert!(ctx.seu_due(8).is_none());
+        assert!(ctx.seu_due_at(0, 9).is_some());
+        assert!(ctx.seu_due_at(0, 8).is_none());
+        assert!(ctx.seu_due_at(1, 9).is_none(), "only one plan armed");
+        ctx.mark_applied_at(0);
+        assert_eq!(ctx.applied_faults(), 1);
     }
 
     #[test]
@@ -192,5 +248,63 @@ mod tests {
             assert!(ctx.flag(s, true));
         }
         assert!(!ctx.applied);
+        assert_eq!(ctx.applied_faults(), 0);
+    }
+
+    #[test]
+    fn multiple_plans_fire_independently_and_are_counted() {
+        let s1 = SiteId::new(Module::CeArray, 0, 1);
+        let s2 = SiteId::new(Module::CeArray, 0, 2);
+        let p1 = FaultPlan {
+            cycle: 3,
+            site: s1,
+            bit: 0,
+            kind: FaultKind::Transient,
+        };
+        let p2 = FaultPlan {
+            cycle: 7,
+            site: s2,
+            bit: 5,
+            kind: FaultKind::Transient,
+        };
+        let mut ctx = FaultCtx::with_plans(vec![p1, p2]);
+        ctx.set_cycle(3);
+        assert_eq!(ctx.u32(s1, 0), 1);
+        assert_eq!(ctx.u32(s2, 0), 0, "second plan waits for its cycle");
+        assert_eq!(ctx.applied_faults(), 1);
+        ctx.set_cycle(7);
+        assert_eq!(ctx.u32(s2, 0), 1 << 5);
+        assert_eq!(ctx.applied_faults(), 2);
+        // Re-striking an already-applied plan does not double-count.
+        assert_eq!(ctx.u32(s2, 0), 1 << 5);
+        assert_eq!(ctx.applied_faults(), 2);
+    }
+
+    #[test]
+    fn simultaneous_strikes_on_one_site_compose_by_xor() {
+        let site = SiteId::new(Module::WBuf, 0, 0);
+        let mk = |bit| FaultPlan {
+            cycle: 2,
+            site,
+            bit,
+            kind: FaultKind::Transient,
+        };
+        // Distinct bits: both flips land.
+        let mut ctx = FaultCtx::with_plans(vec![mk(1), mk(4)]);
+        ctx.set_cycle(2);
+        assert_eq!(ctx.u32(site, 0), (1 << 1) | (1 << 4));
+        assert_eq!(ctx.applied_faults(), 2);
+        // The same bit twice: the flips cancel, but both strikes landed.
+        let mut ctx = FaultCtx::with_plans(vec![mk(6), mk(6)]);
+        ctx.set_cycle(2);
+        assert_eq!(ctx.u32(site, 0), 0);
+        assert_eq!(ctx.applied_faults(), 2);
+        // Single-bit net: even parity cancels, odd flips.
+        let mut ctx = FaultCtx::with_plans(vec![mk(0), mk(0)]);
+        ctx.set_cycle(2);
+        assert!(ctx.flag(site, true), "two strikes cancel on a 1-bit net");
+        let mut ctx = FaultCtx::with_plans(vec![mk(0), mk(0), mk(0)]);
+        ctx.set_cycle(2);
+        assert!(!ctx.flag(site, true), "three strikes flip");
     }
 }

@@ -60,6 +60,37 @@ pub mod derating {
     }
 }
 
+/// How the N faults of a multi-fault plan are correlated (the sweep
+/// engine's fault-count axis; FT-GEMM and the online-ABFT GPU work both
+/// evaluate ABFT under multi-error regimes, not just single SEUs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultModel {
+    /// N independent single-event upsets: site, bit and cycle drawn
+    /// independently for each fault.
+    Independent,
+    /// One multi-bit event: a single site/cycle draw with N adjacent bits
+    /// corrupted — an MBU on a register, or an SET burst clipping
+    /// neighbouring nets of one cone.
+    Burst,
+}
+
+impl FaultModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultModel::Independent => "independent",
+            FaultModel::Burst => "burst",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "independent" | "seu" => Some(FaultModel::Independent),
+            "burst" | "mbu" => Some(FaultModel::Burst),
+            _ => None,
+        }
+    }
+}
+
 /// One entry of the population: a site class instance with its bit width,
 /// manifestation kind and sampling weight (kGE it stands for).
 #[derive(Debug, Clone, Copy)]
@@ -428,6 +459,58 @@ impl FaultRegistry {
         }
     }
 
+    /// Draw a multi-fault plan of `n ≥ 1` faults into `out` (cleared
+    /// first; the campaign reuses the buffer across runs). `Independent`
+    /// plans are `n` separate [`FaultRegistry::sample_plan`] draws;
+    /// `Burst` plans share one site/cycle draw and corrupt `n` adjacent
+    /// bits (capped at the site's width, so a burst never repeats a bit).
+    /// Consumes RNG draws in a fixed order — fully deterministic.
+    pub fn sample_plans_into(
+        &self,
+        horizon: u64,
+        n: usize,
+        model: FaultModel,
+        rng: &mut Xoshiro256,
+        out: &mut Vec<FaultPlan>,
+    ) {
+        out.clear();
+        match model {
+            FaultModel::Independent => {
+                for _ in 0..n {
+                    out.push(self.sample_plan(horizon, rng));
+                }
+            }
+            FaultModel::Burst => {
+                let e = self.sample_entry(rng);
+                let cycle = 1 + rng.below(horizon.max(1));
+                let start = rng.below(e.bits as u64) as u32;
+                let width = n.min(e.bits as usize) as u32;
+                for j in 0..width {
+                    out.push(FaultPlan {
+                        cycle,
+                        site: e.site,
+                        bit: ((start + j) % e.bits as u32) as u8,
+                        kind: e.kind,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`FaultRegistry::sample_plans_into`].
+    pub fn sample_plans(
+        &self,
+        horizon: u64,
+        n: usize,
+        model: FaultModel,
+        rng: &mut Xoshiro256,
+    ) -> Vec<FaultPlan> {
+        let mut out = Vec::with_capacity(n);
+        self.sample_plans_into(horizon, n, model, rng, &mut out);
+        out
+    }
+
     /// The area report used for the weighting (for reporting).
     pub fn area(&self) -> AreaReport {
         area_report(self.cfg, self.protection)
@@ -553,6 +636,67 @@ mod tests {
                 .expect("sampled site must be in the population");
             assert!(p.bit < e.bits);
         }
+    }
+
+    #[test]
+    fn independent_multi_plans_are_n_separate_draws() {
+        let f = reg(Protection::Full);
+        for n in [1usize, 2, 3, 5] {
+            let mut r1 = Xoshiro256::new(42);
+            let mut r2 = Xoshiro256::new(42);
+            let a = f.sample_plans(300, n, FaultModel::Independent, &mut r1);
+            let b = f.sample_plans(300, n, FaultModel::Independent, &mut r2);
+            assert_eq!(a, b, "same seed must reproduce the plan");
+            assert_eq!(a.len(), n);
+            for p in &a {
+                assert!(p.cycle >= 1 && p.cycle <= 300);
+            }
+        }
+        // n = 1 consumes exactly the draws of a single sample_plan.
+        let mut r1 = Xoshiro256::new(9);
+        let mut r2 = Xoshiro256::new(9);
+        let single = f.sample_plan(300, &mut r1);
+        let multi = f.sample_plans(300, 1, FaultModel::Independent, &mut r2);
+        assert_eq!(multi, vec![single]);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNGs must stay in lockstep");
+    }
+
+    #[test]
+    fn burst_plans_share_site_and_cycle_with_distinct_adjacent_bits() {
+        let f = reg(Protection::Full);
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..500 {
+            let plans = f.sample_plans(200, 3, FaultModel::Burst, &mut rng);
+            assert!(!plans.is_empty() && plans.len() <= 3);
+            let entry = f
+                .entries()
+                .iter()
+                .find(|e| e.site == plans[0].site)
+                .expect("burst site must be in the population");
+            assert_eq!(plans.len(), 3.min(entry.bits as usize));
+            let mut bits: Vec<u8> = plans
+                .iter()
+                .map(|p| {
+                    assert_eq!(p.site, plans[0].site, "one event, one site");
+                    assert_eq!(p.cycle, plans[0].cycle, "one event, one cycle");
+                    assert_eq!(p.kind, plans[0].kind);
+                    assert!(p.bit < entry.bits);
+                    p.bit
+                })
+                .collect();
+            bits.sort_unstable();
+            bits.dedup();
+            assert_eq!(bits.len(), plans.len(), "burst bits must be distinct");
+        }
+    }
+
+    #[test]
+    fn fault_model_names_round_trip() {
+        for m in [FaultModel::Independent, FaultModel::Burst] {
+            assert_eq!(FaultModel::parse(m.name()), Some(m));
+        }
+        assert_eq!(FaultModel::parse("mbu"), Some(FaultModel::Burst));
+        assert_eq!(FaultModel::parse("nope"), None);
     }
 
     #[test]

@@ -127,7 +127,16 @@ pub const ABFT_TOL_FACTOR: f64 = 4.0;
 /// (which scales the reachable ulp sizes).
 #[inline]
 pub fn abft_tolerance(inner: usize, terms: usize, abs_sum: f64) -> f64 {
-    ABFT_TOL_FACTOR * EPS16 * (inner + terms + 1) as f64 * (1.0 + abs_sum)
+    abft_tolerance_scaled(ABFT_TOL_FACTOR, inner, terms, abs_sum)
+}
+
+/// [`abft_tolerance`] with an explicit safety factor — the sweep axis of
+/// the detection-rate vs false-positive trade (`benches/sweep_tolerance`):
+/// a small factor flags fault-free rounding noise (false positives, wasted
+/// recoveries), a large one lets real corruptions below the bound escape.
+#[inline]
+pub fn abft_tolerance_scaled(factor: f64, inner: usize, terms: usize, abs_sum: f64) -> f64 {
+    factor * EPS16 * (inner + terms + 1) as f64 * (1.0 + abs_sum)
 }
 
 /// A row-major FP16 matrix.

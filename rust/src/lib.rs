@@ -58,10 +58,10 @@ pub mod util;
 
 /// Commonly used types, re-exported for examples and binaries.
 pub mod prelude {
-    pub use crate::campaign::{Campaign, CampaignConfig, Outcome, Table1};
+    pub use crate::campaign::{Campaign, CampaignConfig, Outcome, Sweep, SweepConfig, Table1};
     pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System};
     pub use crate::coordinator::{Coordinator, Criticality, TaskRequest};
-    pub use crate::fault::{FaultKind, FaultPlan, FaultRegistry};
+    pub use crate::fault::{FaultKind, FaultModel, FaultPlan, FaultRegistry};
     pub use crate::fp::Fp16;
     pub use crate::golden::{GemmProblem, GemmSpec, Mat};
     pub use crate::redmule::{ExecMode, Protection, RedMuleConfig};

@@ -5,6 +5,9 @@
 //! ```text
 //! redmule-ft campaign [--config baseline|data|full|abft|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
+//! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
+//!                     [--configs a,b,..] [--shapes MxNxK,..] [--faults 1,2,..]
+//!                     [--model independent|burst] [--tols F,..] [--timing]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
 //! redmule-ft floorplan [--config ...]
@@ -15,9 +18,10 @@
 //! ```
 
 use redmule_ft::area::{area_report, floorplan};
-use redmule_ft::campaign::{Campaign, CampaignConfig, Table1};
+use redmule_ft::campaign::{Campaign, CampaignConfig, Sweep, SweepConfig, Table1};
 use redmule_ft::cluster::System;
 use redmule_ft::coordinator::{Coordinator, Criticality};
+use redmule_ft::fault::FaultModel;
 use redmule_ft::golden::{GemmProblem, GemmSpec};
 use redmule_ft::perf::{mode_report, retry_expected_overhead, throughput};
 use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
@@ -72,16 +76,12 @@ impl Args {
     }
 
     fn protection(&self) -> Protection {
-        match self.kv.get("config").map(|s| s.as_str()) {
-            Some("baseline") => Protection::Baseline,
-            Some("data") => Protection::Data,
-            Some("per-ce") | Some("perce") => Protection::PerCe,
-            Some("abft") => Protection::Abft,
-            None | Some("full") => Protection::Full,
-            Some(other) => {
-                eprintln!("unknown --config {other}, using full");
+        match self.kv.get("config") {
+            None => Protection::Full,
+            Some(name) => parse_protection(name).unwrap_or_else(|| {
+                eprintln!("unknown --config {name}, using full");
                 Protection::Full
-            }
+            }),
         }
     }
 
@@ -94,10 +94,51 @@ impl Args {
     }
 }
 
+fn parse_protection(s: &str) -> Option<Protection> {
+    match s {
+        "baseline" => Some(Protection::Baseline),
+        "data" => Some(Protection::Data),
+        "full" => Some(Protection::Full),
+        "per-ce" | "perce" => Some(Protection::PerCe),
+        "abft" => Some(Protection::Abft),
+        _ => None,
+    }
+}
+
+/// Parse a `MxNxK` shape token.
+fn parse_shape(s: &str) -> Option<GemmSpec> {
+    let mut it = s.split('x');
+    let m: usize = it.next()?.parse().ok()?;
+    let n: usize = it.next()?.parse().ok()?;
+    let k: usize = it.next()?.parse().ok()?;
+    if it.next().is_some() || m == 0 || n == 0 || k == 0 {
+        return None;
+    }
+    Some(GemmSpec::new(m, n, k))
+}
+
+/// Parse a comma-separated list, mapping each token through `f`.
+fn parse_list<T>(raw: &str, what: &str, f: impl Fn(&str) -> Option<T>) -> redmule_ft::Result<Vec<T>> {
+    let mut out = Vec::new();
+    for tok in raw.split(',').filter(|t| !t.is_empty()) {
+        match f(tok) {
+            Some(v) => out.push(v),
+            None => {
+                return Err(redmule_ft::Error::Config(format!("bad {what} token: {tok}")));
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(redmule_ft::Error::Config(format!("empty {what} list: {raw}")));
+    }
+    Ok(out)
+}
+
 fn main() -> ExitCode {
     let args = Args::parse();
     let r = match args.cmd.as_str() {
         "campaign" => cmd_campaign(&args),
+        "sweep" => cmd_sweep(&args),
         "table1" => cmd_table1(&args),
         "area" => cmd_area(&args),
         "floorplan" => cmd_floorplan(&args),
@@ -131,6 +172,10 @@ fn print_help() {
          commands:\n\
            campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
                          --injections, --seed, --threads, --report)\n\
+           sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
+                         --shapes MxNxK,.., --faults 1,2,.., --model independent|burst,\n\
+                         --tols F,.. for ABFT cells, --injections per cell, --seed,\n\
+                         --threads, --timing adds wall-clock fields)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
                          --abft appends the ABFT checksum column)\n\
            area          GE area model breakdown (--config, --l/--h/--p)\n\
@@ -180,6 +225,52 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
             }
         );
     }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
+    let mut sc = SweepConfig::new(args.get("injections", 500u64), args.get("seed", 2025u64));
+    sc.threads = args.get("threads", sc.threads);
+    if let Some(raw) = args.kv.get("configs") {
+        sc.protections = parse_list(raw, "--configs", parse_protection)?;
+    }
+    if let Some(raw) = args.kv.get("shapes") {
+        sc.shapes = parse_list(raw, "--shapes", parse_shape)?;
+    }
+    if let Some(raw) = args.kv.get("faults") {
+        sc.fault_counts = parse_list(raw, "--faults", |t| {
+            t.parse::<usize>().ok().filter(|&n| n >= 1)
+        })?;
+    }
+    if let Some(raw) = args.kv.get("model") {
+        sc.fault_model = FaultModel::parse(raw)
+            .ok_or_else(|| redmule_ft::Error::Config(format!("unknown --model {raw}")))?;
+    }
+    if let Some(raw) = args.kv.get("tols") {
+        sc.tol_factors = parse_list(raw, "--tols", |t| {
+            t.parse::<f64>().ok().filter(|f| f.is_finite() && *f >= 0.0)
+        })?;
+    }
+    eprintln!(
+        "sweep: {} cells ({} protections x {} shapes x {} fault counts, {} model), \
+         {} injections/cell, seed {}, {} threads",
+        sc.n_cells(),
+        sc.protections.len(),
+        sc.shapes.len(),
+        sc.fault_counts.len(),
+        sc.fault_model.name(),
+        sc.injections,
+        sc.seed,
+        sc.threads
+    );
+    let r = Sweep::run(&sc)?;
+    println!("{}", r.to_json(args.flag("timing")));
+    eprintln!(
+        "sweep: {} runs in {:.1} s ({:.0} runs/s)",
+        r.total_runs(),
+        r.wall_seconds,
+        r.runs_per_sec()
+    );
     Ok(())
 }
 

@@ -241,9 +241,13 @@ impl RedMule {
         self.perf.cycles += 1;
 
         // SEUs land at the cycle boundary, before any logic evaluates.
-        if let Some(plan) = ctx.seu_due(self.cycle) {
-            if self.apply_seu(plan) {
-                ctx.mark_applied();
+        // Multi-fault runs may schedule several for the same cycle, so
+        // every due plan is applied, not just the first.
+        for i in 0..ctx.n_plans() {
+            if let Some(plan) = ctx.seu_due_at(i, self.cycle) {
+                if self.apply_seu(plan) {
+                    ctx.mark_applied_at(i);
+                }
             }
         }
 

@@ -178,7 +178,7 @@ fn checksum_unit_seu_causes_spurious_retry_not_corruption() {
     let r = sys
         .run_gemm_with_fault(&p, ExecMode::Performance, Some(plan))
         .unwrap();
-    assert!(r.fault_applied, "the accumulator is live for the whole run");
+    assert!(r.fault_applied(), "the accumulator is live for the whole run");
     assert_eq!(r.outcome, HostOutcome::CompletedAfterRetry);
     assert_eq!(r.retries, 1, "one recovery pass clears the upset");
     assert!(r.z_matches(&golden));
@@ -244,7 +244,7 @@ fn staged_abft_task_layout_is_augmented() {
     let spec = GemmSpec::new(7, 5, 9);
     let p = GemmProblem::random(&spec, 11);
     let mut sys = System::new(RedMuleConfig::paper(), Protection::Abft);
-    let layout = sys.stage(&p);
+    let layout = sys.stage(&p).unwrap();
     assert_eq!((layout.m, layout.n, layout.k), (8, 5, 10));
     // X data rows + checksum row (= FP16 column sums of X).
     let x = sys.tcdm.read_fp16_slice(layout.x_addr, 8 * 5);

@@ -13,7 +13,7 @@ fn dma_round_trip_preserves_matrices() {
     let spec = GemmSpec::new(9, 11, 13);
     let p = GemmProblem::random(&spec, 3);
     let mut sys = System::new(RedMuleConfig::paper(), Protection::Full);
-    let layout = sys.stage(&p);
+    let layout = sys.stage(&p).unwrap();
     assert_eq!(
         sys.tcdm.read_fp16_slice(layout.x_addr, p.x.data.len()),
         p.x.data
@@ -40,7 +40,7 @@ fn memory_upsets_during_execution_are_corrected_by_ecc() {
     let p = GemmProblem::random(&spec, 7);
     let golden = p.golden_z();
     let mut sys = System::new(RedMuleConfig::paper(), Protection::Full);
-    let layout = sys.stage(&p);
+    let layout = sys.stage(&p).unwrap();
     let mut rng = Xoshiro256::new(11);
     let mut flipped = Vec::new();
     for _ in 0..10 {

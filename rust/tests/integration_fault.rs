@@ -83,11 +83,11 @@ fn irq_double_assert_survives_single_transient_exhaustively() {
     // The abort sequence runs IRQ1 at some cycle t and IRQ2 at t+1. Find
     // t by stepping manually.
     let mut sys2 = System::new(cfg, Protection::Full);
-    let layout = sys2.stage(&p);
+    let layout = sys2.stage(&p).unwrap();
     sys2.program(&layout, ExecMode::FaultTolerant);
     let mut ctx = redmule_ft::fault::FaultCtx::with_plan(trigger);
     sys2.redmule.reset();
-    let layout = sys2.stage(&p);
+    let layout = sys2.stage(&p).unwrap();
     sys2.program(&layout, ExecMode::FaultTolerant);
     sys2.redmule.start();
     let mut irq_cycles = Vec::new();

@@ -1,0 +1,142 @@
+//! Integration: the scenario-grid sweep engine — grid determinism across
+//! thread counts, multi-fault plan stability per injection index, and the
+//! TCDM capacity boundary.
+
+use redmule_ft::campaign::{injection_seed, Sweep, SweepConfig};
+use redmule_ft::cluster::{HostOutcome, System};
+use redmule_ft::fault::{FaultModel, FaultRegistry};
+use redmule_ft::prelude::*;
+use redmule_ft::tcdm::Tcdm;
+
+/// The acceptance grid: 3 protections × 2 shapes × fault count ∈ {1, 2}.
+fn acceptance_grid(seed: u64, threads: usize) -> SweepConfig {
+    let mut c = SweepConfig::new(50, seed);
+    c.protections = vec![Protection::Baseline, Protection::Data, Protection::Full];
+    c.shapes = vec![GemmSpec::paper_workload(), GemmSpec::new(6, 8, 8)];
+    c.fault_counts = vec![1, 2];
+    c.threads = threads;
+    c
+}
+
+#[test]
+fn sweep_json_is_byte_identical_across_thread_counts() {
+    let r1 = Sweep::run(&acceptance_grid(11, 1)).unwrap();
+    let r4 = Sweep::run(&acceptance_grid(11, 4)).unwrap();
+    assert_eq!(r1.cells.len(), 12, "3 protections x 2 shapes x {{1,2}} faults");
+    assert_eq!(
+        r1.to_json(false),
+        r4.to_json(false),
+        "sweep JSON must not depend on the worker-thread count"
+    );
+    // Every cell is a full campaign whose classification partitions.
+    for c in &r1.cells {
+        let r = &c.result;
+        assert_eq!(r.total, 50);
+        assert_eq!(r.correct() + r.functional_errors(), r.total);
+    }
+}
+
+#[test]
+fn sweep_is_seed_sensitive() {
+    let a = Sweep::run(&acceptance_grid(11, 2)).unwrap();
+    let b = Sweep::run(&acceptance_grid(12, 2)).unwrap();
+    assert_ne!(a.to_json(false), b.to_json(false), "seed must matter");
+}
+
+#[test]
+fn multi_fault_plans_are_deterministic_per_injection_index() {
+    let reg = FaultRegistry::new(RedMuleConfig::paper(), Protection::Full);
+    for model in [FaultModel::Independent, FaultModel::Burst] {
+        for n in [2usize, 3] {
+            for index in [0u64, 5, 1234, 0xC0FFEE] {
+                let mut r1 = Xoshiro256::new(injection_seed(99, index));
+                let mut r2 = Xoshiro256::new(injection_seed(99, index));
+                let a = reg.sample_plans(700, n, model, &mut r1);
+                let b = reg.sample_plans(700, n, model, &mut r2);
+                assert_eq!(a, b, "{model:?} N={n} index={index}");
+                assert!(!a.is_empty() && a.len() <= n);
+                if model == FaultModel::Independent {
+                    assert_eq!(a.len(), n);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn burst_runs_complete_end_to_end() {
+    // A 3-bit burst through the hosted flow: the run must classify into
+    // one of the four Table-1 outcomes, never panic or hang, on every
+    // build of the design space.
+    let p = GemmProblem::random(&GemmSpec::new(6, 8, 8), 3);
+    for protection in [Protection::Baseline, Protection::Full, Protection::Abft] {
+        let reg = FaultRegistry::new(RedMuleConfig::paper(), protection);
+        let mut sys = System::new(RedMuleConfig::paper(), protection);
+        let mode = if protection.has_data_protection() {
+            ExecMode::FaultTolerant
+        } else {
+            ExecMode::Performance
+        };
+        let horizon = sys.run_gemm(&p, mode).unwrap().cycles;
+        for i in 0..150u64 {
+            let mut rng = Xoshiro256::new(injection_seed(42, i));
+            let plans = reg.sample_plans(horizon, 3, FaultModel::Burst, &mut rng);
+            let r = sys.run_gemm_with_faults(&p, mode, &plans).unwrap();
+            assert!(
+                r.faults_applied as usize <= plans.len(),
+                "{protection:?} injection {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn exactly_fitting_task_is_accepted() {
+    // (4,4,4) FP16 at base 0x100: X/W/Y/Z of 32 B each end at 0x180 =
+    // 384 B. A TCDM of exactly 384 B fits to the last byte — this pins
+    // the fit bound as *inclusive of the end address*.
+    let spec = GemmSpec::new(4, 4, 4);
+    let p = GemmProblem::random(&spec, 1);
+    let exact = Tcdm::new(2, 192);
+    assert_eq!(exact.size_bytes(), 384);
+    let mut sys = System::with_tcdm(RedMuleConfig::paper(), Protection::Baseline, exact);
+    let r = sys.run_gemm(&p, ExecMode::Performance).unwrap();
+    assert_eq!(r.outcome, HostOutcome::Completed);
+    assert!(r.z_matches(&p.golden_z()), "exact-fit run must stay golden");
+}
+
+#[test]
+fn task_overflowing_past_the_staging_base_is_a_sim_error_not_a_panic() {
+    // Regression for the pre-PR-2 fit check, which compared the footprint
+    // alone against the capacity and ignored the 0x100 staging base:
+    // (5,4,4) has footprint 152 B (< 384) but ends at 0x198 = 408 > 384,
+    // so the old check let it through and staging blew the out-of-range
+    // assert inside Tcdm::locate. It must be a structured Error::Sim.
+    let spec = GemmSpec::new(5, 4, 4);
+    let p = GemmProblem::random(&spec, 1);
+    let tcdm = Tcdm::new(2, 192);
+    assert_eq!(tcdm.size_bytes(), 384);
+    let mut sys = System::with_tcdm(RedMuleConfig::paper(), Protection::Baseline, tcdm);
+    match sys.run_gemm(&p, ExecMode::Performance) {
+        Err(redmule_ft::Error::Sim(msg)) => {
+            assert!(msg.contains("TCDM"), "diagnostic must name the capacity: {msg}");
+        }
+        other => panic!("expected Error::Sim for an overflowing task, got {other:?}"),
+    }
+}
+
+#[test]
+fn oversized_task_is_a_sim_error_not_a_panic() {
+    let spec = GemmSpec::new(4, 4, 4);
+    let p = GemmProblem::random(&spec, 1);
+    // One word short of the exact fit.
+    let tight = Tcdm::new(2, 188);
+    assert_eq!(tight.size_bytes(), 376);
+    let mut sys = System::with_tcdm(RedMuleConfig::paper(), Protection::Baseline, tight);
+    match sys.run_gemm(&p, ExecMode::Performance) {
+        Err(redmule_ft::Error::Sim(msg)) => {
+            assert!(msg.contains("TCDM"), "diagnostic must name the capacity: {msg}");
+        }
+        other => panic!("expected Error::Sim for an oversized task, got {other:?}"),
+    }
+}
