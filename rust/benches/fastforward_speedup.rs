@@ -1,0 +1,135 @@
+//! Self-checking bench: checkpointed fast-forward engine vs. the direct
+//! engine on the paper workload (`Campaign::run`, table1 configuration,
+//! single thread). Asserts two things and exits non-zero otherwise:
+//!
+//! 1. **equivalence** — every protection's outcome counts are
+//!    bit-identical between the two engines, and
+//! 2. **speedup** — the aggregate end-to-end speedup is ≥ 3× (the PR-3
+//!    acceptance bar; typical measurements land well above it).
+//!
+//! Emits `BENCH_campaign.json` (schema `redmule-ft/bench-campaign-v1`)
+//! with runs/sec per protection for both engines so the campaign
+//! throughput trajectory is machine-readable across PRs.
+//!
+//! ```text
+//! cargo bench --bench fastforward_speedup \
+//!     [-- --injections N] [-- --out PATH] [-- --min-speedup X]
+//! ```
+
+use redmule_ft::campaign::{Campaign, CampaignConfig, CampaignResult};
+use redmule_ft::redmule::Protection;
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a.as_str() == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn counts(r: &CampaignResult) -> (u64, u64, u64, u64, u64, u64) {
+    (
+        r.correct_no_retry,
+        r.correct_with_retry,
+        r.incorrect,
+        r.timeout,
+        r.applied,
+        r.faults_applied,
+    )
+}
+
+fn main() {
+    let injections: u64 = arg("--injections")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8_000);
+    let out_path = arg("--out").unwrap_or_else(|| "BENCH_campaign.json".to_string());
+    // Wall-clock gate; loosen on noisy shared runners without losing the
+    // (always-on) equivalence assertion.
+    let min_speedup: f64 = arg("--min-speedup")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0);
+    let seed = 2025u64;
+    let protections = [
+        Protection::Baseline,
+        Protection::Data,
+        Protection::Full,
+        Protection::Abft,
+    ];
+
+    println!(
+        "fastforward_speedup — paper workload (12x16x16), table1 config, \
+         {injections} injections/column, single thread\n"
+    );
+
+    let mut rows = Vec::new();
+    let (mut direct_total, mut fast_total) = (0.0f64, 0.0f64);
+    for protection in protections {
+        let mut cfg = CampaignConfig::table1(protection, injections, seed);
+        cfg.threads = 1;
+        cfg.fast_forward = false;
+        let direct = Campaign::run(&cfg).expect("direct campaign");
+        cfg.fast_forward = true;
+        let fast = Campaign::run(&cfg).expect("fast-forward campaign");
+        assert_eq!(
+            counts(&direct),
+            counts(&fast),
+            "{}: fast-forward results must be bit-identical to the direct engine",
+            protection.name()
+        );
+        let speedup = direct.wall_seconds / fast.wall_seconds.max(1e-9);
+        println!(
+            "{:<10} direct {:>8.0} runs/s   fast {:>8.0} runs/s   speedup {:>5.2}x",
+            protection.name(),
+            direct.runs_per_sec(),
+            fast.runs_per_sec(),
+            speedup
+        );
+        direct_total += direct.wall_seconds;
+        fast_total += fast.wall_seconds;
+        rows.push((protection, direct, fast, speedup));
+    }
+
+    let aggregate = direct_total / fast_total.max(1e-9);
+    println!(
+        "\naggregate speedup: {aggregate:.2}x \
+         (direct {direct_total:.2} s vs fast {fast_total:.2} s)"
+    );
+
+    // Machine-readable trajectory record.
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"schema\": \"redmule-ft/bench-campaign-v1\",\n");
+    j.push_str(&format!("  \"injections_per_column\": {injections},\n"));
+    j.push_str(&format!("  \"seed\": {seed},\n"));
+    j.push_str("  \"threads\": 1,\n");
+    j.push_str(&format!("  \"aggregate_speedup\": {aggregate:.3},\n"));
+    j.push_str("  \"columns\": [\n");
+    for (i, (protection, direct, fast, speedup)) in rows.iter().enumerate() {
+        j.push_str("    {");
+        j.push_str(&format!("\"protection\": \"{}\", ", protection.name()));
+        j.push_str(&format!(
+            "\"runs_per_sec_direct\": {:.1}, ",
+            direct.runs_per_sec()
+        ));
+        j.push_str(&format!(
+            "\"runs_per_sec_fast\": {:.1}, ",
+            fast.runs_per_sec()
+        ));
+        j.push_str(&format!("\"speedup\": {speedup:.3}, "));
+        j.push_str(&format!(
+            "\"outcomes\": {{\"correct_no_retry\": {}, \"correct_with_retry\": {}, \
+             \"incorrect\": {}, \"timeout\": {}}}",
+            fast.correct_no_retry, fast.correct_with_retry, fast.incorrect, fast.timeout
+        ));
+        j.push_str(if i + 1 < rows.len() { "},\n" } else { "}\n" });
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &j).expect("write BENCH_campaign.json");
+    println!("wrote {out_path}");
+
+    assert!(
+        aggregate >= min_speedup,
+        "fast-forward engine must deliver >= {min_speedup}x end-to-end campaign speedup, \
+         got {aggregate:.2}x"
+    );
+    println!("fastforward_speedup OK");
+}

@@ -1,26 +1,32 @@
 //! Scenario-grid sweep campaigns — the scale-out generalization of the
 //! single-cell Table-1 campaign.
 //!
-//! A [`SweepConfig`] spans four axes:
+//! A [`SweepConfig`] spans five axes:
 //!
+//! * **array geometry** (`RedMuleConfig` L/H/P instances): compare how
+//!   array shape trades throughput against cross-section — more rows mean
+//!   more exposed state per cycle but fewer cycles per workload,
 //! * **protection build** (baseline / data / full / per-CE / ABFT),
 //! * **GEMM shape** (the workload the faults land in),
-//! * **fault count** per run, under an [`FaultModel`] (independent SEUs
-//!   or one multi-bit burst) — FT-GEMM (arXiv:2305.02444) and the online
-//!   ABFT GPU work (arXiv:2305.01024) both validate ABFT under
-//!   multi-error regimes, not just single upsets,
+//! * **fault count** per run, under an [`FaultModel`] (independent SEUs,
+//!   one multi-bit burst, or one burst spanning adjacent *sites*) —
+//!   FT-GEMM (arXiv:2305.02444) and the online ABFT GPU work
+//!   (arXiv:2305.01024) both validate ABFT under multi-error regimes,
+//!   not just single upsets,
 //! * **ABFT tolerance factor** (ABFT cells only): the detection-rate vs
 //!   false-positive trade of floating-point checksum verification.
 //!
 //! The grid is the cartesian product of the axes; every *cell* is a full
 //! campaign ([`Campaign::run_with_problem`]) sharing one workload per
-//! shape, so columns differing only in protection, fault count or
-//! tolerance are controlled comparisons on identical data. Cells fan out
-//! over a deterministic worker pool and every cell's campaign is seeded
-//! from the sweep seed and the cell's grid coordinates — never its worker
-//! thread — so the result (and the JSON emitted by
+//! shape, so columns differing only in geometry, protection, fault count
+//! or tolerance are controlled comparisons on identical data. Cells fan
+//! out over a deterministic worker pool and every cell's campaign is
+//! seeded from the sweep seed and the cell's grid coordinates — never its
+//! worker thread — so the result (and the JSON emitted by
 //! [`SweepResult::to_json`]) is byte-identical for a fixed seed
-//! regardless of `--threads`.
+//! regardless of `--threads`. Cell campaigns run on the checkpointed
+//! fast-forward engine by default (see [`CampaignConfig::fast_forward`]);
+//! results are bit-identical either way.
 
 use crate::fault::FaultModel;
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
@@ -42,7 +48,10 @@ const DOMAIN_SWEEP_CELL: u64 = 0x5245_444D_5357_434C; // "REDMSWCL"
 /// The sweep grid specification.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
-    pub cfg: RedMuleConfig,
+    /// Array geometries (L/H/P instances), one grid axis — the outermost
+    /// loop of the cell enumeration. Replicated (data-protected) cells
+    /// need an even row count.
+    pub geometries: Vec<RedMuleConfig>,
     pub protections: Vec<Protection>,
     pub shapes: Vec<GemmSpec>,
     /// Faults per run, each entry one grid column (all ≥ 1).
@@ -57,14 +66,19 @@ pub struct SweepConfig {
     pub seed: u64,
     /// Worker threads the *cells* fan out over (does not affect results).
     pub threads: usize,
+    /// Run cell campaigns on the checkpointed fast-forward engine
+    /// (bit-identical results; see [`CampaignConfig::fast_forward`]).
+    pub fast_forward: bool,
+    /// Checkpoint spacing for the fast-forward engine (0 = auto).
+    pub checkpoint_interval: u64,
 }
 
 impl SweepConfig {
-    /// The default smoke grid: the paper's three builds × two shapes ×
-    /// fault count ∈ {1, 2} — 12 cells.
+    /// The default smoke grid: the paper instance × its three builds ×
+    /// two shapes × fault count ∈ {1, 2} — 12 cells.
     pub fn new(injections: u64, seed: u64) -> Self {
         Self {
-            cfg: RedMuleConfig::paper(),
+            geometries: vec![RedMuleConfig::paper()],
             protections: vec![Protection::Baseline, Protection::Data, Protection::Full],
             shapes: vec![GemmSpec::paper_workload(), GemmSpec::new(6, 8, 8)],
             fault_counts: vec![1, 2],
@@ -73,25 +87,30 @@ impl SweepConfig {
             injections,
             seed,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            fast_forward: true,
+            checkpoint_interval: 0,
         }
     }
 
     /// Number of grid cells this configuration expands to.
     pub fn n_cells(&self) -> usize {
         let tols = self.tol_factors.len().max(1);
-        self.protections
+        let per_geometry: usize = self
+            .protections
             .iter()
             .map(|p| {
                 let t = if p.has_abft_checksums() { tols } else { 1 };
                 self.shapes.len() * self.fault_counts.len() * t
             })
-            .sum()
+            .sum();
+        self.geometries.len().max(1) * per_geometry
     }
 }
 
 /// One cell of the grid with its campaign outcome.
 #[derive(Debug, Clone)]
 pub struct SweepCell {
+    pub geometry: RedMuleConfig,
     pub protection: Protection,
     pub shape: GemmSpec,
     pub faults: usize,
@@ -105,8 +124,8 @@ pub struct SweepResult {
     pub fault_model: FaultModel,
     pub injections: u64,
     pub seed: u64,
-    /// Cells in deterministic grid order (protection-major, then shape,
-    /// fault count, tolerance factor).
+    /// Cells in deterministic grid order (geometry-major, then
+    /// protection, shape, fault count, tolerance factor).
     pub cells: Vec<SweepCell>,
     pub wall_seconds: f64,
 }
@@ -141,6 +160,10 @@ impl SweepResult {
             let r = &c.result;
             let total = r.total.max(1) as f64;
             s.push_str("    {");
+            s.push_str(&format!(
+                "\"geometry\": {{\"l\": {}, \"h\": {}, \"p\": {}}}, ",
+                c.geometry.l, c.geometry.h, c.geometry.p
+            ));
             s.push_str(&format!("\"protection\": \"{}\", ", c.protection.name()));
             s.push_str(&format!("\"mode\": \"{}\", ", r.config.mode.name()));
             s.push_str(&format!(
@@ -181,6 +204,7 @@ impl SweepResult {
 /// Grid coordinates of one cell before it runs.
 #[derive(Debug, Clone, Copy)]
 struct CellSpec {
+    geometry: RedMuleConfig,
     protection: Protection,
     shape_idx: usize,
     shape: GemmSpec,
@@ -196,13 +220,26 @@ impl Sweep {
     /// order, per-shape problems and per-cell campaign seeds depend only
     /// on the configuration, never on worker-thread scheduling.
     pub fn run(config: &SweepConfig) -> Result<SweepResult> {
-        if config.protections.is_empty()
+        if config.geometries.is_empty()
+            || config.protections.is_empty()
             || config.shapes.is_empty()
             || config.fault_counts.is_empty()
         {
             return Err(Error::Config(
-                "sweep needs at least one protection, shape and fault count".into(),
+                "sweep needs at least one geometry, protection, shape and fault count".into(),
             ));
+        }
+        // FT (replicated) execution pairs consecutive rows, so a
+        // data-protected cell on an odd-row geometry would assert deep in
+        // the accelerator — reject it as a configuration error up front.
+        if let Some(g) = config.geometries.iter().find(|g| g.l % 2 != 0) {
+            if config.protections.iter().any(|p| p.has_data_protection()) {
+                return Err(Error::Config(format!(
+                    "geometry L={} H={} P={} has an odd row count: replicated \
+                     (data/full) cells need an even L",
+                    g.l, g.h, g.p
+                )));
+            }
         }
         // Validate every axis up front: a bad cell must fail before any
         // cell burns injection time, not mid-sweep.
@@ -232,23 +269,26 @@ impl Sweep {
 
         let default_tols = [ABFT_TOL_FACTOR];
         let mut specs: Vec<CellSpec> = Vec::new();
-        for &protection in &config.protections {
-            for (shape_idx, &shape) in config.shapes.iter().enumerate() {
-                for &faults in &config.fault_counts {
-                    let tols: &[f64] =
-                        if protection.has_abft_checksums() && !config.tol_factors.is_empty() {
-                            &config.tol_factors
-                        } else {
-                            &default_tols
-                        };
-                    for &tol_factor in tols {
-                        specs.push(CellSpec {
-                            protection,
-                            shape_idx,
-                            shape,
-                            faults,
-                            tol_factor,
-                        });
+        for &geometry in &config.geometries {
+            for &protection in &config.protections {
+                for (shape_idx, &shape) in config.shapes.iter().enumerate() {
+                    for &faults in &config.fault_counts {
+                        let tols: &[f64] =
+                            if protection.has_abft_checksums() && !config.tol_factors.is_empty() {
+                                &config.tol_factors
+                            } else {
+                                &default_tols
+                            };
+                        for &tol_factor in tols {
+                            specs.push(CellSpec {
+                                geometry,
+                                protection,
+                                shape_idx,
+                                shape,
+                                faults,
+                                tol_factor,
+                            });
+                        }
                     }
                 }
             }
@@ -317,9 +357,12 @@ impl Sweep {
     }
 
     /// Run one cell: a campaign seeded from the sweep seed and the cell's
-    /// (shape, fault count) coordinates. The per-build execution mode and
-    /// recovery policy come from [`CampaignConfig::table1`] so sweep cells
-    /// and Table-1 columns are always configured identically.
+    /// (shape, fault count) coordinates — geometry, protection and
+    /// tolerance columns at the same coordinates share plan streams, the
+    /// same controlled comparison `Table1` makes across builds. The
+    /// per-build execution mode and recovery policy come from
+    /// [`CampaignConfig::table1`] so sweep cells and Table-1 columns are
+    /// always configured identically.
     fn run_cell(
         config: &SweepConfig,
         spec: &CellSpec,
@@ -329,14 +372,17 @@ impl Sweep {
         let tag = ((spec.shape_idx as u64) << 32) | spec.faults as u64;
         let seed = stream_seed(config.seed, DOMAIN_SWEEP_CELL, tag);
         let mut cc = CampaignConfig::table1(spec.protection, config.injections, seed);
-        cc.cfg = config.cfg;
+        cc.cfg = spec.geometry;
         cc.spec = spec.shape;
         cc.threads = threads;
         cc.faults_per_run = spec.faults;
         cc.fault_model = config.fault_model;
         cc.abft_tol_factor = spec.tol_factor;
+        cc.fast_forward = config.fast_forward;
+        cc.checkpoint_interval = config.checkpoint_interval;
         let result = Campaign::run_with_problem(&cc, problem)?;
         Ok(SweepCell {
+            geometry: spec.geometry,
             protection: spec.protection,
             shape: spec.shape,
             faults: spec.faults,
@@ -402,6 +448,62 @@ mod tests {
     }
 
     #[test]
+    fn geometry_axis_multiplies_the_grid_and_lands_in_cells_and_json() {
+        let mut c = SweepConfig::new(25, 13);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Full];
+        c.fault_counts = vec![1];
+        c.geometries = vec![RedMuleConfig::paper(), RedMuleConfig::new(8, 2, 2)];
+        c.threads = 2;
+        assert_eq!(c.n_cells(), 4);
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), 4);
+        // Geometry-major order: the first two cells run the paper array.
+        assert_eq!(r.cells[0].geometry, RedMuleConfig::paper());
+        assert_eq!(r.cells[1].geometry, RedMuleConfig::paper());
+        assert_eq!(r.cells[2].geometry, RedMuleConfig::new(8, 2, 2));
+        assert_eq!(r.cells[3].geometry, RedMuleConfig::new(8, 2, 2));
+        let j = r.to_json(false);
+        assert!(j.contains("\"geometry\": {\"l\": 12, \"h\": 4, \"p\": 3}"));
+        assert!(j.contains("\"geometry\": {\"l\": 8, \"h\": 2, \"p\": 2}"));
+        // Same-coordinate cells share the campaign seed across geometries
+        // (controlled comparison).
+        assert_eq!(r.cells[0].result.config.seed, r.cells[2].result.config.seed);
+        // Protection still beats baseline on every geometry.
+        for g in 0..2 {
+            assert!(
+                r.cells[2 * g + 1].result.functional_errors()
+                    <= r.cells[2 * g].result.functional_errors(),
+                "geometry {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn odd_row_geometry_with_replicated_builds_is_a_config_error() {
+        let mut c = SweepConfig::new(10, 1);
+        c.geometries = vec![RedMuleConfig::new(5, 2, 2)];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // Non-replicated builds accept odd rows.
+        c.protections = vec![Protection::Baseline, Protection::Abft];
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.fault_counts = vec![1];
+        c.threads = 1;
+        assert!(Sweep::run(&c).is_ok());
+    }
+
+    #[test]
+    fn fast_forward_and_direct_sweeps_emit_identical_json() {
+        let mut fast = tiny(23, 2);
+        fast.fault_counts = vec![1, 3];
+        let mut direct = fast.clone();
+        direct.fast_forward = false;
+        let a = Sweep::run(&fast).unwrap();
+        let b = Sweep::run(&direct).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+    }
+
+    #[test]
     fn invalid_axes_are_config_errors_before_any_cell_runs() {
         let mut c = SweepConfig::new(10, 1);
         c.protections.clear();
@@ -433,6 +535,7 @@ mod tests {
             "\"injections_per_cell\": 10",
             "\"fault_model\": \"independent\"",
             "\"cells\": [",
+            "\"geometry\": {\"l\": 12, \"h\": 4, \"p\": 3}",
             "\"protection\": \"baseline\"",
             "\"shape\": {\"m\": 4, \"n\": 4, \"k\": 4}",
             "\"outcomes\": ",

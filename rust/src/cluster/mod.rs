@@ -18,7 +18,7 @@
 //! real fault (§3.3).
 
 use crate::dma::{Dma, L2Mem};
-use crate::fault::{FaultCtx, FaultPlan};
+use crate::fault::{first_fault_cycle, last_fault_cycle, FaultCtx, FaultPlan};
 use crate::golden::{abft_tolerance_scaled, AbftMismatch, GemmProblem, Mat, ABFT_TOL_FACTOR};
 use crate::redmule::fault_unit::cause;
 use crate::redmule::regfile::{
@@ -27,6 +27,7 @@ use crate::redmule::regfile::{
 };
 use crate::redmule::{ExecMode, Protection, RedMule, RedMuleConfig, RunState, TaskLayout};
 use crate::tcdm::Tcdm;
+use crate::util::digest::Fnv64;
 use crate::{Error, Result};
 
 /// Timeout budget: a run that exceeds `TIMEOUT_FACTOR ×` the fault-free
@@ -122,6 +123,108 @@ impl RunReport {
     pub fn fault_applied(&self) -> bool {
         self.faults_applied > 0
     }
+}
+
+// ----------------------------------------------- fast-forward reference
+
+/// One snapshot of the fault-free reference execution: the accelerator's
+/// complete architectural state and the TCDM's delta vs. the pristine
+/// staged image at a checkpoint cycle, plus the rolling state digest the
+/// convergence probe compares against.
+#[derive(Debug, Clone)]
+pub struct RefCheckpoint {
+    /// Cycle the snapshot was taken at (a multiple of the interval;
+    /// checkpoint `i` sits at cycle `i × interval`, with checkpoint 0
+    /// capturing the state right after programming + task start).
+    pub cycle: u64,
+    pub redmule: RedMule,
+    pub tcdm_delta: Vec<(u32, u64)>,
+    pub digest: u64,
+}
+
+/// The instrumented fault-free reference run of one (problem, protection,
+/// mode) combination: periodic state checkpoints for fast-forwarding past
+/// the identical prefix of every injection, per-checkpoint digests for
+/// convergence early-exit, and the recorded clean outcome the early exit
+/// substitutes for the simulated tail.
+#[derive(Debug, Clone)]
+pub struct RefTrace {
+    /// Checkpoint spacing in cycles (≥ 1).
+    pub interval: u64,
+    /// Total fault-free accelerator cycles (the campaign's horizon).
+    pub cycles: u64,
+    /// Host cycles of the initial `program()` alone.
+    pub program_cycles: u64,
+    /// Host cycles of the complete clean run (programming plus, on ABFT
+    /// builds, the writeback verification).
+    pub config_cycles: u64,
+    /// The clean run's host-visible result (checksums stripped on ABFT).
+    pub z: Mat,
+    /// ABFT bookkeeping of the clean run (`Some(default)` on ABFT builds).
+    pub abft: Option<AbftRunInfo>,
+    /// Checkpoints in cycle order: `checkpoints[i].cycle == i × interval`.
+    pub checkpoints: Vec<RefCheckpoint>,
+}
+
+impl RefTrace {
+    /// The report a clean (no live faults) hosted run would produce —
+    /// exactly what [`System::run_staged_with_faults`] returns for an
+    /// empty plan list on identically staged state.
+    pub fn clean_report(&self) -> RunReport {
+        RunReport {
+            outcome: HostOutcome::Completed,
+            cycles: self.cycles,
+            config_cycles: self.config_cycles,
+            retries: 0,
+            fault_causes: 0,
+            irq_seen: false,
+            faults_applied: 0,
+            abft: self.abft,
+            z: self.z.clone(),
+        }
+    }
+
+    /// The checkpoint to resume from for a fault plan whose earliest
+    /// strike is at `first_cycle`: the last checkpoint strictly before
+    /// that cycle, so the restored prefix is bit-identical to what the
+    /// direct path would have simulated.
+    pub fn checkpoint_before(&self, first_cycle: u64) -> &RefCheckpoint {
+        let idx = (first_cycle.saturating_sub(1) / self.interval) as usize;
+        &self.checkpoints[idx.min(self.checkpoints.len() - 1)]
+    }
+}
+
+/// Combined convergence digest: accelerator state + TCDM contents (as a
+/// delta against the pristine staged image, so equal contents hash equal
+/// regardless of write history).
+fn ff_digest(redmule: &RedMule, tcdm: &Tcdm, pristine: &Tcdm) -> u64 {
+    ff_digest_with_delta(redmule, &tcdm.dirty_delta(pristine))
+}
+
+/// [`ff_digest`] over an already-computed TCDM delta (the reference
+/// recorder keeps the delta for the checkpoint anyway — one scan serves
+/// both the snapshot and its digest).
+fn ff_digest_with_delta(redmule: &RedMule, delta: &[(u32, u64)]) -> u64 {
+    let mut h = Fnv64::new();
+    redmule.digest_into(&mut h);
+    Tcdm::digest_delta_entries(delta, &mut h);
+    h.finish()
+}
+
+/// Resume parameters of a fast-forwarded first attempt (see
+/// [`System::run_staged_with_faults_ff`]).
+struct FfResume<'a> {
+    trace: &'a RefTrace,
+    pristine: &'a Tcdm,
+    /// No plan can fire after this cycle, so convergence probes (and the
+    /// retry shortcut) are meaningful beyond it.
+    last_plan_cycle: u64,
+    /// No plan strikes the register file: the one state element a
+    /// `FullRestart` re-program does not fully rewrite (only the 9 task
+    /// words of the newly-active context are written, and only regfile
+    /// SEUs can corrupt the rest — everything else is reset by the
+    /// interrupt service + `start()`).
+    regfile_untouched: bool,
 }
 
 /// The cluster: accelerator + memory substrate + host logic.
@@ -401,6 +504,144 @@ impl System {
         }
     }
 
+    /// Continue a restored first attempt to completion, abort, timeout or
+    /// convergence. Returns (aborted, cycles_used, irq_seen, converged).
+    ///
+    /// Mirrors [`System::execute_attempt`] with two differences: the
+    /// checkpoint restored the accelerator *mid-task*, so there is no
+    /// `start()` and the attempt logically began at cycle 0 (the skipped
+    /// prefix counts as executed — budget accounting and the returned
+    /// cycle count match the direct path exactly); and once every plan's
+    /// cycle is behind, the state digest is probed against the reference
+    /// at each checkpoint boundary.
+    fn execute_resumed_attempt(
+        &mut self,
+        ctx: &mut FaultCtx,
+        budget: u64,
+        ff: &FfResume<'_>,
+    ) -> (bool, u64, bool, bool) {
+        let mut irq_seen = false;
+        loop {
+            self.redmule.step(&mut self.tcdm, ctx);
+            irq_seen |= self.redmule.irq();
+            match self.redmule.state() {
+                RunState::Done => return (false, self.redmule.cycle, irq_seen, false),
+                RunState::Aborted => return (true, self.redmule.cycle, irq_seen, false),
+                _ => {}
+            }
+            if self.redmule.cycle > budget {
+                return (false, self.redmule.cycle, irq_seen, false);
+            }
+            let cycle = self.redmule.cycle;
+            if cycle > ff.last_plan_cycle && cycle % ff.trace.interval == 0 {
+                let idx = (cycle / ff.trace.interval) as usize;
+                if let Some(cp) = ff.trace.checkpoints.get(idx) {
+                    if cp.cycle == cycle
+                        && ff_digest(&self.redmule, &self.tcdm, ff.pristine) == cp.digest
+                    {
+                        return (false, self.redmule.cycle, irq_seen, true);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run the instrumented fault-free reference execution for the
+    /// fast-forward engine: program + start the staged task, step it clean
+    /// to completion, and snapshot the complete architectural state (plus
+    /// the TCDM delta vs. `pristine`) every `interval` cycles.
+    ///
+    /// Preconditions (the campaign engine establishes them): the task is
+    /// staged at `layout`, `pristine` is a clone of the staged TCDM, the
+    /// accelerator is reset, and dirty tracking is enabled. An abort or a
+    /// timeout of the fault-free run means the build is broken and is a
+    /// hard error, since every fast-forwarded classification would
+    /// inherit it. `Ok(None)` is the one soft case: an ABFT build whose
+    /// verification tolerance is at/below the FP16 rounding bound flags
+    /// even the fault-free run — its clean trajectory ends in a host
+    /// retry, so there is no simple recorded tail to substitute and the
+    /// caller must fall back to the direct engine.
+    ///
+    /// `interval = 0` selects the auto spacing: `nominal / 16`, clamped
+    /// to `[8, 256]` cycles.
+    pub fn record_reference(
+        &mut self,
+        layout: &TaskLayout,
+        pristine: &Tcdm,
+        mode: ExecMode,
+        interval: u64,
+    ) -> Result<Option<RefTrace>> {
+        let program_cycles = self.program(layout, mode);
+        let mut config_cycles = program_cycles;
+        self.redmule.start();
+        let nominal = self.redmule.nominal_cycles().max(1);
+        let interval = if interval == 0 {
+            (nominal / 16).clamp(8, 256)
+        } else {
+            interval
+        };
+        let budget = nominal * TIMEOUT_FACTOR;
+        let mut ctx = FaultCtx::clean();
+        let mut checkpoints = Vec::with_capacity((nominal / interval + 2) as usize);
+        let snap = |redmule: &RedMule, tcdm: &Tcdm| {
+            let tcdm_delta = tcdm.dirty_delta(pristine);
+            let digest = ff_digest_with_delta(redmule, &tcdm_delta);
+            RefCheckpoint {
+                cycle: redmule.cycle,
+                redmule: redmule.clone(),
+                tcdm_delta,
+                digest,
+            }
+        };
+        // Checkpoint 0: after programming + start, before the first step —
+        // the restore point for faults striking at cycle 1.
+        checkpoints.push(snap(&self.redmule, &self.tcdm));
+        loop {
+            self.redmule.step(&mut self.tcdm, &mut ctx);
+            match self.redmule.state() {
+                RunState::Done => break,
+                RunState::Aborted => {
+                    return Err(Error::Sim(
+                        "fault-free reference run aborted — broken build".into(),
+                    ));
+                }
+                _ => {}
+            }
+            if self.redmule.cycle > budget {
+                return Err(Error::Sim(
+                    "fault-free reference run exceeded the cycle budget".into(),
+                ));
+            }
+            if self.redmule.cycle % interval == 0 {
+                checkpoints.push(snap(&self.redmule, &self.tcdm));
+            }
+        }
+        let cycles = self.redmule.cycle;
+        let abft = if self.protection().has_abft_checksums() {
+            let mm = self.abft_check(layout, None);
+            config_cycles += (layout.m + layout.k) as u64;
+            if !mm.is_clean() {
+                // Tolerance at/below the rounding bound: the clean run
+                // itself retries, so a converged state has no clean tail
+                // to inherit. Soft-decline the trace.
+                return Ok(None);
+            }
+            Some(AbftRunInfo::default())
+        } else {
+            None
+        };
+        let z = self.final_z(layout);
+        Ok(Some(RefTrace {
+            interval,
+            cycles,
+            program_cycles,
+            config_cycles,
+            z,
+            abft,
+            checkpoints,
+        }))
+    }
+
     /// Hosted execution with an optional fault plan (the campaign's unit
     /// of work). Implements the §3.3 recovery flow.
     pub fn run_gemm_with_fault(
@@ -467,15 +708,94 @@ impl System {
                 plans.len()
             )));
         }
-        let layout = *layout;
-        let abft = self.protection().has_abft_checksums();
-        let mut config_cycles = self.program(&layout, mode);
-        let mut ctx = if plans.is_empty() {
+        let config_cycles = self.program(layout, mode);
+        let ctx = if plans.is_empty() {
             FaultCtx::clean()
         } else {
             FaultCtx::with_plans(plans.to_vec())
         };
+        self.host_loop(*layout, mode, ctx, config_cycles, None)
+    }
 
+    /// Fast-forwarded hosted execution — the checkpointed counterpart of
+    /// [`System::run_staged_with_faults`], producing a **bit-identical
+    /// [`RunReport`]** at a fraction of the simulated cycles:
+    ///
+    /// 1. restore the reference checkpoint just before the earliest
+    ///    planned fault (TCDM copy-on-write from the pristine image plus
+    ///    the checkpoint's delta; full accelerator state snapshot) — the
+    ///    skipped prefix is bit-identical to what the direct path would
+    ///    have stepped, because no plan can fire before its cycle;
+    /// 2. step normally from there (faults land exactly as in the direct
+    ///    path, cycle numbering is absolute);
+    /// 3. once every plan's cycle is behind, compare the rolling state
+    ///    digest against the reference at each checkpoint boundary — on a
+    ///    match the fault was masked or absorbed and the recorded clean
+    ///    tail substitutes for the rest of the simulation.
+    ///
+    /// The caller owns consistency: `trace` and `pristine` must have been
+    /// built from the *same* staged problem/layout/mode on the same
+    /// build (the campaign engine guarantees this; `tests/fastforward.rs`
+    /// pins the equivalence end to end).
+    pub fn run_staged_with_faults_ff(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        trace: &RefTrace,
+        pristine: &Tcdm,
+    ) -> Result<RunReport> {
+        if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
+            return Err(Error::Config(format!(
+                "at most {} faults per run ({} planned)",
+                crate::fault::MAX_PLANS_PER_RUN,
+                plans.len()
+            )));
+        }
+        let Some(first) = first_fault_cycle(plans) else {
+            // Nothing will ever fire: the recorded reference run IS the
+            // result, no simulation needed at all.
+            return Ok(trace.clean_report());
+        };
+        if !self.tcdm.dirty_tracking_enabled() {
+            // restore_from would silently undo nothing.
+            return Err(Error::Config(
+                "fast-forward execution needs TCDM dirty tracking enabled".into(),
+            ));
+        }
+        let cp = trace.checkpoint_before(first);
+        self.tcdm.restore_from(pristine);
+        self.tcdm.apply_delta(&cp.tcdm_delta);
+        self.redmule.restore_from(&cp.redmule);
+        let ctx = FaultCtx::with_plans(plans.to_vec());
+        let resume = FfResume {
+            trace,
+            pristine,
+            last_plan_cycle: last_fault_cycle(plans).unwrap_or(0),
+            regfile_untouched: plans
+                .iter()
+                .all(|p| p.site.module() != crate::fault::Module::RegFile),
+        };
+        // The checkpoint already contains the programmed register file, so
+        // the initial `program()` is skipped and its recorded cost carried
+        // over instead.
+        self.host_loop(*layout, mode, ctx, trace.program_cycles, Some(resume))
+    }
+
+    /// The §3.3 host recovery loop, shared by the direct and the
+    /// fast-forwarded engines. With `resume` set, the first attempt
+    /// continues from a restored mid-task checkpoint (no `start()`) and
+    /// probes for convergence against the reference trace; every retry
+    /// attempt is identical in both engines.
+    fn host_loop(
+        &mut self,
+        layout: TaskLayout,
+        mode: ExecMode,
+        mut ctx: FaultCtx,
+        mut config_cycles: u64,
+        ff_resume: Option<FfResume<'_>>,
+    ) -> Result<RunReport> {
+        let abft = self.protection().has_abft_checksums();
         let nominal = self.redmule.nominal_cycles().max(1);
         let budget = nominal * TIMEOUT_FACTOR;
 
@@ -487,8 +807,36 @@ impl System {
         // Rows of the current ABFT band re-execution (None = full task).
         let mut band: Option<(u32, u32)> = None;
 
+        let mut first_attempt = true;
         loop {
-            let (aborted, cycles, irq_seen) = self.execute_attempt(&mut ctx, budget);
+            let resumed = if first_attempt { ff_resume.as_ref() } else { None };
+            let (aborted, cycles, irq_seen) = if let Some(ff) = resumed {
+                let (aborted, cycles, irq_seen, converged) =
+                    self.execute_resumed_attempt(&mut ctx, budget, ff);
+                if converged {
+                    // The state digest matched the reference at this
+                    // cycle: every remaining cycle would replay the
+                    // fault-free tail bit for bit, so substitute the
+                    // recorded clean outcome. Fault bookkeeping
+                    // (applied counts, observed IRQ transients) is
+                    // taken from the simulated part.
+                    return Ok(RunReport {
+                        outcome: HostOutcome::Completed,
+                        cycles: ff.trace.cycles,
+                        config_cycles: ff.trace.config_cycles,
+                        retries: 0,
+                        fault_causes: 0,
+                        irq_seen,
+                        faults_applied: ctx.applied_faults(),
+                        abft: ff.trace.abft,
+                        z: ff.trace.z.clone(),
+                    });
+                }
+                (aborted, cycles, irq_seen)
+            } else {
+                self.execute_attempt(&mut ctx, budget)
+            };
+            first_attempt = false;
             total_cycles += cycles;
             irq_seen_any |= irq_seen;
 
@@ -593,6 +941,51 @@ impl System {
                     RecoveryPolicy::TileLevel => Some(progress),
                 };
                 config_cycles += self.program_with_resume(&layout, mode, resume);
+                // Retry shortcut (fast-forward engine only): a FullRestart
+                // retry is bit-for-bit the reference run again when (1) no
+                // plan can fire any more, (2) no plan ever struck the
+                // register file — the only state a re-program does not
+                // fully rewrite; the interrupt service + `start()` reset
+                // everything else — and (3) the staged inputs in TCDM are
+                // untouched (the aborted attempt wrote nothing outside the
+                // Z region, which a full recompute rewrites entirely). The
+                // recorded clean outcome then substitutes for stepping the
+                // whole re-execution. TileLevel resumes depend on the
+                // partially-committed Z content, and ABFT builds run a
+                // writeback verification after the retry (extra host
+                // cycles + accumulator-dependent behavior), so both
+                // always simulate.
+                if let Some(ff) = &ff_resume {
+                    if self.recovery == RecoveryPolicy::FullRestart
+                        && !abft
+                        && ff.regfile_untouched
+                        && self.redmule.cycle >= ff.last_plan_cycle
+                    {
+                        // Delta indices are bank-major flats; map each
+                        // back to its linear word address before testing
+                        // it against the Z region's word span.
+                        let z_first_word = layout.z_addr / 4;
+                        let z_end_word = (layout.z_addr + 2 * layout.m * layout.k).div_ceil(4);
+                        let inputs_pristine =
+                            self.tcdm.dirty_delta(ff.pristine).iter().all(|&(idx, _)| {
+                                let w = self.tcdm.linear_word_of(idx);
+                                w >= z_first_word && w < z_end_word
+                            });
+                        if inputs_pristine {
+                            return Ok(RunReport {
+                                outcome: HostOutcome::CompletedAfterRetry,
+                                cycles: total_cycles + ff.trace.cycles,
+                                config_cycles,
+                                retries,
+                                fault_causes: causes,
+                                irq_seen: irq_seen_any,
+                                faults_applied: ctx.applied_faults(),
+                                abft: abft.then_some(abft_info),
+                                z: ff.trace.z.clone(),
+                            });
+                        }
+                    }
+                }
                 continue;
             }
 

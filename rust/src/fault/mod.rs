@@ -48,6 +48,20 @@ pub struct FaultPlan {
 /// Hard cap on plans per run (the applied-set is tracked in a `u64` mask).
 pub const MAX_PLANS_PER_RUN: usize = 64;
 
+/// Earliest planned fault cycle (`None` for a clean plan list). Execution
+/// before this cycle is bit-identical to the fault-free reference — the
+/// campaign's fast-forward engine keys its checkpoint selection on it.
+pub fn first_fault_cycle(plans: &[FaultPlan]) -> Option<u64> {
+    plans.iter().map(|p| p.cycle).min()
+}
+
+/// Latest planned fault cycle (`None` for a clean plan list). Once the
+/// simulated cycle is past it no plan can fire any more, so state-digest
+/// convergence checks against the reference trace become meaningful.
+pub fn last_fault_cycle(plans: &[FaultPlan]) -> Option<u64> {
+    plans.iter().map(|p| p.cycle).max()
+}
+
 /// Per-run fault context threaded through the simulator.
 ///
 /// Also records which planned faults were actually *applied* (the site
@@ -278,6 +292,24 @@ mod tests {
         // Re-striking an already-applied plan does not double-count.
         assert_eq!(ctx.u32(s2, 0), 1 << 5);
         assert_eq!(ctx.applied_faults(), 2);
+    }
+
+    #[test]
+    fn fault_cycle_ordering_helpers() {
+        let site = SiteId::new(Module::CeArray, 0, 0);
+        let mk = |cycle| FaultPlan {
+            cycle,
+            site,
+            bit: 0,
+            kind: FaultKind::Transient,
+        };
+        assert_eq!(first_fault_cycle(&[]), None);
+        assert_eq!(last_fault_cycle(&[]), None);
+        assert_eq!(first_fault_cycle(&[mk(9)]), Some(9));
+        assert_eq!(last_fault_cycle(&[mk(9)]), Some(9));
+        let plans = [mk(40), mk(3), mk(17)];
+        assert_eq!(first_fault_cycle(&plans), Some(3));
+        assert_eq!(last_fault_cycle(&plans), Some(40));
     }
 
     #[test]

@@ -72,6 +72,14 @@ pub enum FaultModel {
     /// corrupted — an MBU on a register, or an SET burst clipping
     /// neighbouring nets of one cone.
     Burst,
+    /// One spatial event spanning N adjacent *sites*: an area-weighted
+    /// anchor draw plus its physical neighbours in the population
+    /// enumeration (instances are enumerated in spatial order within each
+    /// unit), one shared cycle, an independent uniform bit per struck
+    /// site. Models a particle strike clipping neighbouring registers /
+    /// nets of different cones — the regime where per-site protection
+    /// (ECC words, lockstep pairs) degrades fastest.
+    SiteBurst,
 }
 
 impl FaultModel {
@@ -79,6 +87,7 @@ impl FaultModel {
         match self {
             FaultModel::Independent => "independent",
             FaultModel::Burst => "burst",
+            FaultModel::SiteBurst => "site-burst",
         }
     }
 
@@ -86,6 +95,7 @@ impl FaultModel {
         match s {
             "independent" | "seu" => Some(FaultModel::Independent),
             "burst" | "mbu" => Some(FaultModel::Burst),
+            "site-burst" | "siteburst" | "site_burst" => Some(FaultModel::SiteBurst),
             _ => None,
         }
     }
@@ -440,11 +450,15 @@ impl FaultRegistry {
         self.entries.iter().map(|e| e.bits as u64).sum()
     }
 
+    /// Area-weighted random population index (one `next_f64` draw).
+    fn sample_index(&self, rng: &mut Xoshiro256) -> usize {
+        let t = rng.next_f64() * self.total_weight;
+        self.cum.partition_point(|&c| c < t).min(self.entries.len() - 1)
+    }
+
     /// Area-weighted random site entry.
     pub fn sample_entry(&self, rng: &mut Xoshiro256) -> &SiteEntry {
-        let t = rng.next_f64() * self.total_weight;
-        let idx = self.cum.partition_point(|&c| c < t).min(self.entries.len() - 1);
-        &self.entries[idx]
+        &self.entries[self.sample_index(rng)]
     }
 
     /// Draw one complete fault plan: area-weighted site, uniform bit,
@@ -463,7 +477,11 @@ impl FaultRegistry {
     /// first; the campaign reuses the buffer across runs). `Independent`
     /// plans are `n` separate [`FaultRegistry::sample_plan`] draws;
     /// `Burst` plans share one site/cycle draw and corrupt `n` adjacent
-    /// bits (capped at the site's width, so a burst never repeats a bit).
+    /// bits (capped at the site's width, so a burst never repeats a bit);
+    /// `SiteBurst` plans share one cycle draw and strike `n` adjacent
+    /// *sites* of the population starting at an area-weighted anchor
+    /// (clipped at the end of the enumeration, so a burst never wraps
+    /// onto an unrelated module), one uniform bit per site.
     /// Consumes RNG draws in a fixed order — fully deterministic.
     pub fn sample_plans_into(
         &self,
@@ -490,6 +508,19 @@ impl FaultRegistry {
                         cycle,
                         site: e.site,
                         bit: ((start + j) % e.bits as u32) as u8,
+                        kind: e.kind,
+                    });
+                }
+            }
+            FaultModel::SiteBurst => {
+                let anchor = self.sample_index(rng);
+                let cycle = 1 + rng.below(horizon.max(1));
+                let end = (anchor + n).min(self.entries.len());
+                for e in &self.entries[anchor..end] {
+                    out.push(FaultPlan {
+                        cycle,
+                        site: e.site,
+                        bit: rng.below(e.bits as u64) as u8,
                         kind: e.kind,
                     });
                 }
@@ -692,11 +723,76 @@ mod tests {
 
     #[test]
     fn fault_model_names_round_trip() {
-        for m in [FaultModel::Independent, FaultModel::Burst] {
+        for m in [
+            FaultModel::Independent,
+            FaultModel::Burst,
+            FaultModel::SiteBurst,
+        ] {
             assert_eq!(FaultModel::parse(m.name()), Some(m));
         }
         assert_eq!(FaultModel::parse("mbu"), Some(FaultModel::Burst));
+        assert_eq!(FaultModel::parse("siteburst"), Some(FaultModel::SiteBurst));
         assert_eq!(FaultModel::parse("nope"), None);
+    }
+
+    #[test]
+    fn site_burst_plans_span_adjacent_population_entries() {
+        let f = reg(Protection::Full);
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..500 {
+            let plans = f.sample_plans(200, 3, FaultModel::SiteBurst, &mut rng);
+            assert!(!plans.is_empty() && plans.len() <= 3);
+            let anchor = f
+                .entries()
+                .iter()
+                .position(|e| e.site == plans[0].site)
+                .expect("anchor site must be in the population");
+            // Clipping at the population end is the only reason for a
+            // short burst.
+            assert_eq!(plans.len(), 3.min(f.n_entries() - anchor));
+            for (j, p) in plans.iter().enumerate() {
+                let e = &f.entries()[anchor + j];
+                assert_eq!(p.site, e.site, "plan {j} must strike entry {}", anchor + j);
+                assert_eq!(p.cycle, plans[0].cycle, "one event, one cycle");
+                assert_eq!(p.kind, e.kind, "each site keeps its own kind");
+                assert!(p.bit < e.bits, "bit in range for its own site");
+            }
+        }
+    }
+
+    #[test]
+    fn site_burst_sampling_is_deterministic_and_area_weighted() {
+        let f = reg(Protection::Baseline);
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        let a = f.sample_plans(300, 4, FaultModel::SiteBurst, &mut r1);
+        let b = f.sample_plans(300, 4, FaultModel::SiteBurst, &mut r2);
+        assert_eq!(a, b, "same seed must reproduce the burst");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNGs must stay in lockstep");
+        // The anchor distribution follows the area weights, like single
+        // draws: CE-datapath share within a few percent over a large draw.
+        let ce_weight: f64 = f
+            .entries()
+            .iter()
+            .filter(|e| e.site.module() == Module::CeArray)
+            .map(|e| e.weight)
+            .sum();
+        let expect = ce_weight / f.total_weight();
+        let mut rng = Xoshiro256::new(87);
+        let n = 100_000;
+        let mut hits = 0u64;
+        let mut plans = Vec::new();
+        for _ in 0..n {
+            f.sample_plans_into(100, 2, FaultModel::SiteBurst, &mut rng, &mut plans);
+            if plans[0].site.module() == Module::CeArray {
+                hits += 1;
+            }
+        }
+        let got = hits as f64 / n as f64;
+        assert!(
+            (got - expect).abs() < 0.015,
+            "site-burst anchor share {got:.3} vs expected {expect:.3}"
+        );
     }
 
     #[test]

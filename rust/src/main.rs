@@ -5,9 +5,11 @@
 //! ```text
 //! redmule-ft campaign [--config baseline|data|full|abft|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
+//!                     [--direct] [--checkpoint-interval K]
 //! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
-//!                     [--configs a,b,..] [--shapes MxNxK,..] [--faults 1,2,..]
-//!                     [--model independent|burst] [--tols F,..] [--timing]
+//!                     [--configs a,b,..] [--geoms LxHxP,..] [--shapes MxNxK,..]
+//!                     [--faults 1,2,..] [--model independent|burst|site-burst]
+//!                     [--tols F,..] [--timing] [--direct] [--checkpoint-interval K]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
 //! redmule-ft floorplan [--config ...]
@@ -117,6 +119,18 @@ fn parse_shape(s: &str) -> Option<GemmSpec> {
     Some(GemmSpec::new(m, n, k))
 }
 
+/// Parse an `LxHxP` array-geometry token.
+fn parse_geometry(s: &str) -> Option<RedMuleConfig> {
+    let mut it = s.split('x');
+    let l: usize = it.next()?.parse().ok()?;
+    let h: usize = it.next()?.parse().ok()?;
+    let p: usize = it.next()?.parse().ok()?;
+    if it.next().is_some() || l == 0 || h == 0 || p == 0 {
+        return None;
+    }
+    Some(RedMuleConfig::new(l, h, p))
+}
+
 /// Parse a comma-separated list, mapping each token through `f`.
 fn parse_list<T>(raw: &str, what: &str, f: impl Fn(&str) -> Option<T>) -> redmule_ft::Result<Vec<T>> {
     let mut out = Vec::new();
@@ -171,11 +185,14 @@ fn print_help() {
          \n\
          commands:\n\
            campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
-                         --injections, --seed, --threads, --report)\n\
+                         --injections, --seed, --threads, --report; --direct disables the\n\
+                         checkpointed fast-forward engine, --checkpoint-interval K tunes it)\n\
            sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
-                         --shapes MxNxK,.., --faults 1,2,.., --model independent|burst,\n\
+                         --geoms LxHxP,.. array geometries, --shapes MxNxK,..,\n\
+                         --faults 1,2,.., --model independent|burst|site-burst,\n\
                          --tols F,.. for ABFT cells, --injections per cell, --seed,\n\
-                         --threads, --timing adds wall-clock fields)\n\
+                         --threads, --timing adds wall-clock fields, --direct /\n\
+                         --checkpoint-interval as in campaign)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
                          --abft appends the ABFT checksum column)\n\
            area          GE area model breakdown (--config, --l/--h/--p)\n\
@@ -193,12 +210,15 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     let seed = args.get("seed", 2025u64);
     let mut cfg = CampaignConfig::table1(protection, injections, seed);
     cfg.threads = args.get("threads", cfg.threads);
+    cfg.fast_forward = !args.flag("direct");
+    cfg.checkpoint_interval = args.get("checkpoint-interval", 0u64);
     eprintln!(
-        "campaign: {} build, {} injections, seed {}, {} threads",
+        "campaign: {} build, {} injections, seed {}, {} threads, {} engine",
         protection.name(),
         injections,
         seed,
-        cfg.threads
+        cfg.threads,
+        if cfg.fast_forward { "fast-forward" } else { "direct" }
     );
     let r = Campaign::run(&cfg)?;
     println!(
@@ -231,8 +251,13 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
 fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     let mut sc = SweepConfig::new(args.get("injections", 500u64), args.get("seed", 2025u64));
     sc.threads = args.get("threads", sc.threads);
+    sc.fast_forward = !args.flag("direct");
+    sc.checkpoint_interval = args.get("checkpoint-interval", 0u64);
     if let Some(raw) = args.kv.get("configs") {
         sc.protections = parse_list(raw, "--configs", parse_protection)?;
+    }
+    if let Some(raw) = args.kv.get("geoms") {
+        sc.geometries = parse_list(raw, "--geoms", parse_geometry)?;
     }
     if let Some(raw) = args.kv.get("shapes") {
         sc.shapes = parse_list(raw, "--shapes", parse_shape)?;
@@ -252,16 +277,18 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         })?;
     }
     eprintln!(
-        "sweep: {} cells ({} protections x {} shapes x {} fault counts, {} model), \
-         {} injections/cell, seed {}, {} threads",
+        "sweep: {} cells ({} geometries x {} protections x {} shapes x {} fault counts, \
+         {} model), {} injections/cell, seed {}, {} threads, {} engine",
         sc.n_cells(),
+        sc.geometries.len(),
         sc.protections.len(),
         sc.shapes.len(),
         sc.fault_counts.len(),
         sc.fault_model.name(),
         sc.injections,
         sc.seed,
-        sc.threads
+        sc.threads,
+        if sc.fast_forward { "fast-forward" } else { "direct" }
     );
     let r = Sweep::run(&sc)?;
     println!("{}", r.to_json(args.flag("timing")));

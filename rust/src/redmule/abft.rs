@@ -106,6 +106,20 @@ impl AbftUnit {
         fixed_to_f64(self.col_abs_fx.get(col).copied().unwrap_or(0))
     }
 
+    /// Fold the armed state and every accumulator into a fast-forward
+    /// digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        h.write_bool(self.armed);
+        h.write_u64(self.rows as u64);
+        h.write_u64(self.data_cols as u64);
+        for bank in [&self.row_fx, &self.row_abs_fx, &self.col_fx, &self.col_abs_fx] {
+            h.write_u64(bank.len() as u64);
+            for &v in bank.iter() {
+                h.write_i64(v);
+            }
+        }
+    }
+
     /// SEU hook: flip a stored bit of row accumulator `index`. Returns
     /// `false` (architecturally masked) when the bank slot is not live.
     pub fn flip_row_acc_bit(&mut self, index: usize, bit: u8) -> bool {

@@ -128,6 +128,44 @@ impl CeArray {
         self.slots.iter().all(|s| s.is_none())
     }
 
+    /// Copy another array's state into this one, reusing the existing
+    /// buffer allocations (checkpoint restore — the campaign hot path).
+    pub fn restore_from(&mut self, other: &CeArray) {
+        debug_assert_eq!((self.l, self.h, self.p), (other.l, other.h, other.p));
+        self.slots.clone_from(&other.slots);
+        self.acc.clone_from(&other.acc);
+        self.xbuf.clone_from(&other.xbuf);
+        self.wbuf_val.clone_from(&other.wbuf_val);
+        self.wbuf_par.clone_from(&other.wbuf_par);
+        self.wbuf_valid.clone_from(&other.wbuf_valid);
+    }
+
+    /// Fold every stored bit into a fast-forward digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        for s in &self.slots {
+            match s {
+                None => h.write_u8(0),
+                Some(e) => {
+                    h.write_u8(1);
+                    h.write_u16(e.nt);
+                    h.write_u16(e.col);
+                    h.write_u16(e.val.to_bits());
+                }
+            }
+        }
+        for v in &self.acc {
+            h.write_u16(v.to_bits());
+        }
+        for v in &self.xbuf {
+            h.write_u16(v.to_bits());
+        }
+        for (j, v) in self.wbuf_val.iter().enumerate() {
+            h.write_u16(v.to_bits());
+            h.write_u8(self.wbuf_par[j]);
+            h.write_bool(self.wbuf_valid[j]);
+        }
+    }
+
     // ---------------------------------------------------------- SEU hooks
 
     /// Flip a bit of the wave value in pipeline slot `index = row*D + s`.

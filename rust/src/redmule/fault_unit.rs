@@ -121,6 +121,15 @@ impl FaultUnit {
     pub fn flip_status_bit(&mut self, bit: u8) {
         self.status ^= 1 << (bit & 31);
     }
+
+    /// Fold the status/progress registers into a fast-forward digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        h.write_u32(self.status);
+        h.write_u32(self.detect_count);
+        h.write_u16(self.progress.0);
+        h.write_u16(self.progress.1);
+        h.write_bool(self.progress_valid);
+    }
 }
 
 #[cfg(test)]

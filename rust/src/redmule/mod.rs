@@ -187,6 +187,67 @@ impl RedMule {
         self.irq_line
     }
 
+    /// Copy another instance's complete mutable state into this one —
+    /// checkpoint restore for the campaign's fast-forward engine. Buffer
+    /// allocations are reused; the build parameters must match (a
+    /// checkpoint only makes sense on the geometry it was taken from).
+    pub fn restore_from(&mut self, snap: &RedMule) {
+        debug_assert_eq!(self.cfg, snap.cfg);
+        debug_assert_eq!(self.protection, snap.protection);
+        self.regfile = snap.regfile.clone();
+        self.sched = snap.sched;
+        self.sched_rep = snap.sched_rep;
+        self.ctrl_state = snap.ctrl_state;
+        self.ctrl_state_rep = snap.ctrl_state_rep;
+        self.array.restore_from(&snap.array);
+        self.streamers = snap.streamers;
+        self.fault_unit = snap.fault_unit;
+        self.abft.clone_from(&snap.abft);
+        self.perf = snap.perf;
+        self.cycle = snap.cycle;
+        self.irq_line = snap.irq_line;
+        self.mode = snap.mode;
+        self.wave_pipe.clone_from(&snap.wave_pipe);
+    }
+
+    /// Fold every piece of *behavioral* architectural state into a
+    /// fast-forward digest. Two instances with equal digests (and equal
+    /// TCDM contents) evolve identically under fault-free stepping, so
+    /// the campaign can substitute the recorded reference tail for the
+    /// rest of the simulation. Performance counters are excluded — they
+    /// never feed back into execution, and an absorbed fault may leave
+    /// them permanently offset (e.g. a corrupted store address that was
+    /// later overwritten).
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        self.regfile.digest_into(h);
+        self.sched.digest_into(h);
+        self.sched_rep.digest_into(h);
+        h.write_u8(self.ctrl_state);
+        h.write_u8(self.ctrl_state_rep);
+        self.array.digest_into(h);
+        for s in &self.streamers {
+            s.digest_into(h);
+        }
+        self.fault_unit.digest_into(h);
+        self.abft.digest_into(h);
+        h.write_u64(self.cycle);
+        h.write_bool(self.irq_line);
+        h.write_u8(match self.mode {
+            ExecMode::Performance => 0,
+            ExecMode::FaultTolerant => 1,
+        });
+        for w in &self.wave_pipe {
+            match w {
+                None => h.write_u8(0),
+                Some((nt, cc)) => {
+                    h.write_u8(1);
+                    h.write_u16(*nt);
+                    h.write_u16(*cc);
+                }
+            }
+        }
+    }
+
     pub fn state(&self) -> RunState {
         match self.ctrl_state {
             CTRL_DONE => RunState::Done,

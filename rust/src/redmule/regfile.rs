@@ -137,6 +137,18 @@ impl RegFile {
         true
     }
 
+    /// Fold both shadowed contexts (values, parity bits, active selector)
+    /// into a fast-forward digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        for ctx in 0..CONTEXTS {
+            for w in 0..WORDS {
+                h.write_u32(self.words[ctx][w]);
+                h.write_u8(self.parity[ctx][w]);
+            }
+        }
+        h.write_u8(self.active as u8);
+    }
+
     /// Site id of a configuration word (for the registry).
     pub fn word_site(ctx: usize, word: usize) -> SiteId {
         SiteId::new(Module::RegFile, regfile_unit::WORD, (ctx * WORDS + word) as u16)

@@ -252,6 +252,16 @@ impl Scheduler {
     pub fn compare_key(&self) -> (u8, u16, u16, u16, u16, u16) {
         (self.phase, self.mt, self.kt, self.nt, self.cc, self.ptr)
     }
+
+    /// Fold the full architectural state into a fast-forward digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        h.write_u8(self.phase);
+        h.write_u16(self.mt);
+        h.write_u16(self.kt);
+        h.write_u16(self.nt);
+        h.write_u16(self.cc);
+        h.write_u16(self.ptr);
+    }
 }
 
 #[cfg(test)]

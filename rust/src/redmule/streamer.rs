@@ -102,6 +102,12 @@ impl Streamer {
     pub fn reset(&mut self) {
         *self = Self::default();
     }
+
+    /// Fold the address-generator state into a fast-forward digest.
+    pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
+        h.write_u32(self.mask);
+        h.write_u32(self.mask_rep);
+    }
 }
 
 /// Clamp an effective address into the TCDM and align it to an element

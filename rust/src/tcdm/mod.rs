@@ -61,6 +61,12 @@ impl Tcdm {
         self.dirty = Some(Vec::with_capacity(1024));
     }
 
+    /// True once [`Tcdm::enable_dirty_tracking`] has been called — i.e.
+    /// [`Tcdm::restore_from`] actually undoes writes.
+    pub fn dirty_tracking_enabled(&self) -> bool {
+        self.dirty.is_some()
+    }
+
     /// Undo every logged write by copying the pristine codewords back.
     /// The two instances must share geometry. Clears the log.
     pub fn restore_from(&mut self, pristine: &Tcdm) {
@@ -79,6 +85,89 @@ impl Tcdm {
     fn mark_dirty(&mut self, bank: usize, row: usize) {
         if let Some(d) = &mut self.dirty {
             d.push((bank * self.words_per_bank + row) as u32);
+        }
+    }
+
+    /// Canonical difference against a pristine image: sorted, de-duplicated
+    /// `(flat word index, raw codeword)` pairs for every word whose stored
+    /// codeword differs from `pristine`'s. With dirty tracking enabled
+    /// (the campaign hot path) only the logged words are inspected;
+    /// without it the whole memory is scanned. Words that were written
+    /// and later restored to their pristine value are *not* reported, so
+    /// two instances with equal contents always produce equal deltas
+    /// regardless of their write histories.
+    pub fn dirty_delta(&self, pristine: &Tcdm) -> Vec<(u32, u64)> {
+        assert_eq!(self.n_banks, pristine.n_banks);
+        assert_eq!(self.words_per_bank, pristine.words_per_bank);
+        let mut delta = Vec::new();
+        let collect = |delta: &mut Vec<(u32, u64)>, idx: u32| {
+            let (b, r) = (
+                (idx as usize) / self.words_per_bank,
+                (idx as usize) % self.words_per_bank,
+            );
+            let cw = self.banks[b][r];
+            if cw != pristine.banks[b][r] {
+                delta.push((idx, cw));
+            }
+        };
+        match &self.dirty {
+            Some(log) => {
+                let mut idxs = log.clone();
+                idxs.sort_unstable();
+                idxs.dedup();
+                for idx in idxs {
+                    collect(&mut delta, idx);
+                }
+            }
+            None => {
+                for idx in 0..(self.n_banks * self.words_per_bank) as u32 {
+                    collect(&mut delta, idx);
+                }
+            }
+        }
+        delta
+    }
+
+    /// Copy-on-write restore to a checkpointed state: the caller first
+    /// [`Tcdm::restore_from`]s the pristine image (undoing this run's
+    /// writes), then applies the checkpoint's recorded delta on top. The
+    /// applied words are logged as dirty so a later restore undoes them
+    /// too.
+    pub fn apply_delta(&mut self, delta: &[(u32, u64)]) {
+        for &(idx, cw) in delta {
+            let (b, r) = (
+                (idx as usize) / self.words_per_bank,
+                (idx as usize) % self.words_per_bank,
+            );
+            self.banks[b][r] = cw;
+            self.mark_dirty(b, r);
+        }
+    }
+
+    /// Linear word index (`byte_addr / 4`) of a flat dirty-log index.
+    /// The log and the deltas use the bank-major encoding
+    /// `bank * words_per_bank + row`, while task layouts address memory
+    /// linearly through the bank interleaving — this is the inverse of
+    /// [`Tcdm::locate`]'s mapping.
+    pub fn linear_word_of(&self, flat_idx: u32) -> u32 {
+        let bank = (flat_idx as usize) / self.words_per_bank;
+        let row = (flat_idx as usize) % self.words_per_bank;
+        (row * self.n_banks + bank) as u32
+    }
+
+    /// Fold the canonical delta vs. `pristine` into a state digest (the
+    /// TCDM half of the fast-forward convergence digest).
+    pub fn digest_delta_into(&self, pristine: &Tcdm, h: &mut crate::util::digest::Fnv64) {
+        Self::digest_delta_entries(&self.dirty_delta(pristine), h)
+    }
+
+    /// Fold an already-computed canonical delta into a digest — the
+    /// byte stream [`Tcdm::digest_delta_into`] produces, without
+    /// recomputing the delta.
+    pub fn digest_delta_entries(delta: &[(u32, u64)], h: &mut crate::util::digest::Fnv64) {
+        for &(idx, cw) in delta {
+            h.write_u32(idx);
+            h.write_u64(cw);
         }
     }
 
@@ -285,6 +374,64 @@ mod tests {
         t.write_word(4, 9);
         t.restore_from(&pristine);
         assert_eq!(t.read_word(4).0, 0xAAAA_0001);
+    }
+
+    #[test]
+    fn dirty_delta_is_canonical_and_restorable() {
+        let mut pristine = Tcdm::new(4, 1024);
+        for i in 0..16u32 {
+            pristine.write_word(i * 4, 0x5500_0000 | i);
+        }
+        let mut t = pristine.clone();
+        t.enable_dirty_tracking();
+        t.write_word(8, 0xAAAA_AAAA);
+        t.write_word(40, 0xBBBB_BBBB);
+        t.write_word(8, 0xAAAA_AAAA); // duplicate write, one delta entry
+        t.write_word(24, 0x5500_0006); // rewritten with the pristine value
+        let delta = t.dirty_delta(&pristine);
+        assert_eq!(delta.len(), 2, "{delta:?}");
+        assert!(delta.windows(2).all(|w| w[0].0 < w[1].0), "sorted");
+        // A scan without dirty tracking finds the identical delta.
+        let mut untracked = pristine.clone();
+        untracked.write_word(8, 0xAAAA_AAAA);
+        untracked.write_word(40, 0xBBBB_BBBB);
+        assert_eq!(untracked.dirty_delta(&pristine), delta);
+        // Restore + apply reproduces the checkpointed contents exactly,
+        // and the applied words stay undoable.
+        let mut u = pristine.clone();
+        u.enable_dirty_tracking();
+        u.write_word(100, 7); // unrelated write the restore must undo
+        u.restore_from(&pristine);
+        u.apply_delta(&delta);
+        assert_eq!(u.read_word(8).0, 0xAAAA_AAAA);
+        assert_eq!(u.read_word(40).0, 0xBBBB_BBBB);
+        assert_eq!(u.read_word(100).0, 0);
+        assert_eq!(u.dirty_delta(&pristine), delta);
+        u.restore_from(&pristine);
+        assert!(u.dirty_delta(&pristine).is_empty());
+        // Equal contents => equal digests, different => different.
+        use crate::util::digest::Fnv64;
+        let mut h1 = Fnv64::new();
+        t.digest_delta_into(&pristine, &mut h1);
+        let mut h2 = Fnv64::new();
+        untracked.digest_delta_into(&pristine, &mut h2);
+        assert_eq!(h1.finish(), h2.finish());
+        let mut h3 = Fnv64::new();
+        pristine.digest_delta_into(&pristine, &mut h3);
+        assert_ne!(h1.finish(), h3.finish());
+    }
+
+    #[test]
+    fn linear_word_of_inverts_the_bank_interleaving() {
+        // words_per_bank = 256, n_banks = 8: every linear word maps to
+        // flat `bank * words_per_bank + row` (the dirty-log encoding)
+        // and back.
+        let t = Tcdm::new(8, 1024);
+        for word in 0..2048u32 {
+            let (bank, row) = t.locate(word * 4);
+            let flat = (bank * t.words_per_bank + row) as u32;
+            assert_eq!(t.linear_word_of(flat), word, "word {word}");
+        }
     }
 
     #[test]

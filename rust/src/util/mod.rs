@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic PRNGs, bit helpers, statistics.
+//! Small shared utilities: deterministic PRNGs, bit helpers, statistics,
+//! state digests.
 
 pub mod bits;
+pub mod digest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,224 @@
+//! A/B harness for the checkpointed fast-forward injection engine: the
+//! fast path must be **bit-identical** to the direct path — same outcome
+//! counts at campaign level, same `RunReport` field for field at
+//! single-run level — across protections, fault models, multi-fault
+//! plans and checkpoint intervals (including the K=1 and K>horizon edge
+//! cases). Any missed field in the snapshot/restore/digest machinery
+//! shows up here as a count diff, not as silently corrupted Table-1
+//! classifications.
+
+use redmule_ft::campaign::{problem_seed, Campaign, CampaignConfig};
+use redmule_ft::cluster::{RecoveryPolicy, System};
+use redmule_ft::fault::{FaultModel, FaultRegistry};
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+use redmule_ft::util::rng::Xoshiro256;
+
+type Counts = (u64, u64, u64, u64, u64, u64);
+
+fn counts(r: &redmule_ft::campaign::CampaignResult) -> Counts {
+    (
+        r.correct_no_retry,
+        r.correct_with_retry,
+        r.incorrect,
+        r.timeout,
+        r.applied,
+        r.faults_applied,
+    )
+}
+
+fn run_pair(mut cfg: CampaignConfig) -> (Counts, Counts) {
+    cfg.fast_forward = false;
+    let direct = Campaign::run(&cfg).unwrap();
+    cfg.fast_forward = true;
+    let fast = Campaign::run(&cfg).unwrap();
+    assert_eq!(direct.total, fast.total);
+    (counts(&direct), counts(&fast))
+}
+
+#[test]
+fn fast_forward_matches_direct_across_all_protections() {
+    for protection in [
+        Protection::Baseline,
+        Protection::Data,
+        Protection::Full,
+        Protection::PerCe,
+        Protection::Abft,
+    ] {
+        let mut cfg = CampaignConfig::table1(protection, 300, 0xFA57);
+        cfg.threads = 2;
+        let (d, f) = run_pair(cfg);
+        assert_eq!(d, f, "{protection:?}: fast path diverged from direct");
+    }
+}
+
+#[test]
+fn fast_forward_matches_direct_across_checkpoint_intervals() {
+    // K = 1 (checkpoint every cycle), an awkward prime, auto, and
+    // K > horizon (only checkpoint 0 exists: pure direct-from-start with
+    // convergence probes never firing).
+    for k in [1u64, 7, 0, 100_000] {
+        let mut cfg = CampaignConfig::table1(Protection::Baseline, 250, 0xC4EC);
+        cfg.threads = 2;
+        cfg.checkpoint_interval = k;
+        let (d, f) = run_pair(cfg);
+        assert_eq!(d, f, "interval {k}: fast path diverged from direct");
+    }
+}
+
+#[test]
+fn fast_forward_matches_direct_on_multi_fault_plans() {
+    for (faults, model) in [
+        (3usize, FaultModel::Independent),
+        (3, FaultModel::Burst),
+        (3, FaultModel::SiteBurst),
+        (2, FaultModel::SiteBurst),
+    ] {
+        for protection in [Protection::Baseline, Protection::Data] {
+            let mut cfg = CampaignConfig::table1(protection, 200, 0xB00B5);
+            cfg.threads = 2;
+            cfg.faults_per_run = faults;
+            cfg.fault_model = model;
+            let (d, f) = run_pair(cfg);
+            assert_eq!(d, f, "{protection:?}/{model:?}/{faults} faults");
+        }
+    }
+}
+
+#[test]
+fn fast_forward_is_thread_layout_invariant_too() {
+    let mut c1 = CampaignConfig::table1(Protection::Data, 200, 42);
+    c1.threads = 1;
+    let mut c4 = c1.clone();
+    c4.threads = 4;
+    let r1 = Campaign::run(&c1).unwrap();
+    let r4 = Campaign::run(&c4).unwrap();
+    assert_eq!(counts(&r1), counts(&r4));
+}
+
+/// Field-for-field `RunReport` equivalence on individually sampled plans:
+/// stronger than the count-level campaign comparison because it also pins
+/// cycles, config cycles, retries, causes, IRQ observation and the exact
+/// Z bits of every run — including aborted/retried/timed-out ones that
+/// never converge.
+#[test]
+fn per_run_reports_are_field_identical_between_engines() {
+    // Full exercises the FT abort/retry (and the retry shortcut), PerCe
+    // the performance-mode abort path with its distinct retry gating,
+    // Abft the writeback-verification/band-recovery flow.
+    for protection in [Protection::Full, Protection::PerCe, Protection::Abft] {
+        let cfg = RedMuleConfig::paper();
+        let spec = GemmSpec::paper_workload();
+        let problem = GemmProblem::random(&spec, problem_seed(0xAB));
+        let mode = if protection.has_data_protection() {
+            ExecMode::FaultTolerant
+        } else {
+            ExecMode::Performance
+        };
+        let recovery = if protection.has_abft_checksums() {
+            RecoveryPolicy::TileLevel
+        } else {
+            RecoveryPolicy::FullRestart
+        };
+        let stage = || {
+            let mut sys = System::new(cfg, protection).with_recovery(recovery);
+            sys.redmule.reset();
+            let layout = sys.stage(&problem).unwrap();
+            let pristine = sys.tcdm.clone();
+            sys.tcdm.enable_dirty_tracking();
+            (sys, layout, pristine)
+        };
+        let (mut sys_ref, layout, pristine_ref) = stage();
+        let trace = sys_ref
+            .record_reference(&layout, &pristine_ref, mode, 16)
+            .unwrap()
+            .expect("default-tolerance reference must be clean");
+        let (mut sys_d, _, pristine_d) = stage();
+        let (mut sys_f, _, pristine_f) = stage();
+        let registry = FaultRegistry::new(cfg, protection);
+        for i in 0..150u64 {
+            let mut rng = Xoshiro256::new(0xF00D + i);
+            let n = 1 + (i % 3) as usize;
+            let plans = registry.sample_plans(trace.cycles, n, FaultModel::Independent, &mut rng);
+            sys_d.tcdm.restore_from(&pristine_d);
+            sys_d.redmule.reset();
+            let d = sys_d.run_staged_with_faults(&layout, mode, &plans).unwrap();
+            let f = sys_f
+                .run_staged_with_faults_ff(&layout, mode, &plans, &trace, &pristine_f)
+                .unwrap();
+            assert_eq!(d.outcome, f.outcome, "{protection:?} run {i}: {plans:?}");
+            assert_eq!(d.cycles, f.cycles, "{protection:?} run {i} cycles");
+            assert_eq!(
+                d.config_cycles, f.config_cycles,
+                "{protection:?} run {i} config cycles"
+            );
+            assert_eq!(d.retries, f.retries, "{protection:?} run {i} retries");
+            assert_eq!(
+                d.fault_causes, f.fault_causes,
+                "{protection:?} run {i} causes"
+            );
+            assert_eq!(d.irq_seen, f.irq_seen, "{protection:?} run {i} irq");
+            assert_eq!(
+                d.faults_applied, f.faults_applied,
+                "{protection:?} run {i} applied"
+            );
+            assert_eq!(d.abft, f.abft, "{protection:?} run {i} abft info");
+            assert_eq!(
+                d.z.bits(),
+                f.z.bits(),
+                "{protection:?} run {i}: Z regions must be bit-identical"
+            );
+        }
+    }
+}
+
+/// The reference trace itself must agree with the plain fault-free run it
+/// replaces: same horizon, same golden result, checkpoint cycles on the
+/// interval grid, and a clean-plan fast call returning the clean report.
+#[test]
+fn reference_trace_matches_the_fault_free_run() {
+    let cfg = RedMuleConfig::paper();
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, problem_seed(7));
+    let golden = problem.golden_z();
+    let mut plain = System::new(cfg, Protection::Full);
+    let clean = plain.run_gemm(&problem, ExecMode::FaultTolerant).unwrap();
+
+    let mut sys = System::new(cfg, Protection::Full);
+    sys.redmule.reset();
+    let layout = sys.stage(&problem).unwrap();
+    let pristine = sys.tcdm.clone();
+    sys.tcdm.enable_dirty_tracking();
+    let interval = 24;
+    let trace = sys
+        .record_reference(&layout, &pristine, ExecMode::FaultTolerant, interval)
+        .unwrap()
+        .expect("fault-free Full-build reference must be clean");
+    assert_eq!(trace.cycles, clean.cycles, "horizon must match");
+    assert_eq!(trace.config_cycles, clean.config_cycles);
+    assert_eq!(trace.z.bits(), golden.bits());
+    assert!(!trace.checkpoints.is_empty());
+    for (i, cp) in trace.checkpoints.iter().enumerate() {
+        assert_eq!(cp.cycle, i as u64 * interval, "checkpoint {i} cycle");
+        assert!(cp.cycle < trace.cycles);
+    }
+    assert!(trace.checkpoints[0].tcdm_delta.is_empty(), "cp0 is pristine");
+    let clean_ff = trace.clean_report();
+    assert_eq!(clean_ff.outcome, clean.outcome);
+    assert_eq!(clean_ff.cycles, clean.cycles);
+    assert_eq!(clean_ff.z.bits(), clean.z.bits());
+    // An empty plan list through the fast API returns the clean report
+    // without touching the simulator.
+    let mut sys2 = System::new(cfg, Protection::Full);
+    sys2.redmule.reset();
+    let layout2 = sys2.stage(&problem).unwrap();
+    let pristine2 = sys2.tcdm.clone();
+    sys2.tcdm.enable_dirty_tracking();
+    assert_eq!(layout2, layout);
+    let r = sys2
+        .run_staged_with_faults_ff(&layout2, ExecMode::FaultTolerant, &[], &trace, &pristine2)
+        .unwrap();
+    assert_eq!(r.outcome, clean.outcome);
+    assert_eq!(r.cycles, clean.cycles);
+    assert_eq!(r.z.bits(), clean.z.bits());
+}
