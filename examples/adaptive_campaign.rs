@@ -1,0 +1,82 @@
+//! Adaptive statistical campaign walkthrough: run the Table-1 workload
+//! on the data-protected build until every outcome rate is pinned to a
+//! ±2 % half-width at 95 % confidence, with stratified allocation over
+//! the fault-site registry's area strata — then print the estimates the
+//! way a paper table would quote them.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_campaign
+//! ```
+
+use redmule_ft::campaign::{Campaign, CampaignConfig, OUTCOMES};
+use redmule_ft::redmule::Protection;
+
+fn main() -> redmule_ft::Result<()> {
+    let mut cfg = CampaignConfig::table1(Protection::Data, 20_000, 2025);
+    cfg.precision_target = 0.02; // ±2 percentage points at 95 %
+    cfg.batch_size = 500;
+    cfg.min_injections = 500;
+    cfg.stratify = true;
+
+    println!(
+        "adaptive campaign: {} build, cap {} injections, target ±{} (95 % half-width)\n",
+        cfg.protection.name(),
+        cfg.injections,
+        cfg.precision_target
+    );
+    let r = Campaign::run(&cfg)?;
+
+    println!(
+        "stopped after {} injections in {} batches ({})\n",
+        r.total,
+        r.batches,
+        if r.stopped_early {
+            "early: every outcome CI met the target"
+        } else {
+            "at the injection cap"
+        }
+    );
+
+    println!(
+        "{:<22} {:>7} {:>9}  {:^19}  {:^19}",
+        "outcome", "count", "rate", "95% Wilson CI", "95% exact CI"
+    );
+    for o in OUTCOMES {
+        let e = r.estimate_of(o);
+        println!(
+            "{:<22} {:>7} {:>8.4} %  [{:>7.4}, {:>7.4}] %  [{:>7.4}, {:>7.4}] %",
+            o.name(),
+            e.count,
+            100.0 * e.rate,
+            100.0 * e.ci_lo,
+            100.0 * e.ci_hi,
+            100.0 * e.exact_lo,
+            100.0 * e.exact_hi
+        );
+    }
+    let fe = r.functional_error_estimate();
+    if fe.count == 0 {
+        println!(
+            "{:<22} {:>7}   -> < {:.3e} at 95 % (rule-of-three bound)",
+            "functional error", 0, fe.upper95()
+        );
+    } else {
+        println!(
+            "{:<22} {:>7} {:>8.4} %  [{:>7.4}, {:>7.4}] %",
+            "functional error",
+            fe.count,
+            100.0 * fe.rate,
+            100.0 * fe.ci_lo,
+            100.0 * fe.ci_hi
+        );
+    }
+
+    println!("\nper-stratum allocation (area share vs injections):");
+    for s in &r.strata {
+        println!(
+            "  {:<10} share {:>6.3}  n {:>6}  [no-retry {:>5}, retry {:>4}, incorrect {:>4}, timeout {:>4}]",
+            s.name, s.share, s.n, s.outcomes[0], s.outcomes[1], s.outcomes[2], s.outcomes[3]
+        );
+    }
+    Ok(())
+}

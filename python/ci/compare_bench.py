@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""CI bench-trajectory gate: fail when throughput regresses too far.
+
+Compares a freshly measured bench JSON against the committed
+previous-run snapshot (``ci/bench-baselines/``). Handles both schemas:
+
+* ``redmule-ft/bench-campaign-v1`` — gate on the aggregate fast-engine
+  campaign throughput (mean of ``runs_per_sec_fast`` over the protection
+  columns), and warn per column;
+* ``redmule-ft/bench-sweep-v1``   — gate on the sweep's total
+  ``runs_per_sec``.
+
+A missing baseline is a *bootstrap*, not a failure: the step prints how
+to commit one (download the artifact of this run) and exits 0. CI
+runners are shared and noisy, so the default gate is the ISSUE's 30 %;
+tune with ``--max-regress``.
+
+Usage:
+    compare_bench.py --current FILE --baseline FILE [--max-regress 0.30]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def metric(d):
+    schema = d.get("schema")
+    if schema == "redmule-ft/bench-campaign-v1":
+        cols = d["columns"]
+        per = {c["protection"]: c["runs_per_sec_fast"] for c in cols}
+        return sum(per.values()) / len(per), per
+    if schema == "redmule-ft/bench-sweep-v1":
+        return d["runs_per_sec"], {"sweep": d["runs_per_sec"]}
+    print(f"compare_bench: unknown schema {schema}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.30)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"compare_bench: no committed baseline at {args.baseline} — "
+            "bootstrap: download this run's bench artifact and commit it "
+            "there to arm the trajectory gate. Skipping."
+        )
+        return
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    if cur.get("schema") != base.get("schema"):
+        print(
+            f"compare_bench: schema mismatch (current {cur.get('schema')} vs "
+            f"baseline {base.get('schema')}) — re-baseline.",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+    cur_agg, cur_per = metric(cur)
+    base_agg, base_per = metric(base)
+
+    for name, b in sorted(base_per.items()):
+        c = cur_per.get(name)
+        if c is None:
+            print(f"compare_bench: WARN column {name} missing from current run")
+            continue
+        delta = (c - b) / b if b > 0 else 0.0
+        print(f"compare_bench: {name:<10} baseline {b:>10.1f}  current {c:>10.1f}  ({delta:+.1%})")
+
+    if base_agg <= 0:
+        print("compare_bench: degenerate baseline (<= 0), skipping gate")
+        return
+    ratio = cur_agg / base_agg
+    print(
+        f"compare_bench: aggregate baseline {base_agg:.1f} vs current {cur_agg:.1f} "
+        f"({ratio - 1.0:+.1%}, gate -{args.max_regress:.0%})"
+    )
+    if ratio < 1.0 - args.max_regress:
+        print(
+            f"compare_bench: FAIL — throughput regressed more than "
+            f"{args.max_regress:.0%} against the committed snapshot",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print("compare_bench: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""CI validator for the sweep JSON schemas.
+
+Validates one document against the schema family it claims:
+
+* ``redmule-ft/sweep-v1``      — the legacy flat-counts grid document
+* ``redmule-ft/sweep-v2``      — per-outcome {count, rate, ci_lo, ci_hi},
+                                 n_injections / stopped_early per cell
+* ``redmule-ft/bench-sweep-v1`` — the wall-clock sidecar
+
+Usage:
+    validate_sweep.py FILE --schema v1|v2|bench-sweep
+        [--cells N] [--injections N] [--max-injections N]
+        [--fault-model M] [--expect-stopped-early]
+
+Exits non-zero with a diagnostic on the first violation.
+"""
+
+import argparse
+import json
+import sys
+
+PROTECTIONS = ("baseline", "data", "full", "per-ce", "abft")
+OUTCOME_KEYS = ("correct_no_retry", "correct_with_retry", "incorrect", "timeout")
+EPS = 1e-6
+
+
+def fail(msg):
+    print(f"validate_sweep: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_coords(c):
+    if not {"l", "h", "p"} <= set(c["geometry"]):
+        fail(f"bad geometry in {c}")
+    if not {"m", "n", "k"} <= set(c["shape"]):
+        fail(f"bad shape in {c}")
+    if c["protection"] not in PROTECTIONS:
+        fail(f"unknown protection {c['protection']}")
+    if c["faults"] < 1:
+        fail(f"bad fault count in {c}")
+
+
+def check_v1(d, args):
+    if d["schema"] != "redmule-ft/sweep-v1":
+        fail(f"schema {d['schema']} != redmule-ft/sweep-v1")
+    cells = d["cells"]
+    if d["total_runs"] != sum(c["total"] for c in cells):
+        fail("total_runs mismatch")
+    for c in cells:
+        check_coords(c)
+        o = c["outcomes"]
+        if c["total"] != sum(o[k] for k in OUTCOME_KEYS):
+            fail(f"outcome counts do not partition the cell: {c}")
+        if not 0.0 <= c["rates"]["functional_error"] <= 1.0:
+            fail(f"bad functional_error rate: {c}")
+        if args.injections is not None and c["total"] != args.injections:
+            fail(f"cell ran {c['total']} != {args.injections}")
+    return cells
+
+
+def check_outcome_obj(tag, o, n):
+    for key in ("count", "rate", "ci_lo", "ci_hi"):
+        if key not in o:
+            fail(f"{tag}: missing {key}")
+    if not 0 <= o["count"] <= n:
+        fail(f"{tag}: count {o['count']} out of range (n={n})")
+    if abs(o["rate"] - o["count"] / max(n, 1)) > 1e-4 and "weighted" not in tag:
+        # Stratified cells reweight the rate; pooled ones must match.
+        fail(f"{tag}: rate {o['rate']} inconsistent with count/n")
+    if not (0.0 - EPS <= o["ci_lo"] <= o["ci_hi"] <= 1.0 + EPS):
+        fail(f"{tag}: malformed interval [{o['ci_lo']}, {o['ci_hi']}]")
+    if "upper95" in o and o["upper95"] + EPS < o["rate"]:
+        fail(f"{tag}: upper95 below the point estimate")
+
+
+def check_v2(d, args):
+    if d["schema"] != "redmule-ft/sweep-v2":
+        fail(f"schema {d['schema']} != redmule-ft/sweep-v2")
+    if not isinstance(d["stratified"], bool):
+        fail("stratified must be a bool")
+    if d["precision_target"] < 0:
+        fail("negative precision_target")
+    cells = d["cells"]
+    if d["total_runs"] != sum(c["n_injections"] for c in cells):
+        fail("total_runs mismatch")
+    cap = args.max_injections or args.injections
+    for c in cells:
+        check_coords(c)
+        n = c["n_injections"]
+        if n < 1:
+            fail(f"cell ran no injections: {c}")
+        if cap is not None and n > cap:
+            fail(f"cell ran {n} > cap {cap}")
+        if (
+            args.injections is not None
+            and d["precision_target"] == 0
+            and n != args.injections
+        ):
+            fail(f"fixed-budget cell ran {n} != {args.injections}")
+        if not isinstance(c["stopped_early"], bool):
+            fail(f"stopped_early must be a bool: {c}")
+        if c["batches"] < 1:
+            fail(f"bad batch count: {c}")
+        tagbase = f"{c['protection']}/{c['faults']}f"
+        weighted = "/weighted" if d["stratified"] else ""
+        counts = 0
+        for key in OUTCOME_KEYS:
+            o = c["outcomes"][key]
+            check_outcome_obj(f"{tagbase}/{key}{weighted}", o, n)
+            counts += o["count"]
+        if counts != n:
+            fail(f"{tagbase}: outcome counts {counts} != n_injections {n}")
+        fe = c["functional_error"]
+        check_outcome_obj(f"{tagbase}/functional_error{weighted}", fe, n)
+        if "upper95" not in fe:
+            fail(f"{tagbase}: functional_error must carry upper95")
+        expect_fe = (
+            c["outcomes"]["incorrect"]["count"] + c["outcomes"]["timeout"]["count"]
+        )
+        if fe["count"] != expect_fe:
+            fail(f"{tagbase}: functional_error count {fe['count']} != {expect_fe}")
+        if args.expect_stopped_early:
+            if not c["stopped_early"]:
+                fail(f"{tagbase}: expected an early stop, ran {n}")
+            if cap is not None and n >= cap:
+                fail(f"{tagbase}: early stop cannot use the whole cap")
+    return cells
+
+
+def check_bench_sweep(d, args):
+    if d["schema"] != "redmule-ft/bench-sweep-v1":
+        fail(f"schema {d['schema']} != redmule-ft/bench-sweep-v1")
+    # Totals are rounded to 3 decimals / 1 decimal, so tiny smoke grids
+    # can legitimately round to zero — only negatives are malformed.
+    if d["wall_seconds"] < 0:
+        fail("negative wall_seconds")
+    if d["runs_per_sec"] < 0:
+        fail("negative runs_per_sec")
+    if d["total_runs"] != sum(c["n_injections"] for c in d["cells"]):
+        fail("total_runs mismatch")
+    for c in d["cells"]:
+        check_coords(c)
+        if c["n_injections"] < 1:
+            fail(f"cell ran no injections: {c}")
+        if c["wall_seconds"] < 0 or c["injections_per_sec"] < 0:
+            fail(f"negative timing: {c}")
+    return d["cells"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("file")
+    ap.add_argument("--schema", choices=("v1", "v2", "bench-sweep"), required=True)
+    ap.add_argument("--cells", type=int, default=None)
+    ap.add_argument("--injections", type=int, default=None)
+    ap.add_argument("--max-injections", type=int, default=None)
+    ap.add_argument("--fault-model", default=None)
+    ap.add_argument("--expect-stopped-early", action="store_true")
+    args = ap.parse_args()
+
+    with open(args.file) as f:
+        d = json.load(f)
+
+    if args.fault_model is not None and d.get("fault_model") != args.fault_model:
+        fail(f"fault_model {d.get('fault_model')} != {args.fault_model}")
+
+    cells = {"v1": check_v1, "v2": check_v2, "bench-sweep": check_bench_sweep}[
+        args.schema
+    ](d, args)
+
+    if args.cells is not None and len(cells) != args.cells:
+        fail(f"{len(cells)} cells != expected {args.cells}")
+
+    print(
+        f"validate_sweep: OK ({args.schema}, {len(cells)} cells, "
+        f"{sum(c.get('n_injections', c.get('total', 0)) for c in cells)} runs)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -51,16 +51,47 @@
 //! `fastforward_speedup` bench assert both the equivalence and the
 //! speedup.
 
+//! # Statistical (adaptive) campaigns
+//!
+//! A fixed injection budget answers the wrong question: the paper's "no
+//! functional errors after 1 M injections" is a *statistical* claim — an
+//! upper bound on the residual error rate — and different cells of a
+//! sweep need very different sample sizes to pin their rates to the same
+//! precision. Setting [`CampaignConfig::precision_target`] `> 0` turns
+//! the campaign sequential: it runs deterministic batches of
+//! [`CampaignConfig::batch_size`] injections and stops as soon as every
+//! tracked outcome rate's 95 % Wilson half-width is at or below the
+//! target (never before [`CampaignConfig::min_injections`], never past
+//! the [`CampaignConfig::max_injections`] cap). Because every
+//! injection's fault plan is still a pure function of `(seed, index)`
+//! and batch boundaries depend only on merged batch counts, the stop
+//! point and all counts are **thread-count invariant**, and the engine
+//! sits directly on top of the PR 3 fast-forward machinery (one
+//! reference trace per campaign, reused by every batch).
+//!
+//! With [`CampaignConfig::stratify`] the per-batch injections are further
+//! allocated over the fault-site registry's area strata
+//! ([`crate::fault::registry::stratum_of_module`]): batch 1 splits
+//! proportional to stratum weight, later batches re-allocate
+//! Neyman-style (`∝ W_h·s_h` on the functional-error rate, floored so no
+//! stratum starves), so rare-but-critical populations — register file,
+//! scheduler, ABFT checksum unit — receive enough samples to bound their
+//! outcome rates. Stratified results are reported with the standard
+//! area-weighted estimator ([`crate::util::stats::OutcomeEstimate`]).
+
 pub mod sweep;
 
 pub use sweep::{Sweep, SweepCell, SweepConfig, SweepResult};
 
-use crate::cluster::{HostOutcome, RecoveryPolicy, System};
+use crate::cluster::{HostOutcome, RecoveryPolicy, RefTrace, System};
 use crate::fault::{FaultModel, FaultRegistry};
 use crate::golden::{GemmProblem, GemmSpec, Mat, ABFT_TOL_FACTOR};
-use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+use crate::redmule::{ExecMode, Protection, RedMuleConfig, TaskLayout};
+use crate::tcdm::Tcdm;
 use crate::util::rng::{mix64, Xoshiro256};
-use crate::util::stats::{conservative_upper_rate, Rate};
+use crate::util::stats::{
+    conservative_upper_rate, neyman_allocation, OutcomeEstimate, Rate, StratumSample,
+};
 use crate::{Error, Result};
 
 // ------------------------------------------------- RNG stream domains
@@ -121,7 +152,25 @@ impl Outcome {
     pub fn is_functional_error(self) -> bool {
         matches!(self, Outcome::Incorrect | Outcome::Timeout)
     }
+
+    /// Canonical index into per-outcome arrays (the [`OUTCOMES`] order).
+    pub fn index(self) -> usize {
+        match self {
+            Outcome::CorrectNoRetry => 0,
+            Outcome::CorrectWithRetry => 1,
+            Outcome::Incorrect => 2,
+            Outcome::Timeout => 3,
+        }
+    }
 }
+
+/// The four Table-1 outcome classes in canonical order.
+pub const OUTCOMES: [Outcome; 4] = [
+    Outcome::CorrectNoRetry,
+    Outcome::CorrectWithRetry,
+    Outcome::Incorrect,
+    Outcome::Timeout,
+];
 
 /// Classify one hosted run against the golden result.
 pub fn classify(report: &crate::cluster::RunReport, golden: &Mat) -> Outcome {
@@ -180,6 +229,28 @@ pub struct CampaignConfig {
     /// more prefix and detect convergence sooner but cost more digest
     /// probes and snapshot memory.
     pub checkpoint_interval: u64,
+    /// Adaptive precision target: run in sequential batches and stop as
+    /// soon as every tracked outcome rate's 95 % CI half-width is at or
+    /// below this value (an absolute rate, e.g. `0.01` = ±1 percentage
+    /// point). `0` disables the adaptive engine — the campaign runs the
+    /// fixed `injections` budget exactly as before.
+    pub precision_target: f64,
+    /// Adaptive floor: the stop rule may not fire before this many
+    /// injections (`0` = after the first batch).
+    pub min_injections: u64,
+    /// Adaptive cap: hard upper budget (`0` = use `injections`).
+    pub max_injections: u64,
+    /// Batch size of the sequential engine (`0` = auto: `cap / 16`
+    /// clamped to `[100, 10000]`). Batch boundaries are part of the
+    /// deterministic schedule — the same seed, target and batch size
+    /// stop at the same injection count on any thread layout.
+    pub batch_size: u64,
+    /// Stratified allocation over the fault-site registry's area strata
+    /// with Neyman-style reallocation between batches (see the module
+    /// docs). Changes which sites injection index `i` may strike, so a
+    /// stratified campaign is a different (deliberately designed) sample
+    /// than an unstratified one.
+    pub stratify: bool,
 }
 
 impl CampaignConfig {
@@ -213,8 +284,26 @@ impl CampaignConfig {
             abft_tol_factor: ABFT_TOL_FACTOR,
             fast_forward: true,
             checkpoint_interval: 0,
+            precision_target: 0.0,
+            min_injections: 0,
+            max_injections: 0,
+            batch_size: 0,
+            stratify: false,
         }
     }
+}
+
+/// Per-stratum tally of a stratified campaign.
+#[derive(Debug, Clone)]
+pub struct StratumStats {
+    /// Display name (see [`crate::fault::STRATUM_NAMES`]).
+    pub name: &'static str,
+    /// Normalized share of the population's sampling weight (`W_h`).
+    pub share: f64,
+    /// Injections allocated to the stratum so far.
+    pub n: u64,
+    /// Outcome counts in [`OUTCOMES`] order.
+    pub outcomes: [u64; 4],
 }
 
 /// Aggregated campaign results.
@@ -235,6 +324,13 @@ pub struct CampaignResult {
     pub faults_applied: u64,
     /// Wall-clock seconds and throughput of the campaign itself.
     pub wall_seconds: f64,
+    /// Batches the sequential engine ran (1 for fixed-budget campaigns).
+    pub batches: u64,
+    /// True when the precision target stopped the campaign before its
+    /// injection cap.
+    pub stopped_early: bool,
+    /// Per-stratum tallies (empty unless [`CampaignConfig::stratify`]).
+    pub strata: Vec<StratumStats>,
 }
 
 impl CampaignResult {
@@ -258,6 +354,69 @@ impl CampaignResult {
     /// conservatively assumed extra error (the paper's footnote a).
     pub fn conservative_upper(&self, count: u64) -> f64 {
         conservative_upper_rate(count, self.total)
+    }
+
+    /// Count of one outcome class.
+    pub fn count_of(&self, o: Outcome) -> u64 {
+        match o {
+            Outcome::CorrectNoRetry => self.correct_no_retry,
+            Outcome::CorrectWithRetry => self.correct_with_retry,
+            Outcome::Incorrect => self.incorrect,
+            Outcome::Timeout => self.timeout,
+        }
+    }
+
+    /// Rate estimate with 95 % confidence intervals for one outcome
+    /// class: pooled Wilson + Clopper–Pearson, or the area-weighted
+    /// stratified estimator when the campaign ran stratified.
+    pub fn estimate_of(&self, o: Outcome) -> OutcomeEstimate {
+        if self.strata.is_empty() {
+            OutcomeEstimate::pooled(self.count_of(o), self.total)
+        } else {
+            let samples: Vec<StratumSample> = self
+                .strata
+                .iter()
+                .map(|s| StratumSample {
+                    weight: s.share,
+                    count: s.outcomes[o.index()],
+                    n: s.n,
+                })
+                .collect();
+            OutcomeEstimate::stratified(&samples)
+        }
+    }
+
+    /// Rate estimate of the combined functional-error class
+    /// (incorrect + timeout) — the paper's headline quantity.
+    pub fn functional_error_estimate(&self) -> OutcomeEstimate {
+        if self.strata.is_empty() {
+            OutcomeEstimate::pooled(self.functional_errors(), self.total)
+        } else {
+            let samples: Vec<StratumSample> = self
+                .strata
+                .iter()
+                .map(|s| StratumSample {
+                    weight: s.share,
+                    count: s.outcomes[Outcome::Incorrect.index()]
+                        + s.outcomes[Outcome::Timeout.index()],
+                    n: s.n,
+                })
+                .collect();
+            OutcomeEstimate::stratified(&samples)
+        }
+    }
+
+    /// True when every tracked outcome rate's 95 % CI half-width is at
+    /// or below `target` — the adaptive engine's stop criterion. Tracked
+    /// rates are the four Table-1 classes *and* the combined
+    /// functional-error rate (the headline quantity users actually gate
+    /// on, whose interval can be wider than either component's).
+    pub fn meets_precision(&self, target: f64) -> bool {
+        self.total > 0
+            && self.functional_error_estimate().half_width() <= target
+            && OUTCOMES
+                .iter()
+                .all(|&o| self.estimate_of(o).half_width() <= target)
     }
 
     pub fn add(&mut self, outcome: Outcome, applied_faults: u32) {
@@ -285,7 +444,22 @@ impl CampaignResult {
             applied: 0,
             faults_applied: 0,
             wall_seconds: 0.0,
+            batches: 0,
+            stopped_early: false,
+            strata: Vec::new(),
         }
+    }
+
+    /// Fold a worker-local tally into the aggregate (count fields only;
+    /// config/time/strata stay with the aggregate).
+    fn merge_counts(&mut self, local: &CampaignResult) {
+        self.total += local.total;
+        self.correct_no_retry += local.correct_no_retry;
+        self.correct_with_retry += local.correct_with_retry;
+        self.incorrect += local.incorrect;
+        self.timeout += local.timeout;
+        self.applied += local.applied;
+        self.faults_applied += local.faults_applied;
     }
 }
 
@@ -355,23 +529,32 @@ impl Campaign {
                 crate::fault::MAX_PLANS_PER_RUN
             )));
         }
+        if !config.precision_target.is_finite() || config.precision_target < 0.0 {
+            return Err(Error::Config(
+                "campaign precision target must be finite and >= 0".into(),
+            ));
+        }
         let started = std::time::Instant::now();
         let registry = FaultRegistry::new(config.cfg, config.protection);
         let golden = problem.golden_z();
 
+        // Stage the workload exactly once per campaign: the DMA + ECC
+        // staging drive dominates setup cost, and the adaptive engine
+        // would otherwise repeat it per worker per batch. Every worker
+        // starts from a memcpy of this pristine image, and the
+        // fast-forward reference run is recorded on the very same
+        // staging, so worker state is bit-identical to the reference's.
+        let mut sys = Self::system(config);
+        sys.redmule.reset();
+        let layout = sys.stage(problem)?;
+        let pristine = sys.tcdm.clone();
+
         // Horizon for cycle sampling: the fault-free duration of the
         // workload in the campaign's execution mode, validated bit-exact
         // against golden. With the fast-forward engine the instrumented
-        // reference run doubles as the horizon run — recorded on the
-        // exact staging sequence the workers use, shared read-only by
-        // every worker — so the clean workload is stepped exactly once
-        // either way.
+        // reference run doubles as the horizon run.
         let mut trace = None;
         let horizon = if config.fast_forward {
-            let mut sys = Self::system(config);
-            sys.redmule.reset();
-            let layout = sys.stage(problem)?;
-            let pristine = sys.tcdm.clone();
             sys.tcdm.enable_dirty_tracking();
             match sys.record_reference(
                 &layout,
@@ -397,127 +580,325 @@ impl Campaign {
         } else {
             Self::fault_free_horizon(config, problem, &golden)?
         };
+        drop(sys);
         let trace = trace.as_ref();
 
-        let threads = config.threads.max(1);
-        let chunk = config.injections.div_ceil(threads as u64);
-        let mut result = CampaignResult::empty(config.clone());
+        // ---- Deterministic batch schedule (the adaptive engine). A
+        // fixed-budget campaign is the degenerate single-batch case, so
+        // both paths share one worker loop and one plan-stream layout.
+        let adaptive = config.precision_target > 0.0;
+        let cap = if adaptive && config.max_injections > 0 {
+            config.max_injections
+        } else {
+            config.injections
+        };
+        let batch_size = if !adaptive {
+            cap
+        } else if config.batch_size > 0 {
+            config.batch_size.min(cap).max(1)
+        } else {
+            (cap / 16).clamp(100, 10_000).min(cap).max(1)
+        };
+        let min_floor = if config.min_injections > 0 {
+            config.min_injections.min(cap)
+        } else {
+            batch_size
+        };
 
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            for t in 0..threads {
-                let lo = t as u64 * chunk;
-                let hi = ((t as u64 + 1) * chunk).min(config.injections);
-                if lo >= hi {
-                    break;
-                }
-                let registry = &registry;
-                let golden = &golden;
-                handles.push(scope.spawn(move || -> Result<CampaignResult> {
-                    let mut local = CampaignResult::empty(config.clone());
-                    let mut sys = Self::system(config);
-                    // Stage once, snapshot the TCDM image; every injected
-                    // run restores it with a memcpy instead of re-driving
-                    // the DMA + ECC encoders (§Perf: staging dominates
-                    // per-run cost on the small Table-1 workload).
-                    sys.redmule.reset();
-                    let layout = sys.stage(problem)?;
-                    let pristine = sys.tcdm.clone();
-                    sys.tcdm.enable_dirty_tracking();
-                    // Plan buffers, reused across every injection.
-                    let mut plans = Vec::with_capacity(config.faults_per_run);
-                    let mut live = Vec::with_capacity(config.faults_per_run);
-                    for i in lo..hi {
-                        // Per-injection RNG: deterministic regardless of
-                        // thread layout, in its own domain so no index can
-                        // replay the problem-generation stream.
-                        let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
-                        registry.sample_plans_into(
-                            horizon,
-                            config.faults_per_run,
-                            config.fault_model,
-                            &mut rng,
-                            &mut plans,
-                        );
-                        // Masking derate (see fault::registry::derating):
-                        // an un-latched pulse is a clean run by
-                        // construction — the fault-free execution was
-                        // verified against golden above, so skip the
-                        // simulation when nothing latches. A burst is one
-                        // physical event (one latch draw for the whole
-                        // plan); independent faults latch independently.
-                        use crate::fault::registry::derating;
-                        live.clear();
-                        match config.fault_model {
-                            FaultModel::Burst | FaultModel::SiteBurst => {
-                                // One physical event, ONE latch draw —
-                                // compared per plan, so a site burst
-                                // spanning sites of mixed kinds stays
-                                // correlated while each site keeps its
-                                // own masking factor. A single-kind
-                                // burst (always true for `Burst`, whose
-                                // plans share one site) latches
-                                // all-or-nothing as before.
-                                let u = rng.next_f64();
-                                live.extend(
-                                    plans
-                                        .iter()
-                                        .copied()
-                                        .filter(|p| u < derating::for_kind(p.kind)),
-                                );
-                            }
-                            FaultModel::Independent => {
-                                for &plan in &plans {
-                                    if rng.next_f64() < derating::for_kind(plan.kind) {
-                                        live.push(plan);
-                                    }
-                                }
-                            }
-                        }
-                        if live.is_empty() {
-                            local.add(Outcome::CorrectNoRetry, 0);
-                            continue;
-                        }
-                        let report = match trace {
-                            // Fast path: checkpoint restore + convergence
-                            // early-exit (bit-identical results; see
-                            // `System::run_staged_with_faults_ff`). The
-                            // restore is internal to the call.
-                            Some(tr) => sys.run_staged_with_faults_ff(
-                                &layout,
-                                config.mode,
-                                &live,
-                                tr,
-                                &pristine,
-                            )?,
-                            // Direct path: undo the previous run's writes
-                            // and re-step the whole workload from cycle 0.
-                            None => {
-                                sys.tcdm.restore_from(&pristine);
-                                sys.redmule.reset();
-                                sys.run_staged_with_faults(&layout, config.mode, &live)?
-                            }
-                        };
-                        local.add(classify(&report, golden), report.faults_applied);
-                    }
-                    Ok(local)
-                }));
+        let mut result = CampaignResult::empty(config.clone());
+        if config.stratify {
+            let active = (0..registry.n_strata())
+                .filter(|&s| registry.stratum_len(s) > 0)
+                .count() as u64;
+            if batch_size < active {
+                return Err(Error::Config(format!(
+                    "stratified campaign needs a batch of at least {active} injections \
+                     (one per populated stratum)"
+                )));
             }
-            for h in handles {
-                let local = h.join().expect("campaign worker panicked")?;
-                result.total += local.total;
-                result.correct_no_retry += local.correct_no_retry;
-                result.correct_with_retry += local.correct_with_retry;
-                result.incorrect += local.incorrect;
-                result.timeout += local.timeout;
-                result.applied += local.applied;
-                result.faults_applied += local.faults_applied;
+            result.strata = (0..registry.n_strata())
+                .map(|s| StratumStats {
+                    name: FaultRegistry::stratum_name(s),
+                    share: registry.stratum_share(s),
+                    n: 0,
+                    outcomes: [0; 4],
+                })
+                .collect();
+        }
+
+        let mut start = 0u64;
+        loop {
+            let size = batch_size.min(cap - start);
+            if size == 0 {
+                break;
             }
-            Ok(())
-        })?;
+            let assign = if config.stratify {
+                Some(BatchAssign::new(
+                    start,
+                    &Self::allocate(&registry, &result, size),
+                ))
+            } else {
+                None
+            };
+            Self::run_batch(
+                config,
+                &layout,
+                &pristine,
+                &registry,
+                &golden,
+                trace,
+                assign.as_ref(),
+                horizon,
+                start,
+                start + size,
+                &mut result,
+            )?;
+            start += size;
+            result.batches += 1;
+            if !adaptive || start >= cap {
+                break;
+            }
+            if start >= min_floor && result.meets_precision(config.precision_target) {
+                break;
+            }
+        }
+        result.stopped_early =
+            adaptive && start < cap && result.meets_precision(config.precision_target);
 
         result.wall_seconds = started.elapsed().as_secs_f64();
         Ok(result)
+    }
+
+    /// Neyman-style allocation of one batch over the registry's strata:
+    /// scores `W_h · s_h` with `s_h = sqrt(p̃_h(1−p̃_h))` on the
+    /// functional-error rate, Laplace-smoothed so an error-free stratum
+    /// keeps a small score and a never-sampled stratum counts as
+    /// maximally uncertain; floored at `batch / (8·H)` so rare strata
+    /// are never starved. Deterministic: a pure function of the merged
+    /// counts so far.
+    fn allocate(registry: &FaultRegistry, result: &CampaignResult, batch: u64) -> Vec<u64> {
+        let mut scores = vec![0.0f64; registry.n_strata()];
+        for (s, score) in scores.iter_mut().enumerate() {
+            if registry.stratum_len(s) == 0 {
+                continue;
+            }
+            let st = &result.strata[s];
+            let sd = if st.n == 0 {
+                0.5
+            } else {
+                let k = (st.outcomes[Outcome::Incorrect.index()]
+                    + st.outcomes[Outcome::Timeout.index()]) as f64;
+                let pt = (k + 1.0) / (st.n as f64 + 2.0);
+                (pt * (1.0 - pt)).sqrt()
+            };
+            *score = st.share * sd;
+        }
+        let active = scores.iter().filter(|&&x| x > 0.0).count() as u64;
+        let floor = (batch / (8 * active.max(1))).max(1);
+        neyman_allocation(&scores, batch, floor)
+    }
+
+    /// Run injections `[lo_all, hi_all)` as one deterministic batch,
+    /// fanned over the configured worker threads, folding outcome counts
+    /// (and per-stratum tallies) into `result`. Thread chunking never
+    /// influences the drawn plans — injection `i`'s RNG is seeded by its
+    /// global index, and its stratum (if any) by the batch schedule.
+    #[allow(clippy::too_many_arguments)]
+    fn run_batch(
+        config: &CampaignConfig,
+        layout: &TaskLayout,
+        pristine: &Tcdm,
+        registry: &FaultRegistry,
+        golden: &Mat,
+        trace: Option<&RefTrace>,
+        assign: Option<&BatchAssign>,
+        horizon: u64,
+        lo_all: u64,
+        hi_all: u64,
+        result: &mut CampaignResult,
+    ) -> Result<()> {
+        let threads = config.threads.max(1);
+        let chunk = (hi_all - lo_all).div_ceil(threads as u64).max(1);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let lo = lo_all + t as u64 * chunk;
+                let hi = (lo_all + (t as u64 + 1) * chunk).min(hi_all);
+                if lo >= hi {
+                    break;
+                }
+                handles.push(scope.spawn(move || {
+                    Self::run_range(
+                        config,
+                        layout,
+                        pristine,
+                        registry,
+                        golden,
+                        trace,
+                        assign,
+                        horizon,
+                        lo,
+                        hi,
+                    )
+                }));
+            }
+            for h in handles {
+                let (local, local_strata) = h.join().expect("campaign worker panicked")?;
+                result.merge_counts(&local);
+                if !result.strata.is_empty() {
+                    for (s, o) in local_strata.iter().enumerate() {
+                        let st = &mut result.strata[s];
+                        st.n += o.iter().sum::<u64>();
+                        for (j, &c) in o.iter().enumerate() {
+                            st.outcomes[j] += c;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// One worker's share of a batch: injections `[lo, hi)` on a private
+    /// `System`, returning its local tally plus per-stratum outcome
+    /// counts (all zeros when unstratified).
+    #[allow(clippy::too_many_arguments)]
+    fn run_range(
+        config: &CampaignConfig,
+        layout: &TaskLayout,
+        pristine: &Tcdm,
+        registry: &FaultRegistry,
+        golden: &Mat,
+        trace: Option<&RefTrace>,
+        assign: Option<&BatchAssign>,
+        horizon: u64,
+        lo: u64,
+        hi: u64,
+    ) -> Result<(CampaignResult, Vec<[u64; 4]>)> {
+        use crate::fault::registry::derating;
+        let mut local = CampaignResult::empty(config.clone());
+        let mut local_strata = vec![[0u64; 4]; registry.n_strata()];
+        let mut sys = Self::system(config);
+        // Adopt the campaign's shared pristine TCDM image (one memcpy)
+        // instead of re-driving the DMA + ECC staging — staging runs
+        // exactly once per campaign, not per worker per batch (§Perf:
+        // staging dominates per-run cost on the small Table-1 workload).
+        sys.redmule.reset();
+        sys.tcdm = pristine.clone();
+        sys.tcdm.enable_dirty_tracking();
+        // Plan buffers, reused across every injection.
+        let mut plans = Vec::with_capacity(config.faults_per_run);
+        let mut live = Vec::with_capacity(config.faults_per_run);
+        for i in lo..hi {
+            // Per-injection RNG: deterministic regardless of thread
+            // layout, in its own domain so no index can replay the
+            // problem-generation stream.
+            let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
+            let stratum = assign.map(|a| a.stratum_of(i));
+            match stratum {
+                Some(s) => registry.sample_plans_in_stratum_into(
+                    horizon,
+                    config.faults_per_run,
+                    config.fault_model,
+                    s,
+                    &mut rng,
+                    &mut plans,
+                ),
+                None => registry.sample_plans_into(
+                    horizon,
+                    config.faults_per_run,
+                    config.fault_model,
+                    &mut rng,
+                    &mut plans,
+                ),
+            }
+            // Masking derate (see fault::registry::derating): an
+            // un-latched pulse is a clean run by construction — the
+            // fault-free execution was verified against golden above, so
+            // skip the simulation when nothing latches. A burst is one
+            // physical event (one latch draw for the whole plan);
+            // independent faults latch independently.
+            live.clear();
+            match config.fault_model {
+                FaultModel::Burst | FaultModel::SiteBurst => {
+                    // One physical event, ONE latch draw — compared per
+                    // plan, so a site burst spanning sites of mixed kinds
+                    // stays correlated while each site keeps its own
+                    // masking factor. A single-kind burst (always true
+                    // for `Burst`, whose plans share one site) latches
+                    // all-or-nothing as before.
+                    let u = rng.next_f64();
+                    for &plan in &plans {
+                        if u < derating::for_kind(plan.kind) {
+                            live.push(plan);
+                        }
+                    }
+                }
+                FaultModel::Independent => {
+                    for &plan in &plans {
+                        if rng.next_f64() < derating::for_kind(plan.kind) {
+                            live.push(plan);
+                        }
+                    }
+                }
+            }
+            if live.is_empty() {
+                local.add(Outcome::CorrectNoRetry, 0);
+                if let Some(s) = stratum {
+                    local_strata[s][Outcome::CorrectNoRetry.index()] += 1;
+                }
+                continue;
+            }
+            let report = match trace {
+                // Fast path: checkpoint restore + convergence early-exit
+                // (bit-identical results; see
+                // `System::run_staged_with_faults_ff`). The restore is
+                // internal to the call.
+                Some(tr) => {
+                    sys.run_staged_with_faults_ff(layout, config.mode, &live, tr, pristine)?
+                }
+                // Direct path: undo the previous run's writes and
+                // re-step the whole workload from cycle 0.
+                None => {
+                    sys.tcdm.restore_from(pristine);
+                    sys.redmule.reset();
+                    sys.run_staged_with_faults(layout, config.mode, &live)?
+                }
+            };
+            let outcome = classify(&report, golden);
+            local.add(outcome, report.faults_applied);
+            if let Some(s) = stratum {
+                local_strata[s][outcome.index()] += 1;
+            }
+        }
+        Ok((local, local_strata))
+    }
+}
+
+/// Deterministic stratum layout of one batch: the batch's injection
+/// indices are laid out stratum-major (`alloc[0]` indices for stratum 0,
+/// then stratum 1, …), so the stratum of a global injection index is a
+/// pure function of the batch schedule — independent of worker threads.
+struct BatchAssign {
+    start: u64,
+    /// Cumulative allocation bounds, as offsets within the batch.
+    ends: Vec<u64>,
+}
+
+impl BatchAssign {
+    fn new(start: u64, alloc: &[u64]) -> Self {
+        let mut ends = Vec::with_capacity(alloc.len());
+        let mut acc = 0u64;
+        for &c in alloc {
+            acc += c;
+            ends.push(acc);
+        }
+        Self { start, ends }
+    }
+
+    fn stratum_of(&self, i: u64) -> usize {
+        let off = i - self.start;
+        self.ends.partition_point(|&e| e <= off)
     }
 }
 
@@ -755,11 +1136,14 @@ impl Table1 {
             }
         }
         if let Some(full) = self.column_of(Protection::Full) {
+            let k = full.functional_errors();
             s.push_str(&format!(
-                "full protection: {} functional errors in {} injections (upper bound {:.5} %)\n",
-                full.functional_errors(),
+                "full protection: {} functional errors in {} injections \
+                 (exact 95 % upper bound {:.2e}; paper convention <{:.5} %)\n",
+                k,
                 full.total,
-                full.conservative_upper(full.functional_errors()) * 100.0
+                crate::util::stats::exact_upper95(k, full.total.max(1)),
+                full.conservative_upper(k) * 100.0
             ));
         }
         s
@@ -1013,6 +1397,47 @@ mod tests {
         // 0 observed + 1 assumed over 100 runs: upper bound well under 6 %.
         let ub = r.conservative_upper(0);
         assert!(ub > 0.0 && ub < 0.06, "ub = {ub}");
+    }
+
+    #[test]
+    fn fixed_budget_campaign_is_one_batch_and_never_early() {
+        let r = mini(Protection::Baseline, 300);
+        assert_eq!(r.batches, 1);
+        assert!(!r.stopped_early);
+        assert!(r.strata.is_empty());
+        // Estimates on the fixed path are pooled and contain the rate.
+        for o in OUTCOMES {
+            let e = r.estimate_of(o);
+            assert_eq!(e.count, r.count_of(o));
+            assert_eq!(e.n, 300);
+            assert!(e.ci_lo <= e.rate && e.rate <= e.ci_hi);
+            assert!(e.exact_lo <= e.rate && e.rate <= e.exact_hi);
+        }
+        let fe = r.functional_error_estimate();
+        assert_eq!(fe.count, r.functional_errors());
+    }
+
+    #[test]
+    fn batch_assign_is_stratum_major_and_total() {
+        let a = BatchAssign::new(100, &[3, 0, 4, 2, 0]);
+        assert_eq!(a.stratum_of(100), 0);
+        assert_eq!(a.stratum_of(102), 0);
+        assert_eq!(a.stratum_of(103), 2, "empty stratum 1 is skipped");
+        assert_eq!(a.stratum_of(106), 2);
+        assert_eq!(a.stratum_of(107), 3);
+        assert_eq!(a.stratum_of(108), 3);
+    }
+
+    #[test]
+    fn invalid_precision_target_is_a_config_error() {
+        for bad in [f64::NAN, f64::INFINITY, -0.01] {
+            let mut c = CampaignConfig::table1(Protection::Baseline, 10, 1);
+            c.precision_target = bad;
+            assert!(
+                matches!(Campaign::run(&c), Err(crate::Error::Config(_))),
+                "precision {bad} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -23,18 +23,29 @@
 //! out over a deterministic worker pool and every cell's campaign is
 //! seeded from the sweep seed and the cell's grid coordinates — never its
 //! worker thread — so the result (and the JSON emitted by
-//! [`SweepResult::to_json`]) is byte-identical for a fixed seed
-//! regardless of `--threads`. Cell campaigns run on the checkpointed
-//! fast-forward engine by default (see [`CampaignConfig::fast_forward`]);
-//! results are bit-identical either way.
+//! [`SweepResult::to_json`] / [`SweepResult::to_json_v2`]) is
+//! byte-identical for a fixed seed regardless of `--threads`. Cell
+//! campaigns run on the checkpointed fast-forward engine by default (see
+//! [`CampaignConfig::fast_forward`]); results are bit-identical either
+//! way.
+//!
+//! With [`SweepConfig::precision_target`] `> 0` every cell runs the
+//! adaptive engine to its own stopping point instead of a fixed budget —
+//! cheap cells stop after a batch or two, rare-outcome cells spend the
+//! cap — and the `redmule-ft/sweep-v2` schema reports per-outcome
+//! `{count, rate, ci_lo, ci_hi}` with `n_injections` / `stopped_early`
+//! per cell. Wall-clock lives in the [`SweepResult::timing_json`]
+//! sidecar (`redmule-ft/bench-sweep-v1`), never in the deterministic
+//! document.
 
 use crate::fault::FaultModel;
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
 use crate::redmule::{Protection, RedMuleConfig};
+use crate::util::stats::OutcomeEstimate;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
-use super::{stream_seed, Campaign, CampaignConfig, CampaignResult};
+use super::{stream_seed, Campaign, CampaignConfig, CampaignResult, OUTCOMES};
 
 /// Domain tag of the per-shape workload streams (one problem per shape,
 /// shared by every cell of that shape).
@@ -71,6 +82,20 @@ pub struct SweepConfig {
     pub fast_forward: bool,
     /// Checkpoint spacing for the fast-forward engine (0 = auto).
     pub checkpoint_interval: u64,
+    /// Per-cell adaptive precision target (`0` = every cell runs the
+    /// fixed `injections` budget). With a target, `injections` becomes
+    /// the per-cell cap and each cell stops as soon as its outcome CIs
+    /// are tight enough — cheap cells stop early, rare-outcome cells run
+    /// long (see [`CampaignConfig::precision_target`]).
+    pub precision_target: f64,
+    /// Per-cell adaptive floor (see [`CampaignConfig::min_injections`]).
+    pub min_injections: u64,
+    /// Per-cell adaptive cap override (`0` = `injections`).
+    pub max_injections: u64,
+    /// Per-cell batch size (`0` = auto).
+    pub batch_size: u64,
+    /// Stratified allocation inside every cell campaign.
+    pub stratify: bool,
 }
 
 impl SweepConfig {
@@ -89,6 +114,11 @@ impl SweepConfig {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             fast_forward: true,
             checkpoint_interval: 0,
+            precision_target: 0.0,
+            min_injections: 0,
+            max_injections: 0,
+            batch_size: 0,
+            stratify: false,
         }
     }
 
@@ -124,6 +154,11 @@ pub struct SweepResult {
     pub fault_model: FaultModel,
     pub injections: u64,
     pub seed: u64,
+    /// The per-cell precision target the sweep ran with (0 = fixed
+    /// budget).
+    pub precision_target: f64,
+    /// Whether cells ran with stratified allocation.
+    pub stratified: bool,
     /// Cells in deterministic grid order (geometry-major, then
     /// protection, shape, fault count, tolerance factor).
     pub cells: Vec<SweepCell>,
@@ -199,6 +234,123 @@ impl SweepResult {
         s.push_str("  ]\n}");
         s
     }
+
+    /// Shared cell-coordinate prefix of the v2 and timing documents.
+    fn cell_coords(s: &mut String, c: &SweepCell) {
+        s.push_str(&format!(
+            "\"geometry\": {{\"l\": {}, \"h\": {}, \"p\": {}}}, ",
+            c.geometry.l, c.geometry.h, c.geometry.p
+        ));
+        s.push_str(&format!("\"protection\": \"{}\", ", c.protection.name()));
+        s.push_str(&format!(
+            "\"shape\": {{\"m\": {}, \"n\": {}, \"k\": {}}}, ",
+            c.shape.m, c.shape.n, c.shape.k
+        ));
+        s.push_str(&format!("\"faults\": {}, ", c.faults));
+        s.push_str(&format!("\"tol_factor\": {:?}, ", c.tol_factor));
+    }
+
+    /// One v2 outcome object: `{"count", "rate", "ci_lo", "ci_hi"}`
+    /// (plus the one-sided exact `"upper95"` when requested).
+    fn v2_outcome(s: &mut String, key: &str, e: &OutcomeEstimate, upper: bool) {
+        s.push_str(&format!(
+            "\"{}\": {{\"count\": {}, \"rate\": {:.8}, \"ci_lo\": {:.8}, \"ci_hi\": {:.8}",
+            key, e.count, e.rate, e.ci_lo, e.ci_hi
+        ));
+        if upper {
+            s.push_str(&format!(", \"upper95\": {:.8}", e.upper95()));
+        }
+        s.push('}');
+    }
+
+    /// Machine-readable JSON, schema `redmule-ft/sweep-v2`: every outcome
+    /// of every cell carries its rate with a 95 % confidence interval
+    /// (Wilson on pooled counts; the stratified normal interval when the
+    /// sweep ran stratified), each cell reports the injections it
+    /// actually ran (`n_injections`) and whether the precision target
+    /// stopped it early, and the combined `functional_error` object adds
+    /// the one-sided exact upper bound — so a zero-error cell reads as
+    /// "< upper95 at 95 %" instead of a bare 0. Deterministic for a
+    /// fixed seed and grid: timing lives in the separate
+    /// [`SweepResult::timing_json`] sidecar, never here.
+    pub fn to_json_v2(&self) -> String {
+        let mut s = String::with_capacity(512 + 1024 * self.cells.len());
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"redmule-ft/sweep-v2\",\n");
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"injections_per_cell\": {},\n", self.injections));
+        s.push_str(&format!("  \"precision_target\": {:?},\n", self.precision_target));
+        s.push_str(&format!("  \"stratified\": {},\n", self.stratified));
+        s.push_str(&format!("  \"fault_model\": \"{}\",\n", self.fault_model.name()));
+        s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let r = &c.result;
+            s.push_str("    {");
+            Self::cell_coords(&mut s, c);
+            s.push_str(&format!("\"mode\": \"{}\", ", r.config.mode.name()));
+            s.push_str(&format!("\"n_injections\": {}, ", r.total));
+            s.push_str(&format!("\"stopped_early\": {}, ", r.stopped_early));
+            s.push_str(&format!("\"batches\": {}, ", r.batches));
+            s.push_str(&format!(
+                "\"applied\": {}, \"faults_applied\": {}, ",
+                r.applied, r.faults_applied
+            ));
+            s.push_str("\"outcomes\": {");
+            for (j, &o) in OUTCOMES.iter().enumerate() {
+                let key = match o {
+                    super::Outcome::CorrectNoRetry => "correct_no_retry",
+                    super::Outcome::CorrectWithRetry => "correct_with_retry",
+                    super::Outcome::Incorrect => "incorrect",
+                    super::Outcome::Timeout => "timeout",
+                };
+                Self::v2_outcome(&mut s, key, &r.estimate_of(o), false);
+                if j + 1 < OUTCOMES.len() {
+                    s.push_str(", ");
+                }
+            }
+            s.push_str("}, ");
+            Self::v2_outcome(
+                &mut s,
+                "functional_error",
+                &r.functional_error_estimate(),
+                true,
+            );
+            s.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}");
+        s
+    }
+
+    /// Wall-clock sidecar, schema `redmule-ft/bench-sweep-v1`: per-cell
+    /// wall seconds and injections/sec plus sweep totals. Kept as a
+    /// **separate document** so the deterministic v2 JSON stays
+    /// byte-identical across thread counts and machines — the
+    /// byte-compared path never carries timing (pre-PR-4, `--timing`
+    /// spliced wall-clock fields into the main document and every
+    /// determinism check had to strip them ad hoc).
+    pub fn timing_json(&self) -> String {
+        let mut s = String::with_capacity(256 + 256 * self.cells.len());
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"redmule-ft/bench-sweep-v1\",\n");
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"fault_model\": \"{}\",\n", self.fault_model.name()));
+        s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
+        s.push_str(&format!("  \"wall_seconds\": {:.3},\n", self.wall_seconds));
+        s.push_str(&format!("  \"runs_per_sec\": {:.1},\n", self.runs_per_sec()));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let r = &c.result;
+            s.push_str("    {");
+            Self::cell_coords(&mut s, c);
+            s.push_str(&format!("\"n_injections\": {}, ", r.total));
+            s.push_str(&format!("\"wall_seconds\": {:.3}, ", r.wall_seconds));
+            s.push_str(&format!("\"injections_per_sec\": {:.1}", r.runs_per_sec()));
+            s.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}");
+        s
+    }
 }
 
 /// Grid coordinates of one cell before it runs.
@@ -264,6 +416,11 @@ impl Sweep {
             return Err(Error::Config(format!(
                 "sweep tolerance factors must be finite and >= 0 (got {f})"
             )));
+        }
+        if !config.precision_target.is_finite() || config.precision_target < 0.0 {
+            return Err(Error::Config(
+                "sweep precision target must be finite and >= 0".into(),
+            ));
         }
         let started = std::time::Instant::now();
 
@@ -351,6 +508,8 @@ impl Sweep {
             fault_model: config.fault_model,
             injections: config.injections,
             seed: config.seed,
+            precision_target: config.precision_target,
+            stratified: config.stratify,
             cells,
             wall_seconds: started.elapsed().as_secs_f64(),
         })
@@ -380,6 +539,11 @@ impl Sweep {
         cc.abft_tol_factor = spec.tol_factor;
         cc.fast_forward = config.fast_forward;
         cc.checkpoint_interval = config.checkpoint_interval;
+        cc.precision_target = config.precision_target;
+        cc.min_injections = config.min_injections;
+        cc.max_injections = config.max_injections;
+        cc.batch_size = config.batch_size;
+        cc.stratify = config.stratify;
         let result = Campaign::run_with_problem(&cc, problem)?;
         Ok(SweepCell {
             geometry: spec.geometry,
@@ -517,6 +681,127 @@ mod tests {
         let mut c = SweepConfig::new(10, 1);
         c.protections = vec![Protection::Abft];
         c.tol_factors = vec![f64::NAN];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn v2_json_is_deterministic_and_carries_intervals() {
+        let a = Sweep::run(&tiny(31, 1)).unwrap();
+        let b = Sweep::run(&tiny(31, 4)).unwrap();
+        let ja = a.to_json_v2();
+        assert_eq!(ja, b.to_json_v2(), "v2 JSON must be thread-invariant");
+        for key in [
+            "\"schema\": \"redmule-ft/sweep-v2\"",
+            "\"precision_target\": 0.0",
+            "\"stratified\": false",
+            "\"n_injections\": 40",
+            "\"stopped_early\": false",
+            "\"batches\": 1",
+            "\"correct_no_retry\": {\"count\": ",
+            "\"ci_lo\": ",
+            "\"ci_hi\": ",
+            "\"functional_error\": {\"count\": ",
+            "\"upper95\": ",
+        ] {
+            assert!(ja.contains(key), "missing {key} in:\n{ja}");
+        }
+        // Timing never leaks into the deterministic v2 document.
+        assert!(!ja.contains("wall_seconds"), "v2 must not carry timing");
+        assert!(!ja.contains("runs_per_sec"));
+    }
+
+    #[test]
+    fn timing_sidecar_is_a_separate_valid_document() {
+        let r = Sweep::run(&tiny(17, 2)).unwrap();
+        let timing = r.timing_json();
+        for key in [
+            "\"schema\": \"redmule-ft/bench-sweep-v1\"",
+            "\"wall_seconds\": ",
+            "\"runs_per_sec\": ",
+            "\"injections_per_sec\": ",
+            "\"n_injections\": 40",
+        ] {
+            assert!(timing.contains(key), "missing {key} in:\n{timing}");
+        }
+        // One timing record per grid cell.
+        assert_eq!(
+            timing.matches("\"injections_per_sec\"").count(),
+            r.cells.len()
+        );
+        // And the main documents stay timing-free regardless of the
+        // sidecar (the pre-PR-4 `--timing` flag spliced wall-clock into
+        // the byte-compared JSON).
+        assert!(!r.to_json_v2().contains("wall_seconds"));
+        assert!(!r.to_json(false).contains("wall_seconds"));
+    }
+
+    #[test]
+    fn precision_target_stops_cells_early_with_tight_intervals() {
+        let mut c = SweepConfig::new(4_000, 9);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Full];
+        c.fault_counts = vec![1];
+        c.threads = 2;
+        c.precision_target = 0.1;
+        c.batch_size = 200;
+        c.min_injections = 200;
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.precision_target, 0.1);
+        for cell in &r.cells {
+            let res = &cell.result;
+            assert!(
+                res.stopped_early && res.total < 4_000,
+                "{:?}: a 0.1 target must stop well before the cap (ran {})",
+                cell.protection,
+                res.total
+            );
+            assert_eq!(res.total % 200, 0, "stop lands on a batch boundary");
+            for o in OUTCOMES {
+                assert!(
+                    res.estimate_of(o).half_width() <= 0.1,
+                    "{:?}/{o:?}: half-width {}",
+                    cell.protection,
+                    res.estimate_of(o).half_width()
+                );
+            }
+        }
+        let j = r.to_json_v2();
+        assert!(j.contains("\"stopped_early\": true"));
+        assert!(j.contains("\"precision_target\": 0.1"));
+        // Thread-invariance holds for adaptive sweeps too.
+        let mut c1 = c.clone();
+        c1.threads = 1;
+        assert_eq!(Sweep::run(&c1).unwrap().to_json_v2(), j);
+    }
+
+    #[test]
+    fn stratified_sweep_is_deterministic_and_flagged() {
+        let mut c = SweepConfig::new(600, 5);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline];
+        c.fault_counts = vec![1];
+        c.threads = 2;
+        c.stratify = true;
+        let a = Sweep::run(&c).unwrap();
+        let mut c1 = c.clone();
+        c1.threads = 1;
+        let b = Sweep::run(&c1).unwrap();
+        assert_eq!(a.to_json_v2(), b.to_json_v2());
+        assert!(a.to_json_v2().contains("\"stratified\": true"));
+        // The cell's campaign carried per-stratum tallies that sum to
+        // the cell total.
+        let res = &a.cells[0].result;
+        assert!(!res.strata.is_empty());
+        assert_eq!(res.strata.iter().map(|s| s.n).sum::<u64>(), res.total);
+    }
+
+    #[test]
+    fn invalid_precision_is_a_config_error_before_cells_run() {
+        let mut c = SweepConfig::new(10, 1);
+        c.precision_target = f64::NAN;
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = SweepConfig::new(10, 1);
+        c.precision_target = -1.0;
         assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
     }
 

@@ -31,7 +31,7 @@
 pub mod registry;
 pub mod site;
 
-pub use registry::{FaultModel, FaultRegistry, SiteEntry};
+pub use registry::{stratum_of_module, FaultModel, FaultRegistry, SiteEntry, N_STRATA, STRATUM_NAMES};
 pub use site::{FaultKind, Module, SiteId};
 
 use crate::fp::Fp16;

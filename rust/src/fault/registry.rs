@@ -111,6 +111,48 @@ pub struct SiteEntry {
     pub weight: f64,
 }
 
+// --------------------------------------------------------------- strata
+//
+// The stratified campaign engine partitions the population into a small
+// number of architecturally meaningful strata so per-stratum injection
+// counts can be allocated explicitly: under plain area-weighted sampling
+// the CE datapath (the overwhelming majority of the gate count) absorbs
+// almost every injection, and rare-but-critical populations — the
+// register file, the scheduler/control FSMs, the ABFT checksum unit —
+// are starved of samples exactly where outcome rates are most volatile.
+
+/// Number of sampling strata in [`stratum_of_module`]'s partition.
+pub const N_STRATA: usize = 5;
+
+/// Stable display names of the strata, indexed by stratum id.
+pub const STRATUM_NAMES: [&str; N_STRATA] =
+    ["datapath", "streamer", "scheduler", "regfile", "checker"];
+
+/// The stratum a module's sites belong to. Total over [`Module`]: every
+/// site of every build lands in exactly one stratum.
+pub fn stratum_of_module(m: Module) -> usize {
+    match m {
+        Module::CeArray | Module::XBuf | Module::WBuf | Module::Accumulator => 0,
+        Module::StreamerX
+        | Module::StreamerW
+        | Module::StreamerY
+        | Module::StreamerZ
+        | Module::StreamerReplica => 1,
+        Module::SchedFsm | Module::CtrlFsm | Module::FsmReplica => 2,
+        Module::RegFile | Module::RegParity => 3,
+        Module::Checker | Module::FaultUnit => 4,
+    }
+}
+
+/// Per-stratum slice of the population: the entry indices (in enumeration
+/// order) with their cumulative weights for O(log n) in-stratum sampling.
+#[derive(Debug, Clone, Default)]
+struct StratumPop {
+    indices: Vec<u32>,
+    cum: Vec<f64>,
+    weight: f64,
+}
+
 /// The complete, weighted site population for one build.
 #[derive(Debug, Clone)]
 pub struct FaultRegistry {
@@ -120,6 +162,8 @@ pub struct FaultRegistry {
     /// Cumulative weights for O(log n) sampling.
     cum: Vec<f64>,
     total_weight: f64,
+    /// Stratum partition of `entries` (see [`stratum_of_module`]).
+    strata: Vec<StratumPop>,
 }
 
 /// Intermediate builder: collects entries of one module group, then
@@ -419,9 +463,14 @@ impl FaultRegistry {
 
         let mut cum = Vec::with_capacity(entries.len());
         let mut acc = 0.0;
-        for e in &entries {
+        let mut strata = vec![StratumPop::default(); N_STRATA];
+        for (i, e) in entries.iter().enumerate() {
             acc += e.weight;
             cum.push(acc);
+            let s = &mut strata[stratum_of_module(e.site.module())];
+            s.weight += e.weight;
+            s.indices.push(i as u32);
+            s.cum.push(s.weight);
         }
         Self {
             cfg,
@@ -429,6 +478,7 @@ impl FaultRegistry {
             entries,
             cum,
             total_weight: acc,
+            strata,
         }
     }
 
@@ -545,6 +595,131 @@ impl FaultRegistry {
     /// The area report used for the weighting (for reporting).
     pub fn area(&self) -> AreaReport {
         area_report(self.cfg, self.protection)
+    }
+
+    // --------------------------------------------- stratified sampling
+
+    /// Number of strata of the partition (fixed; some may be empty on a
+    /// given build).
+    pub fn n_strata(&self) -> usize {
+        N_STRATA
+    }
+
+    /// Display name of stratum `s`.
+    pub fn stratum_name(s: usize) -> &'static str {
+        STRATUM_NAMES[s]
+    }
+
+    /// Summed sampling weight of stratum `s` (kGE it stands for).
+    pub fn stratum_weight(&self, s: usize) -> f64 {
+        self.strata[s].weight
+    }
+
+    /// Normalized share of the population weight in stratum `s` — the
+    /// `W_h` of the stratified estimator.
+    pub fn stratum_share(&self, s: usize) -> f64 {
+        if self.total_weight > 0.0 {
+            self.strata[s].weight / self.total_weight
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of population entries in stratum `s`.
+    pub fn stratum_len(&self, s: usize) -> usize {
+        self.strata[s].indices.len()
+    }
+
+    /// Area-weighted random population index *within* stratum `s` (one
+    /// `next_f64` draw); `None` when the stratum is empty on this build.
+    fn sample_index_in_stratum(&self, s: usize, rng: &mut Xoshiro256) -> Option<usize> {
+        let sp = &self.strata[s];
+        if sp.indices.is_empty() || sp.weight <= 0.0 {
+            return None;
+        }
+        let t = rng.next_f64() * sp.weight;
+        let pos = sp.cum.partition_point(|&c| c < t).min(sp.indices.len() - 1);
+        Some(sp.indices[pos] as usize)
+    }
+
+    /// Draw one fault plan with the site restricted to stratum `s`
+    /// (area-weighted within the stratum; bit and cycle as in
+    /// [`FaultRegistry::sample_plan`]). `None` when the stratum is empty.
+    pub fn sample_plan_in_stratum(
+        &self,
+        horizon: u64,
+        s: usize,
+        rng: &mut Xoshiro256,
+    ) -> Option<FaultPlan> {
+        let idx = self.sample_index_in_stratum(s, rng)?;
+        let e = &self.entries[idx];
+        Some(FaultPlan {
+            cycle: 1 + rng.below(horizon.max(1)),
+            site: e.site,
+            bit: rng.below(e.bits as u64) as u8,
+            kind: e.kind,
+        })
+    }
+
+    /// Stratified counterpart of [`FaultRegistry::sample_plans_into`]:
+    /// the site draw (every draw for `Independent`, the single event
+    /// anchor for `Burst`/`SiteBurst`) is restricted to stratum `s`. A
+    /// `SiteBurst` anchored in the stratum still spans its *physical*
+    /// neighbours in the global enumeration — adjacency is a property of
+    /// the layout, not of the sampling design. Leaves `out` empty when
+    /// the stratum is empty on this build.
+    pub fn sample_plans_in_stratum_into(
+        &self,
+        horizon: u64,
+        n: usize,
+        model: FaultModel,
+        s: usize,
+        rng: &mut Xoshiro256,
+        out: &mut Vec<FaultPlan>,
+    ) {
+        out.clear();
+        match model {
+            FaultModel::Independent => {
+                for _ in 0..n {
+                    match self.sample_plan_in_stratum(horizon, s, rng) {
+                        Some(p) => out.push(p),
+                        None => return,
+                    }
+                }
+            }
+            FaultModel::Burst => {
+                let Some(idx) = self.sample_index_in_stratum(s, rng) else {
+                    return;
+                };
+                let e = &self.entries[idx];
+                let cycle = 1 + rng.below(horizon.max(1));
+                let start = rng.below(e.bits as u64) as u32;
+                let width = n.min(e.bits as usize) as u32;
+                for j in 0..width {
+                    out.push(FaultPlan {
+                        cycle,
+                        site: e.site,
+                        bit: ((start + j) % e.bits as u32) as u8,
+                        kind: e.kind,
+                    });
+                }
+            }
+            FaultModel::SiteBurst => {
+                let Some(anchor) = self.sample_index_in_stratum(s, rng) else {
+                    return;
+                };
+                let cycle = 1 + rng.below(horizon.max(1));
+                let end = (anchor + n).min(self.entries.len());
+                for e in &self.entries[anchor..end] {
+                    out.push(FaultPlan {
+                        cycle,
+                        site: e.site,
+                        bit: rng.below(e.bits as u64) as u8,
+                        kind: e.kind,
+                    });
+                }
+            }
+        }
     }
 }
 
@@ -803,5 +978,148 @@ mod tests {
                 assert!(e.bits > 0);
             }
         }
+    }
+
+    #[test]
+    fn strata_partition_the_population() {
+        for p in [
+            Protection::Baseline,
+            Protection::Data,
+            Protection::Full,
+            Protection::Abft,
+        ] {
+            let r = reg(p);
+            let len_sum: usize = (0..r.n_strata()).map(|s| r.stratum_len(s)).sum();
+            assert_eq!(len_sum, r.n_entries(), "{p:?}: strata must partition");
+            let w_sum: f64 = (0..r.n_strata()).map(|s| r.stratum_weight(s)).sum();
+            assert!(
+                (w_sum - r.total_weight()).abs() < 1e-9 * r.total_weight(),
+                "{p:?}: stratum weights must sum to the population weight"
+            );
+            let share_sum: f64 = (0..r.n_strata()).map(|s| r.stratum_share(s)).sum();
+            assert!((share_sum - 1.0).abs() < 1e-12, "{p:?}");
+            // Every entry's module maps into the stratum that holds it.
+            for (s, _) in STRATUM_NAMES.iter().enumerate() {
+                for e in r.entries() {
+                    if stratum_of_module(e.site.module()) == s {
+                        assert!(r.stratum_len(s) > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rare_critical_strata_are_present_but_tiny() {
+        // The motivation for stratification: regfile / scheduler / checker
+        // populations exist on every build but are dwarfed by the datapath,
+        // so proportional sampling starves them.
+        let r = reg(Protection::Full);
+        for s in [2usize, 3, 4] {
+            assert!(r.stratum_len(s) > 0, "{} must be populated", STRATUM_NAMES[s]);
+            assert!(r.stratum_share(s) > 0.0);
+        }
+        let rare: f64 = [2usize, 3, 4].iter().map(|&s| r.stratum_share(s)).sum();
+        assert!(
+            rare < r.stratum_share(0),
+            "rare strata ({rare:.3}) must be smaller than the datapath ({:.3})",
+            r.stratum_share(0)
+        );
+    }
+
+    #[test]
+    fn stratified_sampling_stays_in_stratum_and_is_deterministic() {
+        let r = reg(Protection::Full);
+        for s in 0..r.n_strata() {
+            if r.stratum_len(s) == 0 {
+                continue;
+            }
+            let mut rng = Xoshiro256::new(11 + s as u64);
+            for _ in 0..2_000 {
+                let p = r.sample_plan_in_stratum(400, s, &mut rng).unwrap();
+                assert_eq!(
+                    stratum_of_module(p.site.module()),
+                    s,
+                    "draw must stay inside stratum {}",
+                    STRATUM_NAMES[s]
+                );
+                assert!(p.cycle >= 1 && p.cycle <= 400);
+                let e = r.entries().iter().find(|e| e.site == p.site).unwrap();
+                assert!(p.bit < e.bits);
+            }
+            // Same seed, same draws.
+            let mut r1 = Xoshiro256::new(77);
+            let mut r2 = Xoshiro256::new(77);
+            assert_eq!(
+                r.sample_plan_in_stratum(300, s, &mut r1),
+                r.sample_plan_in_stratum(300, s, &mut r2)
+            );
+        }
+    }
+
+    #[test]
+    fn stratified_multi_plans_cover_all_models() {
+        let r = reg(Protection::Abft);
+        let mut out = Vec::new();
+        for model in [
+            FaultModel::Independent,
+            FaultModel::Burst,
+            FaultModel::SiteBurst,
+        ] {
+            for s in 0..r.n_strata() {
+                let mut rng = Xoshiro256::new(5);
+                r.sample_plans_in_stratum_into(200, 3, model, s, &mut rng, &mut out);
+                if r.stratum_len(s) == 0 {
+                    assert!(out.is_empty(), "empty stratum yields no plans");
+                    continue;
+                }
+                assert!(!out.is_empty() && out.len() <= 3, "{model:?}/{s}");
+                // The in-stratum site draw: every plan for Independent and
+                // Burst; the anchor for SiteBurst (physical neighbours may
+                // spill into the adjacent stratum).
+                match model {
+                    FaultModel::SiteBurst => {
+                        assert_eq!(stratum_of_module(out[0].site.module()), s);
+                    }
+                    _ => {
+                        for p in &out {
+                            assert_eq!(stratum_of_module(p.site.module()), s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_stratum_sampling_tracks_weights_within_the_stratum() {
+        // Within the datapath stratum the CE-array share of in-stratum
+        // draws must match its weight share, as for the global sampler.
+        let r = reg(Protection::Baseline);
+        let stratum = 0usize;
+        let ce_weight: f64 = r
+            .entries()
+            .iter()
+            .filter(|e| {
+                e.site.module() == Module::CeArray
+                    && stratum_of_module(e.site.module()) == stratum
+            })
+            .map(|e| e.weight)
+            .sum();
+        let expect = ce_weight / r.stratum_weight(stratum);
+        let mut rng = Xoshiro256::new(123);
+        let n = 100_000;
+        let mut hits = 0u64;
+        for _ in 0..n {
+            let p = r.sample_plan_in_stratum(100, stratum, &mut rng).unwrap();
+            if p.site.module() == Module::CeArray {
+                hits += 1;
+            }
+        }
+        let got = hits as f64 / n as f64;
+        assert!(
+            (got - expect).abs() < 0.01,
+            "in-stratum CE share {got:.3} vs expected {expect:.3}"
+        );
     }
 }

@@ -6,10 +6,15 @@
 //! redmule-ft campaign [--config baseline|data|full|abft|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
 //!                     [--direct] [--checkpoint-interval K]
+//!                     [--precision P] [--batch-size B] [--min-injections N]
+//!                     [--max-injections N] [--stratify]
 //! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
 //!                     [--configs a,b,..] [--geoms LxHxP,..] [--shapes MxNxK,..]
 //!                     [--faults 1,2,..] [--model independent|burst|site-burst]
-//!                     [--tols F,..] [--timing] [--direct] [--checkpoint-interval K]
+//!                     [--tols F,..] [--schema v1|v2] [--timing [--timing-out F]]
+//!                     [--precision P] [--batch-size B] [--min-injections N]
+//!                     [--max-injections N] [--stratify]
+//!                     [--direct] [--checkpoint-interval K]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
 //! redmule-ft floorplan [--config ...]
@@ -20,7 +25,7 @@
 //! ```
 
 use redmule_ft::area::{area_report, floorplan};
-use redmule_ft::campaign::{Campaign, CampaignConfig, Sweep, SweepConfig, Table1};
+use redmule_ft::campaign::{Campaign, CampaignConfig, Sweep, SweepConfig, Table1, OUTCOMES};
 use redmule_ft::cluster::System;
 use redmule_ft::coordinator::{Coordinator, Criticality};
 use redmule_ft::fault::FaultModel;
@@ -186,12 +191,19 @@ fn print_help() {
          commands:\n\
            campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
                          --injections, --seed, --threads, --report; --direct disables the\n\
-                         checkpointed fast-forward engine, --checkpoint-interval K tunes it)\n\
+                         checkpointed fast-forward engine, --checkpoint-interval K tunes it;\n\
+                         --precision P stops adaptively once every outcome's 95% CI\n\
+                         half-width <= P, tuned by --batch-size/--min-injections/\n\
+                         --max-injections, --stratify allocates over area strata)\n\
            sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
                          --geoms LxHxP,.. array geometries, --shapes MxNxK,..,\n\
                          --faults 1,2,.., --model independent|burst|site-burst,\n\
                          --tols F,.. for ABFT cells, --injections per cell, --seed,\n\
-                         --threads, --timing adds wall-clock fields, --direct /\n\
+                         --threads, --schema v2 (default, per-outcome CIs; v1 legacy),\n\
+                         --precision / --batch-size / --min-injections / --max-injections /\n\
+                         --stratify run every cell to its own stopping point,\n\
+                         --timing writes the bench-sweep sidecar (--timing-out FILE;\n\
+                         v1 keeps its legacy inline fields), --direct /\n\
                          --checkpoint-interval as in campaign)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
                          --abft appends the ABFT checksum column)\n\
@@ -212,13 +224,24 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     cfg.threads = args.get("threads", cfg.threads);
     cfg.fast_forward = !args.flag("direct");
     cfg.checkpoint_interval = args.get("checkpoint-interval", 0u64);
+    cfg.precision_target = args.get("precision", 0.0f64);
+    cfg.batch_size = args.get("batch-size", 0u64);
+    cfg.min_injections = args.get("min-injections", 0u64);
+    cfg.max_injections = args.get("max-injections", 0u64);
+    cfg.stratify = args.flag("stratify");
     eprintln!(
-        "campaign: {} build, {} injections, seed {}, {} threads, {} engine",
+        "campaign: {} build, {} injections{}, seed {}, {} threads, {} engine{}",
         protection.name(),
         injections,
+        if cfg.precision_target > 0.0 {
+            format!(" (cap; adaptive to ±{})", cfg.precision_target)
+        } else {
+            String::new()
+        },
         seed,
         cfg.threads,
-        if cfg.fast_forward { "fast-forward" } else { "direct" }
+        if cfg.fast_forward { "fast-forward" } else { "direct" },
+        if cfg.stratify { ", stratified" } else { "" }
     );
     let r = Campaign::run(&cfg)?;
     println!(
@@ -231,19 +254,72 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
         100.0 * r.applied as f64 / r.total.max(1) as f64,
         r.runs_per_sec()
     );
+    if cfg.precision_target > 0.0 {
+        println!(
+            "adaptive: {} batches, stopped {} (target ±{} at 95 %)",
+            r.batches,
+            if r.stopped_early {
+                "early — every outcome CI met the target"
+            } else {
+                "at the injection cap"
+            },
+            cfg.precision_target
+        );
+    }
     if args.flag("report") {
         println!();
-        println!("correct termination : {}", r.rate(r.correct()).table1_cell());
-        println!("  w/o retry         : {}", r.rate(r.correct_no_retry).table1_cell());
-        println!("  with retry        : {}", r.rate(r.correct_with_retry).table1_cell());
-        println!(
-            "functional error    : {}",
-            if r.functional_errors() == 0 {
-                format!("<{:.4} %", r.conservative_upper(0) * 100.0)
+        for o in OUTCOMES {
+            let e = r.estimate_of(o);
+            if e.count == 0 {
+                println!(
+                    "{:<22}: 0 observed in {} -> < {:.3e} at 95 %",
+                    o.name(),
+                    e.n,
+                    e.upper95()
+                );
             } else {
-                r.rate(r.functional_errors()).table1_cell()
+                println!(
+                    "{:<22}: {:>7.4} %  95% CI [{:.4}, {:.4}] %  (exact [{:.4}, {:.4}] %)",
+                    o.name(),
+                    100.0 * e.rate,
+                    100.0 * e.ci_lo,
+                    100.0 * e.ci_hi,
+                    100.0 * e.exact_lo,
+                    100.0 * e.exact_hi
+                );
             }
-        );
+        }
+        let fe = r.functional_error_estimate();
+        if fe.count == 0 {
+            println!(
+                "{:<22}: 0 observed in {} -> < {:.3e} at 95 %",
+                "functional error",
+                fe.n,
+                fe.upper95()
+            );
+        } else {
+            println!(
+                "{:<22}: {:>7.4} %  95% CI [{:.4}, {:.4}] %",
+                "functional error",
+                100.0 * fe.rate,
+                100.0 * fe.ci_lo,
+                100.0 * fe.ci_hi
+            );
+        }
+        if !r.strata.is_empty() {
+            println!();
+            println!(
+                "{:<12} {:>7} {:>8} {:>10} {:>8} {:>10} {:>8}",
+                "stratum", "share", "n", "no-retry", "retry", "incorrect", "timeout"
+            );
+            for s in &r.strata {
+                println!(
+                    "{:<12} {:>6.3} {:>8} {:>10} {:>8} {:>10} {:>8}",
+                    s.name, s.share, s.n, s.outcomes[0], s.outcomes[1], s.outcomes[2],
+                    s.outcomes[3]
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -276,9 +352,25 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
             t.parse::<f64>().ok().filter(|f| f.is_finite() && *f >= 0.0)
         })?;
     }
+    sc.precision_target = args.get("precision", 0.0f64);
+    sc.batch_size = args.get("batch-size", 0u64);
+    sc.min_injections = args.get("min-injections", 0u64);
+    sc.max_injections = args.get("max-injections", 0u64);
+    sc.stratify = args.flag("stratify");
+    let schema = args
+        .kv
+        .get("schema")
+        .map(|s| s.as_str())
+        .unwrap_or("v2")
+        .to_string();
+    if schema != "v1" && schema != "v2" {
+        return Err(redmule_ft::Error::Config(format!(
+            "unknown --schema {schema} (expected v1 or v2)"
+        )));
+    }
     eprintln!(
         "sweep: {} cells ({} geometries x {} protections x {} shapes x {} fault counts, \
-         {} model), {} injections/cell, seed {}, {} threads, {} engine",
+         {} model), {} injections/cell{}, seed {}, {} threads, {} engine, schema {}",
         sc.n_cells(),
         sc.geometries.len(),
         sc.protections.len(),
@@ -286,12 +378,36 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         sc.fault_counts.len(),
         sc.fault_model.name(),
         sc.injections,
+        if sc.precision_target > 0.0 {
+            format!(" (cap; adaptive to ±{})", sc.precision_target)
+        } else {
+            String::new()
+        },
         sc.seed,
         sc.threads,
-        if sc.fast_forward { "fast-forward" } else { "direct" }
+        if sc.fast_forward { "fast-forward" } else { "direct" },
+        schema
     );
     let r = Sweep::run(&sc)?;
-    println!("{}", r.to_json(args.flag("timing")));
+    if schema == "v1" {
+        // Legacy document; `--timing` keeps its historical inline
+        // behavior there (the fields the determinism checks must strip).
+        println!("{}", r.to_json(args.flag("timing")));
+    } else {
+        println!("{}", r.to_json_v2());
+        if args.flag("timing") {
+            // v2 keeps the deterministic document clean: wall-clock goes
+            // to a sidecar file (schema redmule-ft/bench-sweep-v1).
+            let path = args
+                .kv
+                .get("timing-out")
+                .cloned()
+                .unwrap_or_else(|| "BENCH_sweep.json".to_string());
+            std::fs::write(&path, r.timing_json())
+                .map_err(|e| redmule_ft::Error::Sim(format!("cannot write {path}: {e}")))?;
+            eprintln!("sweep: wrote timing sidecar to {path}");
+        }
+    }
     eprintln!(
         "sweep: {} runs in {:.1} s ({:.0} runs/s)",
         r.total_runs(),

@@ -4,6 +4,26 @@
 //! the zero-observed-error case of the fully protected configuration,
 //! derives the `< 0.0003 %` bound by "conservatively assuming one
 //! additional observed error". We reproduce both conventions here.
+//!
+//! On top of the paper's conventions, the adaptive campaign engine needs
+//! proper **binomial interval estimation** and **stratified allocation**:
+//!
+//! * [`wilson_ci95`] — the Wilson score interval, the campaign's working
+//!   interval (well-behaved near 0/1, cheap, and its half-width is the
+//!   early-stopping precision criterion);
+//! * [`clopper_pearson_ci95`] — the exact (conservative) interval via the
+//!   regularized incomplete beta function, quoted alongside Wilson in
+//!   reports and JSON; its one-sided zero-count form [`exact_upper95`] is
+//!   how "0 functional errors in N injections" becomes "< p at 95 %"
+//!   (the rule-of-three `3/N` to within a few percent);
+//! * [`OutcomeEstimate`] — one outcome rate with both intervals, pooled
+//!   ([`OutcomeEstimate::pooled`]) or area-weight stratified
+//!   ([`OutcomeEstimate::stratified`], the textbook
+//!   `Var = Σ W_h² p̃_h(1−p̃_h)/n_h` with a Laplace-smoothed variance so
+//!   zero-count strata never report false certainty);
+//! * [`neyman_allocation`] — deterministic largest-remainder split of a
+//!   batch over strata proportional to `W_h · s_h`, with a floor so rare
+//!   strata are never starved.
 
 /// Two-sided 95 % Poisson confidence interval for an observed count `k`.
 ///
@@ -137,6 +157,375 @@ impl Rate {
     }
 }
 
+// ------------------------------------------------- binomial intervals
+
+/// z for a two-sided 95 % normal interval.
+pub const Z95: f64 = 1.959963984540054;
+
+/// z for a one-sided 95 % normal bound.
+pub const Z95_ONE_SIDED: f64 = 1.6448536269514722;
+
+/// Natural log of the gamma function (Lanczos, g = 7, 9 coefficients —
+/// absolute error well below 1e-10 over the positive reals).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    const G: f64 = 7.0;
+    use std::f64::consts::PI;
+    if x < 0.5 {
+        // Reflection formula keeps the series in its accurate range.
+        PI.ln() - (PI * x).sin().abs().ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = COEF[0];
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        let t = x + G + 0.5;
+        0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// Continued-fraction kernel of the incomplete beta (Lentz's algorithm).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 300;
+    const EPS: f64 = 3.0e-14;
+    const FPMIN: f64 = 1.0e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let mf = m as f64;
+        let m2 = 2.0 * mf;
+        let aa = mf * (b - mf) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + mf) * (qab + mf) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta function `I_x(a, b)`.
+pub fn beta_inc_reg(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_bt = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let bt = ln_bt.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Quantile of the Beta(a, b) distribution by bisection on
+/// [`beta_inc_reg`]: monotone, fully deterministic, and accurate to the
+/// bisection limit (~1e-18 after 80 halvings), which is far below any
+/// digit a campaign report quotes.
+pub fn beta_quantile(p: f64, a: f64, b: f64) -> f64 {
+    if p <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return 1.0;
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if beta_inc_reg(a, b, mid) < p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Wilson score interval for `k` successes in `n` trials at critical
+/// value `z` (two-sided). The degenerate endpoints are pinned exactly —
+/// at `k = 0` the Wilson lower bound is 0 and at `k = n` the upper is 1
+/// analytically, but `center ± half` only reaches them up to rounding.
+pub fn wilson_ci(k: u64, n: u64, z: f64) -> (f64, f64) {
+    let n = n.max(1);
+    let nf = n as f64;
+    let p = k as f64 / nf;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = z * (p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt() / denom;
+    let lo = if k == 0 { 0.0 } else { (center - half).max(0.0) };
+    let hi = if k >= n { 1.0 } else { (center + half).min(1.0) };
+    (lo, hi)
+}
+
+/// Wilson score interval at 95 %.
+pub fn wilson_ci95(k: u64, n: u64) -> (f64, f64) {
+    wilson_ci(k, n, Z95)
+}
+
+/// Clopper–Pearson exact two-sided interval at confidence `conf`:
+/// `lo = BetaInv(α/2; k, n−k+1)`, `hi = BetaInv(1−α/2; k+1, n−k)`, with
+/// the closed-form endpoints at k = 0 and k = n.
+pub fn clopper_pearson_ci(k: u64, n: u64, conf: f64) -> (f64, f64) {
+    let n = n.max(1);
+    let k = k.min(n);
+    let alpha = 1.0 - conf;
+    let (kf, nf) = (k as f64, n as f64);
+    let lo = if k == 0 {
+        0.0
+    } else {
+        beta_quantile(alpha / 2.0, kf, nf - kf + 1.0)
+    };
+    let hi = if k == n {
+        1.0
+    } else if k == 0 {
+        1.0 - (alpha / 2.0).powf(1.0 / nf)
+    } else {
+        beta_quantile(1.0 - alpha / 2.0, kf + 1.0, nf - kf)
+    };
+    (lo, hi)
+}
+
+/// Clopper–Pearson exact interval at 95 %.
+pub fn clopper_pearson_ci95(k: u64, n: u64) -> (f64, f64) {
+    clopper_pearson_ci(k, n, 0.95)
+}
+
+/// One-sided exact upper bound at confidence `conf`. For `k = 0` this is
+/// the closed form `1 − (1−conf)^{1/n}` — the rule-of-three `≈ 3/n` at
+/// 95 % — which is how a zero-error campaign cell prints "< p at 95 %"
+/// (1 M injections ⇒ < 3.0e-6; with the paper's "one additional assumed
+/// error" Poisson convention the same order: < 3.7e-6).
+pub fn exact_upper(k: u64, n: u64, conf: f64) -> f64 {
+    let n = n.max(1);
+    if k >= n {
+        return 1.0;
+    }
+    if k == 0 {
+        return 1.0 - (1.0 - conf).powf(1.0 / n as f64);
+    }
+    beta_quantile(conf, k as f64 + 1.0, (n - k) as f64)
+}
+
+/// One-sided exact upper bound at 95 %.
+pub fn exact_upper95(k: u64, n: u64) -> f64 {
+    exact_upper(k, n, 0.95)
+}
+
+/// One stratum's sample of a binomial outcome: the stratum's sampling
+/// weight (need not be normalized), the outcome count and the number of
+/// injections allocated to the stratum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StratumSample {
+    pub weight: f64,
+    pub count: u64,
+    pub n: u64,
+}
+
+/// One outcome-rate estimate with its 95 % intervals.
+///
+/// `ci_lo / ci_hi` is the working interval — Wilson on pooled counts, or
+/// the stratified normal interval when built by
+/// [`OutcomeEstimate::stratified`] — and its half-width is what the
+/// adaptive engine compares against the precision target.
+/// `exact_lo / exact_hi` is the Clopper–Pearson interval on the pooled
+/// counts (reported alongside; for stratified estimates it ignores the
+/// weighting and is quoted as the conservative raw-count interval).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutcomeEstimate {
+    pub count: u64,
+    pub n: u64,
+    /// Point estimate of the rate (area-weighted when stratified).
+    pub rate: f64,
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+    pub exact_lo: f64,
+    pub exact_hi: f64,
+    /// One-sided 95 % upper bound consistent with the point estimate:
+    /// Clopper–Pearson exact for pooled estimates (the zero-count
+    /// "< p at 95 %" convention), the one-sided normal bound on the
+    /// weighted rate for stratified ones (a pooled-count bound could sit
+    /// *below* an area-weighted rate and read as a contradiction).
+    upper95: f64,
+}
+
+impl OutcomeEstimate {
+    /// Half-width of the working 95 % interval — the early-stopping
+    /// precision measure.
+    pub fn half_width(&self) -> f64 {
+        0.5 * (self.ci_hi - self.ci_lo)
+    }
+
+    /// One-sided 95 % upper bound on the rate (see the field docs; always
+    /// at or above `rate`).
+    pub fn upper95(&self) -> f64 {
+        self.upper95
+    }
+
+    /// Pooled binomial estimate: Wilson working interval, Clopper–Pearson
+    /// exact interval.
+    pub fn pooled(count: u64, n: u64) -> Self {
+        let n1 = n.max(1);
+        let (ci_lo, ci_hi) = wilson_ci95(count, n1);
+        let (exact_lo, exact_hi) = clopper_pearson_ci95(count, n1);
+        Self {
+            count,
+            n,
+            rate: count as f64 / n1 as f64,
+            ci_lo,
+            ci_hi,
+            exact_lo,
+            exact_hi,
+            upper95: exact_upper95(count, n1),
+        }
+    }
+
+    /// Stratified estimate over area-weighted strata:
+    /// `p̂ = Σ W_h k_h/n_h` with
+    /// `Var = Σ W_h² p̃_h(1−p̃_h)/n_h`, where `p̃_h = (k_h+1)/(n_h+2)` is
+    /// Laplace-smoothed so a zero-count stratum still contributes
+    /// variance (no false certainty), and a *never-sampled* stratum with
+    /// positive weight contributes the maximal single-draw variance so
+    /// the half-width cannot meet any meaningful target until every
+    /// populated stratum has been sampled. The exact interval is
+    /// Clopper–Pearson on the pooled counts.
+    pub fn stratified(strata: &[StratumSample]) -> Self {
+        let wsum: f64 = strata
+            .iter()
+            .filter(|s| s.weight > 0.0 && s.weight.is_finite())
+            .map(|s| s.weight)
+            .sum();
+        let (mut count, mut n) = (0u64, 0u64);
+        for s in strata {
+            count += s.count;
+            n += s.n;
+        }
+        if wsum <= 0.0 {
+            return Self::pooled(count, n);
+        }
+        let mut rate = 0.0;
+        let mut var = 0.0;
+        for s in strata {
+            if s.weight <= 0.0 || !s.weight.is_finite() {
+                continue;
+            }
+            let w = s.weight / wsum;
+            if s.n > 0 {
+                let nf = s.n as f64;
+                rate += w * s.count as f64 / nf;
+                let pt = (s.count as f64 + 1.0) / (nf + 2.0);
+                var += w * w * pt * (1.0 - pt) / nf;
+            } else {
+                var += w * w * 0.25;
+            }
+        }
+        let sd = var.sqrt();
+        let half = Z95 * sd;
+        let (exact_lo, exact_hi) = clopper_pearson_ci95(count, n.max(1));
+        Self {
+            count,
+            n,
+            rate,
+            ci_lo: (rate - half).max(0.0),
+            ci_hi: (rate + half).min(1.0),
+            exact_lo,
+            exact_hi,
+            upper95: (rate + Z95_ONE_SIDED * sd).min(1.0),
+        }
+    }
+}
+
+/// Deterministic largest-remainder apportionment of `batch` draws over
+/// strata with Neyman scores `W_h · s_h` (passed pre-multiplied in
+/// `scores`). Strata with non-positive or non-finite scores get nothing;
+/// every active stratum gets at least `floor` draws (capped so the floors
+/// fit in the batch); ties break toward the lower index so the result is
+/// a pure function of its inputs.
+pub fn neyman_allocation(scores: &[f64], batch: u64, floor: u64) -> Vec<u64> {
+    let mut out = vec![0u64; scores.len()];
+    let active: Vec<usize> = (0..scores.len())
+        .filter(|&i| scores[i].is_finite() && scores[i] > 0.0)
+        .collect();
+    if active.is_empty() || batch == 0 {
+        return out;
+    }
+    let a = active.len() as u64;
+    let per_floor = floor.min(batch / a);
+    for &i in &active {
+        out[i] = per_floor;
+    }
+    let rem = batch - per_floor * a;
+    if rem == 0 {
+        return out;
+    }
+    let total: f64 = active.iter().map(|&i| scores[i]).sum();
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(active.len());
+    let mut assigned = 0u64;
+    for &i in &active {
+        let quota = rem as f64 * scores[i] / total;
+        let fl = quota.floor() as u64;
+        out[i] += fl;
+        assigned += fl;
+        fracs.push((i, quota - fl as f64));
+    }
+    let mut left = rem - assigned;
+    fracs.sort_by(|x, y| {
+        y.1.partial_cmp(&x.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(x.0.cmp(&y.0))
+    });
+    for (i, _) in fracs {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +578,135 @@ mod tests {
         let r2 = Rate::new(70_800, 1_000_000);
         let cell = r2.table1_cell();
         assert!(cell.starts_with("7.08"), "cell = {cell}");
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        // Γ(n+1) = n! — ln Γ at small integers must hit the exact values.
+        let facts = [1.0f64, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, f) in facts.iter().enumerate() {
+            let got = ln_gamma(n as f64 + 1.0);
+            assert!((got - f.ln()).abs() < 1e-9, "ln_gamma({}) = {got}", n + 1);
+        }
+        // Γ(1/2) = sqrt(π).
+        let half = ln_gamma(0.5);
+        assert!((half - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn beta_quantile_inverts_beta_inc() {
+        for &(a, b) in &[(1.0, 10.0), (3.0, 7.0), (20.0, 400.0), (0.5, 0.5)] {
+            for &p in &[0.025, 0.1, 0.5, 0.9, 0.975] {
+                let x = beta_quantile(p, a, b);
+                let back = beta_inc_reg(a, b, x);
+                assert!(
+                    (back - p).abs() < 1e-8,
+                    "I_x inverse mismatch: a={a} b={b} p={p} back={back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wilson_known_value_and_bounds() {
+        // k=10, n=100: Wilson 95% ≈ [0.0552, 0.1744] (textbook value).
+        let (lo, hi) = wilson_ci95(10, 100);
+        assert!((lo - 0.0552).abs() < 0.002, "lo = {lo}");
+        assert!((hi - 0.1744).abs() < 0.002, "hi = {hi}");
+        // Degenerate corners stay in [0, 1] and contain the point estimate.
+        let (lo0, hi0) = wilson_ci95(0, 50);
+        assert_eq!(lo0, 0.0);
+        assert!(hi0 > 0.0 && hi0 < 0.15);
+        let (lon, hin) = wilson_ci95(50, 50);
+        assert!(lon > 0.85);
+        assert_eq!(hin, 1.0);
+    }
+
+    #[test]
+    fn clopper_pearson_known_values() {
+        // k=10, n=100: exact 95% ≈ [0.0490, 0.1762].
+        let (lo, hi) = clopper_pearson_ci95(10, 100);
+        assert!((lo - 0.0490).abs() < 0.002, "lo = {lo}");
+        assert!((hi - 0.1762).abs() < 0.002, "hi = {hi}");
+        // Zero count: closed form 1 - 0.025^(1/n).
+        let (lo0, hi0) = clopper_pearson_ci95(0, 1000);
+        assert_eq!(lo0, 0.0);
+        assert!((hi0 - (1.0 - 0.025f64.powf(1.0 / 1000.0))).abs() < 1e-12);
+        // Full count mirrors.
+        let (_, hin) = clopper_pearson_ci95(30, 30);
+        assert_eq!(hin, 1.0);
+    }
+
+    #[test]
+    fn zero_count_upper_is_rule_of_three() {
+        for &n in &[100u64, 1_000, 100_000, 1_000_000] {
+            let ub = exact_upper95(0, n);
+            let rot = 3.0 / n as f64;
+            assert!(
+                ((ub - rot) / rot).abs() < 0.05,
+                "n={n}: upper {ub:.3e} vs 3/n {rot:.3e}"
+            );
+        }
+        // The paper-scale bound: 0 errors in 1M injections ⇒ < 3.0e-6.
+        let ub = exact_upper95(0, 1_000_000);
+        assert!(ub < 3.1e-6 && ub > 2.9e-6, "ub = {ub:.4e}");
+    }
+
+    #[test]
+    fn pooled_estimate_is_consistent() {
+        let e = OutcomeEstimate::pooled(7, 200);
+        assert_eq!(e.count, 7);
+        assert!((e.rate - 0.035).abs() < 1e-12);
+        assert!(e.ci_lo <= e.rate && e.rate <= e.ci_hi);
+        assert!(e.exact_lo <= e.rate && e.rate <= e.exact_hi);
+        assert!(e.half_width() > 0.0 && e.half_width() < 0.05);
+        // upper95 sits above the point estimate.
+        assert!(e.upper95() > e.rate);
+    }
+
+    #[test]
+    fn stratified_estimate_weights_the_strata() {
+        // Two strata, one rare but error-dense: the weighted rate must sit
+        // between the per-stratum rates, pulled toward the heavy stratum.
+        let strata = [
+            StratumSample { weight: 0.9, count: 0, n: 900 },
+            StratumSample { weight: 0.1, count: 50, n: 100 },
+        ];
+        let e = OutcomeEstimate::stratified(&strata);
+        assert_eq!(e.count, 50);
+        assert_eq!(e.n, 1000);
+        assert!((e.rate - 0.05).abs() < 1e-12, "0.9*0 + 0.1*0.5 = 0.05");
+        assert!(e.ci_lo <= e.rate && e.rate <= e.ci_hi);
+        assert!(e.half_width() > 0.0 && e.half_width() < 0.05);
+        // An unsampled populated stratum blocks tight half-widths.
+        let open = [
+            StratumSample { weight: 0.9, count: 0, n: 900 },
+            StratumSample { weight: 0.1, count: 0, n: 0 },
+        ];
+        let e2 = OutcomeEstimate::stratified(&open);
+        assert!(e2.half_width() > 0.04, "hw = {}", e2.half_width());
+        // Zero total weight degrades to the pooled estimate.
+        let degenerate = [StratumSample { weight: 0.0, count: 3, n: 30 }];
+        assert_eq!(
+            OutcomeEstimate::stratified(&degenerate),
+            OutcomeEstimate::pooled(3, 30)
+        );
+    }
+
+    #[test]
+    fn neyman_allocation_is_deterministic_and_exact() {
+        let scores = [0.5, 0.25, 0.0, 0.25];
+        let a = neyman_allocation(&scores, 100, 5);
+        assert_eq!(a.iter().sum::<u64>(), 100);
+        assert_eq!(a[2], 0, "zero-score stratum gets nothing");
+        assert!(a[0] >= 5 && a[1] >= 5 && a[3] >= 5, "floors hold: {a:?}");
+        assert!(a[0] > a[1], "allocation follows the scores: {a:?}");
+        assert_eq!(a, neyman_allocation(&scores, 100, 5), "pure function");
+        // Batch smaller than the floors: evenly split, never overflows.
+        let tight = neyman_allocation(&scores, 4, 10);
+        assert_eq!(tight.iter().sum::<u64>(), 4);
+        // Degenerate inputs.
+        assert_eq!(neyman_allocation(&[0.0, f64::NAN], 10, 1), vec![0, 0]);
+        assert_eq!(neyman_allocation(&[1.0], 0, 1), vec![0]);
     }
 }

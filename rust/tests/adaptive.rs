@@ -1,0 +1,204 @@
+//! Integration: the adaptive (confidence-bounded) campaign engine —
+//! early stopping on the precision target, thread-count invariance of
+//! the stop point and counts, the min/max budget rails, stratified
+//! allocation coverage, and fast-forward/direct equivalence of the
+//! sequential engine.
+
+use redmule_ft::campaign::{Campaign, CampaignConfig, Outcome, OUTCOMES};
+use redmule_ft::prelude::*;
+
+fn counts(r: &redmule_ft::campaign::CampaignResult) -> (u64, u64, u64, u64) {
+    (r.correct_no_retry, r.correct_with_retry, r.incorrect, r.timeout)
+}
+
+fn adaptive(protection: Protection, precision: f64, threads: usize) -> CampaignConfig {
+    let mut c = CampaignConfig::table1(protection, 20_000, 0xADA9);
+    c.precision_target = precision;
+    c.batch_size = 500;
+    c.min_injections = 500;
+    c.threads = threads;
+    c
+}
+
+#[test]
+fn acceptance_precision_campaign_stops_early_and_is_thread_invariant() {
+    // The PR's acceptance criterion: `--precision 0.1` on the Table-1
+    // config stops early (< max_injections) with every reported outcome
+    // CI half-width <= target, counts byte-identical across 1 vs 8
+    // threads.
+    for protection in [Protection::Baseline, Protection::Full] {
+        let r1 = Campaign::run(&adaptive(protection, 0.1, 1)).unwrap();
+        let r8 = Campaign::run(&adaptive(protection, 0.1, 8)).unwrap();
+        assert!(
+            r1.stopped_early && r1.total < 20_000,
+            "{protection:?}: must stop before the cap (ran {})",
+            r1.total
+        );
+        for o in OUTCOMES {
+            let hw = r1.estimate_of(o).half_width();
+            assert!(hw <= 0.1, "{protection:?}/{o:?}: half-width {hw}");
+        }
+        let fe_hw = r1.functional_error_estimate().half_width();
+        assert!(fe_hw <= 0.1, "{protection:?}: functional-error half-width {fe_hw}");
+        assert_eq!(counts(&r1), counts(&r8), "{protection:?}");
+        assert_eq!(r1.total, r8.total, "{protection:?}: same stop point");
+        assert_eq!(r1.batches, r8.batches, "{protection:?}: same stop batch");
+        assert_eq!(r1.stopped_early, r8.stopped_early, "{protection:?}");
+        assert_eq!(r1.applied, r8.applied, "{protection:?}");
+    }
+}
+
+#[test]
+fn stop_lands_on_a_batch_boundary_and_respects_the_floor() {
+    let r = Campaign::run(&adaptive(Protection::Data, 0.05, 2)).unwrap();
+    assert!(r.stopped_early);
+    assert_eq!(r.total % 500, 0, "stop must land on a batch boundary");
+    assert!(r.total >= 500, "min_injections floor");
+    assert_eq!(r.batches, r.total / 500);
+    // A looser target stops no later.
+    let loose = Campaign::run(&adaptive(Protection::Data, 0.1, 2)).unwrap();
+    assert!(loose.total <= r.total, "looser target cannot run longer");
+}
+
+#[test]
+fn unreachable_target_runs_to_the_cap_without_early_flag() {
+    let mut c = adaptive(Protection::Baseline, 1e-6, 2);
+    c.max_injections = 1_200;
+    c.batch_size = 500;
+    let r = Campaign::run(&c).unwrap();
+    assert_eq!(r.total, 1_200, "cap is exact even when not batch-aligned");
+    assert_eq!(r.batches, 3, "500 + 500 + 200");
+    assert!(!r.stopped_early, "hitting the cap is not an early stop");
+}
+
+#[test]
+fn min_injections_floor_defers_an_immediately_met_target() {
+    // A huge target is met after the first batch; the floor must force
+    // the engine past it anyway.
+    let mut c = adaptive(Protection::Baseline, 0.5, 2);
+    c.batch_size = 200;
+    c.min_injections = 600;
+    let r = Campaign::run(&c).unwrap();
+    assert!(r.total >= 600, "ran only {}", r.total);
+    assert!(r.stopped_early);
+}
+
+#[test]
+fn adaptive_engine_matches_between_fast_forward_and_direct() {
+    // The sequential engine sits on top of either execution engine; the
+    // stop point and all counts must be bit-identical.
+    let mut fast = adaptive(Protection::Data, 0.1, 2);
+    fast.max_injections = 2_000;
+    let mut direct = fast.clone();
+    direct.fast_forward = false;
+    let a = Campaign::run(&fast).unwrap();
+    let b = Campaign::run(&direct).unwrap();
+    assert_eq!(counts(&a), counts(&b));
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.stopped_early, b.stopped_early);
+}
+
+#[test]
+fn stratified_campaign_covers_every_stratum_and_is_thread_invariant() {
+    let mk = |threads: usize| {
+        let mut c = adaptive(Protection::Data, 0.08, threads);
+        c.stratify = true;
+        c.batch_size = 600;
+        c.min_injections = 600;
+        c.max_injections = 6_000;
+        c
+    };
+    let r1 = Campaign::run(&mk(1)).unwrap();
+    let r4 = Campaign::run(&mk(4)).unwrap();
+    assert_eq!(counts(&r1), counts(&r4));
+    assert_eq!(r1.total, r4.total);
+    assert_eq!(r1.batches, r4.batches);
+    assert!(!r1.strata.is_empty());
+    for (a, b) in r1.strata.iter().zip(&r4.strata) {
+        assert_eq!(a.n, b.n, "per-stratum allocation must be thread-invariant");
+        assert_eq!(a.outcomes, b.outcomes, "stratum {}", a.name);
+    }
+    // Tallies partition the campaign.
+    assert_eq!(r1.strata.iter().map(|s| s.n).sum::<u64>(), r1.total);
+    let per_outcome: u64 = r1.strata.iter().map(|s| s.outcomes.iter().sum::<u64>()).sum();
+    assert_eq!(per_outcome, r1.total);
+    // Every populated stratum was sampled — the whole point of the
+    // stratified design: rare-but-critical populations are not starved.
+    let registry = FaultRegistry::new(RedMuleConfig::paper(), Protection::Data);
+    for (s, st) in r1.strata.iter().enumerate() {
+        if registry.stratum_len(s) > 0 {
+            assert!(st.n > 0, "populated stratum {} was starved", st.name);
+            // The floor guarantees at least batch/(8*H) per batch.
+            assert!(
+                st.n >= r1.batches * (600 / (8 * 5)),
+                "stratum {} fell below the allocation floor: {}",
+                st.name,
+                st.n
+            );
+        } else {
+            assert_eq!(st.n, 0, "empty stratum {} was sampled", st.name);
+        }
+    }
+    // The stratified estimator is consistent: weighted rate within the
+    // pooled interval's neighborhood and every estimate well-formed.
+    for o in OUTCOMES {
+        let e = r1.estimate_of(o);
+        assert!(e.ci_lo <= e.ci_hi);
+        assert!(e.rate.is_finite() && (0.0..=1.0).contains(&e.rate));
+        assert!(e.half_width() <= 0.08, "{o:?}: {}", e.half_width());
+    }
+}
+
+#[test]
+fn stratified_campaign_samples_rare_sites_more_than_proportionally() {
+    // On the Data build the regfile + scheduler + checker strata are a
+    // few percent of the area; proportional sampling would hand them a
+    // few injections per batch. The stratified floor must beat that.
+    let mut c = adaptive(Protection::Data, 0.05, 2);
+    c.stratify = true;
+    c.batch_size = 800;
+    c.min_injections = 800;
+    c.max_injections = 1_600;
+    let r = Campaign::run(&c).unwrap();
+    let registry = FaultRegistry::new(RedMuleConfig::paper(), Protection::Data);
+    for s in 0..registry.n_strata() {
+        let share = registry.stratum_share(s);
+        if registry.stratum_len(s) == 0 || share >= 0.1 {
+            continue;
+        }
+        let st = &r.strata[s];
+        let proportional = (share * r.total as f64) as u64;
+        assert!(
+            st.n >= proportional,
+            "rare stratum {} got {} (< proportional {})",
+            st.name,
+            st.n,
+            proportional
+        );
+    }
+}
+
+#[test]
+fn zero_count_outcomes_report_the_exact_upper_bound() {
+    // Full protection: no functional errors; the estimate must express
+    // the zero as a "< p at 95%" bound that shrinks with n.
+    let mut c = CampaignConfig::table1(Protection::Full, 1_000, 77);
+    c.threads = 2;
+    let r = Campaign::run(&c).unwrap();
+    assert_eq!(r.functional_errors(), 0);
+    let fe = r.functional_error_estimate();
+    assert_eq!(fe.count, 0);
+    assert_eq!(fe.ci_lo, 0.0);
+    let ub = fe.upper95();
+    let rot = 3.0 / r.total as f64;
+    assert!(
+        ((ub - rot) / rot).abs() < 0.05,
+        "zero-count upper bound {ub:.3e} must track 3/n {rot:.3e}"
+    );
+    for o in [Outcome::Incorrect, Outcome::Timeout] {
+        let e = r.estimate_of(o);
+        assert_eq!(e.count, 0);
+        assert!(e.upper95() > 0.0 && e.upper95() < 0.01);
+    }
+}

@@ -1,0 +1,201 @@
+//! Property tests for the interval / allocation math behind the
+//! statistical campaign engine: monotonicity of the Wilson and
+//! Clopper–Pearson endpoints, zero-count rule-of-three agreement, CI
+//! containment under the binomial model with a seeded RNG, and the
+//! determinism/exactness of the Neyman batch allocator.
+
+use redmule_ft::util::rng::Xoshiro256;
+use redmule_ft::util::stats::{
+    clopper_pearson_ci95, exact_upper95, neyman_allocation, wilson_ci95, OutcomeEstimate,
+    StratumSample,
+};
+
+#[test]
+fn intervals_contain_the_point_estimate_and_stay_in_unit_range() {
+    for n in [1u64, 10, 100, 1_000, 10_000] {
+        for k in [0u64, 1, n / 10, n / 2, n.saturating_sub(1), n] {
+            let k = k.min(n);
+            let p = k as f64 / n as f64;
+            for (lo, hi) in [wilson_ci95(k, n), clopper_pearson_ci95(k, n)] {
+                assert!(
+                    (0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi),
+                    "k={k} n={n}: [{lo}, {hi}] out of range"
+                );
+                assert!(lo <= hi, "k={k} n={n}");
+                assert!(
+                    lo <= p + 1e-12 && p <= hi + 1e-12,
+                    "k={k} n={n}: p={p} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn interval_endpoints_are_monotone_in_the_count() {
+    let n = 1_000u64;
+    let (mut prev_wl, mut prev_wh) = (-1.0f64, -1.0f64);
+    let (mut prev_cl, mut prev_ch) = (-1.0f64, -1.0f64);
+    for k in (0..=n).step_by(7) {
+        let (wl, wh) = wilson_ci95(k, n);
+        let (cl, ch) = clopper_pearson_ci95(k, n);
+        assert!(wl >= prev_wl - 1e-12, "wilson lo must not decrease at k={k}");
+        assert!(wh >= prev_wh - 1e-12, "wilson hi must not decrease at k={k}");
+        assert!(cl >= prev_cl - 1e-9, "exact lo must not decrease at k={k}");
+        assert!(ch >= prev_ch - 1e-9, "exact hi must not decrease at k={k}");
+        (prev_wl, prev_wh) = (wl, wh);
+        (prev_cl, prev_ch) = (cl, ch);
+    }
+}
+
+#[test]
+fn intervals_tighten_with_the_sample_size() {
+    // Fixed 5 % rate, growing n: both half-widths must shrink strictly.
+    let mut prev_w = f64::INFINITY;
+    let mut prev_c = f64::INFINITY;
+    for n in [100u64, 400, 1_600, 6_400, 25_600] {
+        let k = n / 20;
+        let (wl, wh) = wilson_ci95(k, n);
+        let (cl, ch) = clopper_pearson_ci95(k, n);
+        let hw = (wh - wl) / 2.0;
+        let hc = (ch - cl) / 2.0;
+        assert!(hw < prev_w, "wilson half-width must shrink at n={n}");
+        assert!(hc < prev_c, "exact half-width must shrink at n={n}");
+        prev_w = hw;
+        prev_c = hc;
+    }
+}
+
+#[test]
+fn zero_count_upper_bound_agrees_with_rule_of_three() {
+    for n in [50u64, 100, 500, 5_000, 100_000, 1_000_000] {
+        let ub = exact_upper95(0, n);
+        let rot = 3.0 / n as f64;
+        let rel = ((ub - rot) / rot).abs();
+        assert!(
+            rel < 0.05,
+            "n={n}: upper {ub:.4e} vs rule-of-three {rot:.4e} ({rel:.3} off)"
+        );
+    }
+}
+
+#[test]
+fn paper_scale_zero_error_bound() {
+    // The reproduction of the paper's headline: 0 functional errors in
+    // 1M injections is an upper bound of ~3e-6 (one-sided exact 95 %),
+    // and ~3.7e-6 under the paper's own "one additional assumed error"
+    // Poisson convention — both far below the baseline error rate.
+    let exact = exact_upper95(0, 1_000_000);
+    assert!(exact < 3.1e-6 && exact > 2.9e-6, "exact = {exact:.4e}");
+    let paper = redmule_ft::util::stats::conservative_upper_rate(0, 1_000_000);
+    assert!(paper < 3.8e-6 && paper > 3.3e-6, "paper = {paper:.4e}");
+}
+
+#[test]
+fn coverage_under_the_binomial_model() {
+    // Simulate binomials with a seeded RNG and check the intervals cover
+    // the true rate at roughly their nominal level. Clopper–Pearson is
+    // conservative by construction (>= 95 % up to simulation noise);
+    // Wilson may dip slightly below nominal.
+    let n = 300usize;
+    let trials = 400usize;
+    for (pi, &p) in [0.02f64, 0.1, 0.5].iter().enumerate() {
+        let mut rng = Xoshiro256::new(0x57A7_5000 + pi as u64);
+        let mut cover_w = 0usize;
+        let mut cover_c = 0usize;
+        for _ in 0..trials {
+            let mut k = 0u64;
+            for _ in 0..n {
+                if rng.next_f64() < p {
+                    k += 1;
+                }
+            }
+            let (wl, wh) = wilson_ci95(k, n as u64);
+            if wl <= p && p <= wh {
+                cover_w += 1;
+            }
+            let (cl, ch) = clopper_pearson_ci95(k, n as u64);
+            if cl <= p && p <= ch {
+                cover_c += 1;
+            }
+        }
+        let cw = cover_w as f64 / trials as f64;
+        let cc = cover_c as f64 / trials as f64;
+        assert!(cw >= 0.90, "p={p}: wilson coverage {cw}");
+        assert!(cc >= 0.93, "p={p}: exact coverage {cc}");
+    }
+}
+
+#[test]
+fn stratified_estimator_matches_pooled_under_proportional_allocation() {
+    // When allocation is exactly proportional to the weights and the
+    // per-stratum rates are equal, the stratified point estimate equals
+    // the pooled one and its interval is at least as tight.
+    let strata = [
+        StratumSample { weight: 0.6, count: 30, n: 600 },
+        StratumSample { weight: 0.3, count: 15, n: 300 },
+        StratumSample { weight: 0.1, count: 5, n: 100 },
+    ];
+    let st = OutcomeEstimate::stratified(&strata);
+    let pooled = OutcomeEstimate::pooled(50, 1_000);
+    assert!((st.rate - pooled.rate).abs() < 1e-12);
+    assert!(st.half_width() <= pooled.half_width() * 1.1);
+    assert_eq!(st.count, 50);
+    assert_eq!(st.n, 1_000);
+}
+
+#[test]
+fn neyman_allocator_is_exact_deterministic_and_floor_respecting() {
+    let mut rng = Xoshiro256::new(42);
+    for _ in 0..200 {
+        let h = 2 + (rng.below(6) as usize);
+        let scores: Vec<f64> = (0..h)
+            .map(|_| {
+                if rng.next_f64() < 0.2 {
+                    0.0
+                } else {
+                    rng.next_f64()
+                }
+            })
+            .collect();
+        let batch = 1 + rng.below(5_000);
+        let floor = rng.below(50);
+        let a = neyman_allocation(&scores, batch, floor);
+        let active: Vec<usize> = (0..h).filter(|&i| scores[i] > 0.0).collect();
+        if active.is_empty() {
+            assert!(a.iter().all(|&x| x == 0));
+            continue;
+        }
+        assert_eq!(
+            a.iter().sum::<u64>(),
+            batch,
+            "allocation must be exact: scores={scores:?} batch={batch}"
+        );
+        for (i, &x) in a.iter().enumerate() {
+            if scores[i] <= 0.0 {
+                assert_eq!(x, 0, "inactive stratum {i} must get nothing");
+            } else {
+                let expect_floor = floor.min(batch / active.len() as u64);
+                assert!(
+                    x >= expect_floor,
+                    "stratum {i} got {x} < floor {expect_floor}"
+                );
+            }
+        }
+        assert_eq!(a, neyman_allocation(&scores, batch, floor), "pure function");
+    }
+}
+
+#[test]
+fn neyman_allocation_tracks_the_scores() {
+    // Without floors the split is exactly proportional.
+    let a = neyman_allocation(&[8.0, 1.0, 1.0], 1_000, 0);
+    assert_eq!(a, vec![800, 100, 100]);
+    // A floor hands every active stratum its guarantee first and splits
+    // the remainder proportionally, so the dominant stratum gives up a
+    // little to the floors but still dominates.
+    let b = neyman_allocation(&[8.0, 1.0, 1.0], 1_000, 50);
+    assert_eq!(b.iter().sum::<u64>(), 1_000);
+    assert!(b[1] >= 50 && b[2] >= 50, "{b:?}");
+    assert!(b[0] > 700, "{b:?}");
+}
