@@ -5,8 +5,12 @@ Validates one document against the schema family it claims:
 
 * ``redmule-ft/sweep-v1``      — the legacy flat-counts grid document
 * ``redmule-ft/sweep-v2``      — per-outcome {count, rate, ci_lo, ci_hi},
-                                 n_injections / stopped_early per cell
-* ``redmule-ft/bench-sweep-v1`` — the wall-clock sidecar
+                                 n_injections / stopped_early per cell,
+                                 a top-level ``confidence`` level and —
+                                 for stratified sweeps — the per-stratum
+                                 estimate table of every cell
+* ``redmule-ft/bench-sweep-v1`` — the wall-clock sidecar (plus optional
+                                 trace-cache hit/miss counters)
 
 Usage:
     validate_sweep.py FILE --schema v1|v2|bench-sweep
@@ -74,6 +78,41 @@ def check_outcome_obj(tag, o, n):
         fail(f"{tag}: upper95 below the point estimate")
 
 
+def check_strata(tag, c, n):
+    """Per-stratum estimate table of one stratified cell (PR 5)."""
+    if "strata" not in c:
+        fail(f"{tag}: stratified cell carries no strata block")
+    strata = c["strata"]
+    if not strata:
+        fail(f"{tag}: empty strata block")
+    if sum(s["n"] for s in strata) != n:
+        fail(f"{tag}: stratum allocations do not sum to n_injections")
+    share_total = 0.0
+    for s in strata:
+        if not s.get("name"):
+            fail(f"{tag}: unnamed stratum")
+        stag = f"{tag}/{s['name']}"
+        if not 0.0 - EPS <= s["share"] <= 1.0 + EPS:
+            fail(f"{stag}: share {s['share']} out of range")
+        share_total += s["share"]
+        counts = 0
+        for key in OUTCOME_KEYS:
+            o = s["outcomes"][key]
+            check_outcome_obj(f"{stag}/{key}", o, s["n"])
+            counts += o["count"]
+        if counts != s["n"]:
+            fail(f"{stag}: outcome counts {counts} != stratum n {s['n']}")
+        fe = s["functional_error"]
+        check_outcome_obj(f"{stag}/functional_error", fe, s["n"])
+        expect = (
+            s["outcomes"]["incorrect"]["count"] + s["outcomes"]["timeout"]["count"]
+        )
+        if fe["count"] != expect:
+            fail(f"{stag}: functional_error count {fe['count']} != {expect}")
+    if abs(share_total - 1.0) > 1e-3:
+        fail(f"{tag}: stratum shares sum to {share_total}, expected 1")
+
+
 def check_v2(d, args):
     if d["schema"] != "redmule-ft/sweep-v2":
         fail(f"schema {d['schema']} != redmule-ft/sweep-v2")
@@ -81,6 +120,8 @@ def check_v2(d, args):
         fail("stratified must be a bool")
     if d["precision_target"] < 0:
         fail("negative precision_target")
+    if "confidence" in d and not 0.0 < d["confidence"] < 1.0:
+        fail(f"confidence {d['confidence']} out of (0, 1)")
     cells = d["cells"]
     if d["total_runs"] != sum(c["n_injections"] for c in cells):
         fail("total_runs mismatch")
@@ -120,6 +161,10 @@ def check_v2(d, args):
         )
         if fe["count"] != expect_fe:
             fail(f"{tagbase}: functional_error count {fe['count']} != {expect_fe}")
+        if d["stratified"]:
+            check_strata(tagbase, c, n)
+        elif "strata" in c:
+            fail(f"{tagbase}: unstratified cell must not carry strata")
         if args.expect_stopped_early:
             if not c["stopped_early"]:
                 fail(f"{tagbase}: expected an early stop, ran {n}")

@@ -1,0 +1,117 @@
+//! Self-checking bench: the shared-trace / zero-copy / work-stealing
+//! sweep engine vs. the legacy uncached per-cell path, on the default
+//! grid. Asserts two things and exits non-zero otherwise:
+//!
+//! 1. **equivalence** — the `redmule-ft/sweep-v2` JSON (and the legacy
+//!    v1 document) are **byte-identical** between the two engines: the
+//!    trace cache and the grid-wide scheduler change wall-clock only,
+//!    never a count, interval or stop point;
+//! 2. **speedup** — the fast engine's end-to-end wall-clock beats the
+//!    legacy path by at least `--min-speedup` (default 1.5×, the PR-5
+//!    acceptance bar — the saved reference recordings, the zero-copy
+//!    hot loop and the stolen cell tails each contribute).
+//!
+//! Emits the fast run's timing sidecar (schema
+//! `redmule-ft/bench-sweep-v1`, incl. the trace-cache hit/miss
+//! counters) to `--out` (default `BENCH_sweep.json`) so the sweep
+//! throughput trajectory is machine-readable across PRs.
+//!
+//! ```text
+//! cargo bench --bench sweep_shared_trace \
+//!     [-- --injections N] [-- --threads T] [-- --out PATH]
+//!     [-- --min-speedup X]
+//! ```
+
+use redmule_ft::campaign::{Sweep, SweepConfig};
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a.as_str() == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let injections: u64 = arg("--injections")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_500);
+    let threads: usize = arg("--threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    let out_path = arg("--out").unwrap_or_else(|| "BENCH_sweep.json".to_string());
+    // Wall-clock gate; loosen on noisy shared runners without losing the
+    // (always-on) byte-equivalence assertion.
+    let min_speedup: f64 = arg("--min-speedup")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.5);
+    let seed = 2025u64;
+
+    let mut base = SweepConfig::new(injections, seed);
+    base.threads = threads;
+    println!(
+        "sweep_shared_trace — default grid ({} cells), {injections} injections/cell, \
+         {threads} threads\n",
+        base.n_cells()
+    );
+
+    // Legacy engine: per-cell reference recordings, per-cell pools.
+    let mut legacy_cfg = base.clone();
+    legacy_cfg.trace_cache = false;
+    legacy_cfg.work_stealing = false;
+    let legacy = Sweep::run(&legacy_cfg).expect("legacy sweep");
+
+    // Fast engine (the defaults): shared trace cache + grid stealing.
+    let fast = Sweep::run(&base).expect("shared-trace sweep");
+
+    // ---- equivalence: the deterministic documents must be identical.
+    assert_eq!(
+        legacy.to_json_v2(),
+        fast.to_json_v2(),
+        "sweep-v2 JSON must be byte-identical between the legacy and the \
+         shared-trace/work-stealing engines"
+    );
+    assert_eq!(
+        legacy.to_json(false),
+        fast.to_json(false),
+        "sweep-v1 JSON must be byte-identical between the engines"
+    );
+
+    let (hits, misses) = fast
+        .trace_cache_stats
+        .expect("fast engine runs with the cache on");
+    println!(
+        "reference traces: legacy recorded {}, fast recorded {misses} (+{hits} adopted)",
+        legacy.cells.len()
+    );
+    println!(
+        "legacy   {:>8.2} s   {:>8.0} runs/s",
+        legacy.wall_seconds,
+        legacy.runs_per_sec()
+    );
+    println!(
+        "fast     {:>8.2} s   {:>8.0} runs/s",
+        fast.wall_seconds,
+        fast.runs_per_sec()
+    );
+    let speedup = legacy.wall_seconds / fast.wall_seconds.max(1e-9);
+    println!("\nend-to-end speedup: {speedup:.2}x");
+
+    // Machine-readable trajectory record (standard bench-sweep sidecar).
+    std::fs::write(&out_path, fast.timing_json()).expect("write BENCH_sweep.json");
+    println!("wrote {out_path}");
+
+    assert!(
+        misses < legacy.cells.len() as u64,
+        "the cache must eliminate at least one reference recording on the \
+         default grid ({misses} recorded for {} cells)",
+        legacy.cells.len()
+    );
+    assert!(
+        speedup >= min_speedup,
+        "shared-trace engine must deliver >= {min_speedup}x end-to-end sweep \
+         speedup, got {speedup:.2}x"
+    );
+    println!("sweep_shared_trace OK");
+}

@@ -50,6 +50,23 @@
 //! engine (`fast_forward = false`) — `tests/fastforward.rs` and the
 //! `fastforward_speedup` bench assert both the equivalence and the
 //! speedup.
+//!
+//! # Zero-copy hot path and shared clean runs
+//!
+//! The injection loop is arena-based: workers adopt the campaign's
+//! pristine staged image by `copy_from_slice` into their existing TCDM
+//! buffers ([`crate::cluster::System::restore_from`]), re-arm one
+//! reusable [`crate::fault::FaultCtx`] per injection, and the
+//! fast-forward digest probes hash the TCDM delta in place — a
+//! steady-state injection performs no heap allocation in the
+//! restore/plan/digest machinery. The clean-run artifacts themselves
+//! (staging + reference trace + horizon) are a pure function of the
+//! campaign's *clean-run identity* and can be shared across campaigns
+//! through a [`TraceCache`]: the sweep grid hands one cache to all its
+//! cells, so cells differing only in fault count / model / statistical
+//! knobs record one reference run instead of one each. All of it is
+//! byte-identical to the unshared engines (`tests/shared_trace.rs`,
+//! `benches/sweep_shared_trace.rs`).
 
 //! # Statistical (adaptive) campaigns
 //!
@@ -84,7 +101,7 @@ pub mod sweep;
 pub use sweep::{Sweep, SweepCell, SweepConfig, SweepResult};
 
 use crate::cluster::{HostOutcome, RecoveryPolicy, RefTrace, System};
-use crate::fault::{FaultModel, FaultRegistry};
+use crate::fault::{FaultCtx, FaultModel, FaultPlan, FaultRegistry};
 use crate::golden::{GemmProblem, GemmSpec, Mat, ABFT_TOL_FACTOR};
 use crate::redmule::{ExecMode, Protection, RedMuleConfig, TaskLayout};
 use crate::tcdm::Tcdm;
@@ -93,6 +110,9 @@ use crate::util::stats::{
     conservative_upper_rate, neyman_allocation, OutcomeEstimate, Rate, StratumSample,
 };
 use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 // ------------------------------------------------- RNG stream domains
 //
@@ -251,6 +271,12 @@ pub struct CampaignConfig {
     /// stratified campaign is a different (deliberately designed) sample
     /// than an unstratified one.
     pub stratify: bool,
+    /// Confidence level of every reported interval and of the adaptive
+    /// stop rule (`0.95` = the paper's convention and the historical
+    /// hardwired level; must be in the open interval (0, 1)). At the
+    /// default the interval math is bit-identical to pre-knob builds —
+    /// the 95 % critical values are pinned to their exact constants.
+    pub confidence: f64,
 }
 
 impl CampaignConfig {
@@ -289,6 +315,7 @@ impl CampaignConfig {
             max_injections: 0,
             batch_size: 0,
             stratify: false,
+            confidence: 0.95,
         }
     }
 }
@@ -366,12 +393,14 @@ impl CampaignResult {
         }
     }
 
-    /// Rate estimate with 95 % confidence intervals for one outcome
-    /// class: pooled Wilson + Clopper–Pearson, or the area-weighted
-    /// stratified estimator when the campaign ran stratified.
+    /// Rate estimate with confidence intervals for one outcome class at
+    /// the campaign's [`CampaignConfig::confidence`] level: pooled
+    /// Wilson + Clopper–Pearson, or the area-weighted stratified
+    /// estimator when the campaign ran stratified.
     pub fn estimate_of(&self, o: Outcome) -> OutcomeEstimate {
+        let conf = self.config.confidence;
         if self.strata.is_empty() {
-            OutcomeEstimate::pooled(self.count_of(o), self.total)
+            OutcomeEstimate::pooled_at(self.count_of(o), self.total, conf)
         } else {
             let samples: Vec<StratumSample> = self
                 .strata
@@ -382,15 +411,17 @@ impl CampaignResult {
                     n: s.n,
                 })
                 .collect();
-            OutcomeEstimate::stratified(&samples)
+            OutcomeEstimate::stratified_at(&samples, conf)
         }
     }
 
     /// Rate estimate of the combined functional-error class
-    /// (incorrect + timeout) — the paper's headline quantity.
+    /// (incorrect + timeout) — the paper's headline quantity — at the
+    /// campaign's confidence level.
     pub fn functional_error_estimate(&self) -> OutcomeEstimate {
+        let conf = self.config.confidence;
         if self.strata.is_empty() {
-            OutcomeEstimate::pooled(self.functional_errors(), self.total)
+            OutcomeEstimate::pooled_at(self.functional_errors(), self.total, conf)
         } else {
             let samples: Vec<StratumSample> = self
                 .strata
@@ -402,15 +433,18 @@ impl CampaignResult {
                     n: s.n,
                 })
                 .collect();
-            OutcomeEstimate::stratified(&samples)
+            OutcomeEstimate::stratified_at(&samples, conf)
         }
     }
 
-    /// True when every tracked outcome rate's 95 % CI half-width is at
-    /// or below `target` — the adaptive engine's stop criterion. Tracked
-    /// rates are the four Table-1 classes *and* the combined
+    /// True when every tracked outcome rate's CI half-width — at the
+    /// campaign's [`CampaignConfig::confidence`] level (0.95 by default)
+    /// — is at or below `target`: the adaptive engine's stop criterion.
+    /// Tracked rates are the four Table-1 classes *and* the combined
     /// functional-error rate (the headline quantity users actually gate
-    /// on, whose interval can be wider than either component's).
+    /// on, whose interval can be wider than either component's). A
+    /// higher confidence level widens the intervals, so the same target
+    /// demands more injections.
     pub fn meets_precision(&self, target: f64) -> bool {
         self.total > 0
             && self.functional_error_estimate().half_width() <= target
@@ -461,6 +495,497 @@ impl CampaignResult {
         self.applied += local.applied;
         self.faults_applied += local.faults_applied;
     }
+
+    /// Fold a chunk's per-stratum outcome tallies into the aggregate
+    /// (no-op when the campaign is unstratified). Pure sums, so the
+    /// merge order — and therefore the scheduler — cannot change the
+    /// result.
+    fn merge_strata(&mut self, local: &[[u64; 4]]) {
+        if self.strata.is_empty() {
+            return;
+        }
+        for (s, o) in local.iter().enumerate() {
+            let st = &mut self.strata[s];
+            st.n += o.iter().sum::<u64>();
+            for (j, &c) in o.iter().enumerate() {
+                st.outcomes[j] += c;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------- shared clean-run cache
+
+/// The clean-run artifacts every injection of a campaign reuses: the
+/// task layout, the staged pristine TCDM image, the fault-free horizon
+/// and — on the fast-forward engine — the recorded reference trace.
+/// One of these is built per campaign, or fetched from a [`TraceCache`]
+/// shared across sweep cells with the same clean-run identity.
+#[derive(Debug)]
+pub struct CleanRun {
+    pub(crate) layout: TaskLayout,
+    pub(crate) pristine: Tcdm,
+    /// `None` = direct engine, or an ABFT tight-tolerance soft-decline.
+    pub(crate) trace: Option<RefTrace>,
+    pub(crate) horizon: u64,
+}
+
+/// Identity of a campaign's fault-free run: every knob that can change a
+/// staged bit, a reference checkpoint or the clean cycle count. Two
+/// campaigns with equal keys share staging, horizon and reference trace
+/// verbatim. Fault count, fault model, seed, thread/batch layout and
+/// precision settings all act strictly *after* the clean run, so they
+/// are deliberately not part of the key — that is exactly the sharing
+/// the sweep grid exploits (cells differing only along those axes record
+/// one reference instead of one each).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TraceKey {
+    l: usize,
+    h: usize,
+    p: usize,
+    protection: &'static str,
+    ft_mode: bool,
+    tile_recovery: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    /// `abft_tol_factor` as raw bits (`f64` is not `Eq`/`Hash`).
+    tol_bits: u64,
+    checkpoint_interval: u64,
+    fast_forward: bool,
+    /// Content digest of the exact workload images (see
+    /// [`GemmProblem::content_digest`]).
+    problem_digest: u64,
+}
+
+impl TraceKey {
+    fn of(config: &CampaignConfig, problem: &GemmProblem) -> Self {
+        Self {
+            l: config.cfg.l,
+            h: config.cfg.h,
+            p: config.cfg.p,
+            protection: config.protection.name(),
+            ft_mode: config.mode == ExecMode::FaultTolerant,
+            tile_recovery: config.recovery == RecoveryPolicy::TileLevel,
+            m: config.spec.m,
+            n: config.spec.n,
+            k: config.spec.k,
+            tol_bits: config.abft_tol_factor.to_bits(),
+            checkpoint_interval: config.checkpoint_interval,
+            fast_forward: config.fast_forward,
+            problem_digest: problem.content_digest(),
+        }
+    }
+}
+
+type CacheSlot = Arc<OnceLock<std::result::Result<Arc<CleanRun>, String>>>;
+
+/// Shared reference-trace cache: clean-run artifacts keyed by
+/// [`TraceKey`], shared across concurrent campaigns via `Arc`. The
+/// sweep engine hands one cache to every cell of a grid, so cells that
+/// differ only in fault count / fault model / seed-independent axes
+/// record the (expensive) instrumented reference run once instead of
+/// once each — on the default grid that halves the reference runs, and
+/// wider fault-count axes save proportionally more. Results are
+/// byte-identical with or without the cache because the recording is a
+/// pure function of the key (`benches/sweep_shared_trace.rs` and
+/// `tests/shared_trace.rs` pin this).
+///
+/// Concurrency: the per-key slot is a `OnceLock`, so racing builders of
+/// the *same* key serialize on that key alone (the first records, the
+/// rest block and adopt), while distinct keys build fully in parallel.
+///
+/// Memory: entries live as long as the cache (the sweep engine scopes
+/// one cache per sweep), so peak memory is one `CleanRun` — pristine
+/// TCDM image plus the checkpointed reference trace — per *distinct
+/// clean-run identity* in the grid, where the legacy engine held one
+/// per concurrently-running cell. On very wide grids (many geometries ×
+/// protections × shapes × tolerances) that sum can dominate; dropping
+/// an entry once the last unfinished cell sharing its key completes is
+/// a noted follow-up (the `Arc` refcounts already make it safe).
+#[derive(Debug, Default)]
+pub struct TraceCache {
+    entries: Mutex<HashMap<TraceKey, CacheSlot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TraceCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clean runs adopted from an already-recorded entry.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Clean runs recorded into the cache (unique identities seen).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn get_or_record(
+        &self,
+        key: TraceKey,
+        record: impl FnOnce() -> Result<CleanRun>,
+    ) -> Result<Arc<CleanRun>> {
+        let slot = {
+            let mut map = self.entries.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        let mut recorded = false;
+        let out = slot.get_or_init(|| {
+            recorded = true;
+            record().map(Arc::new).map_err(|e| e.to_string())
+        });
+        if recorded {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        match out {
+            Ok(clean) => Ok(Arc::clone(clean)),
+            // The error type is flattened through the cache (errors are
+            // not `Clone`); recording errors are simulation-level.
+            Err(e) => Err(Error::Sim(e.clone())),
+        }
+    }
+}
+
+// ------------------------------------------------ shared cell machinery
+
+/// Deterministic batch layout of one campaign: a pure function of the
+/// configuration (and, for the adaptive stop rule, the merged counts so
+/// far) — never of thread layout or scheduling. Extracted so the
+/// single-campaign driver and the sweep's grid-wide scheduler run the
+/// *same* schedule code and cannot drift apart.
+pub(crate) struct BatchSchedule {
+    pub(crate) adaptive: bool,
+    pub(crate) cap: u64,
+    pub(crate) batch_size: u64,
+    pub(crate) min_floor: u64,
+}
+
+impl BatchSchedule {
+    pub(crate) fn of(config: &CampaignConfig) -> Self {
+        let adaptive = config.precision_target > 0.0;
+        let cap = if adaptive && config.max_injections > 0 {
+            config.max_injections
+        } else {
+            config.injections
+        };
+        let batch_size = if !adaptive {
+            cap
+        } else if config.batch_size > 0 {
+            config.batch_size.min(cap).max(1)
+        } else {
+            (cap / 16).clamp(100, 10_000).min(cap).max(1)
+        };
+        let min_floor = if config.min_injections > 0 {
+            config.min_injections.min(cap)
+        } else {
+            batch_size
+        };
+        Self {
+            adaptive,
+            cap,
+            batch_size,
+            min_floor,
+        }
+    }
+
+    /// Size of the batch starting at injection `start` (0 = complete).
+    pub(crate) fn batch_at(&self, start: u64) -> u64 {
+        self.batch_size.min(self.cap - start)
+    }
+
+    /// The decision after merging the batch that ended at `start`:
+    /// true = open another batch.
+    pub(crate) fn continues(&self, start: u64, result: &CampaignResult, target: f64) -> bool {
+        if !self.adaptive || start >= self.cap {
+            return false;
+        }
+        !(start >= self.min_floor && result.meets_precision(target))
+    }
+
+    /// The final early-stop flag once no further batch will run.
+    pub(crate) fn stopped_early(&self, start: u64, result: &CampaignResult, target: f64) -> bool {
+        self.adaptive && start < self.cap && result.meets_precision(target)
+    }
+}
+
+/// Worker-local reusable buffers of the injection hot loop: the sampled
+/// and derated plan lists plus the fault context. One per worker thread;
+/// steady-state injections allocate nothing through them.
+pub(crate) struct InjectScratch {
+    plans: Vec<FaultPlan>,
+    live: Vec<FaultPlan>,
+    fctx: FaultCtx,
+}
+
+impl InjectScratch {
+    pub(crate) fn new(faults_per_run: usize) -> Self {
+        Self {
+            plans: Vec::with_capacity(faults_per_run),
+            live: Vec::with_capacity(faults_per_run),
+            fctx: FaultCtx::clean(),
+        }
+    }
+}
+
+/// Everything immutable a campaign's workers share: the configuration,
+/// the fault-site registry, the golden result and the clean-run
+/// artifacts. The single-campaign driver borrows one on the stack; the
+/// sweep's grid scheduler hands `Arc<CellCtx>`s to its worker pool.
+pub(crate) struct CellCtx {
+    pub(crate) config: CampaignConfig,
+    pub(crate) registry: FaultRegistry,
+    pub(crate) golden: Mat,
+    pub(crate) clean: Arc<CleanRun>,
+}
+
+impl CellCtx {
+    /// Validate the configuration, then build the shared state: stage
+    /// the workload and record the reference trace — or adopt both from
+    /// `cache` when another campaign with the same clean-run identity
+    /// already recorded them.
+    pub(crate) fn prepare(
+        config: &CampaignConfig,
+        problem: &GemmProblem,
+        cache: Option<&TraceCache>,
+    ) -> Result<CellCtx> {
+        if problem.spec != config.spec {
+            return Err(Error::Config(format!(
+                "campaign spec ({},{},{}) does not match the supplied problem ({},{},{})",
+                config.spec.m, config.spec.n, config.spec.k,
+                problem.spec.m, problem.spec.n, problem.spec.k
+            )));
+        }
+        if config.faults_per_run == 0 {
+            return Err(Error::Config("campaign needs at least one fault per run".into()));
+        }
+        if config.faults_per_run > crate::fault::MAX_PLANS_PER_RUN {
+            return Err(Error::Config(format!(
+                "at most {} faults per run",
+                crate::fault::MAX_PLANS_PER_RUN
+            )));
+        }
+        if !config.precision_target.is_finite() || config.precision_target < 0.0 {
+            return Err(Error::Config(
+                "campaign precision target must be finite and >= 0".into(),
+            ));
+        }
+        if !config.confidence.is_finite() || config.confidence <= 0.0 || config.confidence >= 1.0 {
+            return Err(Error::Config(format!(
+                "campaign confidence must be in (0, 1), got {}",
+                config.confidence
+            )));
+        }
+        let registry = FaultRegistry::new(config.cfg, config.protection);
+        if config.stratify {
+            let sched = BatchSchedule::of(config);
+            let active = (0..registry.n_strata())
+                .filter(|&s| registry.stratum_len(s) > 0)
+                .count() as u64;
+            if sched.batch_size < active {
+                return Err(Error::Config(format!(
+                    "stratified campaign needs a batch of at least {active} injections \
+                     (one per populated stratum)"
+                )));
+            }
+        }
+        let golden = problem.golden_z();
+        let clean = match cache {
+            Some(c) => c.get_or_record(TraceKey::of(config, problem), || {
+                Campaign::record_clean_run(config, problem, &golden)
+            })?,
+            None => Arc::new(Campaign::record_clean_run(config, problem, &golden)?),
+        };
+        Ok(CellCtx {
+            config: config.clone(),
+            registry,
+            golden,
+            clean,
+        })
+    }
+
+    pub(crate) fn schedule(&self) -> BatchSchedule {
+        BatchSchedule::of(&self.config)
+    }
+
+    /// An empty result with the per-stratum tally slots laid out (when
+    /// stratified).
+    pub(crate) fn init_result(&self) -> CampaignResult {
+        let mut result = CampaignResult::empty(self.config.clone());
+        if self.config.stratify {
+            result.strata = (0..self.registry.n_strata())
+                .map(|s| StratumStats {
+                    name: FaultRegistry::stratum_name(s),
+                    share: self.registry.stratum_share(s),
+                    n: 0,
+                    outcomes: [0; 4],
+                })
+                .collect();
+        }
+        result
+    }
+
+    /// Neyman-style allocation of one batch over the registry's strata:
+    /// scores `W_h · s_h` with `s_h = sqrt(p̃_h(1−p̃_h))` on the
+    /// functional-error rate, Laplace-smoothed so an error-free stratum
+    /// keeps a small score and a never-sampled stratum counts as
+    /// maximally uncertain; floored at `batch / (8·H)` so rare strata
+    /// are never starved. Deterministic: a pure function of the merged
+    /// counts so far.
+    pub(crate) fn allocate(&self, result: &CampaignResult, batch: u64) -> Vec<u64> {
+        let mut scores = vec![0.0f64; self.registry.n_strata()];
+        for (s, score) in scores.iter_mut().enumerate() {
+            if self.registry.stratum_len(s) == 0 {
+                continue;
+            }
+            let st = &result.strata[s];
+            let sd = if st.n == 0 {
+                0.5
+            } else {
+                let k = (st.outcomes[Outcome::Incorrect.index()]
+                    + st.outcomes[Outcome::Timeout.index()]) as f64;
+                let pt = (k + 1.0) / (st.n as f64 + 2.0);
+                (pt * (1.0 - pt)).sqrt()
+            };
+            *score = st.share * sd;
+        }
+        let active = scores.iter().filter(|&&x| x > 0.0).count() as u64;
+        let floor = (batch / (8 * active.max(1))).max(1);
+        neyman_allocation(&scores, batch, floor)
+    }
+
+    /// One worker's chunk of a batch: injections `[lo, hi)` on the
+    /// caller's scratch `System`, returning the local tally plus
+    /// per-stratum outcome counts (all zeros when unstratified).
+    ///
+    /// The hot loop is zero-copy: the shared pristine image is adopted
+    /// into the worker's existing TCDM buffers (`System::restore_from`),
+    /// plan sampling, derating and the fault context all run through
+    /// reusable scratch, and the fast-forward digest probes hash in
+    /// place — a steady-state injection performs no heap allocation in
+    /// the restore/plan/digest machinery. Thread chunking never
+    /// influences the drawn plans: injection `i`'s RNG is seeded by its
+    /// global index, and its stratum (if any) by the batch schedule.
+    pub(crate) fn run_chunk(
+        &self,
+        sys: &mut System,
+        scratch: &mut InjectScratch,
+        assign: Option<&BatchAssign>,
+        lo: u64,
+        hi: u64,
+    ) -> Result<(CampaignResult, Vec<[u64; 4]>)> {
+        use crate::fault::registry::derating;
+        let config = &self.config;
+        let clean = self.clean.as_ref();
+        let trace = clean.trace.as_ref();
+        let mut local = CampaignResult::empty(config.clone());
+        let mut local_strata = vec![[0u64; 4]; self.registry.n_strata()];
+        // Adopt the campaign's shared pristine TCDM image into the
+        // worker's existing buffers — staging ran exactly once per
+        // clean-run identity, and the adoption is a `copy_from_slice`,
+        // not a clone (§Perf: staging dominates per-run cost on the
+        // small Table-1 workload).
+        sys.restore_from(&clean.pristine);
+        for i in lo..hi {
+            // Per-injection RNG: deterministic regardless of thread
+            // layout, in its own domain so no index can replay the
+            // problem-generation stream.
+            let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
+            let stratum = assign.map(|a| a.stratum_of(i));
+            match stratum {
+                Some(s) => self.registry.sample_plans_in_stratum_into(
+                    clean.horizon,
+                    config.faults_per_run,
+                    config.fault_model,
+                    s,
+                    &mut rng,
+                    &mut scratch.plans,
+                ),
+                None => self.registry.sample_plans_into(
+                    clean.horizon,
+                    config.faults_per_run,
+                    config.fault_model,
+                    &mut rng,
+                    &mut scratch.plans,
+                ),
+            }
+            // Masking derate (see fault::registry::derating): an
+            // un-latched pulse is a clean run by construction — the
+            // fault-free execution was verified against golden above, so
+            // skip the simulation when nothing latches. A burst is one
+            // physical event (one latch draw for the whole plan);
+            // independent faults latch independently.
+            scratch.live.clear();
+            match config.fault_model {
+                FaultModel::Burst | FaultModel::SiteBurst => {
+                    // One physical event, ONE latch draw — compared per
+                    // plan, so a site burst spanning sites of mixed kinds
+                    // stays correlated while each site keeps its own
+                    // masking factor. A single-kind burst (always true
+                    // for `Burst`, whose plans share one site) latches
+                    // all-or-nothing as before.
+                    let u = rng.next_f64();
+                    for &plan in &scratch.plans {
+                        if u < derating::for_kind(plan.kind) {
+                            scratch.live.push(plan);
+                        }
+                    }
+                }
+                FaultModel::Independent => {
+                    for &plan in &scratch.plans {
+                        if rng.next_f64() < derating::for_kind(plan.kind) {
+                            scratch.live.push(plan);
+                        }
+                    }
+                }
+            }
+            if scratch.live.is_empty() {
+                local.add(Outcome::CorrectNoRetry, 0);
+                if let Some(s) = stratum {
+                    local_strata[s][Outcome::CorrectNoRetry.index()] += 1;
+                }
+                continue;
+            }
+            let report = match trace {
+                // Fast path: checkpoint restore + convergence early-exit
+                // (bit-identical results; see
+                // `System::run_staged_with_faults_ff`). The restore is
+                // internal to the call.
+                Some(tr) => sys.run_staged_with_faults_ff_scratch(
+                    &clean.layout,
+                    config.mode,
+                    &scratch.live,
+                    tr,
+                    &clean.pristine,
+                    &mut scratch.fctx,
+                )?,
+                // Direct path: undo the previous run's writes and
+                // re-step the whole workload from cycle 0.
+                None => {
+                    sys.tcdm.restore_from(&clean.pristine);
+                    sys.redmule.reset();
+                    sys.run_staged_with_faults_scratch(
+                        &clean.layout,
+                        config.mode,
+                        &scratch.live,
+                        &mut scratch.fctx,
+                    )?
+                }
+            };
+            let outcome = classify(&report, &self.golden);
+            local.add(outcome, report.faults_applied);
+            if let Some(s) = stratum {
+                local_strata[s][outcome.index()] += 1;
+            }
+        }
+        Ok((local, local_strata))
+    }
 }
 
 /// The campaign driver.
@@ -468,7 +993,7 @@ pub struct Campaign;
 
 impl Campaign {
     /// A `System` built to the campaign's recovery + tolerance settings.
-    fn system(config: &CampaignConfig) -> System {
+    pub(crate) fn system(config: &CampaignConfig) -> System {
         System::new(config.cfg, config.protection)
             .with_recovery(config.recovery)
             .with_abft_tolerance(config.abft_tol_factor)
@@ -504,55 +1029,22 @@ impl Campaign {
         Self::run_with_problem(config, &problem)
     }
 
-    /// Like [`Campaign::run`] with a caller-supplied workload: the sweep
-    /// engine shares one problem instance (and hence one golden and one
-    /// staged TCDM image per worker) across every cell of a shape, so
-    /// protection / fault-count / tolerance columns are a controlled
-    /// comparison on identical data.
-    pub fn run_with_problem(
+    /// Record a campaign's clean run: stage the workload (once per
+    /// clean-run identity — the DMA + ECC staging drive dominates setup
+    /// cost), snapshot the pristine image, and run the fault-free
+    /// horizon — instrumented with checkpoints on the fast-forward
+    /// engine, validated bit-exact against golden either way. A pure
+    /// function of [`TraceKey`], which is what makes the result safely
+    /// cacheable across sweep cells.
+    fn record_clean_run(
         config: &CampaignConfig,
         problem: &GemmProblem,
-    ) -> Result<CampaignResult> {
-        if problem.spec != config.spec {
-            return Err(Error::Config(format!(
-                "campaign spec ({},{},{}) does not match the supplied problem ({},{},{})",
-                config.spec.m, config.spec.n, config.spec.k,
-                problem.spec.m, problem.spec.n, problem.spec.k
-            )));
-        }
-        if config.faults_per_run == 0 {
-            return Err(Error::Config("campaign needs at least one fault per run".into()));
-        }
-        if config.faults_per_run > crate::fault::MAX_PLANS_PER_RUN {
-            return Err(Error::Config(format!(
-                "at most {} faults per run",
-                crate::fault::MAX_PLANS_PER_RUN
-            )));
-        }
-        if !config.precision_target.is_finite() || config.precision_target < 0.0 {
-            return Err(Error::Config(
-                "campaign precision target must be finite and >= 0".into(),
-            ));
-        }
-        let started = std::time::Instant::now();
-        let registry = FaultRegistry::new(config.cfg, config.protection);
-        let golden = problem.golden_z();
-
-        // Stage the workload exactly once per campaign: the DMA + ECC
-        // staging drive dominates setup cost, and the adaptive engine
-        // would otherwise repeat it per worker per batch. Every worker
-        // starts from a memcpy of this pristine image, and the
-        // fast-forward reference run is recorded on the very same
-        // staging, so worker state is bit-identical to the reference's.
+        golden: &Mat,
+    ) -> Result<CleanRun> {
         let mut sys = Self::system(config);
         sys.redmule.reset();
         let layout = sys.stage(problem)?;
         let pristine = sys.tcdm.clone();
-
-        // Horizon for cycle sampling: the fault-free duration of the
-        // workload in the campaign's execution mode, validated bit-exact
-        // against golden. With the fast-forward engine the instrumented
-        // reference run doubles as the horizon run.
         let mut trace = None;
         let horizon = if config.fast_forward {
             sys.tcdm.enable_dirty_tracking();
@@ -575,127 +1067,70 @@ impl Campaign {
                 }
                 // Soft decline (an ABFT tolerance probe whose clean run
                 // retries): direct engine, classic horizon run.
-                None => Self::fault_free_horizon(config, problem, &golden)?,
+                None => Self::fault_free_horizon(config, problem, golden)?,
             }
         } else {
-            Self::fault_free_horizon(config, problem, &golden)?
+            Self::fault_free_horizon(config, problem, golden)?
         };
-        drop(sys);
-        let trace = trace.as_ref();
+        Ok(CleanRun {
+            layout,
+            pristine,
+            trace,
+            horizon,
+        })
+    }
 
-        // ---- Deterministic batch schedule (the adaptive engine). A
+    /// Like [`Campaign::run`] with a caller-supplied workload: the sweep
+    /// engine shares one problem instance (and hence one golden and one
+    /// staged TCDM image per worker) across every cell of a shape, so
+    /// protection / fault-count / tolerance columns are a controlled
+    /// comparison on identical data.
+    pub fn run_with_problem(
+        config: &CampaignConfig,
+        problem: &GemmProblem,
+    ) -> Result<CampaignResult> {
+        Self::run_with_problem_cached(config, problem, None)
+    }
+
+    /// [`Campaign::run_with_problem`] with an optional shared
+    /// [`TraceCache`]: when another campaign with the same clean-run
+    /// identity already recorded its reference trace and staged image,
+    /// this campaign adopts them instead of re-recording — results are
+    /// byte-identical either way (the recording is a pure function of
+    /// the identity).
+    pub fn run_with_problem_cached(
+        config: &CampaignConfig,
+        problem: &GemmProblem,
+        cache: Option<&TraceCache>,
+    ) -> Result<CampaignResult> {
+        let started = std::time::Instant::now();
+        let ctx = CellCtx::prepare(config, problem, cache)?;
+        let sched = ctx.schedule();
+        let mut result = ctx.init_result();
+        // ---- Deterministic batch loop (the adaptive engine). A
         // fixed-budget campaign is the degenerate single-batch case, so
         // both paths share one worker loop and one plan-stream layout.
-        let adaptive = config.precision_target > 0.0;
-        let cap = if adaptive && config.max_injections > 0 {
-            config.max_injections
-        } else {
-            config.injections
-        };
-        let batch_size = if !adaptive {
-            cap
-        } else if config.batch_size > 0 {
-            config.batch_size.min(cap).max(1)
-        } else {
-            (cap / 16).clamp(100, 10_000).min(cap).max(1)
-        };
-        let min_floor = if config.min_injections > 0 {
-            config.min_injections.min(cap)
-        } else {
-            batch_size
-        };
-
-        let mut result = CampaignResult::empty(config.clone());
-        if config.stratify {
-            let active = (0..registry.n_strata())
-                .filter(|&s| registry.stratum_len(s) > 0)
-                .count() as u64;
-            if batch_size < active {
-                return Err(Error::Config(format!(
-                    "stratified campaign needs a batch of at least {active} injections \
-                     (one per populated stratum)"
-                )));
-            }
-            result.strata = (0..registry.n_strata())
-                .map(|s| StratumStats {
-                    name: FaultRegistry::stratum_name(s),
-                    share: registry.stratum_share(s),
-                    n: 0,
-                    outcomes: [0; 4],
-                })
-                .collect();
-        }
-
         let mut start = 0u64;
         loop {
-            let size = batch_size.min(cap - start);
+            let size = sched.batch_at(start);
             if size == 0 {
                 break;
             }
             let assign = if config.stratify {
-                Some(BatchAssign::new(
-                    start,
-                    &Self::allocate(&registry, &result, size),
-                ))
+                Some(BatchAssign::new(start, &ctx.allocate(&result, size)))
             } else {
                 None
             };
-            Self::run_batch(
-                config,
-                &layout,
-                &pristine,
-                &registry,
-                &golden,
-                trace,
-                assign.as_ref(),
-                horizon,
-                start,
-                start + size,
-                &mut result,
-            )?;
+            Self::run_batch(&ctx, assign.as_ref(), start, start + size, &mut result)?;
             start += size;
             result.batches += 1;
-            if !adaptive || start >= cap {
-                break;
-            }
-            if start >= min_floor && result.meets_precision(config.precision_target) {
+            if !sched.continues(start, &result, config.precision_target) {
                 break;
             }
         }
-        result.stopped_early =
-            adaptive && start < cap && result.meets_precision(config.precision_target);
-
+        result.stopped_early = sched.stopped_early(start, &result, config.precision_target);
         result.wall_seconds = started.elapsed().as_secs_f64();
         Ok(result)
-    }
-
-    /// Neyman-style allocation of one batch over the registry's strata:
-    /// scores `W_h · s_h` with `s_h = sqrt(p̃_h(1−p̃_h))` on the
-    /// functional-error rate, Laplace-smoothed so an error-free stratum
-    /// keeps a small score and a never-sampled stratum counts as
-    /// maximally uncertain; floored at `batch / (8·H)` so rare strata
-    /// are never starved. Deterministic: a pure function of the merged
-    /// counts so far.
-    fn allocate(registry: &FaultRegistry, result: &CampaignResult, batch: u64) -> Vec<u64> {
-        let mut scores = vec![0.0f64; registry.n_strata()];
-        for (s, score) in scores.iter_mut().enumerate() {
-            if registry.stratum_len(s) == 0 {
-                continue;
-            }
-            let st = &result.strata[s];
-            let sd = if st.n == 0 {
-                0.5
-            } else {
-                let k = (st.outcomes[Outcome::Incorrect.index()]
-                    + st.outcomes[Outcome::Timeout.index()]) as f64;
-                let pt = (k + 1.0) / (st.n as f64 + 2.0);
-                (pt * (1.0 - pt)).sqrt()
-            };
-            *score = st.share * sd;
-        }
-        let active = scores.iter().filter(|&&x| x > 0.0).count() as u64;
-        let floor = (batch / (8 * active.max(1))).max(1);
-        neyman_allocation(&scores, batch, floor)
     }
 
     /// Run injections `[lo_all, hi_all)` as one deterministic batch,
@@ -703,21 +1138,14 @@ impl Campaign {
     /// (and per-stratum tallies) into `result`. Thread chunking never
     /// influences the drawn plans — injection `i`'s RNG is seeded by its
     /// global index, and its stratum (if any) by the batch schedule.
-    #[allow(clippy::too_many_arguments)]
     fn run_batch(
-        config: &CampaignConfig,
-        layout: &TaskLayout,
-        pristine: &Tcdm,
-        registry: &FaultRegistry,
-        golden: &Mat,
-        trace: Option<&RefTrace>,
+        ctx: &CellCtx,
         assign: Option<&BatchAssign>,
-        horizon: u64,
         lo_all: u64,
         hi_all: u64,
         result: &mut CampaignResult,
     ) -> Result<()> {
-        let threads = config.threads.max(1);
+        let threads = ctx.config.threads.max(1);
         let chunk = (hi_all - lo_all).div_ceil(threads as u64).max(1);
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
@@ -728,150 +1156,18 @@ impl Campaign {
                     break;
                 }
                 handles.push(scope.spawn(move || {
-                    Self::run_range(
-                        config,
-                        layout,
-                        pristine,
-                        registry,
-                        golden,
-                        trace,
-                        assign,
-                        horizon,
-                        lo,
-                        hi,
-                    )
+                    let mut sys = Campaign::system(&ctx.config);
+                    let mut scratch = InjectScratch::new(ctx.config.faults_per_run);
+                    ctx.run_chunk(&mut sys, &mut scratch, assign, lo, hi)
                 }));
             }
             for h in handles {
                 let (local, local_strata) = h.join().expect("campaign worker panicked")?;
                 result.merge_counts(&local);
-                if !result.strata.is_empty() {
-                    for (s, o) in local_strata.iter().enumerate() {
-                        let st = &mut result.strata[s];
-                        st.n += o.iter().sum::<u64>();
-                        for (j, &c) in o.iter().enumerate() {
-                            st.outcomes[j] += c;
-                        }
-                    }
-                }
+                result.merge_strata(&local_strata);
             }
             Ok(())
         })
-    }
-
-    /// One worker's share of a batch: injections `[lo, hi)` on a private
-    /// `System`, returning its local tally plus per-stratum outcome
-    /// counts (all zeros when unstratified).
-    #[allow(clippy::too_many_arguments)]
-    fn run_range(
-        config: &CampaignConfig,
-        layout: &TaskLayout,
-        pristine: &Tcdm,
-        registry: &FaultRegistry,
-        golden: &Mat,
-        trace: Option<&RefTrace>,
-        assign: Option<&BatchAssign>,
-        horizon: u64,
-        lo: u64,
-        hi: u64,
-    ) -> Result<(CampaignResult, Vec<[u64; 4]>)> {
-        use crate::fault::registry::derating;
-        let mut local = CampaignResult::empty(config.clone());
-        let mut local_strata = vec![[0u64; 4]; registry.n_strata()];
-        let mut sys = Self::system(config);
-        // Adopt the campaign's shared pristine TCDM image (one memcpy)
-        // instead of re-driving the DMA + ECC staging — staging runs
-        // exactly once per campaign, not per worker per batch (§Perf:
-        // staging dominates per-run cost on the small Table-1 workload).
-        sys.redmule.reset();
-        sys.tcdm = pristine.clone();
-        sys.tcdm.enable_dirty_tracking();
-        // Plan buffers, reused across every injection.
-        let mut plans = Vec::with_capacity(config.faults_per_run);
-        let mut live = Vec::with_capacity(config.faults_per_run);
-        for i in lo..hi {
-            // Per-injection RNG: deterministic regardless of thread
-            // layout, in its own domain so no index can replay the
-            // problem-generation stream.
-            let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
-            let stratum = assign.map(|a| a.stratum_of(i));
-            match stratum {
-                Some(s) => registry.sample_plans_in_stratum_into(
-                    horizon,
-                    config.faults_per_run,
-                    config.fault_model,
-                    s,
-                    &mut rng,
-                    &mut plans,
-                ),
-                None => registry.sample_plans_into(
-                    horizon,
-                    config.faults_per_run,
-                    config.fault_model,
-                    &mut rng,
-                    &mut plans,
-                ),
-            }
-            // Masking derate (see fault::registry::derating): an
-            // un-latched pulse is a clean run by construction — the
-            // fault-free execution was verified against golden above, so
-            // skip the simulation when nothing latches. A burst is one
-            // physical event (one latch draw for the whole plan);
-            // independent faults latch independently.
-            live.clear();
-            match config.fault_model {
-                FaultModel::Burst | FaultModel::SiteBurst => {
-                    // One physical event, ONE latch draw — compared per
-                    // plan, so a site burst spanning sites of mixed kinds
-                    // stays correlated while each site keeps its own
-                    // masking factor. A single-kind burst (always true
-                    // for `Burst`, whose plans share one site) latches
-                    // all-or-nothing as before.
-                    let u = rng.next_f64();
-                    for &plan in &plans {
-                        if u < derating::for_kind(plan.kind) {
-                            live.push(plan);
-                        }
-                    }
-                }
-                FaultModel::Independent => {
-                    for &plan in &plans {
-                        if rng.next_f64() < derating::for_kind(plan.kind) {
-                            live.push(plan);
-                        }
-                    }
-                }
-            }
-            if live.is_empty() {
-                local.add(Outcome::CorrectNoRetry, 0);
-                if let Some(s) = stratum {
-                    local_strata[s][Outcome::CorrectNoRetry.index()] += 1;
-                }
-                continue;
-            }
-            let report = match trace {
-                // Fast path: checkpoint restore + convergence early-exit
-                // (bit-identical results; see
-                // `System::run_staged_with_faults_ff`). The restore is
-                // internal to the call.
-                Some(tr) => {
-                    sys.run_staged_with_faults_ff(layout, config.mode, &live, tr, pristine)?
-                }
-                // Direct path: undo the previous run's writes and
-                // re-step the whole workload from cycle 0.
-                None => {
-                    sys.tcdm.restore_from(pristine);
-                    sys.redmule.reset();
-                    sys.run_staged_with_faults(layout, config.mode, &live)?
-                }
-            };
-            let outcome = classify(&report, golden);
-            local.add(outcome, report.faults_applied);
-            if let Some(s) = stratum {
-                local_strata[s][outcome.index()] += 1;
-            }
-        }
-        Ok((local, local_strata))
     }
 }
 
@@ -1438,6 +1734,48 @@ mod tests {
                 "precision {bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn invalid_confidence_is_a_config_error() {
+        for bad in [0.0, 1.0, -0.2, 1.5, f64::NAN, f64::INFINITY] {
+            let mut c = CampaignConfig::table1(Protection::Baseline, 10, 1);
+            c.confidence = bad;
+            assert!(
+                matches!(Campaign::run(&c), Err(crate::Error::Config(_))),
+                "confidence {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_clean_run_reproduces_the_uncached_campaign() {
+        let problem = GemmProblem::random(&GemmSpec::paper_workload(), problem_seed(0xCAFE));
+        let mut cfg = CampaignConfig::table1(Protection::Data, 150, 0xCAFE);
+        cfg.threads = 2;
+        let plain = Campaign::run_with_problem(&cfg, &problem).unwrap();
+        let cache = TraceCache::new();
+        let first = Campaign::run_with_problem_cached(&cfg, &problem, Some(&cache)).unwrap();
+        assert_eq!(cache.misses(), 1, "first campaign records the trace");
+        assert_eq!(cache.hits(), 0);
+        // A second campaign with a different seed / fault count shares
+        // the clean run (the identity excludes post-clean-run knobs) …
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 0xCAFE; // same seed → identical campaign
+        cfg2.faults_per_run = 2;
+        let _ = Campaign::run_with_problem_cached(&cfg2, &problem, Some(&cache)).unwrap();
+        assert_eq!(cache.misses(), 1, "fault count is not part of the identity");
+        assert_eq!(cache.hits(), 1);
+        // … while a different tolerance factor records its own.
+        let mut cfg3 = cfg.clone();
+        cfg3.abft_tol_factor *= 2.0;
+        let _ = Campaign::run_with_problem_cached(&cfg3, &problem, Some(&cache)).unwrap();
+        assert_eq!(cache.misses(), 2, "tolerance is part of the identity");
+        // Counts are byte-identical across all three engines.
+        let t = |r: &CampaignResult| {
+            (r.correct_no_retry, r.correct_with_retry, r.incorrect, r.timeout, r.applied)
+        };
+        assert_eq!(t(&plain), t(&first));
     }
 
     #[test]

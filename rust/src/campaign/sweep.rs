@@ -19,33 +19,61 @@
 //! The grid is the cartesian product of the axes; every *cell* is a full
 //! campaign ([`Campaign::run_with_problem`]) sharing one workload per
 //! shape, so columns differing only in geometry, protection, fault count
-//! or tolerance are controlled comparisons on identical data. Cells fan
-//! out over a deterministic worker pool and every cell's campaign is
-//! seeded from the sweep seed and the cell's grid coordinates — never its
-//! worker thread — so the result (and the JSON emitted by
-//! [`SweepResult::to_json`] / [`SweepResult::to_json_v2`]) is
+//! or tolerance are controlled comparisons on identical data. Every
+//! cell's campaign is seeded from the sweep seed and the cell's grid
+//! coordinates — never its worker thread — so the result (and the JSON
+//! emitted by [`SweepResult::to_json`] / [`SweepResult::to_json_v2`]) is
 //! byte-identical for a fixed seed regardless of `--threads`. Cell
 //! campaigns run on the checkpointed fast-forward engine by default (see
 //! [`CampaignConfig::fast_forward`]); results are bit-identical either
 //! way.
+//!
+//! # Execution engine: shared traces + grid-wide work stealing
+//!
+//! Two layers of reuse keep the grid as fast as the hardware allows:
+//!
+//! * **Shared reference-trace cache** ([`super::TraceCache`], default
+//!   on, `--no-trace-cache` to disable): cells whose fault-free runs are
+//!   identical — same geometry, protection/mode, shape/workload,
+//!   tolerance and checkpoint interval; they differ only in fault count,
+//!   fault model or statistical knobs — record ONE instrumented
+//!   reference run and adopt it via `Arc` instead of one each. On the
+//!   default grid this halves the reference recordings.
+//! * **Grid-wide work stealing** ([`SweepConfig::work_stealing`],
+//!   default on): instead of one pool *per cell* (which leaves threads
+//!   idle at every cell tail, and starves wide pools on small grids),
+//!   one deterministic scheduler interleaves batch chunks from every
+//!   unfinished cell over a single worker pool. Workers keep a reusable
+//!   `System` arena (`copy_from_slice` adoption of each cell's pristine
+//!   image — no per-chunk allocation) and hop between cells freely.
+//!   Because every injection's plans are a pure function of
+//!   `(seed, index)` and batch boundaries depend only on merged counts,
+//!   scheduling order cannot change any count: the emitted JSON is
+//!   byte-identical to the per-cell pools, which remain available for
+//!   A/B (`tests/shared_trace.rs`, `benches/sweep_shared_trace.rs`).
 //!
 //! With [`SweepConfig::precision_target`] `> 0` every cell runs the
 //! adaptive engine to its own stopping point instead of a fixed budget —
 //! cheap cells stop after a batch or two, rare-outcome cells spend the
 //! cap — and the `redmule-ft/sweep-v2` schema reports per-outcome
 //! `{count, rate, ci_lo, ci_hi}` with `n_injections` / `stopped_early`
-//! per cell. Wall-clock lives in the [`SweepResult::timing_json`]
-//! sidecar (`redmule-ft/bench-sweep-v1`), never in the deterministic
-//! document.
+//! per cell (plus per-stratum estimates when stratified). Wall-clock
+//! lives in the [`SweepResult::timing_json`] sidecar
+//! (`redmule-ft/bench-sweep-v1`), never in the deterministic document.
 
+use crate::cluster::System;
 use crate::fault::FaultModel;
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
 use crate::redmule::{Protection, RedMuleConfig};
 use crate::util::stats::OutcomeEstimate;
 use crate::{Error, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use super::{stream_seed, Campaign, CampaignConfig, CampaignResult, OUTCOMES};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use super::{
+    stream_seed, BatchAssign, BatchSchedule, Campaign, CampaignConfig, CampaignResult, CellCtx,
+    InjectScratch, Outcome, TraceCache, OUTCOMES,
+};
 
 /// Domain tag of the per-shape workload streams (one problem per shape,
 /// shared by every cell of that shape).
@@ -75,7 +103,7 @@ pub struct SweepConfig {
     /// Injections per cell.
     pub injections: u64,
     pub seed: u64,
-    /// Worker threads the *cells* fan out over (does not affect results).
+    /// Worker threads of the sweep's pool (does not affect results).
     pub threads: usize,
     /// Run cell campaigns on the checkpointed fast-forward engine
     /// (bit-identical results; see [`CampaignConfig::fast_forward`]).
@@ -96,6 +124,19 @@ pub struct SweepConfig {
     pub batch_size: u64,
     /// Stratified allocation inside every cell campaign.
     pub stratify: bool,
+    /// Share one recorded reference trace (and staged image) across all
+    /// cells with the same clean-run identity (default on; results are
+    /// byte-identical either way — the CLI escape hatch is
+    /// `--no-trace-cache`).
+    pub trace_cache: bool,
+    /// One grid-wide deterministic work-stealing pool interleaving batch
+    /// chunks from all unfinished cells (default on; `false` = legacy
+    /// per-cell pools, kept for A/B comparison — results are
+    /// byte-identical either way).
+    pub work_stealing: bool,
+    /// Confidence level of every reported interval and of the adaptive
+    /// stop rule (see [`CampaignConfig::confidence`]; default 0.95).
+    pub confidence: f64,
 }
 
 impl SweepConfig {
@@ -119,6 +160,9 @@ impl SweepConfig {
             max_injections: 0,
             batch_size: 0,
             stratify: false,
+            trace_cache: true,
+            work_stealing: true,
+            confidence: 0.95,
         }
     }
 
@@ -159,10 +203,16 @@ pub struct SweepResult {
     pub precision_target: f64,
     /// Whether cells ran with stratified allocation.
     pub stratified: bool,
+    /// Confidence level of the reported intervals.
+    pub confidence: f64,
     /// Cells in deterministic grid order (geometry-major, then
     /// protection, shape, fault count, tolerance factor).
     pub cells: Vec<SweepCell>,
     pub wall_seconds: f64,
+    /// Reference traces recorded / adopted from the shared cache
+    /// (`None` when the sweep ran with the cache disabled). Reported in
+    /// the timing sidecar only — never in the deterministic documents.
+    pub trace_cache_stats: Option<(u64, u64)>,
 }
 
 impl SweepResult {
@@ -250,8 +300,19 @@ impl SweepResult {
         s.push_str(&format!("\"tol_factor\": {:?}, ", c.tol_factor));
     }
 
+    /// JSON key of one Table-1 outcome class.
+    fn outcome_key(o: Outcome) -> &'static str {
+        match o {
+            Outcome::CorrectNoRetry => "correct_no_retry",
+            Outcome::CorrectWithRetry => "correct_with_retry",
+            Outcome::Incorrect => "incorrect",
+            Outcome::Timeout => "timeout",
+        }
+    }
+
     /// One v2 outcome object: `{"count", "rate", "ci_lo", "ci_hi"}`
-    /// (plus the one-sided exact `"upper95"` when requested).
+    /// (plus the one-sided exact `"upper95"` when requested — named for
+    /// the default confidence; it is the bound at the configured level).
     fn v2_outcome(s: &mut String, key: &str, e: &OutcomeEstimate, upper: bool) {
         s.push_str(&format!(
             "\"{}\": {{\"count\": {}, \"rate\": {:.8}, \"ci_lo\": {:.8}, \"ci_hi\": {:.8}",
@@ -263,15 +324,50 @@ impl SweepResult {
         s.push('}');
     }
 
+    /// The per-stratum estimate block of one stratified cell: every
+    /// stratum's allocation (`n`), sampling share and per-outcome
+    /// pooled-within-stratum estimates, plus its combined
+    /// functional-error object — the ROADMAP follow-up to the
+    /// campaign-level-only v2 of PR 4. Within a stratum the sample is a
+    /// plain binomial, so pooled Wilson/Clopper–Pearson at the cell's
+    /// confidence level applies.
+    fn v2_strata(s: &mut String, r: &CampaignResult) {
+        let conf = r.config.confidence;
+        s.push_str(", \"strata\": [");
+        for (i, st) in r.strata.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"name\": \"{}\", \"share\": {:.8}, \"n\": {}, ",
+                st.name, st.share, st.n
+            ));
+            s.push_str("\"outcomes\": {");
+            for (j, &o) in OUTCOMES.iter().enumerate() {
+                let e = OutcomeEstimate::pooled_at(st.outcomes[o.index()], st.n, conf);
+                Self::v2_outcome(s, Self::outcome_key(o), &e, false);
+                if j + 1 < OUTCOMES.len() {
+                    s.push_str(", ");
+                }
+            }
+            s.push_str("}, ");
+            let fe_count = st.outcomes[Outcome::Incorrect.index()]
+                + st.outcomes[Outcome::Timeout.index()];
+            let fe = OutcomeEstimate::pooled_at(fe_count, st.n, conf);
+            Self::v2_outcome(s, "functional_error", &fe, true);
+            s.push_str(if i + 1 < r.strata.len() { "}, " } else { "}" });
+        }
+        s.push(']');
+    }
+
     /// Machine-readable JSON, schema `redmule-ft/sweep-v2`: every outcome
-    /// of every cell carries its rate with a 95 % confidence interval
-    /// (Wilson on pooled counts; the stratified normal interval when the
-    /// sweep ran stratified), each cell reports the injections it
-    /// actually ran (`n_injections`) and whether the precision target
-    /// stopped it early, and the combined `functional_error` object adds
-    /// the one-sided exact upper bound — so a zero-error cell reads as
-    /// "< upper95 at 95 %" instead of a bare 0. Deterministic for a
-    /// fixed seed and grid: timing lives in the separate
+    /// of every cell carries its rate with a confidence interval at the
+    /// sweep's configured level (Wilson on pooled counts; the stratified
+    /// normal interval when the sweep ran stratified), each cell reports
+    /// the injections it actually ran (`n_injections`) and whether the
+    /// precision target stopped it early, the combined
+    /// `functional_error` object adds the one-sided exact upper bound —
+    /// so a zero-error cell reads as "< upper at the configured
+    /// confidence" instead of a bare 0 — and stratified cells carry the
+    /// full per-stratum estimate table. Deterministic for a fixed seed
+    /// and grid: timing lives in the separate
     /// [`SweepResult::timing_json`] sidecar, never here.
     pub fn to_json_v2(&self) -> String {
         let mut s = String::with_capacity(512 + 1024 * self.cells.len());
@@ -281,6 +377,7 @@ impl SweepResult {
         s.push_str(&format!("  \"injections_per_cell\": {},\n", self.injections));
         s.push_str(&format!("  \"precision_target\": {:?},\n", self.precision_target));
         s.push_str(&format!("  \"stratified\": {},\n", self.stratified));
+        s.push_str(&format!("  \"confidence\": {:?},\n", self.confidence));
         s.push_str(&format!("  \"fault_model\": \"{}\",\n", self.fault_model.name()));
         s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
         s.push_str("  \"cells\": [\n");
@@ -298,13 +395,7 @@ impl SweepResult {
             ));
             s.push_str("\"outcomes\": {");
             for (j, &o) in OUTCOMES.iter().enumerate() {
-                let key = match o {
-                    super::Outcome::CorrectNoRetry => "correct_no_retry",
-                    super::Outcome::CorrectWithRetry => "correct_with_retry",
-                    super::Outcome::Incorrect => "incorrect",
-                    super::Outcome::Timeout => "timeout",
-                };
-                Self::v2_outcome(&mut s, key, &r.estimate_of(o), false);
+                Self::v2_outcome(&mut s, Self::outcome_key(o), &r.estimate_of(o), false);
                 if j + 1 < OUTCOMES.len() {
                     s.push_str(", ");
                 }
@@ -316,6 +407,9 @@ impl SweepResult {
                 &r.functional_error_estimate(),
                 true,
             );
+            if !r.strata.is_empty() {
+                Self::v2_strata(&mut s, r);
+            }
             s.push_str(if i + 1 < self.cells.len() { "},\n" } else { "}\n" });
         }
         s.push_str("  ]\n}");
@@ -323,8 +417,14 @@ impl SweepResult {
     }
 
     /// Wall-clock sidecar, schema `redmule-ft/bench-sweep-v1`: per-cell
-    /// wall seconds and injections/sec plus sweep totals. Kept as a
-    /// **separate document** so the deterministic v2 JSON stays
+    /// wall seconds and injections/sec plus sweep totals (and the
+    /// trace-cache hit/miss counters when the cache ran). Under the
+    /// grid-stealing scheduler a cell's `wall_seconds` is the pool's
+    /// accumulated *busy* time injecting for that cell (its chunks), so
+    /// the number stays comparable across cells and engines instead of
+    /// absorbing interleaved work on other cells or a blocked wait on
+    /// another cell's in-flight trace recording. Kept
+    /// as a **separate document** so the deterministic v2 JSON stays
     /// byte-identical across thread counts and machines — the
     /// byte-compared path never carries timing (pre-PR-4, `--timing`
     /// spliced wall-clock fields into the main document and every
@@ -338,6 +438,11 @@ impl SweepResult {
         s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
         s.push_str(&format!("  \"wall_seconds\": {:.3},\n", self.wall_seconds));
         s.push_str(&format!("  \"runs_per_sec\": {:.1},\n", self.runs_per_sec()));
+        if let Some((hits, misses)) = self.trace_cache_stats {
+            s.push_str(&format!(
+                "  \"trace_cache\": {{\"hits\": {hits}, \"misses\": {misses}}},\n"
+            ));
+        }
         s.push_str("  \"cells\": [\n");
         for (i, c) in self.cells.iter().enumerate() {
             let r = &c.result;
@@ -370,7 +475,9 @@ pub struct Sweep;
 impl Sweep {
     /// Run the full grid. Deterministic for a fixed seed: cell enumeration
     /// order, per-shape problems and per-cell campaign seeds depend only
-    /// on the configuration, never on worker-thread scheduling.
+    /// on the configuration, never on worker-thread scheduling (and the
+    /// scheduler / trace-cache toggles cannot change a single count —
+    /// only wall-clock).
     pub fn run(config: &SweepConfig) -> Result<SweepResult> {
         if config.geometries.is_empty()
             || config.protections.is_empty()
@@ -422,6 +529,15 @@ impl Sweep {
                 "sweep precision target must be finite and >= 0".into(),
             ));
         }
+        if !config.confidence.is_finite()
+            || config.confidence <= 0.0
+            || config.confidence >= 1.0
+        {
+            return Err(Error::Config(format!(
+                "sweep confidence must be in (0, 1), got {}",
+                config.confidence
+            )));
+        }
         let started = std::time::Instant::now();
 
         let default_tols = [ABFT_TOL_FACTOR];
@@ -461,15 +577,77 @@ impl Sweep {
             })
             .collect();
 
-        // Fan the cells out over the worker pool: a shared atomic cursor
-        // hands each worker the next unclaimed cell; results land in
-        // per-cell slots so completion order never reorders the grid.
-        // When the pool is larger than the grid, the leftover threads are
-        // split *inside* the cells' campaigns (the first `threads % cells`
-        // cells get one extra — a function of the cell index, never of
-        // worker scheduling). Sound because the campaign itself is
-        // thread-layout invariant (its determinism tests pin that), so
-        // the output stays byte-identical for any `--threads`.
+        let cache = if config.trace_cache {
+            Some(TraceCache::new())
+        } else {
+            None
+        };
+        let cells = if config.work_stealing {
+            Self::run_stealing(config, &specs, &problems, cache.as_ref())?
+        } else {
+            Self::run_percell(config, &specs, &problems, cache.as_ref())?
+        };
+        Ok(SweepResult {
+            fault_model: config.fault_model,
+            injections: config.injections,
+            seed: config.seed,
+            precision_target: config.precision_target,
+            stratified: config.stratify,
+            confidence: config.confidence,
+            cells,
+            wall_seconds: started.elapsed().as_secs_f64(),
+            trace_cache_stats: cache.map(|c| (c.hits(), c.misses())),
+        })
+    }
+
+    /// The campaign configuration of one cell: seeded from the sweep
+    /// seed and the cell's (shape, fault count) coordinates — geometry,
+    /// protection and tolerance columns at the same coordinates share
+    /// plan streams, the same controlled comparison `Table1` makes
+    /// across builds. The per-build execution mode and recovery policy
+    /// come from [`CampaignConfig::table1`] so sweep cells and Table-1
+    /// columns are always configured identically.
+    fn cell_config(config: &SweepConfig, spec: &CellSpec) -> CampaignConfig {
+        let tag = ((spec.shape_idx as u64) << 32) | spec.faults as u64;
+        let seed = stream_seed(config.seed, DOMAIN_SWEEP_CELL, tag);
+        let mut cc = CampaignConfig::table1(spec.protection, config.injections, seed);
+        cc.cfg = spec.geometry;
+        cc.spec = spec.shape;
+        cc.threads = config.threads;
+        cc.faults_per_run = spec.faults;
+        cc.fault_model = config.fault_model;
+        cc.abft_tol_factor = spec.tol_factor;
+        cc.fast_forward = config.fast_forward;
+        cc.checkpoint_interval = config.checkpoint_interval;
+        cc.precision_target = config.precision_target;
+        cc.min_injections = config.min_injections;
+        cc.max_injections = config.max_injections;
+        cc.batch_size = config.batch_size;
+        cc.stratify = config.stratify;
+        cc.confidence = config.confidence;
+        cc
+    }
+
+    /// Legacy execution: fan whole cells out over the worker pool, one
+    /// campaign (with its own inner thread split) per cell. Kept for A/B
+    /// comparison against the grid-wide scheduler — byte-identical
+    /// output, worse tail utilization (threads idle once fewer cells
+    /// than workers remain).
+    fn run_percell(
+        config: &SweepConfig,
+        specs: &[CellSpec],
+        problems: &[GemmProblem],
+        cache: Option<&TraceCache>,
+    ) -> Result<Vec<SweepCell>> {
+        // A shared atomic cursor hands each worker the next unclaimed
+        // cell; results land in per-cell slots so completion order never
+        // reorders the grid. When the pool is larger than the grid, the
+        // leftover threads are split *inside* the cells' campaigns (the
+        // first `threads % cells` cells get one extra — a function of
+        // the cell index, never of worker scheduling). Sound because the
+        // campaign itself is thread-layout invariant (its determinism
+        // tests pin that), so the output stays byte-identical for any
+        // `--threads`.
         let pool = config.threads.max(1);
         let threads = pool.min(specs.len());
         let inner_base = pool / specs.len();
@@ -490,6 +668,7 @@ impl Sweep {
                         &specs[i],
                         &problems[specs[i].shape_idx],
                         inner,
+                        cache,
                     );
                     *slots[i].lock().unwrap() = Some(cell);
                 });
@@ -504,47 +683,20 @@ impl Sweep {
                 .expect("sweep cell never ran")?;
             cells.push(cell);
         }
-        Ok(SweepResult {
-            fault_model: config.fault_model,
-            injections: config.injections,
-            seed: config.seed,
-            precision_target: config.precision_target,
-            stratified: config.stratify,
-            cells,
-            wall_seconds: started.elapsed().as_secs_f64(),
-        })
+        Ok(cells)
     }
 
-    /// Run one cell: a campaign seeded from the sweep seed and the cell's
-    /// (shape, fault count) coordinates — geometry, protection and
-    /// tolerance columns at the same coordinates share plan streams, the
-    /// same controlled comparison `Table1` makes across builds. The
-    /// per-build execution mode and recovery policy come from
-    /// [`CampaignConfig::table1`] so sweep cells and Table-1 columns are
-    /// always configured identically.
+    /// Run one cell as a self-contained campaign (legacy scheduler).
     fn run_cell(
         config: &SweepConfig,
         spec: &CellSpec,
         problem: &GemmProblem,
         threads: usize,
+        cache: Option<&TraceCache>,
     ) -> Result<SweepCell> {
-        let tag = ((spec.shape_idx as u64) << 32) | spec.faults as u64;
-        let seed = stream_seed(config.seed, DOMAIN_SWEEP_CELL, tag);
-        let mut cc = CampaignConfig::table1(spec.protection, config.injections, seed);
-        cc.cfg = spec.geometry;
-        cc.spec = spec.shape;
+        let mut cc = Self::cell_config(config, spec);
         cc.threads = threads;
-        cc.faults_per_run = spec.faults;
-        cc.fault_model = config.fault_model;
-        cc.abft_tol_factor = spec.tol_factor;
-        cc.fast_forward = config.fast_forward;
-        cc.checkpoint_interval = config.checkpoint_interval;
-        cc.precision_target = config.precision_target;
-        cc.min_injections = config.min_injections;
-        cc.max_injections = config.max_injections;
-        cc.batch_size = config.batch_size;
-        cc.stratify = config.stratify;
-        let result = Campaign::run_with_problem(&cc, problem)?;
+        let result = Campaign::run_with_problem_cached(&cc, problem, cache)?;
         Ok(SweepCell {
             geometry: spec.geometry,
             protection: spec.protection,
@@ -553,6 +705,418 @@ impl Sweep {
             tol_factor: spec.tol_factor,
             result,
         })
+    }
+
+    /// Grid-wide work-stealing execution (the default): one worker pool
+    /// pulls units — cell preparations and batch chunks — from a shared
+    /// queue, so every thread stays busy until the *whole grid* is done
+    /// rather than until its own cell is. See [`Grid`].
+    fn run_stealing(
+        config: &SweepConfig,
+        specs: &[CellSpec],
+        problems: &[GemmProblem],
+        cache: Option<&TraceCache>,
+    ) -> Result<Vec<SweepCell>> {
+        let grid = Grid {
+            config,
+            specs,
+            problems,
+            cache,
+            slots: specs
+                .iter()
+                .map(|_| CellSlot {
+                    ctx: OnceLock::new(),
+                    prog: Mutex::new(None),
+                    out: Mutex::new(None),
+                })
+                .collect(),
+            state: Mutex::new(GridState {
+                queue: (0..specs.len()).map(Unit::Init).collect(),
+                open_cells: specs.len(),
+            }),
+            cv: Condvar::new(),
+        };
+        let threads = config.threads.max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| {
+                    let mut worker = WorkerArena::new();
+                    while let Some(unit) = grid.next_unit() {
+                        match unit {
+                            Unit::Init(cell) => grid.run_init(cell),
+                            Unit::Chunk {
+                                cell,
+                                lo,
+                                hi,
+                                assign,
+                            } => grid.run_chunk(&mut worker, cell, lo, hi, assign.as_deref()),
+                        }
+                    }
+                });
+            }
+        });
+        let mut cells = Vec::with_capacity(specs.len());
+        for slot in grid.slots {
+            let cell = slot
+                .out
+                .into_inner()
+                .expect("sweep slot poisoned")
+                .expect("sweep cell never ran")?;
+            cells.push(cell);
+        }
+        Ok(cells)
+    }
+}
+
+// ------------------------------------------- grid-stealing scheduler
+
+/// A caught worker panic as a structured error: the sweep fails fast
+/// with the panic's message instead of hanging the pool.
+fn panic_error(what: &str, payload: Box<dyn std::any::Any + Send>) -> Error {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    Error::Sim(format!("sweep worker panicked in {what}: {msg}"))
+}
+
+/// One unit of schedulable work in the grid-wide pool.
+enum Unit {
+    /// Prepare cell `i`: validate, stage, record/adopt the reference
+    /// trace, open its first batch.
+    Init(usize),
+    /// Run injections `[lo, hi)` of cell `cell`'s current batch.
+    Chunk {
+        cell: usize,
+        lo: u64,
+        hi: u64,
+        /// Stratum layout of the batch (stratified cells only) — shared
+        /// by every chunk of the batch.
+        assign: Option<Arc<BatchAssign>>,
+    },
+}
+
+/// Mutable per-cell progress, guarded by the cell slot's mutex. Only
+/// merged counts and the deterministic batch schedule live here, so
+/// scheduling order cannot influence anything the JSON reports.
+struct CellProg {
+    result: CampaignResult,
+    sched: BatchSchedule,
+    /// Injections fully merged (always a batch boundary).
+    start: u64,
+    /// End of the batch currently in flight.
+    batch_end: u64,
+    /// Chunks of the current batch not yet merged.
+    pending: usize,
+    /// First chunk error of the cell, if any.
+    failed: Option<Error>,
+    /// Accumulated busy time actually spent injecting for this cell
+    /// (its chunks), so the timing sidecar's per-cell wall_seconds
+    /// stays comparable across cells and engines — init-to-finalize
+    /// wall clock would also count time the pool spent on *other*
+    /// cells' chunks, and preparation time can be another key's
+    /// recording this cell merely waited on.
+    busy_seconds: f64,
+}
+
+struct CellSlot {
+    /// Immutable shared cell context, set once by the Init unit.
+    ctx: OnceLock<Arc<CellCtx>>,
+    prog: Mutex<Option<CellProg>>,
+    out: Mutex<Option<Result<SweepCell>>>,
+}
+
+/// State of the grid-wide scheduler: a queue of ready units plus the
+/// number of cells still open. Workers block on the condvar when the
+/// queue is momentarily empty (all in-flight chunks are being executed)
+/// and exit once every cell is finalized.
+struct GridState {
+    queue: VecDeque<Unit>,
+    open_cells: usize,
+}
+
+/// The shared scheduler. Lock order is always cell-slot → grid-state;
+/// the state lock is never held while a slot lock is taken, so the two
+/// cannot deadlock.
+struct Grid<'a> {
+    config: &'a SweepConfig,
+    specs: &'a [CellSpec],
+    problems: &'a [GemmProblem],
+    cache: Option<&'a TraceCache>,
+    slots: Vec<CellSlot>,
+    state: Mutex<GridState>,
+    cv: Condvar,
+}
+
+/// Worker-local scratch arena: one long-lived `System` (rebuilt only
+/// when the worker hops to a cell with a different hardware build — the
+/// TCDM and L2 allocations survive the hop) plus the injection scratch
+/// buffers. This is what makes chunk execution zero-copy: adopting a
+/// cell's pristine image is a `copy_from_slice` into existing buffers.
+struct WorkerArena {
+    sys: Option<(RedMuleConfig, Protection, System)>,
+    scratch: InjectScratch,
+}
+
+impl WorkerArena {
+    fn new() -> Self {
+        Self {
+            sys: None,
+            scratch: InjectScratch::new(crate::fault::MAX_PLANS_PER_RUN),
+        }
+    }
+
+    /// The worker's `System` (configured for `ctx`'s cell) plus its
+    /// injection scratch — returned together so the two disjoint
+    /// borrows can feed `CellCtx::run_chunk`.
+    fn arena(&mut self, ctx: &CellCtx) -> (&mut System, &mut InjectScratch) {
+        let cfg = ctx.config.cfg;
+        let prot = ctx.config.protection;
+        let rebuild = match &self.sys {
+            Some((c, p, _)) => *c != cfg || *p != prot,
+            None => true,
+        };
+        if rebuild {
+            match self.sys.take() {
+                Some((_, _, mut sys)) => {
+                    sys.reconfigure(cfg, prot);
+                    self.sys = Some((cfg, prot, sys));
+                }
+                None => self.sys = Some((cfg, prot, System::new(cfg, prot))),
+            }
+        }
+        let (_, _, sys) = self.sys.as_mut().unwrap();
+        sys.recovery = ctx.config.recovery;
+        sys.abft_tol_factor = ctx.config.abft_tol_factor;
+        (sys, &mut self.scratch)
+    }
+}
+
+impl Grid<'_> {
+    /// Enqueue units and wake the pool.
+    fn push_units(&self, units: Vec<Unit>) {
+        let mut st = self.state.lock().unwrap();
+        st.queue.extend(units);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Next unit to execute, or `None` once the whole grid is finalized.
+    fn next_unit(&self) -> Option<Unit> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(u) = st.queue.pop_front() {
+                return Some(u);
+            }
+            if st.open_cells == 0 {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn close_cell(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open_cells -= 1;
+        drop(st);
+        // Wake every waiter — on the last cell they must observe
+        // `open_cells == 0` and exit.
+        self.cv.notify_all();
+    }
+
+    /// Split the batch `[start, end)` into chunks sized for the pool.
+    /// Chunking affects scheduling only — every injection's plans are a
+    /// pure function of its global index.
+    fn chunk_units(
+        cell: usize,
+        start: u64,
+        end: u64,
+        threads: usize,
+        assign: Option<Arc<BatchAssign>>,
+    ) -> Vec<Unit> {
+        let chunk = (end - start).div_ceil(threads as u64).max(1);
+        let mut units = Vec::new();
+        let mut lo = start;
+        while lo < end {
+            let hi = (lo + chunk).min(end);
+            units.push(Unit::Chunk {
+                cell,
+                lo,
+                hi,
+                assign: assign.clone(),
+            });
+            lo = hi;
+        }
+        units
+    }
+
+    /// Open the next batch of `cell`: the same allocation + schedule
+    /// math as the single-campaign driver, split into chunks. `None`
+    /// when the campaign's budget is complete.
+    fn open_batch(&self, cell: usize, ctx: &CellCtx, prog: &mut CellProg) -> Option<Vec<Unit>> {
+        let size = prog.sched.batch_at(prog.start);
+        if size == 0 {
+            return None;
+        }
+        let assign = if ctx.config.stratify {
+            Some(Arc::new(BatchAssign::new(
+                prog.start,
+                &ctx.allocate(&prog.result, size),
+            )))
+        } else {
+            None
+        };
+        prog.batch_end = prog.start + size;
+        let units = Self::chunk_units(
+            cell,
+            prog.start,
+            prog.batch_end,
+            self.config.threads.max(1),
+            assign,
+        );
+        prog.pending = units.len();
+        Some(units)
+    }
+
+    /// Record a cell's final result and close it.
+    fn finalize(&self, cell: usize, out: Result<SweepCell>) {
+        *self.slots[cell].out.lock().unwrap() = Some(out);
+        self.close_cell();
+    }
+
+    fn cell_of(spec: &CellSpec, mut prog: CellProg) -> SweepCell {
+        prog.result.wall_seconds = prog.busy_seconds;
+        SweepCell {
+            geometry: spec.geometry,
+            protection: spec.protection,
+            shape: spec.shape,
+            faults: spec.faults,
+            tol_factor: spec.tol_factor,
+            result: prog.result,
+        }
+    }
+
+    /// Execute an Init unit: prepare the cell (stage + trace via the
+    /// shared cache) and enqueue its first batch. Panics inside the
+    /// preparation are caught and finalize the cell as an error — an
+    /// escaped panic would leave `open_cells` permanently non-zero and
+    /// hang every worker in [`Grid::next_unit`] (the legacy per-cell
+    /// engine re-raised worker panics at scope join; here the sweep
+    /// fails fast with the panic's message instead).
+    fn run_init(&self, cell: usize) {
+        let spec = &self.specs[cell];
+        let cc = Sweep::cell_config(self.config, spec);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            CellCtx::prepare(&cc, &self.problems[spec.shape_idx], self.cache)
+        }));
+        let prepared = match caught {
+            Ok(r) => r,
+            Err(p) => Err(panic_error("cell preparation", p)),
+        };
+        match prepared {
+            Ok(ctx) => {
+                let ctx = Arc::new(ctx);
+                let mut prog = CellProg {
+                    result: ctx.init_result(),
+                    sched: ctx.schedule(),
+                    start: 0,
+                    batch_end: 0,
+                    pending: 0,
+                    failed: None,
+                    // The busy clock starts *after* preparation: an
+                    // adopting cell can spend its Init blocked on
+                    // another worker's in-flight recording of the same
+                    // trace-cache key, and that wait is not this cell's
+                    // cost. Per-cell wall_seconds therefore measures
+                    // injection work (chunks), comparable across cells
+                    // and engines.
+                    busy_seconds: 0.0,
+                };
+                let _ = self.slots[cell].ctx.set(Arc::clone(&ctx));
+                match self.open_batch(cell, &ctx, &mut prog) {
+                    Some(units) => {
+                        *self.slots[cell].prog.lock().unwrap() = Some(prog);
+                        self.push_units(units);
+                    }
+                    // Zero-budget cell: complete on the spot.
+                    None => self.finalize(cell, Ok(Self::cell_of(spec, prog))),
+                }
+            }
+            Err(e) => self.finalize(cell, Err(e)),
+        }
+    }
+
+    /// Execute a Chunk unit: run the injections on the worker's arena,
+    /// merge, and — as the last chunk of its batch — close the batch:
+    /// advance the deterministic schedule, open the next batch or
+    /// finalize the cell. Exactly the single-campaign driver's loop,
+    /// interleaved across cells.
+    fn run_chunk(
+        &self,
+        worker: &mut WorkerArena,
+        cell: usize,
+        lo: u64,
+        hi: u64,
+        assign: Option<&BatchAssign>,
+    ) {
+        let ctx = Arc::clone(self.slots[cell].ctx.get().expect("chunk scheduled before init"));
+        let chunk_started = std::time::Instant::now();
+        // Catch panics so a failing chunk still decrements `pending` and
+        // closes its batch — an escaped panic would hang the whole pool
+        // (see `run_init`). The worker arena is rebuilt afterwards: a
+        // mid-run panic can leave its System in an arbitrary state.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (sys, scratch) = worker.arena(&ctx);
+            ctx.run_chunk(sys, scratch, assign, lo, hi)
+        }));
+        let run = match caught {
+            Ok(r) => r,
+            Err(p) => {
+                worker.sys = None;
+                Err(panic_error("injection chunk", p))
+            }
+        };
+        let mut prog_slot = self.slots[cell].prog.lock().unwrap();
+        let prog = prog_slot.as_mut().expect("chunk after cell finalized");
+        prog.busy_seconds += chunk_started.elapsed().as_secs_f64();
+        match run {
+            Ok((local, local_strata)) => {
+                prog.result.merge_counts(&local);
+                prog.result.merge_strata(&local_strata);
+            }
+            Err(e) => {
+                if prog.failed.is_none() {
+                    prog.failed = Some(e);
+                }
+            }
+        }
+        prog.pending -= 1;
+        if prog.pending > 0 {
+            return;
+        }
+        // Last chunk of the batch: take the progress out (no chunks of
+        // this cell can be queued or in flight now) and close the batch.
+        let mut prog = prog_slot.take().unwrap();
+        drop(prog_slot);
+        if let Some(e) = prog.failed.take() {
+            self.finalize(cell, Err(e));
+            return;
+        }
+        prog.start = prog.batch_end;
+        prog.result.batches += 1;
+        let target = ctx.config.precision_target;
+        if prog.sched.continues(prog.start, &prog.result, target) {
+            if let Some(units) = self.open_batch(cell, &ctx, &mut prog) {
+                *self.slots[cell].prog.lock().unwrap() = Some(prog);
+                self.push_units(units);
+                return;
+            }
+            // Unreachable in practice (`continues` implies budget left),
+            // kept as a defensive fall-through to finalization.
+        }
+        prog.result.stopped_early = prog.sched.stopped_early(prog.start, &prog.result, target);
+        self.finalize(cell, Ok(Self::cell_of(&self.specs[cell], prog)));
     }
 }
 
@@ -587,6 +1151,58 @@ mod tests {
         let a = Sweep::run(&tiny(11, 1)).unwrap();
         let b = Sweep::run(&tiny(11, 4)).unwrap();
         assert_eq!(a.to_json(false), b.to_json(false));
+    }
+
+    #[test]
+    fn scheduler_and_cache_toggles_do_not_change_the_json() {
+        // The 2×2 engine matrix {stealing, per-cell} × {cache, no cache}
+        // must emit byte-identical v1 and v2 documents — the tentpole
+        // invariant (the full cross-protection A/B lives in
+        // tests/shared_trace.rs).
+        let base = tiny(19, 3);
+        let mut docs = Vec::new();
+        for stealing in [true, false] {
+            for cached in [true, false] {
+                let mut c = base.clone();
+                c.work_stealing = stealing;
+                c.trace_cache = cached;
+                let r = Sweep::run(&c).unwrap();
+                docs.push((stealing, cached, r.to_json(false), r.to_json_v2()));
+            }
+        }
+        for (stealing, cached, v1, v2) in &docs[1..] {
+            assert_eq!(
+                v1, &docs[0].2,
+                "v1 diverged at stealing={stealing} cache={cached}"
+            );
+            assert_eq!(
+                v2, &docs[0].3,
+                "v2 diverged at stealing={stealing} cache={cached}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_cache_shares_clean_runs_across_fault_counts() {
+        // tiny(): baseline × {1,2} faults on one shape = one identity;
+        // abft × {1.0, default tol} × {1,2} faults = two identities.
+        // 6 cells → 3 recordings, 3 adoptions.
+        let r = Sweep::run(&tiny(5, 2)).unwrap();
+        let (hits, misses) = r.trace_cache_stats.expect("cache on by default");
+        assert_eq!(misses, 3, "one recording per clean-run identity");
+        assert_eq!(hits, 3, "every other cell adopts a shared trace");
+        assert_eq!(hits + misses, r.cells.len() as u64);
+        // The sidecar reports the counters; the deterministic documents
+        // never do.
+        assert!(r.timing_json().contains("\"trace_cache\": {\"hits\": 3, \"misses\": 3}"));
+        assert!(!r.to_json_v2().contains("trace_cache"));
+        assert!(!r.to_json(false).contains("trace_cache"));
+        // With the cache off the stats are absent.
+        let mut off = tiny(5, 2);
+        off.trace_cache = false;
+        let r_off = Sweep::run(&off).unwrap();
+        assert!(r_off.trace_cache_stats.is_none());
+        assert!(!r_off.timing_json().contains("trace_cache"));
     }
 
     #[test]
@@ -682,6 +1298,15 @@ mod tests {
         c.protections = vec![Protection::Abft];
         c.tol_factors = vec![f64::NAN];
         assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // The confidence knob is validated up front too.
+        for bad in [0.0, 1.0, -0.5, f64::NAN] {
+            let mut c = SweepConfig::new(10, 1);
+            c.confidence = bad;
+            assert!(
+                matches!(Sweep::run(&c), Err(Error::Config(_))),
+                "confidence {bad} must be rejected"
+            );
+        }
     }
 
     #[test]
@@ -694,6 +1319,7 @@ mod tests {
             "\"schema\": \"redmule-ft/sweep-v2\"",
             "\"precision_target\": 0.0",
             "\"stratified\": false",
+            "\"confidence\": 0.95",
             "\"n_injections\": 40",
             "\"stopped_early\": false",
             "\"batches\": 1",
@@ -708,6 +1334,8 @@ mod tests {
         // Timing never leaks into the deterministic v2 document.
         assert!(!ja.contains("wall_seconds"), "v2 must not carry timing");
         assert!(!ja.contains("runs_per_sec"));
+        // Unstratified cells carry no per-stratum block.
+        assert!(!ja.contains("\"strata\""));
     }
 
     #[test]
@@ -772,10 +1400,15 @@ mod tests {
         let mut c1 = c.clone();
         c1.threads = 1;
         assert_eq!(Sweep::run(&c1).unwrap().to_json_v2(), j);
+        // And the legacy per-cell pools produce the same document.
+        let mut legacy = c.clone();
+        legacy.work_stealing = false;
+        legacy.trace_cache = false;
+        assert_eq!(Sweep::run(&legacy).unwrap().to_json_v2(), j);
     }
 
     #[test]
-    fn stratified_sweep_is_deterministic_and_flagged() {
+    fn stratified_sweep_is_deterministic_and_carries_strata() {
         let mut c = SweepConfig::new(600, 5);
         c.shapes = vec![GemmSpec::new(6, 8, 8)];
         c.protections = vec![Protection::Baseline];
@@ -793,6 +1426,23 @@ mod tests {
         let res = &a.cells[0].result;
         assert!(!res.strata.is_empty());
         assert_eq!(res.strata.iter().map(|s| s.n).sum::<u64>(), res.total);
+        // The v2 document carries the per-stratum estimate table: one
+        // strata block, one entry per stratum, each with its own
+        // functional_error object.
+        let j = a.to_json_v2();
+        assert!(j.contains("\"strata\": ["));
+        for s in &res.strata {
+            assert!(
+                j.contains(&format!("\"name\": \"{}\"", s.name)),
+                "stratum {} missing from the JSON",
+                s.name
+            );
+        }
+        assert_eq!(
+            j.matches("\"functional_error\":").count(),
+            1 + res.strata.len(),
+            "cell-level + one per stratum"
+        );
     }
 
     #[test]
@@ -803,6 +1453,28 @@ mod tests {
         let mut c = SweepConfig::new(10, 1);
         c.precision_target = -1.0;
         assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn confidence_knob_widens_intervals_without_touching_counts() {
+        let mut c90 = tiny(41, 2);
+        c90.confidence = 0.90;
+        let mut c99 = c90.clone();
+        c99.confidence = 0.99;
+        let r90 = Sweep::run(&c90).unwrap();
+        let r99 = Sweep::run(&c99).unwrap();
+        // Counts are untouched by the reporting confidence.
+        assert_eq!(r90.to_json(false), r99.to_json(false));
+        // Intervals nest: every cell/outcome's 99 % CI contains the 90 %.
+        for (a, b) in r90.cells.iter().zip(&r99.cells) {
+            for o in OUTCOMES {
+                let (e90, e99) = (a.result.estimate_of(o), b.result.estimate_of(o));
+                assert!(e99.ci_lo <= e90.ci_lo + 1e-12, "{o:?} lo");
+                assert!(e99.ci_hi + 1e-12 >= e90.ci_hi, "{o:?} hi");
+            }
+        }
+        assert!(r90.to_json_v2().contains("\"confidence\": 0.9"));
+        assert!(r99.to_json_v2().contains("\"confidence\": 0.99"));
     }
 
     #[test]

@@ -196,9 +196,15 @@ impl RefTrace {
 
 /// Combined convergence digest: accelerator state + TCDM contents (as a
 /// delta against the pristine staged image, so equal contents hash equal
-/// regardless of write history).
-fn ff_digest(redmule: &RedMule, tcdm: &Tcdm, pristine: &Tcdm) -> u64 {
-    ff_digest_with_delta(redmule, &tcdm.dirty_delta(pristine))
+/// regardless of write history). Runs through the TCDM's reusable
+/// digest scratch, so the per-checkpoint probes of the fast-forward hot
+/// loop allocate nothing; the byte stream (and therefore the digest
+/// value) is identical to hashing the materialized delta.
+fn ff_digest(redmule: &RedMule, tcdm: &mut Tcdm, pristine: &Tcdm) -> u64 {
+    let mut h = Fnv64::new();
+    redmule.digest_into(&mut h);
+    tcdm.digest_delta_scratch(pristine, &mut h);
+    h.finish()
 }
 
 /// [`ff_digest`] over an already-computed TCDM delta (the reference
@@ -271,6 +277,32 @@ impl System {
     pub fn with_abft_tolerance(mut self, factor: f64) -> Self {
         self.abft_tol_factor = factor;
         self
+    }
+
+    /// Adopt a pristine staged TCDM image in place: power-on-reset the
+    /// accelerator, `copy_from_slice` the image into the existing TCDM
+    /// buffers, and (re-)enable dirty tracking — the zero-allocation
+    /// counterpart of `sys.tcdm = pristine.clone()` that the campaign
+    /// workers and the sweep's work-stealing scheduler run between
+    /// batches. After the call the System is bit-identical to a freshly
+    /// constructed one that staged the same workload (modulo the shared
+    /// L2/DMA substrate, which the injection loop never touches).
+    pub fn restore_from(&mut self, pristine: &Tcdm) {
+        self.redmule.reset();
+        self.tcdm.copy_state_from(pristine);
+        if !self.tcdm.dirty_tracking_enabled() {
+            self.tcdm.enable_dirty_tracking();
+        }
+    }
+
+    /// Rebuild the accelerator for a different hardware build, keeping
+    /// the TCDM and L2 allocations. Worker threads that hop between
+    /// campaign cells of different geometries/protections (the sweep's
+    /// grid-wide scheduler) reconfigure one long-lived System instead of
+    /// constructing a fresh one per cell. Recovery policy and ABFT
+    /// tolerance are left untouched — set the public fields per cell.
+    pub fn reconfigure(&mut self, cfg: RedMuleConfig, protection: Protection) {
+        self.redmule = RedMule::new(cfg, protection);
     }
 
     pub fn protection(&self) -> Protection {
@@ -537,7 +569,7 @@ impl System {
                 let idx = (cycle / ff.trace.interval) as usize;
                 if let Some(cp) = ff.trace.checkpoints.get(idx) {
                     if cp.cycle == cycle
-                        && ff_digest(&self.redmule, &self.tcdm, ff.pristine) == cp.digest
+                        && ff_digest(&self.redmule, &mut self.tcdm, ff.pristine) == cp.digest
                     {
                         return (false, self.redmule.cycle, irq_seen, true);
                     }
@@ -701,6 +733,21 @@ impl System {
         mode: ExecMode,
         plans: &[FaultPlan],
     ) -> Result<RunReport> {
+        let mut ctx = FaultCtx::clean();
+        self.run_staged_with_faults_scratch(layout, mode, plans, &mut ctx)
+    }
+
+    /// [`System::run_staged_with_faults`] with a caller-owned reusable
+    /// fault context: the campaign hot loop re-arms one worker-local
+    /// `FaultCtx` per injection (`reset_with_plans`) instead of
+    /// allocating a plan `Vec` per run. Behavior is identical.
+    pub fn run_staged_with_faults_scratch(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        ctx: &mut FaultCtx,
+    ) -> Result<RunReport> {
         if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
             return Err(Error::Config(format!(
                 "at most {} faults per run ({} planned)",
@@ -709,11 +756,7 @@ impl System {
             )));
         }
         let config_cycles = self.program(layout, mode);
-        let ctx = if plans.is_empty() {
-            FaultCtx::clean()
-        } else {
-            FaultCtx::with_plans(plans.to_vec())
-        };
+        ctx.reset_with_plans(plans);
         self.host_loop(*layout, mode, ctx, config_cycles, None)
     }
 
@@ -745,6 +788,24 @@ impl System {
         trace: &RefTrace,
         pristine: &Tcdm,
     ) -> Result<RunReport> {
+        let mut ctx = FaultCtx::clean();
+        self.run_staged_with_faults_ff_scratch(layout, mode, plans, trace, pristine, &mut ctx)
+    }
+
+    /// [`System::run_staged_with_faults_ff`] with a caller-owned
+    /// reusable fault context (see
+    /// [`System::run_staged_with_faults_scratch`]). Behavior is
+    /// identical; the steady-state injection performs no heap
+    /// allocation in the restore/plan/digest machinery.
+    pub fn run_staged_with_faults_ff_scratch(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        trace: &RefTrace,
+        pristine: &Tcdm,
+        ctx: &mut FaultCtx,
+    ) -> Result<RunReport> {
         if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
             return Err(Error::Config(format!(
                 "at most {} faults per run ({} planned)",
@@ -767,7 +828,7 @@ impl System {
         self.tcdm.restore_from(pristine);
         self.tcdm.apply_delta(&cp.tcdm_delta);
         self.redmule.restore_from(&cp.redmule);
-        let ctx = FaultCtx::with_plans(plans.to_vec());
+        ctx.reset_with_plans(plans);
         let resume = FfResume {
             trace,
             pristine,
@@ -791,7 +852,7 @@ impl System {
         &mut self,
         layout: TaskLayout,
         mode: ExecMode,
-        mut ctx: FaultCtx,
+        ctx: &mut FaultCtx,
         mut config_cycles: u64,
         ff_resume: Option<FfResume<'_>>,
     ) -> Result<RunReport> {
@@ -812,7 +873,7 @@ impl System {
             let resumed = if first_attempt { ff_resume.as_ref() } else { None };
             let (aborted, cycles, irq_seen) = if let Some(ff) = resumed {
                 let (aborted, cycles, irq_seen, converged) =
-                    self.execute_resumed_attempt(&mut ctx, budget, ff);
+                    self.execute_resumed_attempt(ctx, budget, ff);
                 if converged {
                     // The state digest matched the reference at this
                     // cycle: every remaining cycle would replay the
@@ -834,7 +895,7 @@ impl System {
                 }
                 (aborted, cycles, irq_seen)
             } else {
-                self.execute_attempt(&mut ctx, budget)
+                self.execute_attempt(ctx, budget)
             };
             first_attempt = false;
             total_cycles += cycles;
@@ -1142,6 +1203,40 @@ mod tests {
         let (base, _) = run(Protection::Baseline, ExecMode::Performance, spec, 9);
         assert_eq!(full.config_cycles, CONFIG_PARITY_CYCLES);
         assert!(base.config_cycles < 20);
+    }
+
+    #[test]
+    fn restore_from_matches_a_freshly_staged_system() {
+        // A long-lived scratch System (the sweep scheduler's worker
+        // arena) that reconfigures to a cell's build and adopts its
+        // pristine image must run bit-identically to a fresh System
+        // that staged the workload itself.
+        let cfg = RedMuleConfig::paper();
+        let p = GemmProblem::random(&GemmSpec::new(6, 8, 8), 77);
+        let mut fresh = System::new(cfg, Protection::Full);
+        fresh.redmule.reset();
+        let layout = fresh.stage(&p).unwrap();
+        let pristine = fresh.tcdm.clone();
+        fresh.tcdm.enable_dirty_tracking();
+        let a = fresh
+            .run_staged_with_faults(&layout, ExecMode::FaultTolerant, &[])
+            .unwrap();
+        let mut scratch = System::new(RedMuleConfig::new(8, 2, 2), Protection::Baseline);
+        scratch.reconfigure(cfg, Protection::Full);
+        scratch.restore_from(&pristine);
+        let b = scratch
+            .run_staged_with_faults(&layout, ExecMode::FaultTolerant, &[])
+            .unwrap();
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.z.bits(), b.z.bits());
+        // Re-adopting after a completed run restores a clean slate.
+        scratch.restore_from(&pristine);
+        let c = scratch
+            .run_staged_with_faults(&layout, ExecMode::FaultTolerant, &[])
+            .unwrap();
+        assert_eq!(a.cycles, c.cycles);
+        assert_eq!(a.z.bits(), c.z.bits());
     }
 
     #[test]

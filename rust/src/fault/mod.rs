@@ -100,6 +100,24 @@ impl FaultCtx {
         }
     }
 
+    /// Re-arm this context with a new plan list, reusing the internal
+    /// plan buffer: the campaign hot path resets one worker-local
+    /// context per injection instead of allocating a fresh `Vec` each
+    /// time (see `System::run_staged_with_faults_scratch`). Equivalent
+    /// to `*self = FaultCtx::with_plans(plans.to_vec())` without the
+    /// allocation.
+    pub fn reset_with_plans(&mut self, plans: &[FaultPlan]) {
+        assert!(
+            plans.len() <= MAX_PLANS_PER_RUN,
+            "at most {MAX_PLANS_PER_RUN} faults per run"
+        );
+        self.plans.clear();
+        self.plans.extend_from_slice(plans);
+        self.applied_mask = 0;
+        self.cycle = 0;
+        self.applied = false;
+    }
+
     pub fn plans(&self) -> &[FaultPlan] {
         &self.plans
     }
@@ -292,6 +310,46 @@ mod tests {
         // Re-striking an already-applied plan does not double-count.
         assert_eq!(ctx.u32(s2, 0), 1 << 5);
         assert_eq!(ctx.applied_faults(), 2);
+    }
+
+    #[test]
+    fn reset_with_plans_equals_a_fresh_context() {
+        let site = SiteId::new(Module::CeArray, 1, 4);
+        let p1 = FaultPlan {
+            cycle: 3,
+            site,
+            bit: 2,
+            kind: FaultKind::Transient,
+        };
+        let p2 = FaultPlan {
+            cycle: 8,
+            site,
+            bit: 1,
+            kind: FaultKind::Transient,
+        };
+        // Dirty the reusable context thoroughly, then re-arm it.
+        let mut reused = FaultCtx::with_plans(vec![p1, p2]);
+        reused.set_cycle(3);
+        let _ = reused.u32(site, 0);
+        assert!(reused.applied);
+        reused.reset_with_plans(std::slice::from_ref(&p2));
+        let mut fresh = FaultCtx::with_plan(p2);
+        assert_eq!(reused.plans(), fresh.plans());
+        assert_eq!(reused.applied_faults(), 0);
+        assert!(!reused.applied);
+        assert_eq!(reused.cycle, 0);
+        for cycle in 0..12 {
+            reused.set_cycle(cycle);
+            fresh.set_cycle(cycle);
+            assert_eq!(reused.u32(site, 0xA5), fresh.u32(site, 0xA5), "cycle {cycle}");
+        }
+        assert_eq!(reused.applied_faults(), fresh.applied_faults());
+        // Re-arming to empty behaves like `FaultCtx::clean()`.
+        reused.reset_with_plans(&[]);
+        assert_eq!(reused.n_plans(), 0);
+        reused.set_cycle(8);
+        assert_eq!(reused.u32(site, 1), 1);
+        assert!(!reused.applied);
     }
 
     #[test]

@@ -325,6 +325,25 @@ impl GemmProblem {
         gemm_golden(&self.x, &self.w, &self.y)
     }
 
+    /// Order-stable FNV-1a digest of the problem's exact bit content
+    /// (dimensions plus every FP16 pattern of X, W and Y) — the
+    /// workload-identity component of the campaign's shared-trace cache
+    /// key. Two problems digest equal iff they stage identical images,
+    /// so a cached clean-run trace can never be replayed against a
+    /// different workload.
+    pub fn content_digest(&self) -> u64 {
+        let mut h = crate::util::digest::Fnv64::new();
+        h.write_u64(self.spec.m as u64);
+        h.write_u64(self.spec.n as u64);
+        h.write_u64(self.spec.k as u64);
+        for m in [&self.x, &self.w, &self.y] {
+            for v in &m.data {
+                h.write_bytes(&v.to_bits().to_le_bytes());
+            }
+        }
+        h.finish()
+    }
+
     /// The ABFT-augmented problem: X gains a checksum row (column sums),
     /// W a checksum column (row sums), Y both plus the corner (fold of
     /// Y's column sums). The `(m+1) × (k+1)` result's data region is

@@ -58,7 +58,9 @@ pub mod util;
 
 /// Commonly used types, re-exported for examples and binaries.
 pub mod prelude {
-    pub use crate::campaign::{Campaign, CampaignConfig, Outcome, Sweep, SweepConfig, Table1};
+    pub use crate::campaign::{
+        Campaign, CampaignConfig, Outcome, Sweep, SweepConfig, Table1, TraceCache,
+    };
     pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System};
     pub use crate::coordinator::{Coordinator, Criticality, TaskRequest};
     pub use crate::fault::{FaultKind, FaultModel, FaultPlan, FaultRegistry};

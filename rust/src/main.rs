@@ -7,14 +7,15 @@
 //!                     [--seed S] [--threads T] [--report]
 //!                     [--direct] [--checkpoint-interval K]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
-//!                     [--max-injections N] [--stratify]
+//!                     [--max-injections N] [--stratify] [--confidence C]
 //! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
 //!                     [--configs a,b,..] [--geoms LxHxP,..] [--shapes MxNxK,..]
 //!                     [--faults 1,2,..] [--model independent|burst|site-burst]
 //!                     [--tols F,..] [--schema v1|v2] [--timing [--timing-out F]]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
-//!                     [--max-injections N] [--stratify]
+//!                     [--max-injections N] [--stratify] [--confidence C]
 //!                     [--direct] [--checkpoint-interval K]
+//!                     [--no-trace-cache] [--per-cell]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
 //! redmule-ft floorplan [--config ...]
@@ -98,6 +99,17 @@ impl Args {
             self.get("h", 4usize),
             self.get("p", 3usize),
         )
+    }
+}
+
+/// Render a confidence level as a percent label without rounding away
+/// fractional levels (`0.95` → `"95"`, `0.975` → `"97.5"`).
+fn percent_label(confidence: f64) -> String {
+    let p = confidence * 100.0;
+    if (p - p.round()).abs() < 1e-9 {
+        format!("{p:.0}")
+    } else {
+        format!("{p}")
     }
 }
 
@@ -192,9 +204,10 @@ fn print_help() {
            campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
                          --injections, --seed, --threads, --report; --direct disables the\n\
                          checkpointed fast-forward engine, --checkpoint-interval K tunes it;\n\
-                         --precision P stops adaptively once every outcome's 95% CI\n\
-                         half-width <= P, tuned by --batch-size/--min-injections/\n\
-                         --max-injections, --stratify allocates over area strata)\n\
+                         --precision P stops adaptively once every outcome's CI\n\
+                         half-width <= P at the --confidence level (default 0.95),\n\
+                         tuned by --batch-size/--min-injections/--max-injections,\n\
+                         --stratify allocates over area strata)\n\
            sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
                          --geoms LxHxP,.. array geometries, --shapes MxNxK,..,\n\
                          --faults 1,2,.., --model independent|burst|site-burst,\n\
@@ -202,9 +215,13 @@ fn print_help() {
                          --threads, --schema v2 (default, per-outcome CIs; v1 legacy),\n\
                          --precision / --batch-size / --min-injections / --max-injections /\n\
                          --stratify run every cell to its own stopping point,\n\
+                         --confidence C sets the interval level (default 0.95),\n\
                          --timing writes the bench-sweep sidecar (--timing-out FILE;\n\
                          v1 keeps its legacy inline fields), --direct /\n\
-                         --checkpoint-interval as in campaign)\n\
+                         --checkpoint-interval as in campaign; --no-trace-cache\n\
+                         disables the shared reference-trace cache and --per-cell\n\
+                         the grid-wide work stealing — byte-identical output either\n\
+                         way, only slower)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
                          --abft appends the ABFT checksum column)\n\
            area          GE area model breakdown (--config, --l/--h/--p)\n\
@@ -229,12 +246,17 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     cfg.min_injections = args.get("min-injections", 0u64);
     cfg.max_injections = args.get("max-injections", 0u64);
     cfg.stratify = args.flag("stratify");
+    cfg.confidence = args.get("confidence", 0.95f64);
     eprintln!(
         "campaign: {} build, {} injections{}, seed {}, {} threads, {} engine{}",
         protection.name(),
         injections,
         if cfg.precision_target > 0.0 {
-            format!(" (cap; adaptive to ±{})", cfg.precision_target)
+            format!(
+                " (cap; adaptive to ±{} at {} %)",
+                cfg.precision_target,
+                percent_label(cfg.confidence)
+            )
         } else {
             String::new()
         },
@@ -254,9 +276,10 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
         100.0 * r.applied as f64 / r.total.max(1) as f64,
         r.runs_per_sec()
     );
+    let pct = percent_label(cfg.confidence);
     if cfg.precision_target > 0.0 {
         println!(
-            "adaptive: {} batches, stopped {} (target ±{} at 95 %)",
+            "adaptive: {} batches, stopped {} (target ±{} at {pct} %)",
             r.batches,
             if r.stopped_early {
                 "early — every outcome CI met the target"
@@ -272,14 +295,14 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
             let e = r.estimate_of(o);
             if e.count == 0 {
                 println!(
-                    "{:<22}: 0 observed in {} -> < {:.3e} at 95 %",
+                    "{:<22}: 0 observed in {} -> < {:.3e} at {pct} %",
                     o.name(),
                     e.n,
                     e.upper95()
                 );
             } else {
                 println!(
-                    "{:<22}: {:>7.4} %  95% CI [{:.4}, {:.4}] %  (exact [{:.4}, {:.4}] %)",
+                    "{:<22}: {:>7.4} %  {pct}% CI [{:.4}, {:.4}] %  (exact [{:.4}, {:.4}] %)",
                     o.name(),
                     100.0 * e.rate,
                     100.0 * e.ci_lo,
@@ -292,14 +315,14 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
         let fe = r.functional_error_estimate();
         if fe.count == 0 {
             println!(
-                "{:<22}: 0 observed in {} -> < {:.3e} at 95 %",
+                "{:<22}: 0 observed in {} -> < {:.3e} at {pct} %",
                 "functional error",
                 fe.n,
                 fe.upper95()
             );
         } else {
             println!(
-                "{:<22}: {:>7.4} %  95% CI [{:.4}, {:.4}] %",
+                "{:<22}: {:>7.4} %  {pct}% CI [{:.4}, {:.4}] %",
                 "functional error",
                 100.0 * fe.rate,
                 100.0 * fe.ci_lo,
@@ -357,6 +380,9 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     sc.min_injections = args.get("min-injections", 0u64);
     sc.max_injections = args.get("max-injections", 0u64);
     sc.stratify = args.flag("stratify");
+    sc.confidence = args.get("confidence", 0.95f64);
+    sc.trace_cache = !args.flag("no-trace-cache");
+    sc.work_stealing = !args.flag("per-cell");
     let schema = args
         .kv
         .get("schema")
@@ -388,6 +414,13 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         if sc.fast_forward { "fast-forward" } else { "direct" },
         schema
     );
+    let scheduler = if sc.work_stealing {
+        "grid-stealing"
+    } else {
+        "per-cell pools"
+    };
+    let cache_mode = if sc.trace_cache { "shared" } else { "off" };
+    eprintln!("sweep: scheduler {scheduler}, reference-trace cache {cache_mode}");
     let r = Sweep::run(&sc)?;
     if schema == "v1" {
         // Legacy document; `--timing` keeps its historical inline
@@ -414,6 +447,11 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         r.wall_seconds,
         r.runs_per_sec()
     );
+    if let Some((hits, misses)) = r.trace_cache_stats {
+        eprintln!(
+            "sweep: reference traces — {misses} recorded, {hits} adopted from the shared cache"
+        );
+    }
     Ok(())
 }
 

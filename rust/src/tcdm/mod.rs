@@ -36,6 +36,10 @@ pub struct Tcdm {
     /// in the campaign engine: restoring only the dirtied words beats a
     /// full-image copy by orders of magnitude on small workloads.
     dirty: Option<Vec<u32>>,
+    /// Reusable index buffer of [`Tcdm::digest_delta_scratch`]: the
+    /// fast-forward convergence probe sorts/dedups the dirty log here so
+    /// steady-state digest probes perform no heap allocation.
+    scratch_idx: Vec<u32>,
 }
 
 impl Tcdm {
@@ -53,6 +57,26 @@ impl Tcdm {
             words_per_bank,
             counters: EccCounters::default(),
             dirty: None,
+            scratch_idx: Vec::new(),
+        }
+    }
+
+    /// Copy another instance's stored contents (codewords + ECC counters)
+    /// into this one's existing buffers — `copy_from_slice` per bank, no
+    /// heap allocation. The campaign's worker scratch arenas adopt the
+    /// shared pristine staged image this way instead of `clone()`ing a
+    /// fresh TCDM per batch. The two instances must share geometry; the
+    /// dirty log (if tracking is enabled) is cleared, since the contents
+    /// now equal the copied image exactly.
+    pub fn copy_state_from(&mut self, other: &Tcdm) {
+        assert_eq!(self.n_banks, other.n_banks);
+        assert_eq!(self.words_per_bank, other.words_per_bank);
+        for (dst, src) in self.banks.iter_mut().zip(&other.banks) {
+            dst.copy_from_slice(src);
+        }
+        self.counters = other.counters;
+        if let Some(d) = &mut self.dirty {
+            d.clear();
         }
     }
 
@@ -88,6 +112,40 @@ impl Tcdm {
         }
     }
 
+    /// Shared kernel of the canonical delta: visit `(flat index, raw
+    /// codeword)` for every word in the (sorted, de-duplicated) index
+    /// list whose stored codeword differs from `pristine`'s. Both
+    /// [`Tcdm::dirty_delta`] and [`Tcdm::digest_delta_scratch`] go
+    /// through this, so the delta canonicalization — and therefore the
+    /// fast-forward reference digests vs. probe digests — cannot fork.
+    fn for_each_delta_entry(&self, pristine: &Tcdm, idxs: &[u32], mut f: impl FnMut(u32, u64)) {
+        assert_eq!(self.n_banks, pristine.n_banks);
+        assert_eq!(self.words_per_bank, pristine.words_per_bank);
+        for &idx in idxs {
+            let (b, r) = (
+                (idx as usize) / self.words_per_bank,
+                (idx as usize) % self.words_per_bank,
+            );
+            let cw = self.banks[b][r];
+            if cw != pristine.banks[b][r] {
+                f(idx, cw);
+            }
+        }
+    }
+
+    /// The candidate index list of the canonical delta, sorted and
+    /// de-duplicated into `idxs` (reused buffer): the dirty log when
+    /// tracking is enabled, the whole memory otherwise.
+    fn candidate_idxs_into(&self, idxs: &mut Vec<u32>) {
+        idxs.clear();
+        match &self.dirty {
+            Some(log) => idxs.extend_from_slice(log),
+            None => idxs.extend(0..(self.n_banks * self.words_per_bank) as u32),
+        }
+        idxs.sort_unstable();
+        idxs.dedup();
+    }
+
     /// Canonical difference against a pristine image: sorted, de-duplicated
     /// `(flat word index, raw codeword)` pairs for every word whose stored
     /// codeword differs from `pristine`'s. With dirty tracking enabled
@@ -97,34 +155,10 @@ impl Tcdm {
     /// two instances with equal contents always produce equal deltas
     /// regardless of their write histories.
     pub fn dirty_delta(&self, pristine: &Tcdm) -> Vec<(u32, u64)> {
-        assert_eq!(self.n_banks, pristine.n_banks);
-        assert_eq!(self.words_per_bank, pristine.words_per_bank);
+        let mut idxs = Vec::new();
+        self.candidate_idxs_into(&mut idxs);
         let mut delta = Vec::new();
-        let collect = |delta: &mut Vec<(u32, u64)>, idx: u32| {
-            let (b, r) = (
-                (idx as usize) / self.words_per_bank,
-                (idx as usize) % self.words_per_bank,
-            );
-            let cw = self.banks[b][r];
-            if cw != pristine.banks[b][r] {
-                delta.push((idx, cw));
-            }
-        };
-        match &self.dirty {
-            Some(log) => {
-                let mut idxs = log.clone();
-                idxs.sort_unstable();
-                idxs.dedup();
-                for idx in idxs {
-                    collect(&mut delta, idx);
-                }
-            }
-            None => {
-                for idx in 0..(self.n_banks * self.words_per_bank) as u32 {
-                    collect(&mut delta, idx);
-                }
-            }
-        }
+        self.for_each_delta_entry(pristine, &idxs, |idx, cw| delta.push((idx, cw)));
         delta
     }
 
@@ -169,6 +203,23 @@ impl Tcdm {
             h.write_u32(idx);
             h.write_u64(cw);
         }
+    }
+
+    /// Fold the canonical delta vs. `pristine` into a digest **without
+    /// materializing it**: the byte stream is identical to
+    /// [`Tcdm::digest_delta_into`]'s, but the dirty log is sorted and
+    /// de-duplicated in an internal reusable scratch buffer and each
+    /// surviving word is hashed in place — the fast-forward convergence
+    /// probe runs one of these per checkpoint boundary, so the steady
+    /// state allocates nothing.
+    pub fn digest_delta_scratch(&mut self, pristine: &Tcdm, h: &mut crate::util::digest::Fnv64) {
+        let mut idxs = std::mem::take(&mut self.scratch_idx);
+        self.candidate_idxs_into(&mut idxs);
+        self.for_each_delta_entry(pristine, &idxs, |idx, cw| {
+            h.write_u32(idx);
+            h.write_u64(cw);
+        });
+        self.scratch_idx = idxs;
     }
 
     /// The paper's cluster configuration: 16 banks × 16 KiB = 256 KiB.
@@ -419,6 +470,61 @@ mod tests {
         let mut h3 = Fnv64::new();
         pristine.digest_delta_into(&pristine, &mut h3);
         assert_ne!(h1.finish(), h3.finish());
+    }
+
+    #[test]
+    fn copy_state_from_equals_clone_and_clears_the_log() {
+        let mut pristine = Tcdm::new(4, 1024);
+        for i in 0..64u32 {
+            pristine.write_word(i * 4, 0xBEEF_0000 | i);
+        }
+        // A scratch instance with unrelated prior contents and a dirty log.
+        let mut t = Tcdm::new(4, 1024);
+        t.enable_dirty_tracking();
+        t.write_word(12, 0xFFFF_FFFF);
+        t.copy_state_from(&pristine);
+        assert!(t.dirty_tracking_enabled(), "tracking survives the copy");
+        assert!(t.dirty_delta(&pristine).is_empty(), "contents equal pristine");
+        for i in 0..64u32 {
+            assert_eq!(t.read_word(i * 4).0, 0xBEEF_0000 | i, "word {i}");
+        }
+        assert_eq!(t.counters(), pristine.counters());
+        // Writes after the copy are tracked and restorable as usual.
+        t.write_word(8, 7);
+        assert_eq!(t.dirty_delta(&pristine).len(), 1);
+        t.restore_from(&pristine);
+        assert!(t.dirty_delta(&pristine).is_empty());
+    }
+
+    #[test]
+    fn digest_delta_scratch_matches_the_materialized_digest() {
+        use crate::util::digest::Fnv64;
+        let mut pristine = Tcdm::new(4, 1024);
+        for i in 0..32u32 {
+            pristine.write_word(i * 4, 0x1100_0000 | i);
+        }
+        let mut t = pristine.clone();
+        t.enable_dirty_tracking();
+        t.write_word(16, 0xAAAA_AAAA);
+        t.write_word(80, 0xBBBB_BBBB);
+        t.write_word(16, 0xAAAA_AAAA); // duplicate log entry
+        t.write_word(24, 0x1100_0006); // rewritten to the pristine value
+        let mut ha = Fnv64::new();
+        Tcdm::digest_delta_entries(&t.dirty_delta(&pristine), &mut ha);
+        let mut hb = Fnv64::new();
+        t.digest_delta_scratch(&pristine, &mut hb);
+        assert_eq!(ha.finish(), hb.finish(), "scratch digest must match");
+        // Reuse is idempotent (scratch buffer state cannot leak between
+        // probes) and the untracked full-scan path agrees too.
+        let mut hc = Fnv64::new();
+        t.digest_delta_scratch(&pristine, &mut hc);
+        assert_eq!(ha.finish(), hc.finish());
+        let mut untracked = pristine.clone();
+        untracked.write_word(16, 0xAAAA_AAAA);
+        untracked.write_word(80, 0xBBBB_BBBB);
+        let mut hd = Fnv64::new();
+        untracked.digest_delta_scratch(&pristine, &mut hd);
+        assert_eq!(ha.finish(), hd.finish());
     }
 
     #[test]

@@ -65,6 +65,17 @@ impl Fnv64 {
         self.write_u8(v as u8);
     }
 
+    /// Fold a byte slice into the digest, in order — equivalent to
+    /// writing each byte with [`Fnv64::write_u8`]. Content-identity
+    /// hashing (e.g. the campaign's shared-trace cache key digests the
+    /// workload matrices) goes through this.
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
     #[inline]
     pub fn finish(&self) -> u64 {
         self.0
@@ -105,5 +116,23 @@ mod tests {
     #[test]
     fn empty_digest_is_the_offset_basis() {
         assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn write_bytes_equals_per_byte_writes() {
+        let bytes = [0x01u8, 0xFF, 0x00, 0x7A, 0xC3];
+        let mut a = Fnv64::new();
+        a.write_bytes(&bytes);
+        let mut b = Fnv64::new();
+        for &v in &bytes {
+            b.write_u8(v);
+        }
+        assert_eq!(a.finish(), b.finish());
+        // And agrees with the multi-word writers on their LE byte streams.
+        let mut c = Fnv64::new();
+        c.write_u32(0xDEAD_BEEF);
+        let mut d = Fnv64::new();
+        d.write_bytes(&0xDEAD_BEEFu32.to_le_bytes());
+        assert_eq!(c.finish(), d.finish());
     }
 }

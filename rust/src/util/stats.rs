@@ -165,6 +165,28 @@ pub const Z95: f64 = 1.959963984540054;
 /// z for a one-sided 95 % normal bound.
 pub const Z95_ONE_SIDED: f64 = 1.6448536269514722;
 
+/// Critical value of a two-sided normal interval at confidence `conf`.
+/// The default 95 % level returns the exact [`Z95`] constant (not the
+/// rational approximation), so `--confidence 0.95` is bit-identical to
+/// the historical hardwired interval math.
+pub fn z_two_sided(conf: f64) -> f64 {
+    if conf == 0.95 {
+        Z95
+    } else {
+        normal_quantile(0.5 + conf / 2.0)
+    }
+}
+
+/// Critical value of a one-sided normal bound at confidence `conf` (the
+/// same exact-constant pinning at 95 % as [`z_two_sided`]).
+pub fn z_one_sided(conf: f64) -> f64 {
+    if conf == 0.95 {
+        Z95_ONE_SIDED
+    } else {
+        normal_quantile(conf)
+    }
+}
+
 /// Natural log of the gamma function (Lanczos, g = 7, 9 coefficients —
 /// absolute error well below 1e-10 over the positive reals).
 pub fn ln_gamma(x: f64) -> f64 {
@@ -305,6 +327,11 @@ pub fn wilson_ci95(k: u64, n: u64) -> (f64, f64) {
     wilson_ci(k, n, Z95)
 }
 
+/// Wilson score interval at confidence `conf` (two-sided).
+pub fn wilson_ci_at(k: u64, n: u64, conf: f64) -> (f64, f64) {
+    wilson_ci(k, n, z_two_sided(conf))
+}
+
 /// Clopper–Pearson exact two-sided interval at confidence `conf`:
 /// `lo = BetaInv(α/2; k, n−k+1)`, `hi = BetaInv(1−α/2; k+1, n−k)`, with
 /// the closed-form endpoints at k = 0 and k = n.
@@ -383,11 +410,14 @@ pub struct OutcomeEstimate {
     pub ci_hi: f64,
     pub exact_lo: f64,
     pub exact_hi: f64,
-    /// One-sided 95 % upper bound consistent with the point estimate:
-    /// Clopper–Pearson exact for pooled estimates (the zero-count
-    /// "< p at 95 %" convention), the one-sided normal bound on the
-    /// weighted rate for stratified ones (a pooled-count bound could sit
-    /// *below* an area-weighted rate and read as a contradiction).
+    /// One-sided upper bound consistent with the point estimate, at the
+    /// construction confidence (95 % unless built through the `_at`
+    /// constructors — the field keeps its historical name for JSON
+    /// compatibility): Clopper–Pearson exact for pooled estimates (the
+    /// zero-count "< p at 95 %" convention), the one-sided normal bound
+    /// on the weighted rate for stratified ones (a pooled-count bound
+    /// could sit *below* an area-weighted rate and read as a
+    /// contradiction).
     upper95: f64,
 }
 
@@ -398,18 +428,27 @@ impl OutcomeEstimate {
         0.5 * (self.ci_hi - self.ci_lo)
     }
 
-    /// One-sided 95 % upper bound on the rate (see the field docs; always
-    /// at or above `rate`).
+    /// One-sided upper bound on the rate at the construction confidence
+    /// (95 % by default; see the field docs; always at or above `rate`).
     pub fn upper95(&self) -> f64 {
         self.upper95
     }
 
     /// Pooled binomial estimate: Wilson working interval, Clopper–Pearson
-    /// exact interval.
+    /// exact interval, both at 95 %.
     pub fn pooled(count: u64, n: u64) -> Self {
+        Self::pooled_at(count, n, 0.95)
+    }
+
+    /// [`OutcomeEstimate::pooled`] at an arbitrary confidence level (the
+    /// campaign's `--confidence` knob): Wilson and Clopper–Pearson
+    /// two-sided intervals plus the one-sided exact upper bound, all at
+    /// `conf`. `conf = 0.95` is bit-identical to
+    /// [`OutcomeEstimate::pooled`].
+    pub fn pooled_at(count: u64, n: u64, conf: f64) -> Self {
         let n1 = n.max(1);
-        let (ci_lo, ci_hi) = wilson_ci95(count, n1);
-        let (exact_lo, exact_hi) = clopper_pearson_ci95(count, n1);
+        let (ci_lo, ci_hi) = wilson_ci_at(count, n1, conf);
+        let (exact_lo, exact_hi) = clopper_pearson_ci(count, n1, conf);
         Self {
             count,
             n,
@@ -418,7 +457,7 @@ impl OutcomeEstimate {
             ci_hi,
             exact_lo,
             exact_hi,
-            upper95: exact_upper95(count, n1),
+            upper95: exact_upper(count, n1, conf),
         }
     }
 
@@ -432,6 +471,12 @@ impl OutcomeEstimate {
     /// populated stratum has been sampled. The exact interval is
     /// Clopper–Pearson on the pooled counts.
     pub fn stratified(strata: &[StratumSample]) -> Self {
+        Self::stratified_at(strata, 0.95)
+    }
+
+    /// [`OutcomeEstimate::stratified`] at an arbitrary confidence level
+    /// (same exact-constant pinning at 95 % as the pooled path).
+    pub fn stratified_at(strata: &[StratumSample], conf: f64) -> Self {
         let wsum: f64 = strata
             .iter()
             .filter(|s| s.weight > 0.0 && s.weight.is_finite())
@@ -443,7 +488,7 @@ impl OutcomeEstimate {
             n += s.n;
         }
         if wsum <= 0.0 {
-            return Self::pooled(count, n);
+            return Self::pooled_at(count, n, conf);
         }
         let mut rate = 0.0;
         let mut var = 0.0;
@@ -462,8 +507,8 @@ impl OutcomeEstimate {
             }
         }
         let sd = var.sqrt();
-        let half = Z95 * sd;
-        let (exact_lo, exact_hi) = clopper_pearson_ci95(count, n.max(1));
+        let half = z_two_sided(conf) * sd;
+        let (exact_lo, exact_hi) = clopper_pearson_ci(count, n.max(1), conf);
         Self {
             count,
             n,
@@ -472,7 +517,7 @@ impl OutcomeEstimate {
             ci_hi: (rate + half).min(1.0),
             exact_lo,
             exact_hi,
-            upper95: (rate + Z95_ONE_SIDED * sd).min(1.0),
+            upper95: (rate + z_one_sided(conf) * sd).min(1.0),
         }
     }
 }

@@ -1,0 +1,260 @@
+//! A/B harness for the shared-trace / zero-copy / work-stealing sweep
+//! engine (PR 5): the trace cache and the grid-wide scheduler must be
+//! **byte-identical** to the legacy uncached per-cell path — same
+//! sweep-v2 JSON across protections and thread layouts, same per-run
+//! `RunReport` field for field when the clean run is adopted from a
+//! cache or driven through the reusable worker scratch. Any state
+//! leaking through the scratch arenas (TCDM copy, fault context,
+//! digest buffers, reconfigured Systems) shows up here as a diff.
+
+use redmule_ft::campaign::{problem_seed, Campaign, CampaignConfig, Sweep, SweepConfig, TraceCache};
+use redmule_ft::cluster::{RecoveryPolicy, System};
+use redmule_ft::fault::{FaultCtx, FaultModel, FaultRegistry};
+use redmule_ft::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+use redmule_ft::util::rng::Xoshiro256;
+
+/// The A/B grid: three protections (incl. the ABFT tolerance axis), two
+/// fault counts — small budgets, every engine corner.
+fn grid(seed: u64, threads: usize) -> SweepConfig {
+    let mut c = SweepConfig::new(50, seed);
+    c.shapes = vec![GemmSpec::new(6, 8, 8)];
+    c.protections = vec![Protection::Baseline, Protection::Full, Protection::Abft];
+    c.fault_counts = vec![1, 2];
+    c.tol_factors = vec![ABFT_TOL_FACTOR, 1.0];
+    c.threads = threads;
+    c
+}
+
+/// Acceptance: the four engine combinations {stealing, per-cell} ×
+/// {cached, uncached} emit byte-identical sweep-v2 (and v1) JSON, at
+/// 1 and at 8 threads — across protections, the ABFT tolerance axis
+/// and multi-fault cells.
+#[test]
+fn sweep_json_is_byte_identical_across_engines_and_threads() {
+    let reference = Sweep::run(&grid(0x5EED, 1)).unwrap();
+    let ref_v2 = reference.to_json_v2();
+    let ref_v1 = reference.to_json(false);
+    for threads in [1usize, 8] {
+        for stealing in [true, false] {
+            for cached in [true, false] {
+                let mut c = grid(0x5EED, threads);
+                c.work_stealing = stealing;
+                c.trace_cache = cached;
+                let r = Sweep::run(&c).unwrap();
+                assert_eq!(
+                    r.to_json_v2(),
+                    ref_v2,
+                    "v2 diverged: threads={threads} stealing={stealing} cache={cached}"
+                );
+                assert_eq!(
+                    r.to_json(false),
+                    ref_v1,
+                    "v1 diverged: threads={threads} stealing={stealing} cache={cached}"
+                );
+            }
+        }
+    }
+}
+
+/// The adaptive + stratified engine exercises the scheduler's sequential
+/// batch logic (allocation from merged counts, stop rule, batch
+/// boundaries) — the stealing scheduler must reproduce the per-cell
+/// pools' stop points and per-stratum tallies exactly.
+#[test]
+fn adaptive_stratified_sweeps_match_across_schedulers_and_threads() {
+    let mut base = SweepConfig::new(3_000, 0xADA);
+    base.shapes = vec![GemmSpec::new(6, 8, 8)];
+    base.protections = vec![Protection::Baseline, Protection::Data];
+    base.fault_counts = vec![1];
+    base.precision_target = 0.08;
+    base.batch_size = 150;
+    base.min_injections = 150;
+    base.stratify = true;
+    let mut reference_cfg = base.clone();
+    reference_cfg.threads = 2;
+    reference_cfg.work_stealing = false;
+    reference_cfg.trace_cache = false;
+    let reference = Sweep::run(&reference_cfg).unwrap();
+    let ref_v2 = reference.to_json_v2();
+    assert!(
+        reference.cells.iter().any(|c| c.result.stopped_early),
+        "the A/B must cover an early-stopping adaptive cell"
+    );
+    for threads in [1usize, 8] {
+        let mut c = base.clone();
+        c.threads = threads;
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(
+            r.to_json_v2(),
+            ref_v2,
+            "adaptive stratified sweep diverged at {threads} threads"
+        );
+    }
+}
+
+/// Campaign-level cache adoption: a campaign that adopts its clean run
+/// from a `TraceCache` (recorded by an earlier campaign) produces the
+/// same counts as one that records its own.
+#[test]
+fn campaign_counts_match_between_recorded_and_adopted_traces() {
+    for protection in [Protection::Data, Protection::Abft] {
+        let mut cfg = CampaignConfig::table1(protection, 200, 0x7E57);
+        cfg.threads = 2;
+        let problem = GemmProblem::random(&cfg.spec, problem_seed(cfg.seed));
+        let plain = Campaign::run_with_problem(&cfg, &problem).unwrap();
+        let cache = TraceCache::new();
+        // Prime the cache with a different fault count (same identity).
+        let mut primer = cfg.clone();
+        primer.faults_per_run = 3;
+        let _ = Campaign::run_with_problem_cached(&primer, &problem, Some(&cache)).unwrap();
+        assert_eq!(cache.misses(), 1, "{protection:?}: primer records");
+        let adopted = Campaign::run_with_problem_cached(&cfg, &problem, Some(&cache)).unwrap();
+        assert_eq!(cache.hits(), 1, "{protection:?}: second campaign adopts");
+        assert_eq!(
+            (plain.correct_no_retry, plain.correct_with_retry, plain.incorrect, plain.timeout),
+            (
+                adopted.correct_no_retry,
+                adopted.correct_with_retry,
+                adopted.incorrect,
+                adopted.timeout
+            ),
+            "{protection:?}: adopted-trace campaign must match"
+        );
+        assert_eq!(plain.applied, adopted.applied, "{protection:?}");
+        assert_eq!(plain.faults_applied, adopted.faults_applied, "{protection:?}");
+    }
+}
+
+/// Per-run `RunReport` equivalence through the reusable scratch path:
+/// `run_staged_with_faults{,_ff}_scratch` with one long-lived
+/// `FaultCtx` (and the digest scratch inside the TCDM) must be field-
+/// identical to the allocating wrappers, run for run — including
+/// retried and timed-out runs where the context's applied bookkeeping
+/// matters.
+#[test]
+fn per_run_reports_are_field_identical_with_reused_scratch() {
+    for protection in [Protection::Full, Protection::Abft] {
+        let cfg = RedMuleConfig::paper();
+        let spec = GemmSpec::paper_workload();
+        let problem = GemmProblem::random(&spec, problem_seed(0xAB5));
+        let mode = if protection.has_data_protection() {
+            ExecMode::FaultTolerant
+        } else {
+            ExecMode::Performance
+        };
+        let recovery = if protection.has_abft_checksums() {
+            RecoveryPolicy::TileLevel
+        } else {
+            RecoveryPolicy::FullRestart
+        };
+        let stage = || {
+            let mut sys = System::new(cfg, protection).with_recovery(recovery);
+            sys.redmule.reset();
+            let layout = sys.stage(&problem).unwrap();
+            let pristine = sys.tcdm.clone();
+            sys.tcdm.enable_dirty_tracking();
+            (sys, layout, pristine)
+        };
+        let (mut sys_ref, layout, pristine_ref) = stage();
+        let trace = sys_ref
+            .record_reference(&layout, &pristine_ref, mode, 16)
+            .unwrap()
+            .expect("default-tolerance reference must be clean");
+        let (mut sys_a, _, pristine_a) = stage();
+        let (mut sys_b, _, pristine_b) = stage();
+        let registry = FaultRegistry::new(cfg, protection);
+        // ONE context reused across every run of the scratch system.
+        let mut scratch_ctx = FaultCtx::clean();
+        for i in 0..120u64 {
+            let mut rng = Xoshiro256::new(0x5C4A + i);
+            let n = 1 + (i % 3) as usize;
+            let plans = registry.sample_plans(trace.cycles, n, FaultModel::Independent, &mut rng);
+            let a = sys_a
+                .run_staged_with_faults_ff(&layout, mode, &plans, &trace, &pristine_a)
+                .unwrap();
+            let b = sys_b
+                .run_staged_with_faults_ff_scratch(
+                    &layout,
+                    mode,
+                    &plans,
+                    &trace,
+                    &pristine_b,
+                    &mut scratch_ctx,
+                )
+                .unwrap();
+            assert_eq!(a.outcome, b.outcome, "{protection:?} run {i}: {plans:?}");
+            assert_eq!(a.cycles, b.cycles, "{protection:?} run {i} cycles");
+            assert_eq!(
+                a.config_cycles, b.config_cycles,
+                "{protection:?} run {i} config cycles"
+            );
+            assert_eq!(a.retries, b.retries, "{protection:?} run {i} retries");
+            assert_eq!(a.fault_causes, b.fault_causes, "{protection:?} run {i} causes");
+            assert_eq!(a.irq_seen, b.irq_seen, "{protection:?} run {i} irq");
+            assert_eq!(
+                a.faults_applied, b.faults_applied,
+                "{protection:?} run {i} applied"
+            );
+            assert_eq!(a.abft, b.abft, "{protection:?} run {i} abft info");
+            assert_eq!(
+                a.z.bits(),
+                b.z.bits(),
+                "{protection:?} run {i}: Z regions must be bit-identical"
+            );
+        }
+    }
+}
+
+/// The direct (non-fast-forward) scratch path too: reused context vs
+/// fresh contexts, on a build whose aborts exercise the retry loop.
+#[test]
+fn direct_scratch_path_matches_the_allocating_wrapper() {
+    let cfg = RedMuleConfig::paper();
+    let protection = Protection::Data;
+    let spec = GemmSpec::new(6, 8, 8);
+    let problem = GemmProblem::random(&spec, problem_seed(0xD1));
+    let stage = || {
+        let mut sys = System::new(cfg, protection);
+        sys.redmule.reset();
+        let layout = sys.stage(&problem).unwrap();
+        let pristine = sys.tcdm.clone();
+        sys.tcdm.enable_dirty_tracking();
+        (sys, layout, pristine)
+    };
+    let (mut sys_a, layout, pristine_a) = stage();
+    let (mut sys_b, _, pristine_b) = stage();
+    let registry = FaultRegistry::new(cfg, protection);
+    let horizon = {
+        let mut probe = System::new(cfg, protection);
+        probe
+            .run_gemm(&problem, ExecMode::FaultTolerant)
+            .unwrap()
+            .cycles
+    };
+    let mut scratch_ctx = FaultCtx::clean();
+    for i in 0..80u64 {
+        let mut rng = Xoshiro256::new(0xD1AB10 + i);
+        let plans = registry.sample_plans(horizon, 2, FaultModel::Independent, &mut rng);
+        sys_a.tcdm.restore_from(&pristine_a);
+        sys_a.redmule.reset();
+        let a = sys_a
+            .run_staged_with_faults(&layout, ExecMode::FaultTolerant, &plans)
+            .unwrap();
+        sys_b.tcdm.restore_from(&pristine_b);
+        sys_b.redmule.reset();
+        let b = sys_b
+            .run_staged_with_faults_scratch(
+                &layout,
+                ExecMode::FaultTolerant,
+                &plans,
+                &mut scratch_ctx,
+            )
+            .unwrap();
+        assert_eq!(a.outcome, b.outcome, "run {i}");
+        assert_eq!(a.cycles, b.cycles, "run {i}");
+        assert_eq!(a.retries, b.retries, "run {i}");
+        assert_eq!(a.faults_applied, b.faults_applied, "run {i}");
+        assert_eq!(a.z.bits(), b.z.bits(), "run {i}");
+    }
+}

@@ -6,8 +6,9 @@
 
 use redmule_ft::util::rng::Xoshiro256;
 use redmule_ft::util::stats::{
-    clopper_pearson_ci95, exact_upper95, neyman_allocation, wilson_ci95, OutcomeEstimate,
-    StratumSample,
+    clopper_pearson_ci, clopper_pearson_ci95, exact_upper, exact_upper95, neyman_allocation,
+    wilson_ci95, wilson_ci_at, z_one_sided, z_two_sided, OutcomeEstimate, StratumSample, Z95,
+    Z95_ONE_SIDED,
 };
 
 #[test]
@@ -184,6 +185,79 @@ fn neyman_allocator_is_exact_deterministic_and_floor_respecting() {
         }
         assert_eq!(a, neyman_allocation(&scores, batch, floor), "pure function");
     }
+}
+
+#[test]
+fn confidence_knob_at_90_and_99_nests_around_the_default() {
+    // The `--confidence` satellite: the 95 % default is pinned to the
+    // exact historical constants, and the 90 / 99 % levels produce
+    // strictly nested intervals for every estimator.
+    assert_eq!(z_two_sided(0.95), Z95);
+    assert_eq!(z_one_sided(0.95), Z95_ONE_SIDED);
+    // Known normal quantiles at the satellite's levels.
+    assert!((z_two_sided(0.90) - 1.6448536).abs() < 1e-5);
+    assert!((z_two_sided(0.99) - 2.5758293).abs() < 1e-5);
+    assert!((z_one_sided(0.90) - 1.2815516).abs() < 1e-5);
+    assert!((z_one_sided(0.99) - 2.3263479).abs() < 1e-5);
+    for (k, n) in [(0u64, 50u64), (3, 50), (10, 100), (250, 1_000), (999, 1_000)] {
+        // Wilson nesting: 90 ⊂ 95 ⊂ 99.
+        let (l90, h90) = wilson_ci_at(k, n, 0.90);
+        let (l95, h95) = wilson_ci95(k, n);
+        let (l99, h99) = wilson_ci_at(k, n, 0.99);
+        assert!(l99 <= l95 + 1e-12 && l95 <= l90 + 1e-12, "k={k} n={n} lo");
+        assert!(h90 <= h95 + 1e-12 && h95 <= h99 + 1e-12, "k={k} n={n} hi");
+        // And the 95 % `_at` path is bit-identical to the legacy one.
+        assert_eq!(wilson_ci_at(k, n, 0.95), wilson_ci95(k, n));
+        // Clopper–Pearson nesting.
+        let (cl90, ch90) = clopper_pearson_ci(k, n, 0.90);
+        let (cl99, ch99) = clopper_pearson_ci(k, n, 0.99);
+        let (cl95, ch95) = clopper_pearson_ci95(k, n);
+        assert!(cl99 <= cl95 + 1e-12 && cl95 <= cl90 + 1e-12, "k={k} n={n} cp lo");
+        assert!(ch90 <= ch95 + 1e-12 && ch95 <= ch99 + 1e-12, "k={k} n={n} cp hi");
+        // One-sided exact upper bound grows with the confidence.
+        let (u90, u95, u99) = (
+            exact_upper(k, n, 0.90),
+            exact_upper95(k, n),
+            exact_upper(k, n, 0.99),
+        );
+        assert!(u90 <= u95 + 1e-12 && u95 <= u99 + 1e-12, "k={k} n={n} upper");
+    }
+    // Zero-count closed forms at 90 / 99 %: 1 − (1−conf)^{1/n}.
+    for &n in &[100u64, 10_000] {
+        for &conf in &[0.90f64, 0.99] {
+            let want = 1.0 - (1.0 - conf).powf(1.0 / n as f64);
+            assert!((exact_upper(0, n, conf) - want).abs() < 1e-12, "n={n} conf={conf}");
+        }
+    }
+}
+
+#[test]
+fn outcome_estimates_honor_the_confidence_level() {
+    // Pooled: the default constructor IS the 95 % `_at` constructor.
+    assert_eq!(
+        OutcomeEstimate::pooled(7, 200),
+        OutcomeEstimate::pooled_at(7, 200, 0.95)
+    );
+    let e90 = OutcomeEstimate::pooled_at(7, 200, 0.90);
+    let e99 = OutcomeEstimate::pooled_at(7, 200, 0.99);
+    assert_eq!(e90.rate, e99.rate, "point estimate is confidence-free");
+    assert!(e90.half_width() < e99.half_width(), "99 % must be wider");
+    assert!(e90.upper95() < e99.upper95(), "one-sided bound grows too");
+    assert!(e99.ci_lo <= e90.ci_lo && e90.ci_hi <= e99.ci_hi, "nesting");
+    // Stratified: same contract on the weighted estimator.
+    let strata = [
+        StratumSample { weight: 0.8, count: 2, n: 400 },
+        StratumSample { weight: 0.2, count: 9, n: 100 },
+    ];
+    assert_eq!(
+        OutcomeEstimate::stratified(&strata),
+        OutcomeEstimate::stratified_at(&strata, 0.95)
+    );
+    let s90 = OutcomeEstimate::stratified_at(&strata, 0.90);
+    let s99 = OutcomeEstimate::stratified_at(&strata, 0.99);
+    assert_eq!(s90.rate, s99.rate);
+    assert!(s90.half_width() < s99.half_width());
+    assert!(s99.ci_lo <= s90.ci_lo && s90.ci_hi <= s99.ci_hi);
 }
 
 #[test]
