@@ -24,7 +24,8 @@ import argparse
 import json
 import sys
 
-PROTECTIONS = ("baseline", "data", "full", "per-ce", "abft")
+PROTECTIONS = ("baseline", "data", "full", "per-ce", "abft", "abft-online")
+RECOVERIES = ("full-restart", "tile-level", "in-place-correct")
 OUTCOME_KEYS = ("correct_no_retry", "correct_with_retry", "incorrect", "timeout")
 EPS = 1e-6
 
@@ -144,6 +145,13 @@ def check_v2(d, args):
         if c["batches"] < 1:
             fail(f"bad batch count: {c}")
         tagbase = f"{c['protection']}/{c['faults']}f"
+        if c["recovery"] not in RECOVERIES:
+            fail(f"{tagbase}: unknown recovery {c.get('recovery')}")
+        for key in ("corrections", "band_recomputes"):
+            if not isinstance(c[key], int) or c[key] < 0:
+                fail(f"{tagbase}: bad {key} {c[key]}")
+        if c["recovery"] != "in-place-correct" and c["corrections"] != 0:
+            fail(f"{tagbase}: corrections reported without in-place recovery")
         weighted = "/weighted" if d["stratified"] else ""
         counts = 0
         for key in OUTCOME_KEYS:

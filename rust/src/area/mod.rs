@@ -235,6 +235,31 @@ pub fn area_report(cfg: RedMuleConfig, protection: Protection) -> AreaReport {
         );
     }
 
+    // --------------------------- online-ABFT residual + correction unit
+    if protection.has_online_abft() {
+        // A second (L + D)-lane bank of 48-bit residual registers with
+        // subtractor lanes for the two planes, plus the locate/correct
+        // priority logic. Named `ft/online_abft*` (not `ft/abft*`) so
+        // the registry's prefix sums keep the two units' weights apart.
+        let acc_lanes = l + d;
+        let abft_bits = 48.0;
+        push(
+            "ft/online_abft_res_regs",
+            acc_lanes * abft_bits * GE_PER_FF_BIT / 1000.0,
+            true,
+        );
+        push(
+            "ft/online_abft_adders",
+            acc_lanes * abft_bits * GE_PER_ADDER_BIT / 1000.0,
+            true,
+        );
+        push(
+            "ft/online_abft_locate",
+            (acc_lanes * GE_PER_CMP_BIT + 16.0 * GE_PER_XOR) / 1000.0,
+            true,
+        );
+    }
+
     // ----------------------------- [8]-style localized per-CE checkers
     if protection.has_per_ce_checkers() {
         // One reduced recompute FMA + 16-bit comparator per CE. [8]

@@ -291,7 +291,9 @@ impl CampaignConfig {
         } else {
             ExecMode::Performance
         };
-        let recovery = if protection.has_abft_checksums() {
+        let recovery = if protection.has_online_abft() {
+            RecoveryPolicy::InPlaceCorrect
+        } else if protection.has_abft_checksums() {
             RecoveryPolicy::TileLevel
         } else {
             RecoveryPolicy::FullRestart
@@ -349,6 +351,12 @@ pub struct CampaignResult {
     /// Total faults that landed across all runs (equals `applied` on
     /// single-fault campaigns; larger on multi-fault ones).
     pub faults_applied: u64,
+    /// In-place corrections performed across all runs (`AbftOnline`
+    /// builds under [`RecoveryPolicy::InPlaceCorrect`]; 0 elsewhere).
+    pub corrections: u64,
+    /// Row-band recompute recoveries across all runs (ABFT builds under
+    /// band-capable recovery policies; 0 elsewhere).
+    pub band_recomputes: u64,
     /// Wall-clock seconds and throughput of the campaign itself.
     pub wall_seconds: f64,
     /// Batches the sequential engine ran (1 for fixed-budget campaigns).
@@ -477,6 +485,8 @@ impl CampaignResult {
             timeout: 0,
             applied: 0,
             faults_applied: 0,
+            corrections: 0,
+            band_recomputes: 0,
             wall_seconds: 0.0,
             batches: 0,
             stopped_early: false,
@@ -494,6 +504,8 @@ impl CampaignResult {
         self.timeout += local.timeout;
         self.applied += local.applied;
         self.faults_applied += local.faults_applied;
+        self.corrections += local.corrections;
+        self.band_recomputes += local.band_recomputes;
     }
 
     /// Fold a chunk's per-stratum outcome tallies into the aggregate
@@ -545,7 +557,12 @@ struct TraceKey {
     p: usize,
     protection: &'static str,
     ft_mode: bool,
-    tile_recovery: bool,
+    /// Recovery-policy discriminant (0 = full restart, 1 = tile-level,
+    /// 2 = in-place correct): the policy changes retry behavior, not the
+    /// clean run itself, but it is part of the key so pinned hit/miss
+    /// expectations partition exactly as the historical `tile_recovery`
+    /// bool did — extended, not reshuffled, by the third policy.
+    recovery: u8,
     m: usize,
     n: usize,
     k: usize,
@@ -566,7 +583,11 @@ impl TraceKey {
             p: config.cfg.p,
             protection: config.protection.name(),
             ft_mode: config.mode == ExecMode::FaultTolerant,
-            tile_recovery: config.recovery == RecoveryPolicy::TileLevel,
+            recovery: match config.recovery {
+                RecoveryPolicy::FullRestart => 0,
+                RecoveryPolicy::TileLevel => 1,
+                RecoveryPolicy::InPlaceCorrect => 2,
+            },
             m: config.spec.m,
             n: config.spec.n,
             k: config.spec.k,
@@ -595,17 +616,22 @@ type CacheSlot = Arc<OnceLock<std::result::Result<Arc<CleanRun>, String>>>;
 /// the *same* key serialize on that key alone (the first records, the
 /// rest block and adopt), while distinct keys build fully in parallel.
 ///
-/// Memory: entries live as long as the cache (the sweep engine scopes
-/// one cache per sweep), so peak memory is one `CleanRun` — pristine
-/// TCDM image plus the checkpointed reference trace — per *distinct
-/// clean-run identity* in the grid, where the legacy engine held one
-/// per concurrently-running cell. On very wide grids (many geometries ×
-/// protections × shapes × tolerances) that sum can dominate; dropping
-/// an entry once the last unfinished cell sharing its key completes is
-/// a noted follow-up (the `Arc` refcounts already make it safe).
+/// Memory: the sweep engine pins every cell's clean-run identity up
+/// front ([`TraceCache::retain`]) and releases it as the cell completes
+/// ([`TraceCache::release`]); the `Arc<CleanRun>` slot is evicted when
+/// the last unfinished cell sharing the key lets go, so peak memory is
+/// one `CleanRun` per identity *still in use* rather than per identity
+/// ever seen — the cache is empty again at sweep end. Callers that
+/// never pin (plain cached campaigns) keep the old keep-forever
+/// behavior. Eviction only ever drops the cache's own `Arc`; in-flight
+/// adopters keep theirs, and because every pin is taken before the
+/// first cell runs, an evicted identity can never be re-recorded — the
+/// hit/miss counters are exactly those of the keep-forever cache.
 #[derive(Debug, Default)]
 pub struct TraceCache {
     entries: Mutex<HashMap<TraceKey, CacheSlot>>,
+    /// Outstanding-cell refcounts per identity (sweep engine only).
+    pins: Mutex<HashMap<TraceKey, u64>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -623,6 +649,40 @@ impl TraceCache {
     /// Clean runs recorded into the cache (unique identities seen).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Resident clean-run entries (recorded and not yet evicted).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// True when no clean-run entry is resident — the expected state at
+    /// sweep end once every cell released its pin.
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+
+    /// Pin one future use of `key`: the entry (once recorded) stays
+    /// resident until a matching [`TraceCache::release`]. The sweep
+    /// engine pins every cell's identity before any cell runs, so
+    /// releases can never evict an identity another unstarted cell still
+    /// needs.
+    pub(crate) fn retain(&self, key: TraceKey) {
+        *self.pins.lock().unwrap().entry(key).or_insert(0) += 1;
+    }
+
+    /// Release one pinned use of `key`; evicts the `Arc<CleanRun>` slot
+    /// when this was the last outstanding pin. Unpinned keys are left
+    /// alone (the keep-forever behavior of plain cached campaigns).
+    pub(crate) fn release(&self, key: &TraceKey) {
+        let mut pins = self.pins.lock().unwrap();
+        if let Some(n) = pins.get_mut(key) {
+            *n -= 1;
+            if *n == 0 {
+                pins.remove(key);
+                self.entries.lock().unwrap().remove(key);
+            }
+        }
     }
 
     fn get_or_record(
@@ -980,6 +1040,10 @@ impl CellCtx {
             };
             let outcome = classify(&report, &self.golden);
             local.add(outcome, report.faults_applied);
+            if let Some(info) = report.abft {
+                local.corrections += info.corrections as u64;
+                local.band_recomputes += info.band_recomputes as u64;
+            }
             if let Some(s) = stratum {
                 local_strata[s][outcome.index()] += 1;
             }
@@ -1107,6 +1171,19 @@ impl Campaign {
         let ctx = CellCtx::prepare(config, problem, cache)?;
         let sched = ctx.schedule();
         let mut result = ctx.init_result();
+        // One `(System, InjectScratch)` arena per worker for the whole
+        // campaign: batches reuse them instead of rebuilding a `System`
+        // per worker per batch, so steady-state adaptive batches
+        // allocate nothing. Safe because `run_chunk` stages the pristine
+        // image into the system before every injection anyway.
+        let mut arenas: Vec<(System, InjectScratch)> = (0..config.threads.max(1))
+            .map(|_| {
+                (
+                    Campaign::system(config),
+                    InjectScratch::new(config.faults_per_run),
+                )
+            })
+            .collect();
         // ---- Deterministic batch loop (the adaptive engine). A
         // fixed-budget campaign is the degenerate single-batch case, so
         // both paths share one worker loop and one plan-stream layout.
@@ -1121,7 +1198,14 @@ impl Campaign {
             } else {
                 None
             };
-            Self::run_batch(&ctx, assign.as_ref(), start, start + size, &mut result)?;
+            Self::run_batch(
+                &ctx,
+                assign.as_ref(),
+                start,
+                start + size,
+                &mut arenas,
+                &mut result,
+            )?;
             start += size;
             result.batches += 1;
             if !sched.continues(start, &result, config.precision_target) {
@@ -1143,22 +1227,22 @@ impl Campaign {
         assign: Option<&BatchAssign>,
         lo_all: u64,
         hi_all: u64,
+        arenas: &mut [(System, InjectScratch)],
         result: &mut CampaignResult,
     ) -> Result<()> {
-        let threads = ctx.config.threads.max(1);
+        let threads = arenas.len().max(1);
         let chunk = (hi_all - lo_all).div_ceil(threads as u64).max(1);
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for t in 0..threads {
+            for (t, arena) in arenas.iter_mut().enumerate() {
                 let lo = lo_all + t as u64 * chunk;
                 let hi = (lo_all + (t as u64 + 1) * chunk).min(hi_all);
                 if lo >= hi {
                     break;
                 }
                 handles.push(scope.spawn(move || {
-                    let mut sys = Campaign::system(&ctx.config);
-                    let mut scratch = InjectScratch::new(ctx.config.faults_per_run);
-                    ctx.run_chunk(&mut sys, &mut scratch, assign, lo, hi)
+                    let (sys, scratch) = arena;
+                    ctx.run_chunk(sys, scratch, assign, lo, hi)
                 }));
             }
             for h in handles {
@@ -1204,13 +1288,15 @@ impl BatchAssign {
 pub const TABLE1_PROTECTIONS: [Protection; 3] =
     [Protection::Baseline, Protection::Data, Protection::Full];
 
-/// The extended four-column comparison: the paper's three builds plus the
-/// ABFT error-detecting-code point of the design space.
-pub const TABLE1_PROTECTIONS_ABFT: [Protection; 4] = [
+/// The extended five-column comparison: the paper's three builds plus the
+/// ABFT error-detecting-code point of the design space and the online
+/// fused-checksum variant that corrects single errors in place.
+pub const TABLE1_PROTECTIONS_ABFT: [Protection; 5] = [
     Protection::Baseline,
     Protection::Data,
     Protection::Full,
     Protection::Abft,
+    Protection::AbftOnline,
 ];
 
 /// Table 1 of the paper — one campaign column per protection build.
@@ -1295,6 +1381,7 @@ impl Table1 {
             Protection::Full => "Full Protection",
             Protection::PerCe => "Per-CE [8]",
             Protection::Abft => "ABFT Checksums",
+            Protection::AbftOnline => "Online ABFT",
         }
     }
 
@@ -1776,6 +1863,43 @@ mod tests {
             (r.correct_no_retry, r.correct_with_retry, r.incorrect, r.timeout, r.applied)
         };
         assert_eq!(t(&plain), t(&first));
+    }
+
+    #[test]
+    fn dirty_worker_arenas_reproduce_fresh_campaign_counts() {
+        // Satellite of the arena hoist: the batch loop now reuses one
+        // `(System, InjectScratch)` per worker across batches instead of
+        // rebuilding them. Running the same injection range through
+        // freshly-built arenas and again through the now-dirty ones must
+        // give byte-identical counts — per-injection staging leaves no
+        // state behind that can change a classification.
+        let problem = GemmProblem::random(&GemmSpec::paper_workload(), problem_seed(0xA11));
+        let mut cfg = CampaignConfig::table1(Protection::Abft, 120, 0xA11);
+        cfg.threads = 3;
+        let ctx = CellCtx::prepare(&cfg, &problem, None).unwrap();
+        let mut arenas: Vec<(System, InjectScratch)> = (0..3)
+            .map(|_| (Campaign::system(&cfg), InjectScratch::new(cfg.faults_per_run)))
+            .collect();
+        let mut fresh = ctx.init_result();
+        Campaign::run_batch(&ctx, None, 0, 120, &mut arenas, &mut fresh).unwrap();
+        let mut reused = ctx.init_result();
+        Campaign::run_batch(&ctx, None, 0, 120, &mut arenas, &mut reused).unwrap();
+        let t = |r: &CampaignResult| {
+            (
+                r.correct_no_retry,
+                r.correct_with_retry,
+                r.incorrect,
+                r.timeout,
+                r.applied,
+                r.faults_applied,
+                r.corrections,
+                r.band_recomputes,
+            )
+        };
+        assert_eq!(t(&fresh), t(&reused));
+        // The end-to-end engine (which owns its arenas) must agree too.
+        let whole = Campaign::run_with_problem(&cfg, &problem).unwrap();
+        assert_eq!(t(&whole), t(&fresh));
     }
 
     #[test]

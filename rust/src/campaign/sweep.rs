@@ -72,7 +72,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use super::{
     stream_seed, BatchAssign, BatchSchedule, Campaign, CampaignConfig, CampaignResult, CellCtx,
-    InjectScratch, Outcome, TraceCache, OUTCOMES,
+    InjectScratch, Outcome, TraceCache, TraceKey, OUTCOMES,
 };
 
 /// Domain tag of the per-shape workload streams (one problem per shape,
@@ -213,6 +213,12 @@ pub struct SweepResult {
     /// (`None` when the sweep ran with the cache disabled). Reported in
     /// the timing sidecar only — never in the deterministic documents.
     pub trace_cache_stats: Option<(u64, u64)>,
+    /// Clean-run entries still resident in the cache when the sweep
+    /// finished (`None` without the cache). Every cell pins its identity
+    /// up front and releases it on completion, so this must be 0 — the
+    /// cache no longer holds every identity's `CleanRun` for the whole
+    /// sweep.
+    pub trace_cache_resident: Option<usize>,
 }
 
 impl SweepResult {
@@ -392,6 +398,14 @@ impl SweepResult {
             s.push_str(&format!(
                 "\"applied\": {}, \"faults_applied\": {}, ",
                 r.applied, r.faults_applied
+            ));
+            s.push_str(&format!(
+                "\"recovery\": \"{}\", ",
+                r.config.recovery.name()
+            ));
+            s.push_str(&format!(
+                "\"corrections\": {}, \"band_recomputes\": {}, ",
+                r.corrections, r.band_recomputes
             ));
             s.push_str("\"outcomes\": {");
             for (j, &o) in OUTCOMES.iter().enumerate() {
@@ -582,6 +596,17 @@ impl Sweep {
         } else {
             None
         };
+        // Pin every cell's clean-run identity before any cell runs, so a
+        // completed cell's release ([`Sweep::release_trace`]) evicts the
+        // shared `CleanRun` exactly when the last unfinished cell using
+        // it lets go — never earlier (an unstarted cell would re-record
+        // and perturb the hit/miss counters), never later (the old
+        // cache held every identity until sweep end).
+        if let Some(c) = cache.as_ref() {
+            for spec in &specs {
+                c.retain(Self::trace_key(config, spec, problems));
+            }
+        }
         let cells = if config.work_stealing {
             Self::run_stealing(config, &specs, &problems, cache.as_ref())?
         } else {
@@ -596,8 +621,29 @@ impl Sweep {
             confidence: config.confidence,
             cells,
             wall_seconds: started.elapsed().as_secs_f64(),
+            trace_cache_resident: cache.as_ref().map(|c| c.len()),
             trace_cache_stats: cache.map(|c| (c.hits(), c.misses())),
         })
+    }
+
+    /// The clean-run identity of one cell — shared by the up-front pin
+    /// and the completion release, so the two always agree.
+    fn trace_key(config: &SweepConfig, spec: &CellSpec, problems: &[GemmProblem]) -> TraceKey {
+        TraceKey::of(&Self::cell_config(config, spec), &problems[spec.shape_idx])
+    }
+
+    /// Release one cell's pin on its shared clean run, evicting the
+    /// cache entry if this cell was its last user. Called on every cell
+    /// completion path — success and failure — of both engines.
+    fn release_trace(
+        config: &SweepConfig,
+        spec: &CellSpec,
+        problems: &[GemmProblem],
+        cache: Option<&TraceCache>,
+    ) {
+        if let Some(c) = cache {
+            c.release(&Self::trace_key(config, spec, problems));
+        }
     }
 
     /// The campaign configuration of one cell: seeded from the sweep
@@ -670,6 +716,7 @@ impl Sweep {
                         inner,
                         cache,
                     );
+                    Self::release_trace(config, &specs[i], problems, cache);
                     *slots[i].lock().unwrap() = Some(cell);
                 });
             }
@@ -979,8 +1026,10 @@ impl Grid<'_> {
         Some(units)
     }
 
-    /// Record a cell's final result and close it.
+    /// Record a cell's final result, release its clean-run pin and close
+    /// it.
     fn finalize(&self, cell: usize, out: Result<SweepCell>) {
+        Sweep::release_trace(self.config, &self.specs[cell], self.problems, self.cache);
         *self.slots[cell].out.lock().unwrap() = Some(out);
         self.close_cell();
     }
@@ -1192,6 +1241,9 @@ mod tests {
         assert_eq!(misses, 3, "one recording per clean-run identity");
         assert_eq!(hits, 3, "every other cell adopts a shared trace");
         assert_eq!(hits + misses, r.cells.len() as u64);
+        // Refcounted eviction: once every cell released its pin, no
+        // clean run stays resident.
+        assert_eq!(r.trace_cache_resident, Some(0));
         // The sidecar reports the counters; the deterministic documents
         // never do.
         assert!(r.timing_json().contains("\"trace_cache\": {\"hits\": 3, \"misses\": 3}"));
@@ -1203,6 +1255,90 @@ mod tests {
         let r_off = Sweep::run(&off).unwrap();
         assert!(r_off.trace_cache_stats.is_none());
         assert!(!r_off.timing_json().contains("trace_cache"));
+    }
+
+    #[test]
+    fn trace_cache_evicts_every_entry_by_sweep_end() {
+        // The sweep pins each cell's clean-run identity up front and
+        // releases it on completion, so the cache must end empty on BOTH
+        // engines — and eviction must not change a single hit/miss
+        // (pinned to the keep-forever cache's 3/3 on the tiny grid).
+        for stealing in [true, false] {
+            let mut c = tiny(5, 2);
+            c.work_stealing = stealing;
+            let r = Sweep::run(&c).unwrap();
+            assert_eq!(
+                r.trace_cache_resident,
+                Some(0),
+                "stealing={stealing}: entries must be evicted as cells finish"
+            );
+            assert_eq!(
+                r.trace_cache_stats,
+                Some((3, 3)),
+                "stealing={stealing}: eviction must not perturb the counters"
+            );
+        }
+    }
+
+    #[test]
+    fn online_abft_cells_report_thread_invariant_recovery_counters() {
+        // Satellite of the online-ABFT tentpole: the new per-cell
+        // `corrections` / `band_recomputes` counters are part of the
+        // deterministic v2 document, so they must be byte-identical
+        // across thread layouts like every other count.
+        let mut c = SweepConfig::new(800, 77);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Abft, Protection::AbftOnline];
+        c.fault_counts = vec![1, 2];
+        c.threads = 1;
+        let a = Sweep::run(&c).unwrap();
+        let mut c8 = c.clone();
+        c8.threads = 8;
+        let b = Sweep::run(&c8).unwrap();
+        let j = a.to_json_v2();
+        assert_eq!(j, b.to_json_v2(), "recovery counters must be thread-invariant");
+        // The document names each cell's recovery policy and counters.
+        assert!(j.contains("\"recovery\": \"tile-level\""));
+        assert!(j.contains("\"recovery\": \"in-place-correct\""));
+        assert!(j.contains("\"corrections\": "));
+        assert!(j.contains("\"band_recomputes\": "));
+        // The online build corrects single-element corruptions in place
+        // in the single-fault cell (the tentpole's acceptance bar), and
+        // the detect-only ABFT build never reports a correction.
+        for cell in &a.cells {
+            match cell.protection {
+                Protection::AbftOnline if cell.faults == 1 => assert!(
+                    cell.result.corrections > 0,
+                    "single-fault online cell must correct in place"
+                ),
+                Protection::Abft => assert_eq!(
+                    cell.result.corrections, 0,
+                    "detect-only ABFT has no correction hardware"
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn site_burst_multi_errors_fall_back_to_band_recompute() {
+        // Multi-error regime (FT-GEMM / online-ABFT GPUs validate ABFT
+        // under bursts, not just single upsets): a burst spanning
+        // adjacent sites produces residual patterns the locator cannot
+        // pin to one element, so the online build must fall back to the
+        // row-band recompute instead of guessing a correction.
+        let mut c = SweepConfig::new(300, 99);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::AbftOnline];
+        c.fault_counts = vec![3];
+        c.fault_model = FaultModel::SiteBurst;
+        c.threads = 2;
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), 1);
+        assert!(
+            r.cells[0].result.band_recomputes > 0,
+            "uncorrectable burst residuals must drive band recomputes"
+        );
     }
 
     #[test]

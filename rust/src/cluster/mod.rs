@@ -19,7 +19,10 @@
 
 use crate::dma::{Dma, L2Mem};
 use crate::fault::{first_fault_cycle, last_fault_cycle, FaultCtx, FaultPlan};
-use crate::golden::{abft_tolerance_scaled, AbftMismatch, GemmProblem, Mat, ABFT_TOL_FACTOR};
+use crate::golden::{
+    abft_tolerance_scaled, analyze_residuals, correct_from_residual, AbftMismatch, GemmProblem,
+    Mat, ResidualVerdict, ABFT_TOL_FACTOR,
+};
 use crate::redmule::fault_unit::cause;
 use crate::redmule::regfile::{
     FLAG_ABFT, FLAG_FT_MODE, FLAG_TILE_RECOVERY, REG_FLAGS, REG_K, REG_M, REG_N, REG_RESUME,
@@ -45,6 +48,12 @@ pub const CONFIG_PARITY_CYCLES: u64 = 120;
 /// N attempts before the retries run out and the host abandons).
 pub const MAX_RETRIES: u32 = 3;
 
+/// Host cycles of one online-ABFT in-place correction: read the residual
+/// bank intersection, one Z read-modify-write, one observation fix-up.
+/// Orders of magnitude below any recompute — the whole point of the
+/// online variant.
+pub const ABFT_CORRECT_CYCLES: u64 = 8;
+
 /// How the host re-executes after a detected fault (§3.3 / §5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum RecoveryPolicy {
@@ -58,6 +67,27 @@ pub enum RecoveryPolicy {
     /// tiles are idempotent; a conservative (early) resume only redoes
     /// committed work.
     TileLevel,
+    /// Online-ABFT in-place correction (`Protection::AbftOnline` only,
+    /// after FT-GEMM / online-ABFT GPUs): a single corrupted output
+    /// element located by the store-residual intersection is rewritten
+    /// in place from the exact bit-plane residual — no recompute at all.
+    /// The repaired image is still validated against the carried
+    /// checksums; anything the residuals cannot pin down to one element
+    /// (multi-error patterns, residual-register upsets, corruptions
+    /// upstream of the store network) falls back to the `TileLevel`
+    /// row-band recompute.
+    InPlaceCorrect,
+}
+
+impl RecoveryPolicy {
+    /// Stable lowercase name, used by the sweep JSON documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            RecoveryPolicy::FullRestart => "full-restart",
+            RecoveryPolicy::TileLevel => "tile-level",
+            RecoveryPolicy::InPlaceCorrect => "in-place-correct",
+        }
+    }
 }
 
 /// ABFT bookkeeping of one hosted execution (`Protection::Abft` only).
@@ -72,6 +102,10 @@ pub struct AbftRunInfo {
     /// perturbs data and carried checksum consistently, caught by the
     /// column checks only).
     pub full_restarts: u32,
+    /// Single corrupted elements repaired in place from the online
+    /// store residuals (`Protection::AbftOnline` +
+    /// [`RecoveryPolicy::InPlaceCorrect`] only) — no recompute.
+    pub corrections: u32,
 }
 
 /// Outcome of one hosted execution.
@@ -903,10 +937,81 @@ impl System {
 
             if self.redmule.state() == RunState::Done {
                 if abft {
+                    // Online in-place correction (`AbftOnline` +
+                    // `InPlaceCorrect`): consult the exact store residuals
+                    // first. A single-element verdict is repaired by one
+                    // Z read-modify-write — the carried-checksum check
+                    // below then validates the *repaired* image, so a
+                    // confused locate (tap-net transient, residual SEU)
+                    // degrades to an ordinary detection, never to silent
+                    // corruption. Non-single verdicts are folded into the
+                    // mismatch set so the recompute fallback below covers
+                    // them.
+                    let mut residual_rows: Vec<usize> = Vec::new();
+                    let mut residual_cols: Vec<usize> = Vec::new();
+                    if self.recovery == RecoveryPolicy::InPlaceCorrect
+                        && self.redmule.abft.online()
+                    {
+                        let verdict = analyze_residuals(
+                            self.redmule.abft.res_rows(),
+                            self.redmule.abft.res_cols(),
+                        );
+                        let mut corrected = false;
+                        if let ResidualVerdict::Single { row, col, delta_bits, .. } = verdict {
+                            // Residual coordinates are band-relative after
+                            // a band recompute; map back to the full task.
+                            let abs_row = band.map_or(row, |(r0, _)| r0 as usize + row);
+                            let k_aug = layout.k as usize;
+                            if abs_row < layout.m as usize && col < k_aug {
+                                let addr =
+                                    layout.z_addr + ((abs_row * k_aug + col) * 2) as u32;
+                                let stored = self.tcdm.read_fp16(addr).0;
+                                if let Some(fixed) = correct_from_residual(stored, delta_bits)
+                                {
+                                    self.tcdm.write_fp16(addr, fixed);
+                                    causes |= cause::ABFT_CHECKSUM;
+                                    abft_info.detections += 1;
+                                    abft_info.corrections += 1;
+                                    config_cycles += ABFT_CORRECT_CYCLES;
+                                    self.redmule.abft.adjust_observation(
+                                        row, col, stored, fixed,
+                                    );
+                                    self.redmule.abft.clear_residuals();
+                                    corrected = true;
+                                }
+                            }
+                        }
+                        if !corrected && verdict != ResidualVerdict::Clean {
+                            // Multi-error or uncorrectable pattern: every
+                            // flagged row/column joins the mismatch set.
+                            let (rfx, rbits) = self.redmule.abft.res_rows();
+                            for (i, (&fx, &b)) in rfx.iter().zip(rbits).enumerate() {
+                                if fx != 0 || b != 0 {
+                                    let abs_row =
+                                        band.map_or(i, |(r0, _)| r0 as usize + i);
+                                    residual_rows.push(abs_row);
+                                }
+                            }
+                            let (cfx, cbits) = self.redmule.abft.res_cols();
+                            for (j, (&fx, &b)) in cfx.iter().zip(cbits).enumerate() {
+                                if fx != 0 || b != 0 {
+                                    residual_cols.push(j);
+                                }
+                            }
+                        }
+                    }
                     // Writeback verification: observed row/column sums
                     // from the checksum unit vs. the carried checksums.
-                    let mm = self.abft_check(&layout, band);
+                    let mut mm = self.abft_check(&layout, band);
                     config_cycles += (layout.m + layout.k) as u64;
+                    if !residual_rows.is_empty() || !residual_cols.is_empty() {
+                        mm.rows.extend(residual_rows);
+                        mm.rows.sort_unstable();
+                        mm.rows.dedup();
+                        mm.cols.extend(residual_cols);
+                        mm.cols.sort_unstable();
+                        mm.cols.dedup();
+                    }
                     if !mm.is_clean() {
                         causes |= cause::ABFT_CHECKSUM;
                         abft_info.detections += 1;
@@ -924,7 +1029,7 @@ impl System {
                             });
                         }
                         retries += 1;
-                        if self.recovery == RecoveryPolicy::TileLevel && !mm.rows.is_empty() {
+                        if self.recovery != RecoveryPolicy::FullRestart && !mm.rows.is_empty() {
                             // Selective recovery: recompute only the row
                             // band covering the located rows. Inputs are
                             // pristine in TCDM; rows are contiguous in
@@ -948,7 +1053,10 @@ impl System {
                     }
                 }
                 let z = self.final_z(&layout);
-                let outcome = if retries > 0 {
+                // An in-place correction is a recovery action too: the
+                // result only matches golden *because* the host repaired
+                // it, so it classifies with the retried runs.
+                let outcome = if retries > 0 || abft_info.corrections > 0 {
                     HostOutcome::CompletedAfterRetry
                 } else {
                     HostOutcome::Completed
@@ -999,7 +1107,7 @@ impl System {
                 // paper's single-fault campaign assumes clean.
                 let resume = match self.recovery {
                     RecoveryPolicy::FullRestart => None,
-                    RecoveryPolicy::TileLevel => Some(progress),
+                    RecoveryPolicy::TileLevel | RecoveryPolicy::InPlaceCorrect => Some(progress),
                 };
                 config_cycles += self.program_with_resume(&layout, mode, resume);
                 // Retry shortcut (fast-forward engine only): a FullRestart

@@ -405,6 +405,29 @@ impl FaultRegistry {
             g.finish(&mut entries);
         }
 
+        // --- Online-ABFT residual unit: pre-store taps + residual bank
+        // (`AbftOnline` only; the `ft/online_abft` prefix is deliberately
+        // disjoint from `ft/abft` so the base group's area weight is not
+        // double-counted).
+        if protection.has_online_abft() {
+            let mut g = Group::new(kge("ft/online_abft"));
+            g.add_range(
+                Module::Checker,
+                checker_unit::ABFT_ONLINE_TAP_NET,
+                0..16,
+                16,
+                Transient,
+            );
+            g.add_range(
+                Module::Checker,
+                checker_unit::ABFT_RES_REG,
+                0..(l + d),
+                crate::redmule::abft::ABFT_ACC_BITS,
+                StateUpset,
+            );
+            g.finish(&mut entries);
+        }
+
         // --- [8]-style per-CE checker comparison nets.
         if protection.has_per_ce_checkers() {
             let mut g = Group::new(kge("ft/perce_checkers"));

@@ -224,6 +224,14 @@ pub mod checker_unit {
     /// ABFT checksum accumulator register (SEU, `Abft` builds); index =
     /// accumulator instance (row bank first, then column bank).
     pub const ABFT_ACC_REG: u8 = 5;
+    /// Online-ABFT pre-store residual tap (SET, `AbftOnline` builds);
+    /// index = store lane. Taps the value presented to the store network
+    /// before the commit point.
+    pub const ABFT_ONLINE_TAP_NET: u8 = 6;
+    /// Online-ABFT residual accumulator register (SEU, `AbftOnline`
+    /// builds); index = residual instance (row bank first, then column
+    /// bank).
+    pub const ABFT_RES_REG: u8 = 7;
 }
 
 /// Fault-unit tags.

@@ -3,7 +3,7 @@
 //! Subcommands (CLI parsing is hand-rolled; clap is not vendored):
 //!
 //! ```text
-//! redmule-ft campaign [--config baseline|data|full|abft|per-ce] [--injections N]
+//! redmule-ft campaign [--config baseline|data|full|abft|abft-online|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
 //!                     [--direct] [--checkpoint-interval K]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
@@ -120,6 +120,7 @@ fn parse_protection(s: &str) -> Option<Protection> {
         "full" => Some(Protection::Full),
         "per-ce" | "perce" => Some(Protection::PerCe),
         "abft" => Some(Protection::Abft),
+        "abft-online" | "abftonline" | "abft_online" => Some(Protection::AbftOnline),
         _ => None,
     }
 }
@@ -201,7 +202,9 @@ fn print_help() {
         "redmule-ft — RedMulE-FT reproduction (CF Companion '25)\n\
          \n\
          commands:\n\
-           campaign      run one SFI campaign column (--config baseline|data|full|abft|per-ce,\n\
+           campaign      run one SFI campaign column (--config baseline|data|full|abft|\n\
+                         abft-online|per-ce — abft-online corrects single errors in\n\
+                         place from the fused store residuals,\n\
                          --injections, --seed, --threads, --report; --direct disables the\n\
                          checkpointed fast-forward engine, --checkpoint-interval K tunes it;\n\
                          --precision P stops adaptively once every outcome's CI\n\
@@ -223,7 +226,7 @@ fn print_help() {
                          the grid-wide work stealing — byte-identical output either\n\
                          way, only slower)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
-                         --abft appends the ABFT checksum column)\n\
+                         --abft appends the ABFT checksum and online-ABFT columns)\n\
            area          GE area model breakdown (--config, --l/--h/--p)\n\
            floorplan     Fig. 2a textual floorplan (--config)\n\
            perf          performance-mode vs FT-mode cycle model (--m/--n/--k)\n\
@@ -475,6 +478,7 @@ fn cmd_area(args: &Args) -> redmule_ft::Result<()> {
         Protection::Baseline,
         Protection::Data,
         Protection::Abft,
+        Protection::AbftOnline,
         Protection::Full,
     ] {
         let r = area_report(cfg, p);

@@ -19,6 +19,18 @@
 //! accumulator per data column of the *task* (the hardware equivalent
 //! tiles this through `L + D` physical accumulators; the area model
 //! charges for the physical bank).
+//!
+//! `Protection::AbftOnline` adds a second, *online* bank: a tap pair on
+//! the store network observes each element both before and after the
+//! commit point and accumulates the exact per-row/per-column store
+//! residual `stored − pre` in two planes — the 2^-24 fixed-point value
+//! plane and the raw bit-pattern plane. A fault-free store contributes
+//! zero to both; a store-path corruption leaves the exact delta at the
+//! (row, col) intersection of the nonzero residuals, from which the host
+//! reconstructs the original bit pattern and corrects the element in
+//! place (see [`crate::golden::analyze_residuals`]). The bit plane is
+//! what makes the correction bit-exact even for value-preserving
+//! corruptions (±0 sign flips, NaN payloads).
 
 use crate::fp::Fp16;
 use crate::golden::{fixed_to_f64, fp16_to_fixed};
@@ -41,6 +53,14 @@ pub struct AbftUnit {
     row_abs_fx: Vec<i64>,
     col_fx: Vec<i64>,
     col_abs_fx: Vec<i64>,
+    /// Online residual banks (`Protection::AbftOnline` only): exact
+    /// `stored − pre` store residuals per row/column, in the fixed-point
+    /// value plane and the raw bit plane. All-zero on a clean run.
+    online: bool,
+    res_row_fx: Vec<i64>,
+    res_row_bits: Vec<i64>,
+    res_col_fx: Vec<i64>,
+    res_col_bits: Vec<i64>,
 }
 
 impl AbftUnit {
@@ -54,6 +74,24 @@ impl AbftUnit {
         self.row_abs_fx = vec![0; m];
         self.col_fx = vec![0; self.data_cols];
         self.col_abs_fx = vec![0; self.data_cols];
+        self.online = false;
+        self.res_row_fx.clear();
+        self.res_row_bits.clear();
+        self.res_col_fx.clear();
+        self.res_col_bits.clear();
+    }
+
+    /// Arm with the online residual banks too (`Protection::AbftOnline`):
+    /// the residual taps cover the *whole* augmented result, carried
+    /// checksum row/column included, so any store corruption is
+    /// locatable.
+    pub fn arm_online(&mut self, m: usize, k: usize) {
+        self.arm(m, k);
+        self.online = true;
+        self.res_row_fx = vec![0; m];
+        self.res_row_bits = vec![0; m];
+        self.res_col_fx = vec![0; k];
+        self.res_col_bits = vec![0; k];
     }
 
     /// Disarm (builds without the unit, or tasks without the ABFT flag).
@@ -63,11 +101,22 @@ impl AbftUnit {
         self.row_abs_fx.clear();
         self.col_fx.clear();
         self.col_abs_fx.clear();
+        self.online = false;
+        self.res_row_fx.clear();
+        self.res_row_bits.clear();
+        self.res_col_fx.clear();
+        self.res_col_bits.clear();
     }
 
     #[inline]
     pub fn armed(&self) -> bool {
         self.armed
+    }
+
+    /// Is the online residual bank live (armed via [`Self::arm_online`])?
+    #[inline]
+    pub fn online(&self) -> bool {
+        self.armed && self.online
     }
 
     /// Observe one stored element at logical position `(row, col)` of the
@@ -85,6 +134,69 @@ impl AbftUnit {
         if row + 1 < self.rows {
             self.col_fx[col] += fx;
             self.col_abs_fx[col] += fx.abs();
+        }
+    }
+
+    /// Observe one store through the online residual taps: `pre` is the
+    /// value presented to the store network, `stored` what was committed
+    /// to TCDM. A fault-free store contributes exactly zero to both
+    /// planes; a corrupted one leaves the exact delta at its row and
+    /// column.
+    #[inline]
+    pub fn observe_online(&mut self, row: usize, col: usize, pre: Fp16, stored: Fp16) {
+        if !self.online()
+            || row >= self.res_row_fx.len()
+            || col >= self.res_col_fx.len()
+        {
+            return;
+        }
+        let dfx = fp16_to_fixed(stored) - fp16_to_fixed(pre);
+        let dbits = stored.to_bits() as i64 - pre.to_bits() as i64;
+        self.res_row_fx[row] += dfx;
+        self.res_row_bits[row] += dbits;
+        self.res_col_fx[col] += dfx;
+        self.res_col_bits[col] += dbits;
+    }
+
+    /// Online row residual banks: (fixed-point plane, bit plane).
+    pub fn res_rows(&self) -> (&[i64], &[i64]) {
+        (&self.res_row_fx, &self.res_row_bits)
+    }
+
+    /// Online column residual banks: (fixed-point plane, bit plane).
+    pub fn res_cols(&self) -> (&[i64], &[i64]) {
+        (&self.res_col_fx, &self.res_col_bits)
+    }
+
+    /// Clear the online residual banks after the host consumed them
+    /// (post-correction revalidation starts from a clean slate).
+    pub fn clear_residuals(&mut self) {
+        for bank in [
+            &mut self.res_row_fx,
+            &mut self.res_row_bits,
+            &mut self.res_col_fx,
+            &mut self.res_col_bits,
+        ] {
+            bank.iter_mut().for_each(|v| *v = 0);
+        }
+    }
+
+    /// Host-side fix-up after an in-place correction: migrate the
+    /// writeback observation of `(row, col)` from the corrupted stored
+    /// value to the corrected one, so the carried-checksum comparison
+    /// validates the repaired image rather than the corrupted one.
+    pub fn adjust_observation(&mut self, row: usize, col: usize, old: Fp16, new: Fp16) {
+        if !self.armed || row >= self.rows || col >= self.data_cols {
+            return;
+        }
+        let (ofx, nfx) = (fp16_to_fixed(old), fp16_to_fixed(new));
+        let d = nfx - ofx;
+        let dabs = nfx.abs() - ofx.abs();
+        self.row_fx[row] += d;
+        self.row_abs_fx[row] += dabs;
+        if row + 1 < self.rows {
+            self.col_fx[col] += d;
+            self.col_abs_fx[col] += dabs;
         }
     }
 
@@ -110,9 +222,19 @@ impl AbftUnit {
     /// digest.
     pub fn digest_into(&self, h: &mut crate::util::digest::Fnv64) {
         h.write_bool(self.armed);
+        h.write_bool(self.online);
         h.write_u64(self.rows as u64);
         h.write_u64(self.data_cols as u64);
-        for bank in [&self.row_fx, &self.row_abs_fx, &self.col_fx, &self.col_abs_fx] {
+        for bank in [
+            &self.row_fx,
+            &self.row_abs_fx,
+            &self.col_fx,
+            &self.col_abs_fx,
+            &self.res_row_fx,
+            &self.res_row_bits,
+            &self.res_col_fx,
+            &self.res_col_bits,
+        ] {
             h.write_u64(bank.len() as u64);
             for &v in bank.iter() {
                 h.write_i64(v);
@@ -136,6 +258,34 @@ impl AbftUnit {
     pub fn flip_col_acc_bit(&mut self, index: usize, bit: u8) -> bool {
         match self.col_fx.get_mut(index) {
             Some(v) if self.armed => {
+                *v ^= 1i64 << (bit % ABFT_ACC_BITS);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// SEU hook: flip a stored bit of online row-residual register
+    /// `index` (fixed-point plane — the plane the locate logic trusts
+    /// least, so an upset degrades to a fail-safe fallback, never a
+    /// wrong correction).
+    pub fn flip_res_row_bit(&mut self, index: usize, bit: u8) -> bool {
+        let live = self.online();
+        match self.res_row_fx.get_mut(index) {
+            Some(v) if live => {
+                *v ^= 1i64 << (bit % ABFT_ACC_BITS);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// SEU hook: flip a stored bit of online column-residual register
+    /// `index`.
+    pub fn flip_res_col_bit(&mut self, index: usize, bit: u8) -> bool {
+        let live = self.online();
+        match self.res_col_fx.get_mut(index) {
+            Some(v) if live => {
                 *v ^= 1i64 << (bit % ABFT_ACC_BITS);
                 true
             }
@@ -204,6 +354,86 @@ mod tests {
         assert_eq!(u.row_sum(0), expect);
         // ... and generally differs from the FP16 fold (rounding).
         assert!((u.row_sum(0) - fold.to_f64()).abs() < 0.1);
+    }
+
+    #[test]
+    fn online_residuals_are_zero_on_clean_stores_and_exact_on_corrupt_ones() {
+        let mut u = AbftUnit::default();
+        u.arm(3, 4);
+        assert!(!u.online(), "plain arm must not enable the residual taps");
+        u.observe_online(0, 0, Fp16::ONE, Fp16::from_f64(2.0));
+        assert!(u.res_rows().0.is_empty(), "disabled taps accumulate nothing");
+
+        u.arm_online(3, 4);
+        assert!(u.online());
+        let v = Fp16::from_f64(1.5);
+        // Clean stores across the whole augmented tile, checksum row/col
+        // included: residuals stay exactly zero.
+        for row in 0..3 {
+            for col in 0..4 {
+                u.observe_online(row, col, v, v);
+            }
+        }
+        assert!(u.res_rows().0.iter().all(|&x| x == 0));
+        assert!(u.res_rows().1.iter().all(|&x| x == 0));
+        assert!(u.res_cols().0.iter().all(|&x| x == 0));
+        assert!(u.res_cols().1.iter().all(|&x| x == 0));
+        // One corrupted store: the exact delta lands at (1, 2) in both
+        // planes, and the bit plane recovers the original pattern.
+        let bad = Fp16::from_bits(v.to_bits() ^ (1 << 14));
+        u.observe_online(1, 2, v, bad);
+        let (rfx, rbits) = u.res_rows();
+        assert_eq!(rfx[1], fp16_to_fixed(bad) - fp16_to_fixed(v));
+        assert_eq!(rbits[1], bad.to_bits() as i64 - v.to_bits() as i64);
+        assert_eq!(rfx[0], 0);
+        let (cfx, cbits) = u.res_cols();
+        assert_eq!(cfx[2], rfx[1]);
+        assert_eq!(cbits[2], rbits[1]);
+        let recovered = (bad.to_bits() as i64 - rbits[1]) as u16;
+        assert_eq!(recovered, v.to_bits(), "bit plane must invert the corruption");
+        // Value-preserving corruption (+0 -> -0): only the bit plane sees it.
+        u.clear_residuals();
+        u.observe_online(0, 0, Fp16::ZERO, Fp16::from_bits(0x8000));
+        assert_eq!(u.res_rows().0[0], 0, "fx plane is value-blind to signed zero");
+        assert_eq!(u.res_rows().1[0], 0x8000);
+        u.clear_residuals();
+        assert!(u.res_rows().1.iter().all(|&x| x == 0));
+        assert!(u.online(), "clearing residuals must not disarm");
+    }
+
+    #[test]
+    fn adjust_observation_migrates_writeback_sums() {
+        let mut u = AbftUnit::default();
+        u.arm_online(3, 4);
+        let bad = Fp16::from_f64(8.0);
+        let good = Fp16::from_f64(-1.5);
+        for col in 0..3 {
+            u.observe(0, col, if col == 1 { bad } else { good });
+        }
+        u.adjust_observation(0, 1, bad, good);
+        assert_eq!(u.row_sum(0), -4.5);
+        assert_eq!(u.row_abs(0), 4.5);
+        assert_eq!(u.col_sum(1), -1.5);
+        // Checksum-column / out-of-range targets are ignored.
+        u.adjust_observation(0, 3, bad, good);
+        u.adjust_observation(9, 0, bad, good);
+        assert_eq!(u.row_sum(0), -4.5);
+    }
+
+    #[test]
+    fn residual_seu_hooks_hit_live_online_slots_only() {
+        let mut u = AbftUnit::default();
+        assert!(!u.flip_res_row_bit(0, 3), "disarmed unit has no residual state");
+        u.arm(4, 5);
+        assert!(!u.flip_res_row_bit(0, 3), "plain ABFT build has no residual bank");
+        u.arm_online(4, 5);
+        assert!(u.flip_res_row_bit(0, 24));
+        assert_eq!(u.res_rows().0[0], 1 << 24);
+        assert_eq!(u.res_rows().1[0], 0, "bit plane untouched: planes disagree");
+        assert!(u.flip_res_col_bit(4, 0), "residual cols cover the checksum column");
+        assert!(!u.flip_res_col_bit(5, 0));
+        u.arm_online(4, 5);
+        assert_eq!(u.res_rows().0[0], 0, "re-arming clears the upset");
     }
 
     #[test]

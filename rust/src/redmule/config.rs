@@ -77,6 +77,19 @@ impl RedMuleConfig {
 ///    stays at performance-mode level; coverage is bounded by the FP16
 ///    rounding tolerance of the checksum identity (see
 ///    [`crate::golden::abft_tolerance`]).
+/// 6. `AbftOnline` — the online-fused variant (FT-GEMM, Wu et al. 2023;
+///    "Anatomy of High-Performance GEMM with Online Fault Tolerance on
+///    GPUs", Zhai et al. 2023): the checksum unit additionally taps the
+///    store network *before and after* the commit point and accumulates
+///    exact per-row/per-column store residuals while the tile streams
+///    out. A single corrupted output element shows up as the (row, col)
+///    intersection of the nonzero residuals and is corrected *in place*
+///    from the residual value — detect+correct instead of
+///    detect+recompute, so single store-path errors cost a handful of
+///    host cycles rather than a row-band recompute. Corruptions the
+///    residual taps cannot see (upstream of the store network) still
+///    fall back to the carried-checksum check and row-band recompute of
+///    the base `Abft` build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Protection {
     Baseline,
@@ -84,6 +97,7 @@ pub enum Protection {
     Full,
     PerCe,
     Abft,
+    AbftOnline,
 }
 
 impl Protection {
@@ -94,6 +108,7 @@ impl Protection {
             Protection::Full => "full",
             Protection::PerCe => "per-ce",
             Protection::Abft => "abft",
+            Protection::AbftOnline => "abft-online",
         }
     }
 
@@ -114,7 +129,13 @@ impl Protection {
 
     /// Does this build have the ABFT writeback checksum unit?
     pub fn has_abft_checksums(self) -> bool {
-        matches!(self, Protection::Abft)
+        matches!(self, Protection::Abft | Protection::AbftOnline)
+    }
+
+    /// Does this build additionally have the online residual taps that
+    /// enable in-place single-error correction?
+    pub fn has_online_abft(self) -> bool {
+        matches!(self, Protection::AbftOnline)
     }
 }
 
@@ -206,8 +227,16 @@ mod tests {
         assert!(!Protection::Abft.has_control_protection());
         assert!(!Protection::Abft.has_per_ce_checkers());
         assert!(Protection::Abft.has_abft_checksums());
+        assert!(!Protection::Abft.has_online_abft());
+        // The online variant is the base checksum build plus residual taps.
+        assert!(!Protection::AbftOnline.has_data_protection());
+        assert!(!Protection::AbftOnline.has_control_protection());
+        assert!(!Protection::AbftOnline.has_per_ce_checkers());
+        assert!(Protection::AbftOnline.has_abft_checksums());
+        assert!(Protection::AbftOnline.has_online_abft());
         for p in [Protection::Baseline, Protection::Data, Protection::Full, Protection::PerCe] {
             assert!(!p.has_abft_checksums(), "{p:?}");
+            assert!(!p.has_online_abft(), "{p:?}");
         }
     }
 

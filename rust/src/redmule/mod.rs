@@ -130,8 +130,12 @@ impl RedMule {
         if self.protection.has_abft_checksums() && flags & FLAG_ABFT != 0 {
             // Arm the writeback checksum unit with the task's (augmented)
             // dimensions; accumulators start from zero on every attempt.
-            self.abft
-                .arm(self.regfile.read(REG_M) as usize, self.regfile.read(REG_K) as usize);
+            let (m, k) = (self.regfile.read(REG_M) as usize, self.regfile.read(REG_K) as usize);
+            if self.protection.has_online_abft() {
+                self.abft.arm_online(m, k);
+            } else {
+                self.abft.arm(m, k);
+            }
         } else {
             self.abft.disarm();
         }
@@ -799,8 +803,21 @@ impl RedMule {
                     SiteId::new(Module::Checker, checker_unit::ABFT_TAP_NET, lane),
                     stored,
                 );
-                self.abft
-                    .observe(m as usize, (kt * dims.d + c) as usize, tapped);
+                let col = (kt * dims.d + c) as usize;
+                self.abft.observe(m as usize, col, tapped);
+                // Online residual taps (`AbftOnline`): observe the value
+                // presented to the store network and the committed value;
+                // a store-path corruption leaves the exact delta in the
+                // residual banks. The pre-store tap net is a fault site of
+                // its own — a transient there fabricates a residual (a
+                // spurious locate attempt) without touching the data.
+                if self.abft.online() {
+                    let pre = ctx.fp16(
+                        SiteId::new(Module::Checker, checker_unit::ABFT_ONLINE_TAP_NET, lane),
+                        value,
+                    );
+                    self.abft.observe_online(m as usize, col, pre, stored);
+                }
             }
         }
     }
@@ -887,6 +904,19 @@ impl RedMule {
                     } else {
                         let col = u32::from(self.sched.kt) * dims.d + (index - l);
                         self.abft.flip_col_acc_bit(col as usize, bit)
+                    }
+                }
+                // Online residual bank (`AbftOnline`): same physical
+                // row-then-column indexing as the accumulator bank.
+                checker_unit::ABFT_RES_REG => {
+                    let l = self.cfg.l as u32;
+                    let dims = self.dims();
+                    if index < l {
+                        let row = u32::from(self.sched.mt) * dims.rows_per_tile + index;
+                        self.abft.flip_res_row_bit(row as usize, bit)
+                    } else {
+                        let col = u32::from(self.sched.kt) * dims.d + (index - l);
+                        self.abft.flip_res_col_bit(col as usize, bit)
                     }
                 }
                 _ => false,

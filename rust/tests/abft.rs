@@ -187,6 +187,136 @@ fn checksum_unit_seu_causes_spurious_retry_not_corruption() {
     assert_eq!(info.band_recomputes, 1, "row 0 is located and recomputed");
 }
 
+// ------------------------------------------- online in-place correction
+
+/// The online build's headline property: a post-checker store-net
+/// transient corrupts exactly one committed Z element, the fused store
+/// residuals locate it as the row/column intersection, and the host
+/// rewrites it in place from the bit-plane residual — zero retries, zero
+/// recomputed cycles, bit-exact result. Sweeps every cycle × lanes 0..4
+/// of the post-checker segment so every store phase is exercised.
+#[test]
+fn online_abft_corrects_single_store_corruption_in_place() {
+    let cfg = RedMuleConfig::paper();
+    let p = GemmProblem::random(&GemmSpec::paper_workload(), 3);
+    let golden = p.golden_z();
+    let mut sys = System::new(cfg, Protection::AbftOnline)
+        .with_recovery(RecoveryPolicy::InPlaceCorrect);
+    let clean = sys.run_gemm(&p, ExecMode::Performance).unwrap().cycles;
+
+    let mut corrected = 0u32;
+    for cycle in 1..=clean {
+        for lane in 0..4u16 {
+            let plan = FaultPlan {
+                cycle,
+                // 32.. is the post-checker segment: the fault lands
+                // between the accumulator read (the online unit's `pre`
+                // tap) and the TCDM commit, so pre != stored and the
+                // residual pins the element exactly.
+                site: SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 32 + lane),
+                bit: 14,
+                kind: FaultKind::Transient,
+            };
+            let r = sys
+                .run_gemm_with_fault(&p, ExecMode::Performance, Some(plan))
+                .unwrap();
+            if r.outcome == HostOutcome::Completed {
+                continue; // net idle this cycle (masked)
+            }
+            let info = r.abft.unwrap();
+            assert_eq!(
+                r.outcome,
+                HostOutcome::CompletedAfterRetry,
+                "cycle {cycle} lane {lane}"
+            );
+            assert_eq!(
+                r.retries, 0,
+                "cycle {cycle} lane {lane}: in-place correction must not re-execute"
+            );
+            assert!(
+                info.corrections >= 1,
+                "cycle {cycle} lane {lane}: the residual intersection must correct"
+            );
+            assert_eq!(
+                info.band_recomputes, 0,
+                "cycle {cycle} lane {lane}: a single corruption needs no recompute"
+            );
+            assert!(r.fault_causes & cause::ABFT_CHECKSUM != 0, "cause bit must latch");
+            assert!(
+                r.z_matches(&golden),
+                "cycle {cycle} lane {lane}: correction must be bit-exact"
+            );
+            assert_eq!(
+                r.cycles, clean,
+                "cycle {cycle} lane {lane}: zero recomputed cycles"
+            );
+            corrected += 1;
+        }
+    }
+    assert!(corrected > 10, "store phases must be live and correctable ({corrected})");
+}
+
+/// Two elements corrupted in the same cycle (adjacent post-checker
+/// lanes) produce a residual pattern the locator cannot pin to one
+/// intersection: the online build must refuse to guess and fall back to
+/// the detect-only row-band recompute — and still end bit-exact.
+#[test]
+fn online_abft_multi_error_residuals_fall_back_to_band_recompute() {
+    let cfg = RedMuleConfig::paper();
+    let p = GemmProblem::random(&GemmSpec::paper_workload(), 4);
+    let golden = p.golden_z();
+    let probe = System::new(cfg, Protection::AbftOnline)
+        .with_recovery(RecoveryPolicy::InPlaceCorrect)
+        .run_gemm(&p, ExecMode::Performance)
+        .unwrap()
+        .cycles;
+    let mut sys = System::new(cfg, Protection::AbftOnline)
+        .with_recovery(RecoveryPolicy::InPlaceCorrect);
+    sys.redmule.reset();
+    let layout = sys.stage(&p).unwrap();
+    let pristine = sys.tcdm.clone();
+
+    let (mut corrected, mut fell_back) = (0u32, 0u32);
+    for cycle in 1..=probe {
+        let plans = [
+            FaultPlan {
+                cycle,
+                site: SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 32),
+                bit: 14,
+                kind: FaultKind::Transient,
+            },
+            FaultPlan {
+                cycle,
+                site: SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 33),
+                bit: 14,
+                kind: FaultKind::Transient,
+            },
+        ];
+        sys.tcdm.restore_from(&pristine);
+        sys.redmule.reset();
+        let r = sys
+            .run_staged_with_faults(&layout, ExecMode::Performance, &plans)
+            .unwrap();
+        if r.outcome == HostOutcome::Completed {
+            continue; // both nets idle this cycle
+        }
+        assert_eq!(r.outcome, HostOutcome::CompletedAfterRetry, "cycle {cycle}");
+        assert!(r.z_matches(&golden), "cycle {cycle}: recovery must restore");
+        let info = r.abft.unwrap();
+        if info.corrections >= 1 && info.band_recomputes == 0 {
+            corrected += 1; // only one of the two lanes was live
+        } else {
+            assert!(
+                info.band_recomputes >= 1,
+                "cycle {cycle}: two-element residuals must band-recompute"
+            );
+            fell_back += 1;
+        }
+    }
+    assert!(fell_back > 5, "double corruptions must hit the fallback ({fell_back})");
+    assert!(corrected > 0, "single-live-lane cycles still correct in place");
+}
+
 /// Selective row-band recovery must cost less than a full restart for
 /// the same detected corruption on a many-tile workload.
 #[test]

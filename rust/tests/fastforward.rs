@@ -44,6 +44,7 @@ fn fast_forward_matches_direct_across_all_protections() {
         Protection::Full,
         Protection::PerCe,
         Protection::Abft,
+        Protection::AbftOnline,
     ] {
         let mut cfg = CampaignConfig::table1(protection, 300, 0xFA57);
         cfg.threads = 2;
@@ -105,8 +106,16 @@ fn fast_forward_is_thread_layout_invariant_too() {
 fn per_run_reports_are_field_identical_between_engines() {
     // Full exercises the FT abort/retry (and the retry shortcut), PerCe
     // the performance-mode abort path with its distinct retry gating,
-    // Abft the writeback-verification/band-recovery flow.
-    for protection in [Protection::Full, Protection::PerCe, Protection::Abft] {
+    // Abft the writeback-verification/band-recovery flow, AbftOnline the
+    // fused-residual locate/correct path with its band-recompute
+    // fallback (its `abft` info — corrections included — and corrected
+    // Z bits must round-trip the snapshot/restore machinery exactly).
+    for protection in [
+        Protection::Full,
+        Protection::PerCe,
+        Protection::Abft,
+        Protection::AbftOnline,
+    ] {
         let cfg = RedMuleConfig::paper();
         let spec = GemmSpec::paper_workload();
         let problem = GemmProblem::random(&spec, problem_seed(0xAB));
@@ -115,7 +124,9 @@ fn per_run_reports_are_field_identical_between_engines() {
         } else {
             ExecMode::Performance
         };
-        let recovery = if protection.has_abft_checksums() {
+        let recovery = if protection.has_online_abft() {
+            RecoveryPolicy::InPlaceCorrect
+        } else if protection.has_abft_checksums() {
             RecoveryPolicy::TileLevel
         } else {
             RecoveryPolicy::FullRestart

@@ -14,12 +14,18 @@ use redmule_ft::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
 use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
 use redmule_ft::util::rng::Xoshiro256;
 
-/// The A/B grid: three protections (incl. the ABFT tolerance axis), two
-/// fault counts — small budgets, every engine corner.
+/// The A/B grid: four protections (incl. the ABFT tolerance axis and
+/// the in-place-correcting online build), two fault counts — small
+/// budgets, every engine corner.
 fn grid(seed: u64, threads: usize) -> SweepConfig {
     let mut c = SweepConfig::new(50, seed);
     c.shapes = vec![GemmSpec::new(6, 8, 8)];
-    c.protections = vec![Protection::Baseline, Protection::Full, Protection::Abft];
+    c.protections = vec![
+        Protection::Baseline,
+        Protection::Full,
+        Protection::Abft,
+        Protection::AbftOnline,
+    ];
     c.fault_counts = vec![1, 2];
     c.tol_factors = vec![ABFT_TOL_FACTOR, 1.0];
     c.threads = threads;
@@ -134,7 +140,7 @@ fn campaign_counts_match_between_recorded_and_adopted_traces() {
 /// matters.
 #[test]
 fn per_run_reports_are_field_identical_with_reused_scratch() {
-    for protection in [Protection::Full, Protection::Abft] {
+    for protection in [Protection::Full, Protection::Abft, Protection::AbftOnline] {
         let cfg = RedMuleConfig::paper();
         let spec = GemmSpec::paper_workload();
         let problem = GemmProblem::random(&spec, problem_seed(0xAB5));
@@ -143,7 +149,9 @@ fn per_run_reports_are_field_identical_with_reused_scratch() {
         } else {
             ExecMode::Performance
         };
-        let recovery = if protection.has_abft_checksums() {
+        let recovery = if protection.has_online_abft() {
+            RecoveryPolicy::InPlaceCorrect
+        } else if protection.has_abft_checksums() {
             RecoveryPolicy::TileLevel
         } else {
             RecoveryPolicy::FullRestart
