@@ -26,6 +26,7 @@ import sys
 
 PROTECTIONS = ("baseline", "data", "full", "per-ce", "abft", "abft-online")
 RECOVERIES = ("full-restart", "tile-level", "in-place-correct")
+ENGINES = ("direct", "fast-forward", "two-level")
 OUTCOME_KEYS = ("correct_no_retry", "correct_with_retry", "incorrect", "timeout")
 EPS = 1e-6
 
@@ -184,6 +185,10 @@ def check_v2(d, args):
 def check_bench_sweep(d, args):
     if d["schema"] != "redmule-ft/bench-sweep-v1":
         fail(f"schema {d['schema']} != redmule-ft/bench-sweep-v1")
+    # Engine discriminant (two-level tentpole): optional so pre-existing
+    # sidecars stay valid, but when present it must name a known engine.
+    if "engine" in d and d["engine"] not in ENGINES:
+        fail(f"unknown engine {d['engine']} (expected one of {ENGINES})")
     # Totals are rounded to 3 decimals / 1 decimal, so tiny smoke grids
     # can legitimately round to zero — only negatives are malformed.
     if d["wall_seconds"] < 0:

@@ -1,0 +1,157 @@
+//! Self-checking bench: two-level executor vs. the fast-forward engine
+//! on long-horizon workloads (`Campaign::run`, table1 configuration,
+//! single thread). Asserts two things and exits non-zero otherwise:
+//!
+//! 1. **equivalence** — every column's outcome counts are bit-identical
+//!    between the two engines, and
+//! 2. **speedup** — the aggregate end-to-end speedup is ≥ 3× (the
+//!    tentpole acceptance bar; pass `--min-speedup` to loosen it on
+//!    noisy shared runners without losing the equivalence assertion).
+//!
+//! Long horizons are where the two level earns its keep: the
+//! fast-forward engine still steps cycle-accurately from the restored
+//! checkpoint to the *next checkpoint boundary* before its first
+//! convergence probe, while the two-level engine probes mid-segment as
+//! soon as the fault window's settling margin has elapsed — on a
+//! multi-thousand-cycle run that skips most of the stepped tail of
+//! every converging injection.
+//!
+//! Emits `BENCH_twolevel.json` (schema `redmule-ft/bench-twolevel-v1`)
+//! with runs/sec per column for both engines.
+//!
+//! ```text
+//! cargo bench --bench twolevel_speedup \
+//!     [-- --injections N] [-- --out PATH] [-- --min-speedup X]
+//! ```
+
+use redmule_ft::campaign::{Campaign, CampaignConfig, CampaignResult};
+use redmule_ft::golden::GemmSpec;
+use redmule_ft::redmule::Protection;
+
+fn arg(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a.as_str() == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn counts(r: &CampaignResult) -> (u64, u64, u64, u64, u64, u64) {
+    (
+        r.correct_no_retry,
+        r.correct_with_retry,
+        r.incorrect,
+        r.timeout,
+        r.applied,
+        r.faults_applied,
+    )
+}
+
+fn main() {
+    let injections: u64 = arg("--injections")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let out_path = arg("--out").unwrap_or_else(|| "BENCH_twolevel.json".to_string());
+    let min_speedup: f64 = arg("--min-speedup")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3.0);
+    let seed = 2025u64;
+    // Long-horizon shapes (thousands of cycles each): many checkpoint
+    // segments, so the boundary-probe stepping the two-level engine
+    // eliminates dominates the fast-forward engine's wall clock.
+    let columns = [
+        (Protection::Baseline, GemmSpec::new(32, 192, 48)),
+        (Protection::Full, GemmSpec::new(32, 192, 48)),
+        (Protection::Baseline, GemmSpec::new(24, 256, 32)),
+    ];
+
+    println!(
+        "twolevel_speedup — long-horizon workloads, table1 config, \
+         {injections} injections/column, single thread\n"
+    );
+
+    let mut rows = Vec::new();
+    let (mut fast_total, mut two_total) = (0.0f64, 0.0f64);
+    for (protection, spec) in columns {
+        let mut cfg = CampaignConfig::table1(protection, injections, seed);
+        cfg.spec = spec;
+        cfg.threads = 1;
+        cfg.fast_forward = true;
+        cfg.two_level = false;
+        let fast = Campaign::run(&cfg).expect("fast-forward campaign");
+        cfg.two_level = true;
+        let two = Campaign::run(&cfg).expect("two-level campaign");
+        assert_eq!(
+            counts(&fast),
+            counts(&two),
+            "{} {}x{}x{}: two-level results must be bit-identical to fast-forward",
+            protection.name(),
+            spec.m,
+            spec.n,
+            spec.k
+        );
+        let speedup = fast.wall_seconds / two.wall_seconds.max(1e-9);
+        println!(
+            "{:<10} {:>3}x{:<3}x{:<3} fast {:>7.0} runs/s   two-level {:>7.0} runs/s   \
+             speedup {:>5.2}x",
+            protection.name(),
+            spec.m,
+            spec.n,
+            spec.k,
+            fast.runs_per_sec(),
+            two.runs_per_sec(),
+            speedup
+        );
+        fast_total += fast.wall_seconds;
+        two_total += two.wall_seconds;
+        rows.push((protection, spec, fast, two, speedup));
+    }
+
+    let aggregate = fast_total / two_total.max(1e-9);
+    println!(
+        "\naggregate speedup: {aggregate:.2}x \
+         (fast-forward {fast_total:.2} s vs two-level {two_total:.2} s)"
+    );
+
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"schema\": \"redmule-ft/bench-twolevel-v1\",\n");
+    j.push_str("  \"engine\": \"two-level\",\n");
+    j.push_str(&format!("  \"injections_per_column\": {injections},\n"));
+    j.push_str(&format!("  \"seed\": {seed},\n"));
+    j.push_str("  \"threads\": 1,\n");
+    j.push_str(&format!("  \"aggregate_speedup\": {aggregate:.3},\n"));
+    j.push_str("  \"columns\": [\n");
+    for (i, (protection, spec, fast, two, speedup)) in rows.iter().enumerate() {
+        j.push_str("    {");
+        j.push_str(&format!("\"protection\": \"{}\", ", protection.name()));
+        j.push_str(&format!(
+            "\"shape\": {{\"m\": {}, \"n\": {}, \"k\": {}}}, ",
+            spec.m, spec.n, spec.k
+        ));
+        j.push_str(&format!(
+            "\"runs_per_sec_fast\": {:.1}, ",
+            fast.runs_per_sec()
+        ));
+        j.push_str(&format!(
+            "\"runs_per_sec_two_level\": {:.1}, ",
+            two.runs_per_sec()
+        ));
+        j.push_str(&format!("\"speedup\": {speedup:.3}, "));
+        j.push_str(&format!(
+            "\"outcomes\": {{\"correct_no_retry\": {}, \"correct_with_retry\": {}, \
+             \"incorrect\": {}, \"timeout\": {}}}",
+            two.correct_no_retry, two.correct_with_retry, two.incorrect, two.timeout
+        ));
+        j.push_str(if i + 1 < rows.len() { "},\n" } else { "}\n" });
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write(&out_path, &j).expect("write BENCH_twolevel.json");
+    println!("wrote {out_path}");
+
+    assert!(
+        aggregate >= min_speedup,
+        "two-level engine must deliver >= {min_speedup}x end-to-end speedup over \
+         fast-forward on long horizons, got {aggregate:.2}x"
+    );
+    println!("twolevel_speedup OK");
+}

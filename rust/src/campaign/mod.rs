@@ -192,6 +192,59 @@ pub const OUTCOMES: [Outcome; 4] = [
     Outcome::Timeout,
 ];
 
+/// The outcome class the stratified engine's Neyman reallocation scores
+/// its per-stratum spread on ([`CellCtx::allocate`]): later batches
+/// direct samples toward strata whose *rate of this class* is most
+/// uncertain. The default — the combined functional-error rate — is the
+/// paper's headline quantity and reproduces the historical allocation
+/// bit for bit; picking a single class instead sharpens that class's
+/// stratified interval (e.g. `CorrectWithRetry` when studying recovery
+/// coverage rather than failures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StratifyObjective {
+    /// Incorrect + Timeout — the paper's functional-error class.
+    #[default]
+    FunctionalError,
+    /// One specific Table-1 outcome class.
+    Outcome(Outcome),
+}
+
+impl StratifyObjective {
+    /// Stable CLI/JSON slug.
+    pub fn name(self) -> &'static str {
+        match self {
+            StratifyObjective::FunctionalError => "functional-error",
+            StratifyObjective::Outcome(Outcome::CorrectNoRetry) => "correct-no-retry",
+            StratifyObjective::Outcome(Outcome::CorrectWithRetry) => "correct-with-retry",
+            StratifyObjective::Outcome(Outcome::Incorrect) => "incorrect",
+            StratifyObjective::Outcome(Outcome::Timeout) => "timeout",
+        }
+    }
+
+    /// Parse a [`StratifyObjective::name`] slug.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "functional-error" => StratifyObjective::FunctionalError,
+            "correct-no-retry" => StratifyObjective::Outcome(Outcome::CorrectNoRetry),
+            "correct-with-retry" => StratifyObjective::Outcome(Outcome::CorrectWithRetry),
+            "incorrect" => StratifyObjective::Outcome(Outcome::Incorrect),
+            "timeout" => StratifyObjective::Outcome(Outcome::Timeout),
+            _ => return None,
+        })
+    }
+
+    /// Count of the scored class in a per-stratum outcome tally
+    /// (in [`OUTCOMES`] order).
+    pub fn count_in(self, outcomes: &[u64; 4]) -> u64 {
+        match self {
+            StratifyObjective::FunctionalError => {
+                outcomes[Outcome::Incorrect.index()] + outcomes[Outcome::Timeout.index()]
+            }
+            StratifyObjective::Outcome(o) => outcomes[o.index()],
+        }
+    }
+}
+
 /// Classify one hosted run against the golden result.
 pub fn classify(report: &crate::cluster::RunReport, golden: &Mat) -> Outcome {
     match report.outcome {
@@ -271,6 +324,21 @@ pub struct CampaignConfig {
     /// stratified campaign is a different (deliberately designed) sample
     /// than an unstratified one.
     pub stratify: bool,
+    /// Outcome class the Neyman reallocation scores per-stratum spread
+    /// on (stratified campaigns only; see [`StratifyObjective`]). The
+    /// default reproduces the historical functional-error allocation bit
+    /// for bit.
+    pub stratify_on: StratifyObjective,
+    /// Run injections on the two-level executor: the functional fast
+    /// path of the fast-forward engine plus per-cycle convergence probes
+    /// that hand the run back to the recorded reference within a few
+    /// cycles of the fault window settling, instead of at the next
+    /// checkpoint boundary (see
+    /// [`crate::cluster::System::run_staged_with_faults_tl`]). Requires
+    /// [`CampaignConfig::fast_forward`]; results are bit-identical to
+    /// both other engines (`tests/fastforward.rs`,
+    /// `tests/shared_trace.rs`, `tests/twolevel.rs`).
+    pub two_level: bool,
     /// Confidence level of every reported interval and of the adaptive
     /// stop rule (`0.95` = the paper's convention and the historical
     /// hardwired level; must be in the open interval (0, 1)). At the
@@ -317,6 +385,8 @@ impl CampaignConfig {
             max_injections: 0,
             batch_size: 0,
             stratify: false,
+            stratify_on: StratifyObjective::FunctionalError,
+            two_level: false,
             confidence: 0.95,
         }
     }
@@ -570,6 +640,12 @@ struct TraceKey {
     tol_bits: u64,
     checkpoint_interval: u64,
     fast_forward: bool,
+    /// Two-level instrumentation changes what the reference recording
+    /// carries (per-cycle digests + segment write logs), so traces with
+    /// and without it are distinct cache identities — a two-level cell
+    /// never silently degrades by adopting a plain trace, and a plain
+    /// cell never pays the instrumented recording.
+    two_level: bool,
     /// Content digest of the exact workload images (see
     /// [`GemmProblem::content_digest`]).
     problem_digest: u64,
@@ -594,6 +670,7 @@ impl TraceKey {
             tol_bits: config.abft_tol_factor.to_bits(),
             checkpoint_interval: config.checkpoint_interval,
             fast_forward: config.fast_forward,
+            two_level: config.two_level,
             problem_digest: problem.content_digest(),
         }
     }
@@ -842,6 +919,13 @@ impl CellCtx {
                 config.confidence
             )));
         }
+        if config.two_level && !config.fast_forward {
+            return Err(Error::Config(
+                "the two-level engine is the fast-forward engine's functional level — \
+                 it requires fast_forward (cannot combine with the direct engine)"
+                    .into(),
+            ));
+        }
         let registry = FaultRegistry::new(config.cfg, config.protection);
         if config.stratify {
             let sched = BatchSchedule::of(config);
@@ -892,13 +976,14 @@ impl CellCtx {
     }
 
     /// Neyman-style allocation of one batch over the registry's strata:
-    /// scores `W_h · s_h` with `s_h = sqrt(p̃_h(1−p̃_h))` on the
-    /// functional-error rate, Laplace-smoothed so an error-free stratum
-    /// keeps a small score and a never-sampled stratum counts as
-    /// maximally uncertain; floored at `batch / (8·H)` so rare strata
-    /// are never starved. Deterministic: a pure function of the merged
-    /// counts so far.
+    /// scores `W_h · s_h` with `s_h = sqrt(p̃_h(1−p̃_h))` on the rate of
+    /// the configured [`StratifyObjective`] (functional errors by
+    /// default), Laplace-smoothed so an error-free stratum keeps a small
+    /// score and a never-sampled stratum counts as maximally uncertain;
+    /// floored at `batch / (8·H)` so rare strata are never starved.
+    /// Deterministic: a pure function of the merged counts so far.
     pub(crate) fn allocate(&self, result: &CampaignResult, batch: u64) -> Vec<u64> {
+        let objective = self.config.stratify_on;
         let mut scores = vec![0.0f64; self.registry.n_strata()];
         for (s, score) in scores.iter_mut().enumerate() {
             if self.registry.stratum_len(s) == 0 {
@@ -908,8 +993,7 @@ impl CellCtx {
             let sd = if st.n == 0 {
                 0.5
             } else {
-                let k = (st.outcomes[Outcome::Incorrect.index()]
-                    + st.outcomes[Outcome::Timeout.index()]) as f64;
+                let k = objective.count_in(&st.outcomes) as f64;
                 let pt = (k + 1.0) / (st.n as f64 + 2.0);
                 (pt * (1.0 - pt)).sqrt()
             };
@@ -1013,6 +1097,18 @@ impl CellCtx {
                 continue;
             }
             let report = match trace {
+                // Two-level path: functional fast-forward plus mid-
+                // segment convergence probes against the instrumented
+                // trace (bit-identical results; see
+                // `System::run_staged_with_faults_tl`).
+                Some(tr) if config.two_level => sys.run_staged_with_faults_tl_scratch(
+                    &clean.layout,
+                    config.mode,
+                    &scratch.live,
+                    tr,
+                    &clean.pristine,
+                    &mut scratch.fctx,
+                )?,
                 // Fast path: checkpoint restore + convergence early-exit
                 // (bit-identical results; see
                 // `System::run_staged_with_faults_ff`). The restore is
@@ -1112,12 +1208,22 @@ impl Campaign {
         let mut trace = None;
         let horizon = if config.fast_forward {
             sys.tcdm.enable_dirty_tracking();
-            match sys.record_reference(
-                &layout,
-                &pristine,
-                config.mode,
-                config.checkpoint_interval,
-            )? {
+            let recorded = if config.two_level {
+                sys.record_reference_two_level(
+                    &layout,
+                    &pristine,
+                    config.mode,
+                    config.checkpoint_interval,
+                )?
+            } else {
+                sys.record_reference(
+                    &layout,
+                    &pristine,
+                    config.mode,
+                    config.checkpoint_interval,
+                )?
+            };
+            match recorded {
                 Some(t) => {
                     if t.z.bits() != golden.bits() {
                         return Err(Error::Sim(format!(

@@ -61,7 +61,7 @@
 //! lives in the [`SweepResult::timing_json`] sidecar
 //! (`redmule-ft/bench-sweep-v1`), never in the deterministic document.
 
-use crate::cluster::System;
+use crate::cluster::{recovery_valid, RecoveryPolicy, System};
 use crate::fault::FaultModel;
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
 use crate::redmule::{Protection, RedMuleConfig};
@@ -72,7 +72,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use super::{
     stream_seed, BatchAssign, BatchSchedule, Campaign, CampaignConfig, CampaignResult, CellCtx,
-    InjectScratch, Outcome, TraceCache, TraceKey, OUTCOMES,
+    InjectScratch, Outcome, StratifyObjective, TraceCache, TraceKey, OUTCOMES,
 };
 
 /// Domain tag of the per-shape workload streams (one problem per shape,
@@ -124,6 +124,23 @@ pub struct SweepConfig {
     pub batch_size: u64,
     /// Stratified allocation inside every cell campaign.
     pub stratify: bool,
+    /// Outcome class the stratified Neyman reallocation scores on
+    /// (see [`StratifyObjective`]; the default reproduces the historical
+    /// functional-error allocation bit for bit).
+    pub stratify_on: StratifyObjective,
+    /// Recovery-policy axis: `None` keeps every cell on its build's
+    /// Table-1 default policy (byte-identical to pre-axis sweeps);
+    /// `Some(policies)` crosses the grid with each listed policy as the
+    /// innermost axis. Protection × recovery pairs the hardware cannot
+    /// honour ([`recovery_valid`]) are rejected up front as a
+    /// configuration error rather than silently skipped.
+    pub recoveries: Option<Vec<RecoveryPolicy>>,
+    /// Run cell campaigns on the two-level executor (functional fast
+    /// path + cycle-accurate fault windows with mid-segment convergence
+    /// probes; requires [`SweepConfig::fast_forward`]). Byte-identical
+    /// JSON across the whole engine matrix — `tests/shared_trace.rs`
+    /// pins it.
+    pub two_level: bool,
     /// Share one recorded reference trace (and staged image) across all
     /// cells with the same clean-run identity (default on; results are
     /// byte-identical either way — the CLI escape hatch is
@@ -160,6 +177,9 @@ impl SweepConfig {
             max_injections: 0,
             batch_size: 0,
             stratify: false,
+            stratify_on: StratifyObjective::FunctionalError,
+            recoveries: None,
+            two_level: false,
             trace_cache: true,
             work_stealing: true,
             confidence: 0.95,
@@ -169,6 +189,7 @@ impl SweepConfig {
     /// Number of grid cells this configuration expands to.
     pub fn n_cells(&self) -> usize {
         let tols = self.tol_factors.len().max(1);
+        let recoveries = self.recoveries.as_ref().map_or(1, |r| r.len().max(1));
         let per_geometry: usize = self
             .protections
             .iter()
@@ -177,7 +198,7 @@ impl SweepConfig {
                 self.shapes.len() * self.fault_counts.len() * t
             })
             .sum();
-        self.geometries.len().max(1) * per_geometry
+        self.geometries.len().max(1) * per_geometry * recoveries
     }
 }
 
@@ -206,8 +227,15 @@ pub struct SweepResult {
     /// Confidence level of the reported intervals.
     pub confidence: f64,
     /// Cells in deterministic grid order (geometry-major, then
-    /// protection, shape, fault count, tolerance factor).
+    /// protection, shape, fault count, tolerance factor and — when the
+    /// recovery axis is crossed — recovery policy innermost).
     pub cells: Vec<SweepCell>,
+    /// Which execution engine produced the counts: `"direct"`,
+    /// `"fast-forward"` or `"two-level"`. Reported in the timing sidecar
+    /// only — the deterministic documents are engine-invariant by
+    /// contract, so stamping the engine there would break the byte
+    /// comparison that proves it.
+    pub engine: &'static str,
     pub wall_seconds: f64,
     /// Reference traces recorded / adopted from the shared cache
     /// (`None` when the sweep ran with the cache disabled). Reported in
@@ -449,6 +477,7 @@ impl SweepResult {
         s.push_str("  \"schema\": \"redmule-ft/bench-sweep-v1\",\n");
         s.push_str(&format!("  \"seed\": {},\n", self.seed));
         s.push_str(&format!("  \"fault_model\": \"{}\",\n", self.fault_model.name()));
+        s.push_str(&format!("  \"engine\": \"{}\",\n", self.engine));
         s.push_str(&format!("  \"total_runs\": {},\n", self.total_runs()));
         s.push_str(&format!("  \"wall_seconds\": {:.3},\n", self.wall_seconds));
         s.push_str(&format!("  \"runs_per_sec\": {:.1},\n", self.runs_per_sec()));
@@ -481,6 +510,9 @@ struct CellSpec {
     shape: GemmSpec,
     faults: usize,
     tol_factor: f64,
+    /// Recovery-policy override; `None` keeps the build's Table-1
+    /// default so a sweep without the axis stays byte-identical.
+    recovery: Option<RecoveryPolicy>,
 }
 
 /// The sweep driver.
@@ -552,9 +584,42 @@ impl Sweep {
                 config.confidence
             )));
         }
+        if config.two_level && !config.fast_forward {
+            return Err(Error::Config(
+                "the two-level engine is the fast-forward engine's functional level — \
+                 it cannot run on the direct engine (drop --direct or --no-two-level)"
+                    .into(),
+            ));
+        }
+        // The recovery axis is crossed against *every* protection, so a
+        // pair the hardware cannot honour (e.g. in-place correction
+        // without online ABFT) is a configuration error, not a cell to
+        // skip silently.
+        if let Some(recoveries) = &config.recoveries {
+            if recoveries.is_empty() {
+                return Err(Error::Config(
+                    "sweep recovery axis must list at least one policy".into(),
+                ));
+            }
+            for &protection in &config.protections {
+                for &recovery in recoveries {
+                    if !recovery_valid(protection, recovery) {
+                        return Err(Error::Config(format!(
+                            "recovery policy '{}' is invalid on {} builds",
+                            recovery.name(),
+                            protection.name()
+                        )));
+                    }
+                }
+            }
+        }
         let started = std::time::Instant::now();
 
         let default_tols = [ABFT_TOL_FACTOR];
+        let recovery_axis: Vec<Option<RecoveryPolicy>> = match &config.recoveries {
+            Some(rs) => rs.iter().map(|&r| Some(r)).collect(),
+            None => vec![None],
+        };
         let mut specs: Vec<CellSpec> = Vec::new();
         for &geometry in &config.geometries {
             for &protection in &config.protections {
@@ -567,14 +632,17 @@ impl Sweep {
                                 &default_tols
                             };
                         for &tol_factor in tols {
-                            specs.push(CellSpec {
-                                geometry,
-                                protection,
-                                shape_idx,
-                                shape,
-                                faults,
-                                tol_factor,
-                            });
+                            for &recovery in &recovery_axis {
+                                specs.push(CellSpec {
+                                    geometry,
+                                    protection,
+                                    shape_idx,
+                                    shape,
+                                    faults,
+                                    tol_factor,
+                                    recovery,
+                                });
+                            }
                         }
                     }
                 }
@@ -620,6 +688,13 @@ impl Sweep {
             stratified: config.stratify,
             confidence: config.confidence,
             cells,
+            engine: if config.two_level {
+                "two-level"
+            } else if config.fast_forward {
+                "fast-forward"
+            } else {
+                "direct"
+            },
             wall_seconds: started.elapsed().as_secs_f64(),
             trace_cache_resident: cache.as_ref().map(|c| c.len()),
             trace_cache_stats: cache.map(|c| (c.hits(), c.misses())),
@@ -670,7 +745,12 @@ impl Sweep {
         cc.max_injections = config.max_injections;
         cc.batch_size = config.batch_size;
         cc.stratify = config.stratify;
+        cc.stratify_on = config.stratify_on;
+        cc.two_level = config.two_level;
         cc.confidence = config.confidence;
+        if let Some(recovery) = spec.recovery {
+            cc.recovery = recovery;
+        }
         cc
     }
 
@@ -1417,6 +1497,97 @@ mod tests {
         let a = Sweep::run(&fast).unwrap();
         let b = Sweep::run(&direct).unwrap();
         assert_eq!(a.to_json(false), b.to_json(false));
+        // The sidecar names the engine that ran; the deterministic
+        // documents never do.
+        assert!(a.timing_json().contains("\"engine\": \"fast-forward\""));
+        assert!(b.timing_json().contains("\"engine\": \"direct\""));
+        assert!(!a.to_json(false).contains("\"engine\""));
+        assert!(!a.to_json_v2().contains("\"engine\""));
+    }
+
+    #[test]
+    fn two_level_sweeps_emit_identical_json_across_thread_counts() {
+        let mut tl = tiny(23, 2);
+        tl.fault_counts = vec![1, 3];
+        tl.two_level = true;
+        let mut ff = tl.clone();
+        ff.two_level = false;
+        let a = Sweep::run(&tl).unwrap();
+        let b = Sweep::run(&ff).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+        assert_eq!(a.to_json_v2(), b.to_json_v2());
+        assert!(a.timing_json().contains("\"engine\": \"two-level\""));
+        // Thread-invariance holds on the two-level engine too.
+        let mut tl1 = tl.clone();
+        tl1.threads = 1;
+        assert_eq!(Sweep::run(&tl1).unwrap().to_json_v2(), a.to_json_v2());
+        // The two-level engine is the functional level of fast-forward:
+        // combining it with the direct engine is a configuration error.
+        let mut bad = tl.clone();
+        bad.fast_forward = false;
+        assert!(matches!(Sweep::run(&bad), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn explicit_default_recovery_axis_is_byte_identical_to_no_axis() {
+        // `Some([FullRestart])` on builds whose Table-1 default *is*
+        // full-restart must reproduce the axis-free document byte for
+        // byte — the axis only re-labels the same cells.
+        let mut c = SweepConfig::new(30, 11);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Data];
+        c.fault_counts = vec![1];
+        c.threads = 2;
+        let base = Sweep::run(&c).unwrap();
+        let mut axis = c.clone();
+        axis.recoveries = Some(vec![RecoveryPolicy::FullRestart]);
+        assert_eq!(axis.n_cells(), c.n_cells());
+        let r = Sweep::run(&axis).unwrap();
+        assert_eq!(r.to_json(false), base.to_json(false));
+        assert_eq!(r.to_json_v2(), base.to_json_v2());
+    }
+
+    #[test]
+    fn recovery_axis_multiplies_the_grid_and_shares_plan_streams() {
+        let mut c = SweepConfig::new(30, 7);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::AbftOnline];
+        c.fault_counts = vec![1];
+        c.threads = 2;
+        c.recoveries = Some(vec![
+            RecoveryPolicy::FullRestart,
+            RecoveryPolicy::TileLevel,
+            RecoveryPolicy::InPlaceCorrect,
+        ]);
+        assert_eq!(c.n_cells(), 3);
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), 3);
+        // Recovery variants of one coordinate share the campaign seed —
+        // same plan streams, a controlled comparison across policies.
+        let seeds: Vec<u64> = r.cells.iter().map(|c| c.result.config.seed).collect();
+        assert!(seeds.windows(2).all(|w| w[0] == w[1]));
+        // The v2 document names each cell's policy.
+        let j = r.to_json_v2();
+        assert!(j.contains("\"recovery\": \"full-restart\""));
+        assert!(j.contains("\"recovery\": \"tile-level\""));
+        assert!(j.contains("\"recovery\": \"in-place-correct\""));
+    }
+
+    #[test]
+    fn invalid_recovery_pairs_are_config_errors_before_any_cell_runs() {
+        // In-place correction needs online-ABFT hardware.
+        let mut c = SweepConfig::new(10, 1);
+        c.protections = vec![Protection::Baseline];
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.fault_counts = vec![1];
+        c.recoveries = Some(vec![RecoveryPolicy::InPlaceCorrect]);
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // Tile-level re-execution needs some detection capability.
+        c.recoveries = Some(vec![RecoveryPolicy::TileLevel]);
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // An empty axis is rejected rather than producing zero cells.
+        c.recoveries = Some(vec![]);
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! The two-level executor: one stepping-backend abstraction over the
+//! host recovery loop.
+//!
+//! [`super::System::host_loop`] owns the §3.3 host protocol (interrupt
+//! service, re-programming, ABFT verification, retry budget) and is
+//! backend-agnostic: every *attempt* — the span from (re)start to Done,
+//! abort, timeout or re-convergence — runs on a [`Backend`].
+//!
+//! * [`CycleAccurate`] steps the full accelerator model from `start()`.
+//!   The direct engine uses it for every attempt; the fast-forward and
+//!   two-level engines use it for retries (recovery behavior depends on
+//!   partially-committed state, so retries always simulate).
+//! * [`Functional`] continues a restored mid-task checkpoint and probes
+//!   for re-convergence with the recorded reference, advancing the run
+//!   to its known clean conclusion the moment the probe proves
+//!   bit-identity. With a [`super::TwoLevelRef`]-instrumented trace the
+//!   probe works mid-segment (accelerator digest + closed write-set
+//!   comparison); otherwise it degrades to full-state digests at
+//!   checkpoint boundaries (the PR-3 fast-forward engine).
+//!
+//! The fault window — the span the two-level engine *must* step
+//! cycle-accurately — is the planned-fault hull from
+//! [`crate::fault::plan_window`] widened by [`window_settle`]: after the
+//! last possible strike, in-flight corruption can keep propagating for
+//! one pipeline drain plus the two-cycle IRQ handshake before the state
+//! either re-converges or visibly diverges. Probe *timing* is a pure
+//! performance knob: a probe only ever substitutes the clean tail after
+//! proving bit-identity, so reports are byte-identical no matter when
+//! probes fire (pinned across the engine matrix by `tests/`).
+
+use super::{FfResume, System};
+use crate::fault::FaultCtx;
+
+/// Mid-segment convergence probe spacing of the two-level engine, in
+/// cycles. Small enough that a settled run is caught within a few cycles
+/// (instead of up to a checkpoint interval later), large enough that the
+/// accelerator-digest fast path stays a trivial fraction of stepping.
+pub(crate) const EARLY_PROBE_STRIDE: u64 = 8;
+
+/// Architectural settling margin appended to both sides of the planned
+/// fault hull: one pipeline drain (`d` cycles) covers in-flight FMA
+/// corruption, plus the two-cycle IRQ assertion window and a two-cycle
+/// scheduler hand-off margin.
+pub(crate) fn window_settle(pipeline_depth: u64) -> u64 {
+    pipeline_depth + 4
+}
+
+/// How one execution attempt ended.
+pub(crate) struct AttemptExit {
+    /// The accelerator aborted (fault-status latch fired).
+    pub aborted: bool,
+    /// Accelerator cycles charged to this attempt.
+    pub cycles: u64,
+    /// The host observed the IRQ wire asserted at least once.
+    pub irq_seen: bool,
+    /// The functional backend proved bit-identity with the reference —
+    /// the recorded clean tail substitutes for the remaining cycles.
+    /// The cycle-accurate backend never converges (it has no reference).
+    pub converged: bool,
+}
+
+/// One stepping backend of the two-level executor.
+pub(crate) trait Backend {
+    /// Run one attempt to Done, abort, budget exhaustion or (functional
+    /// backend only) re-convergence.
+    fn attempt(&mut self, sys: &mut System, ctx: &mut FaultCtx, budget: u64) -> AttemptExit;
+}
+
+/// The cycle-accurate backend: start and step the full model.
+pub(crate) struct CycleAccurate;
+
+impl Backend for CycleAccurate {
+    fn attempt(&mut self, sys: &mut System, ctx: &mut FaultCtx, budget: u64) -> AttemptExit {
+        let (aborted, cycles, irq_seen) = sys.execute_attempt(ctx, budget);
+        AttemptExit {
+            aborted,
+            cycles,
+            irq_seen,
+            converged: false,
+        }
+    }
+}
+
+/// The functional backend: continue a restored checkpoint, probing for
+/// re-convergence with the reference trace carried in `resume`.
+pub(crate) struct Functional<'a, 'b> {
+    pub resume: &'b FfResume<'a>,
+}
+
+impl Backend for Functional<'_, '_> {
+    fn attempt(&mut self, sys: &mut System, ctx: &mut FaultCtx, budget: u64) -> AttemptExit {
+        let (aborted, cycles, irq_seen, converged) =
+            sys.execute_resumed_attempt(ctx, budget, self.resume);
+        AttemptExit {
+            aborted,
+            cycles,
+            irq_seen,
+            converged,
+        }
+    }
+}

@@ -33,6 +33,8 @@ use crate::tcdm::Tcdm;
 use crate::util::digest::Fnv64;
 use crate::{Error, Result};
 
+pub(crate) mod exec;
+
 /// Timeout budget: a run that exceeds `TIMEOUT_FACTOR ×` the fault-free
 /// cycle count is classified as hung (§4.2's "Timeout" row).
 pub const TIMEOUT_FACTOR: u64 = 20;
@@ -176,6 +178,59 @@ pub struct RefCheckpoint {
     pub digest: u64,
 }
 
+/// The reference writes of one inter-checkpoint segment, recorded by the
+/// two-level instrumentation: the cycle-stamped write log (in write
+/// order, duplicates included — exactly the TCDM dirty-log appends) and
+/// its sorted, de-duplicated word set. Segment `i` covers the cycles
+/// `((i-1)·interval, i·interval]` between checkpoints `i-1` and `i`;
+/// segment 0 is empty by construction (it pairs with checkpoint 0, taken
+/// before the first step).
+#[derive(Debug, Clone, Default)]
+pub struct SegmentLog {
+    /// Sorted, de-duplicated flat word indices of every write in `log`.
+    pub writes: Vec<u32>,
+    /// `(cycle, flat index, stored codeword after the write)` per write.
+    pub log: Vec<(u64, u32, u64)>,
+}
+
+impl SegmentLog {
+    /// Canonicalize `writes` from the accumulated `log`.
+    fn finalize(&mut self) {
+        self.writes.clear();
+        self.writes.extend(self.log.iter().map(|e| e.1));
+        self.writes.sort_unstable();
+        self.writes.dedup();
+    }
+}
+
+/// Two-level instrumentation of a reference run: enough per-cycle
+/// information to prove a faulted run has re-converged with the
+/// reference at *any* cycle — not only at checkpoint boundaries — so the
+/// executor can hand control back to the functional level as soon as the
+/// fault window's architectural settling is over.
+///
+/// The convergence argument (pinned by `tests/twolevel.rs` and the
+/// engine-matrix A/B suites): after a checkpoint restore, the faulted
+/// state can differ from the reference at cycle `t` only in (a) the
+/// accelerator — covered whole by the per-cycle digest — and (b) TCDM
+/// words either written by the faulted window (the dirty log past the
+/// window watermark) or written by the reference since the restore
+/// checkpoint (the segment write-sets). Every other word carries the
+/// restore checkpoint's content on both sides. Checking that closed set
+/// is therefore a *full-state* equality proof at `t`, and the recorded
+/// clean tail substitutes for the remaining cycles bit for bit.
+#[derive(Debug, Clone)]
+pub struct TwoLevelRef {
+    /// Accelerator state digest ([`RedMule::digest64`]) at every cycle
+    /// `0..=cycles` of the reference run (index = cycle).
+    pub cycle_digests: Vec<u64>,
+    /// Per-checkpoint segment logs; `segments.len() == checkpoints.len()`
+    /// and `segments[0]` is empty.
+    pub segments: Vec<SegmentLog>,
+    /// Writes after the last checkpoint, up to task completion.
+    pub tail: SegmentLog,
+}
+
 /// The instrumented fault-free reference run of one (problem, protection,
 /// mode) combination: periodic state checkpoints for fast-forwarding past
 /// the identical prefix of every injection, per-checkpoint digests for
@@ -198,6 +253,11 @@ pub struct RefTrace {
     pub abft: Option<AbftRunInfo>,
     /// Checkpoints in cycle order: `checkpoints[i].cycle == i × interval`.
     pub checkpoints: Vec<RefCheckpoint>,
+    /// Two-level instrumentation (`Some` only when recorded with
+    /// [`System::record_reference_two_level`]). A trace carrying it is a
+    /// strict superset of the plain recording — checkpoints, digests and
+    /// the clean outcome are identical.
+    pub two_level: Option<TwoLevelRef>,
 }
 
 impl RefTrace {
@@ -223,8 +283,38 @@ impl RefTrace {
     /// that cycle, so the restored prefix is bit-identical to what the
     /// direct path would have simulated.
     pub fn checkpoint_before(&self, first_cycle: u64) -> &RefCheckpoint {
+        &self.checkpoints[self.checkpoint_index_before(first_cycle)]
+    }
+
+    /// Index form of [`RefTrace::checkpoint_before`] (the two-level
+    /// engine keys its segment write-sets by checkpoint index).
+    pub fn checkpoint_index_before(&self, first_cycle: u64) -> usize {
         let idx = (first_cycle.saturating_sub(1) / self.interval) as usize;
-        &self.checkpoints[idx.min(self.checkpoints.len() - 1)]
+        idx.min(self.checkpoints.len() - 1)
+    }
+}
+
+/// Whether a recovery policy is meaningful on a given hardware build —
+/// the sweep engine rejects grid cells pairing them incompatibly.
+///
+/// * [`RecoveryPolicy::FullRestart`] needs nothing: the host can always
+///   discard and re-run (in performance mode without detection it simply
+///   never triggers).
+/// * [`RecoveryPolicy::TileLevel`] needs *some* detection hardware to
+///   latch a progress tile worth resuming from (control checkers,
+///   per-CE checkers, ECC data protection or ABFT checksums).
+/// * [`RecoveryPolicy::InPlaceCorrect`] needs the online-ABFT store
+///   residuals — only [`Protection::AbftOnline`] builds tap them.
+pub fn recovery_valid(protection: Protection, recovery: RecoveryPolicy) -> bool {
+    match recovery {
+        RecoveryPolicy::FullRestart => true,
+        RecoveryPolicy::TileLevel => {
+            protection.has_control_protection()
+                || protection.has_per_ce_checkers()
+                || protection.has_data_protection()
+                || protection.has_abft_checksums()
+        }
+        RecoveryPolicy::InPlaceCorrect => protection.has_online_abft(),
     }
 }
 
@@ -251,9 +341,37 @@ fn ff_digest_with_delta(redmule: &RedMule, delta: &[(u32, u64)]) -> u64 {
     h.finish()
 }
 
+/// How a functional-level resume probes for re-convergence with the
+/// reference (see [`exec`] for the two-level executor built on top).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ResumeProbe {
+    /// PR-3 fast-forward behavior: hash the *complete* state
+    /// (accelerator + TCDM delta) at each checkpoint boundary and
+    /// compare against the checkpoint digest.
+    FullDigest,
+    /// Two-level engine: compare the accelerator's own digest against
+    /// the per-cycle reference digest, then prove TCDM equality over
+    /// the closed set of possibly-differing words (fault-window writes
+    /// ∪ reference segment write-sets). Probes fire at checkpoint
+    /// boundaries and, once past `window_end`, every
+    /// [`exec::EARLY_PROBE_STRIDE`] cycles — convergence is detected
+    /// within a few cycles of architectural settling instead of up to
+    /// an interval later.
+    Window {
+        /// Index of the restored checkpoint.
+        base_idx: usize,
+        /// TCDM dirty-log length right after the checkpoint delta was
+        /// applied: everything past it is a fault-window write.
+        window_mark: usize,
+        /// End of the planned cycle-accurate window (last plan cycle +
+        /// settling); early probes start beyond it.
+        window_end: u64,
+    },
+}
+
 /// Resume parameters of a fast-forwarded first attempt (see
 /// [`System::run_staged_with_faults_ff`]).
-struct FfResume<'a> {
+pub(crate) struct FfResume<'a> {
     trace: &'a RefTrace,
     pristine: &'a Tcdm,
     /// No plan can fire after this cycle, so convergence probes (and the
@@ -265,6 +383,8 @@ struct FfResume<'a> {
     /// SEUs can corrupt the rest — everything else is reset by the
     /// interrupt service + `start()`).
     regfile_untouched: bool,
+    /// Convergence probe flavor (functional backend selection).
+    probe: ResumeProbe,
 }
 
 /// The cluster: accelerator + memory substrate + host logic.
@@ -281,6 +401,12 @@ pub struct System {
     /// ABFT verification tolerance safety factor (see
     /// [`crate::golden::ABFT_TOL_FACTOR`]; the sweep engine varies it).
     pub abft_tol_factor: f64,
+    /// Scratch for the two-level convergence probe's candidate word set
+    /// (reused across probes — the injection hot loop allocates nothing).
+    tl_cand: Vec<u32>,
+    /// Scratch for the partial-segment write map: `(flat index, sequence
+    /// number, codeword)`, sorted so the latest write per word wins.
+    tl_partial: Vec<(u32, u32, u64)>,
 }
 
 impl System {
@@ -298,6 +424,8 @@ impl System {
             task_base: 0x100,
             recovery: RecoveryPolicy::FullRestart,
             abft_tol_factor: ABFT_TOL_FACTOR,
+            tl_cand: Vec::new(),
+            tl_partial: Vec::new(),
         }
     }
 
@@ -599,17 +727,130 @@ impl System {
                 return (false, self.redmule.cycle, irq_seen, false);
             }
             let cycle = self.redmule.cycle;
-            if cycle > ff.last_plan_cycle && cycle % ff.trace.interval == 0 {
-                let idx = (cycle / ff.trace.interval) as usize;
-                if let Some(cp) = ff.trace.checkpoints.get(idx) {
-                    if cp.cycle == cycle
-                        && ff_digest(&self.redmule, &mut self.tcdm, ff.pristine) == cp.digest
-                    {
-                        return (false, self.redmule.cycle, irq_seen, true);
+            if cycle > ff.last_plan_cycle {
+                match ff.probe {
+                    ResumeProbe::FullDigest => {
+                        if cycle % ff.trace.interval == 0 {
+                            let idx = (cycle / ff.trace.interval) as usize;
+                            if let Some(cp) = ff.trace.checkpoints.get(idx) {
+                                if cp.cycle == cycle
+                                    && ff_digest(&self.redmule, &mut self.tcdm, ff.pristine)
+                                        == cp.digest
+                                {
+                                    return (false, self.redmule.cycle, irq_seen, true);
+                                }
+                            }
+                        }
+                    }
+                    ResumeProbe::Window {
+                        base_idx,
+                        window_mark,
+                        window_end,
+                    } => {
+                        let boundary = cycle % ff.trace.interval == 0;
+                        let early =
+                            cycle > window_end && cycle % exec::EARLY_PROBE_STRIDE == 0;
+                        if (boundary || early)
+                            && self.tl_converged(
+                                ff.trace,
+                                ff.pristine,
+                                base_idx,
+                                window_mark,
+                                cycle,
+                            )
+                        {
+                            return (false, self.redmule.cycle, irq_seen, true);
+                        }
                     }
                 }
             }
         }
+    }
+
+    /// Two-level convergence proof at `cycle`: true iff the simulated
+    /// state is bit-identical to the reference run's state at the same
+    /// cycle, established without a full-state scan.
+    ///
+    /// Fast reject first — the accelerator digest at `cycle` must match
+    /// the recorded per-cycle digest (one accelerator hash, no TCDM
+    /// traffic; while the fault is still settling this almost always
+    /// differs). Then TCDM equality is proven over the closed candidate
+    /// set of words that *can* differ: writes of the faulted window (the
+    /// dirty log past `window_mark`) plus every word the reference wrote
+    /// since the restored checkpoint (full segment write-sets, and the
+    /// partial segment's log truncated to `cycle`). Every word outside
+    /// that set carries the restored checkpoint's content on both sides,
+    /// so set equality ⇒ full-state equality ⇒ the remaining cycles
+    /// replay the recorded clean tail bit for bit.
+    fn tl_converged(
+        &mut self,
+        trace: &RefTrace,
+        pristine: &Tcdm,
+        base_idx: usize,
+        window_mark: usize,
+        cycle: u64,
+    ) -> bool {
+        let Some(tl) = trace.two_level.as_ref() else {
+            return false;
+        };
+        // Past the reference horizon the run cannot converge (the
+        // reference already finished); only Done/abort/timeout remain.
+        let Some(&acc_digest) = tl.cycle_digests.get(cycle as usize) else {
+            return false;
+        };
+        if self.redmule.digest64() != acc_digest {
+            return false;
+        }
+        let n_cp = trace.checkpoints.len();
+        // Segments fully elapsed at `cycle` (segment i covers
+        // ((i-1)·interval, i·interval]); anything beyond contributes only
+        // its log entries at cycles ≤ `cycle`.
+        let full_end = ((cycle / trace.interval) as usize).min(n_cp - 1);
+        let mut cand = std::mem::take(&mut self.tl_cand);
+        let mut partial = std::mem::take(&mut self.tl_partial);
+        cand.clear();
+        partial.clear();
+        cand.extend_from_slice(self.tcdm.dirty_log_since(window_mark));
+        for seg in &tl.segments[(base_idx + 1).min(n_cp)..=full_end] {
+            cand.extend_from_slice(&seg.writes);
+        }
+        let partial_log: &[(u64, u32, u64)] = if full_end + 1 < n_cp {
+            &tl.segments[full_end + 1].log
+        } else {
+            &tl.tail.log
+        };
+        for (seq, &(c, idx, cw)) in partial_log.iter().enumerate() {
+            if c <= cycle {
+                partial.push((idx, seq as u32, cw));
+                cand.push(idx);
+            }
+        }
+        partial.sort_unstable();
+        cand.sort_unstable();
+        cand.dedup();
+        let base_cp = &trace.checkpoints[full_end];
+        let mut converged = true;
+        for &w in cand.iter() {
+            // Reference value of word `w` at `cycle`: the latest partial-
+            // segment write ≤ `cycle` wins, else the last full checkpoint's
+            // delta entry, else the pristine staged codeword.
+            let p = partial.partition_point(|e| e.0 <= w);
+            let expect = if p > 0 && partial[p - 1].0 == w {
+                partial[p - 1].2
+            } else {
+                match base_cp.tcdm_delta.binary_search_by_key(&w, |e| e.0) {
+                    Ok(i) => base_cp.tcdm_delta[i].1,
+                    Err(_) => pristine.raw_codeword_flat(w),
+                }
+            };
+            if self.tcdm.raw_codeword_flat(w) != expect {
+                converged = false;
+                break;
+            }
+        }
+        self.tl_cand = cand;
+        self.tl_partial = partial;
+        converged
     }
 
     /// Run the instrumented fault-free reference execution for the
@@ -637,6 +878,35 @@ impl System {
         mode: ExecMode,
         interval: u64,
     ) -> Result<Option<RefTrace>> {
+        self.record_reference_inner(layout, pristine, mode, interval, false)
+    }
+
+    /// [`System::record_reference`] with the two-level instrumentation
+    /// enabled: additionally records the accelerator digest at *every*
+    /// cycle and the cycle-stamped TCDM write log per inter-checkpoint
+    /// segment (`RefTrace::two_level = Some(..)`), so
+    /// [`System::run_staged_with_faults_tl`] can prove re-convergence
+    /// mid-segment instead of waiting for the next checkpoint boundary.
+    /// Checkpoints, digests and the recorded clean outcome are identical
+    /// to the plain recording — a two-level trace is a strict superset.
+    pub fn record_reference_two_level(
+        &mut self,
+        layout: &TaskLayout,
+        pristine: &Tcdm,
+        mode: ExecMode,
+        interval: u64,
+    ) -> Result<Option<RefTrace>> {
+        self.record_reference_inner(layout, pristine, mode, interval, true)
+    }
+
+    fn record_reference_inner(
+        &mut self,
+        layout: &TaskLayout,
+        pristine: &Tcdm,
+        mode: ExecMode,
+        interval: u64,
+        two_level: bool,
+    ) -> Result<Option<RefTrace>> {
         let program_cycles = self.program(layout, mode);
         let mut config_cycles = program_cycles;
         self.redmule.start();
@@ -659,11 +929,37 @@ impl System {
                 digest,
             }
         };
+        // Two-level instrumentation: per-cycle accelerator digests
+        // (index = cycle) and the cycle-stamped write log of the current
+        // inter-checkpoint segment. Segment 0 pairs with checkpoint 0 and
+        // is empty by construction.
+        let mut cycle_digests: Vec<u64> = Vec::new();
+        let mut segments: Vec<SegmentLog> = Vec::new();
+        let mut cur_seg = SegmentLog::default();
+        if two_level {
+            cycle_digests.reserve(nominal as usize + 2);
+            cycle_digests.push(self.redmule.digest64());
+            segments.push(SegmentLog::default());
+        }
         // Checkpoint 0: after programming + start, before the first step —
         // the restore point for faults striking at cycle 1.
         checkpoints.push(snap(&self.redmule, &self.tcdm));
         loop {
+            let mark = self.tcdm.dirty_log_len();
             self.redmule.step(&mut self.tcdm, &mut ctx);
+            if two_level {
+                cycle_digests.push(self.redmule.digest64());
+                let cycle = self.redmule.cycle;
+                // Capture this step's writes with their post-step stored
+                // codewords. Several writes to one word within a step all
+                // record the final value — harmless, the probe's
+                // latest-write-wins lookup keeps the last entry anyway.
+                for &idx in self.tcdm.dirty_log_since(mark) {
+                    cur_seg
+                        .log
+                        .push((cycle, idx, self.tcdm.raw_codeword_flat(idx)));
+                }
+            }
             match self.redmule.state() {
                 RunState::Done => break,
                 RunState::Aborted => {
@@ -680,6 +976,10 @@ impl System {
             }
             if self.redmule.cycle % interval == 0 {
                 checkpoints.push(snap(&self.redmule, &self.tcdm));
+                if two_level {
+                    cur_seg.finalize();
+                    segments.push(std::mem::take(&mut cur_seg));
+                }
             }
         }
         let cycles = self.redmule.cycle;
@@ -697,6 +997,14 @@ impl System {
             None
         };
         let z = self.final_z(layout);
+        let two_level = two_level.then(|| {
+            cur_seg.finalize();
+            TwoLevelRef {
+                cycle_digests,
+                segments,
+                tail: cur_seg,
+            }
+        });
         Ok(Some(RefTrace {
             interval,
             cycles,
@@ -705,6 +1013,7 @@ impl System {
             z,
             abft,
             checkpoints,
+            two_level,
         }))
     }
 
@@ -870,10 +1179,105 @@ impl System {
             regfile_untouched: plans
                 .iter()
                 .all(|p| p.site.module() != crate::fault::Module::RegFile),
+            probe: ResumeProbe::FullDigest,
         };
         // The checkpoint already contains the programmed register file, so
         // the initial `program()` is skipped and its recorded cost carried
         // over instead.
+        self.host_loop(*layout, mode, ctx, trace.program_cycles, Some(resume))
+    }
+
+    /// Two-level hosted execution — the executor's functional fast path
+    /// with a cycle-accurate fault *window*:
+    ///
+    /// 1. **functional level**: the fault-free prefix is not stepped at
+    ///    all — the nearest reference checkpoint before the earliest
+    ///    planned fault is restored (same as fast-forward);
+    /// 2. **cycle-accurate window**: the window sized by
+    ///    [`crate::fault::plan_window`] plus pipeline settling is stepped
+    ///    through the full accelerator model — faults land exactly as in
+    ///    the direct path;
+    /// 3. **re-convergence**: past the window, mid-segment probes (every
+    ///    [`exec::EARLY_PROBE_STRIDE`] cycles, plus every checkpoint
+    ///    boundary) prove bit-identity with the reference from the
+    ///    per-cycle digests + segment write logs, and the recorded clean
+    ///    tail substitutes for the rest.
+    ///
+    /// The [`RunReport`] is **bit-identical** to the direct and the
+    /// fast-forward engines (`tests/fastforward.rs`,
+    /// `tests/shared_trace.rs`, `tests/twolevel.rs`); a trace without
+    /// two-level instrumentation degrades gracefully to checkpoint-
+    /// boundary probing (= fast-forward).
+    pub fn run_staged_with_faults_tl(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        trace: &RefTrace,
+        pristine: &Tcdm,
+    ) -> Result<RunReport> {
+        let mut ctx = FaultCtx::clean();
+        self.run_staged_with_faults_tl_scratch(layout, mode, plans, trace, pristine, &mut ctx)
+    }
+
+    /// [`System::run_staged_with_faults_tl`] with a caller-owned reusable
+    /// fault context (see [`System::run_staged_with_faults_scratch`]).
+    pub fn run_staged_with_faults_tl_scratch(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        trace: &RefTrace,
+        pristine: &Tcdm,
+        ctx: &mut FaultCtx,
+    ) -> Result<RunReport> {
+        if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
+            return Err(Error::Config(format!(
+                "at most {} faults per run ({} planned)",
+                crate::fault::MAX_PLANS_PER_RUN,
+                plans.len()
+            )));
+        }
+        let Some(first) = first_fault_cycle(plans) else {
+            return Ok(trace.clean_report());
+        };
+        if !self.tcdm.dirty_tracking_enabled() {
+            return Err(Error::Config(
+                "two-level execution needs TCDM dirty tracking enabled".into(),
+            ));
+        }
+        let base_idx = trace.checkpoint_index_before(first);
+        let cp = &trace.checkpoints[base_idx];
+        self.tcdm.restore_from(pristine);
+        self.tcdm.apply_delta(&cp.tcdm_delta);
+        self.redmule.restore_from(&cp.redmule);
+        ctx.reset_with_plans(plans);
+        let last = last_fault_cycle(plans).unwrap_or(0);
+        let probe = if trace.two_level.is_some() {
+            // Watermark after the delta: delta words already carry the
+            // checkpoint's (= reference's) content, so only writes past
+            // this point can diverge from the reference.
+            let window_mark = self.tcdm.dirty_log_len();
+            let settle = exec::window_settle(self.redmule.dims().d as u64);
+            let window_end = crate::fault::plan_window(plans, settle, trace.cycles)
+                .map_or(last, |(_, end)| end);
+            ResumeProbe::Window {
+                base_idx,
+                window_mark,
+                window_end,
+            }
+        } else {
+            ResumeProbe::FullDigest
+        };
+        let resume = FfResume {
+            trace,
+            pristine,
+            last_plan_cycle: last,
+            regfile_untouched: plans
+                .iter()
+                .all(|p| p.site.module() != crate::fault::Module::RegFile),
+            probe,
+        };
         self.host_loop(*layout, mode, ctx, trace.program_cycles, Some(resume))
     }
 
@@ -904,33 +1308,37 @@ impl System {
 
         let mut first_attempt = true;
         loop {
+            use exec::Backend;
             let resumed = if first_attempt { ff_resume.as_ref() } else { None };
-            let (aborted, cycles, irq_seen) = if let Some(ff) = resumed {
-                let (aborted, cycles, irq_seen, converged) =
-                    self.execute_resumed_attempt(ctx, budget, ff);
-                if converged {
-                    // The state digest matched the reference at this
-                    // cycle: every remaining cycle would replay the
-                    // fault-free tail bit for bit, so substitute the
-                    // recorded clean outcome. Fault bookkeeping
-                    // (applied counts, observed IRQ transients) is
-                    // taken from the simulated part.
-                    return Ok(RunReport {
-                        outcome: HostOutcome::Completed,
-                        cycles: ff.trace.cycles,
-                        config_cycles: ff.trace.config_cycles,
-                        retries: 0,
-                        fault_causes: 0,
-                        irq_seen,
-                        faults_applied: ctx.applied_faults(),
-                        abft: ff.trace.abft,
-                        z: ff.trace.z.clone(),
-                    });
-                }
-                (aborted, cycles, irq_seen)
-            } else {
-                self.execute_attempt(ctx, budget)
+            // Two-level executor dispatch: the first attempt runs on the
+            // functional backend when a reference trace is available
+            // (fast-forward restore + convergence probes), the
+            // cycle-accurate backend otherwise. Retries always step the
+            // full model — both engines simulate them identically.
+            let exit = match resumed {
+                Some(ff) => exec::Functional { resume: ff }.attempt(self, ctx, budget),
+                None => exec::CycleAccurate.attempt(self, ctx, budget),
             };
+            if exit.converged {
+                // The probed state matched the reference at this cycle:
+                // every remaining cycle would replay the fault-free tail
+                // bit for bit, so substitute the recorded clean outcome.
+                // Fault bookkeeping (applied counts, observed IRQ
+                // transients) is taken from the simulated part.
+                let ff = resumed.expect("only the functional backend converges");
+                return Ok(RunReport {
+                    outcome: HostOutcome::Completed,
+                    cycles: ff.trace.cycles,
+                    config_cycles: ff.trace.config_cycles,
+                    retries: 0,
+                    fault_causes: 0,
+                    irq_seen: exit.irq_seen,
+                    faults_applied: ctx.applied_faults(),
+                    abft: ff.trace.abft,
+                    z: ff.trace.z.clone(),
+                });
+            }
+            let (aborted, cycles, irq_seen) = (exit.aborted, exit.cycles, exit.irq_seen);
             first_attempt = false;
             total_cycles += cycles;
             irq_seen_any |= irq_seen;

@@ -62,6 +62,23 @@ pub fn last_fault_cycle(plans: &[FaultPlan]) -> Option<u64> {
     plans.iter().map(|p| p.cycle).max()
 }
 
+/// The cycle-accurate *window* a plan list needs under the two-level
+/// engine: `[first - settle, min(last + settle, horizon)]`, saturating at
+/// 0 on the left. `settle` covers architectural settling — how long a
+/// strike can keep propagating through pipeline registers before the
+/// state either re-converges with the reference or visibly diverges
+/// (the executor derives it from the accelerator's pipeline depth).
+/// Overlapping per-plan windows from a multi-fault run are merged into
+/// this single span: the plans are already sorted into one context, so
+/// the union of `[cycle_i - settle, cycle_i + settle]` is covered by the
+/// hull. `None` for an empty plan list (no window — the whole run is
+/// fault-free and purely functional).
+pub fn plan_window(plans: &[FaultPlan], settle: u64, horizon: u64) -> Option<(u64, u64)> {
+    let first = first_fault_cycle(plans)?;
+    let last = last_fault_cycle(plans)?;
+    Some((first.saturating_sub(settle), (last + settle).min(horizon)))
+}
+
 /// Per-run fault context threaded through the simulator.
 ///
 /// Also records which planned faults were actually *applied* (the site
@@ -368,6 +385,33 @@ mod tests {
         let plans = [mk(40), mk(3), mk(17)];
         assert_eq!(first_fault_cycle(&plans), Some(3));
         assert_eq!(last_fault_cycle(&plans), Some(40));
+    }
+
+    #[test]
+    fn plan_window_rails() {
+        let site = SiteId::new(Module::CeArray, 0, 0);
+        let mk = |cycle| FaultPlan {
+            cycle,
+            site,
+            bit: 0,
+            kind: FaultKind::Transient,
+        };
+        // Empty plan list: no window at all.
+        assert_eq!(plan_window(&[], 10, 100), None);
+        // Interior plan: symmetric settling on both sides.
+        assert_eq!(plan_window(&[mk(50)], 10, 100), Some((40, 60)));
+        // Zero settle: the window degenerates to the strike cycle itself.
+        assert_eq!(plan_window(&[mk(50)], 0, 100), Some((50, 50)));
+        // Left edge saturates at 0 instead of underflowing.
+        assert_eq!(plan_window(&[mk(3)], 10, 100), Some((0, 13)));
+        // Right edge clamps at the horizon (window ≥ horizon case: the
+        // whole tail is cycle-accurate, never past the recorded trace).
+        assert_eq!(plan_window(&[mk(95)], 10, 100), Some((85, 100)));
+        assert_eq!(plan_window(&[mk(5)], 1000, 100), Some((0, 100)));
+        // Multi-fault plans: overlapping per-plan windows merge into the
+        // hull of the earliest and latest strikes.
+        assert_eq!(plan_window(&[mk(40), mk(3), mk(17)], 5, 100), Some((0, 45)));
+        assert_eq!(plan_window(&[mk(30), mk(35)], 10, 100), Some((20, 45)));
     }
 
     #[test]

@@ -6,15 +6,20 @@
 //! redmule-ft campaign [--config baseline|data|full|abft|abft-online|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
 //!                     [--direct] [--checkpoint-interval K]
+//!                     [--two-level | --no-two-level]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
-//!                     [--max-injections N] [--stratify] [--confidence C]
+//!                     [--max-injections N] [--stratify] [--stratify-on O]
+//!                     [--confidence C]
 //! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
 //!                     [--configs a,b,..] [--geoms LxHxP,..] [--shapes MxNxK,..]
 //!                     [--faults 1,2,..] [--model independent|burst|site-burst]
-//!                     [--tols F,..] [--schema v1|v2] [--timing [--timing-out F]]
+//!                     [--tols F,..] [--recoveries full-restart,tile-level,..]
+//!                     [--schema v1|v2] [--timing [--timing-out F]]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
-//!                     [--max-injections N] [--stratify] [--confidence C]
+//!                     [--max-injections N] [--stratify] [--stratify-on O]
+//!                     [--confidence C]
 //!                     [--direct] [--checkpoint-interval K]
+//!                     [--two-level | --no-two-level]
 //!                     [--no-trace-cache] [--per-cell]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
@@ -26,8 +31,10 @@
 //! ```
 
 use redmule_ft::area::{area_report, floorplan};
-use redmule_ft::campaign::{Campaign, CampaignConfig, Sweep, SweepConfig, Table1, OUTCOMES};
-use redmule_ft::cluster::System;
+use redmule_ft::campaign::{
+    Campaign, CampaignConfig, StratifyObjective, Sweep, SweepConfig, Table1, OUTCOMES,
+};
+use redmule_ft::cluster::{RecoveryPolicy, System};
 use redmule_ft::coordinator::{Coordinator, Criticality};
 use redmule_ft::fault::FaultModel;
 use redmule_ft::golden::{GemmProblem, GemmSpec};
@@ -137,6 +144,37 @@ fn parse_shape(s: &str) -> Option<GemmSpec> {
     Some(GemmSpec::new(m, n, k))
 }
 
+/// Parse a recovery-policy token for the sweep's `--recoveries` axis.
+fn parse_recovery(s: &str) -> Option<RecoveryPolicy> {
+    match s {
+        "full-restart" | "full_restart" => Some(RecoveryPolicy::FullRestart),
+        "tile-level" | "tile_level" => Some(RecoveryPolicy::TileLevel),
+        "in-place-correct" | "in_place_correct" => Some(RecoveryPolicy::InPlaceCorrect),
+        _ => None,
+    }
+}
+
+/// Resolve the `--two-level` / `--no-two-level` pair. Off by default:
+/// the two-level engine is byte-identical to fast-forward by contract,
+/// so opting in is purely a throughput choice.
+fn two_level_flag(args: &Args) -> bool {
+    args.flag("two-level") && !args.flag("no-two-level")
+}
+
+/// Resolve `--stratify-on <outcome>` (default: functional-error, the
+/// historical Neyman objective).
+fn stratify_on(args: &Args) -> redmule_ft::Result<StratifyObjective> {
+    match args.kv.get("stratify-on") {
+        None => Ok(StratifyObjective::FunctionalError),
+        Some(raw) => StratifyObjective::parse(raw).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --stratify-on {raw} (expected functional-error, \
+                 correct-no-retry, correct-with-retry, incorrect or timeout)"
+            ))
+        }),
+    }
+}
+
 /// Parse an `LxHxP` array-geometry token.
 fn parse_geometry(s: &str) -> Option<RedMuleConfig> {
     let mut it = s.split('x');
@@ -206,22 +244,32 @@ fn print_help() {
                          abft-online|per-ce — abft-online corrects single errors in\n\
                          place from the fused store residuals,\n\
                          --injections, --seed, --threads, --report; --direct disables the\n\
-                         checkpointed fast-forward engine, --checkpoint-interval K tunes it;\n\
+                         checkpointed fast-forward engine, --checkpoint-interval K tunes it,\n\
+                         --two-level runs fast-forward's functional level with\n\
+                         cycle-accurate fault windows — byte-identical results,\n\
+                         faster (--no-two-level opts back out);\n\
                          --precision P stops adaptively once every outcome's CI\n\
                          half-width <= P at the --confidence level (default 0.95),\n\
                          tuned by --batch-size/--min-injections/--max-injections,\n\
-                         --stratify allocates over area strata)\n\
+                         --stratify allocates over area strata and --stratify-on O\n\
+                         picks the Neyman objective outcome (functional-error |\n\
+                         correct-no-retry | correct-with-retry | incorrect | timeout))\n\
            sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
                          --geoms LxHxP,.. array geometries, --shapes MxNxK,..,\n\
                          --faults 1,2,.., --model independent|burst|site-burst,\n\
-                         --tols F,.. for ABFT cells, --injections per cell, --seed,\n\
+                         --tols F,.. for ABFT cells, --recoveries full-restart,\n\
+                         tile-level,in-place-correct crosses the recovery-policy\n\
+                         axis (invalid protection pairs are rejected up front),\n\
+                         --injections per cell, --seed,\n\
                          --threads, --schema v2 (default, per-outcome CIs; v1 legacy),\n\
                          --precision / --batch-size / --min-injections / --max-injections /\n\
-                         --stratify run every cell to its own stopping point,\n\
+                         --stratify run every cell to its own stopping point\n\
+                         (--stratify-on O as in campaign),\n\
                          --confidence C sets the interval level (default 0.95),\n\
                          --timing writes the bench-sweep sidecar (--timing-out FILE;\n\
                          v1 keeps its legacy inline fields), --direct /\n\
-                         --checkpoint-interval as in campaign; --no-trace-cache\n\
+                         --checkpoint-interval / --two-level as in campaign;\n\
+                         --no-trace-cache\n\
                          disables the shared reference-trace cache and --per-cell\n\
                          the grid-wide work stealing — byte-identical output either\n\
                          way, only slower)\n\
@@ -244,11 +292,13 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     cfg.threads = args.get("threads", cfg.threads);
     cfg.fast_forward = !args.flag("direct");
     cfg.checkpoint_interval = args.get("checkpoint-interval", 0u64);
+    cfg.two_level = two_level_flag(args);
     cfg.precision_target = args.get("precision", 0.0f64);
     cfg.batch_size = args.get("batch-size", 0u64);
     cfg.min_injections = args.get("min-injections", 0u64);
     cfg.max_injections = args.get("max-injections", 0u64);
     cfg.stratify = args.flag("stratify");
+    cfg.stratify_on = stratify_on(args)?;
     cfg.confidence = args.get("confidence", 0.95f64);
     eprintln!(
         "campaign: {} build, {} injections{}, seed {}, {} threads, {} engine{}",
@@ -265,7 +315,13 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
         },
         seed,
         cfg.threads,
-        if cfg.fast_forward { "fast-forward" } else { "direct" },
+        if cfg.two_level {
+            "two-level"
+        } else if cfg.fast_forward {
+            "fast-forward"
+        } else {
+            "direct"
+        },
         if cfg.stratify { ", stratified" } else { "" }
     );
     let r = Campaign::run(&cfg)?;
@@ -355,6 +411,7 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     sc.threads = args.get("threads", sc.threads);
     sc.fast_forward = !args.flag("direct");
     sc.checkpoint_interval = args.get("checkpoint-interval", 0u64);
+    sc.two_level = two_level_flag(args);
     if let Some(raw) = args.kv.get("configs") {
         sc.protections = parse_list(raw, "--configs", parse_protection)?;
     }
@@ -378,11 +435,15 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
             t.parse::<f64>().ok().filter(|f| f.is_finite() && *f >= 0.0)
         })?;
     }
+    if let Some(raw) = args.kv.get("recoveries") {
+        sc.recoveries = Some(parse_list(raw, "--recoveries", parse_recovery)?);
+    }
     sc.precision_target = args.get("precision", 0.0f64);
     sc.batch_size = args.get("batch-size", 0u64);
     sc.min_injections = args.get("min-injections", 0u64);
     sc.max_injections = args.get("max-injections", 0u64);
     sc.stratify = args.flag("stratify");
+    sc.stratify_on = stratify_on(args)?;
     sc.confidence = args.get("confidence", 0.95f64);
     sc.trace_cache = !args.flag("no-trace-cache");
     sc.work_stealing = !args.flag("per-cell");
@@ -414,7 +475,13 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         },
         sc.seed,
         sc.threads,
-        if sc.fast_forward { "fast-forward" } else { "direct" },
+        if sc.two_level {
+            "two-level"
+        } else if sc.fast_forward {
+            "fast-forward"
+        } else {
+            "direct"
+        },
         schema
     );
     let scheduler = if sc.work_stealing {

@@ -14,7 +14,7 @@
 //! measured numbers from stepping the simulator. The `perf_modes` bench
 //! prints both and their agreement.
 
-use crate::cluster::{System, CONFIG_PARITY_CYCLES};
+use crate::cluster::{System, ABFT_CORRECT_CYCLES, CONFIG_PARITY_CYCLES};
 use crate::golden::{GemmProblem, GemmSpec};
 use crate::redmule::scheduler::{Dims, Scheduler};
 use crate::redmule::{ExecMode, Protection, RedMuleConfig};
@@ -24,20 +24,214 @@ use crate::Result;
 /// for all three builds — protection does not touch the critical path).
 pub const FREQ_MHZ: f64 = 500.0;
 
-/// Analytic fault-free cycle count for a workload in a mode.
-pub fn analytic_cycles(cfg: RedMuleConfig, spec: GemmSpec, mode: ExecMode) -> u64 {
+/// The scheduler dimensions a (config, spec, mode) triple resolves to —
+/// the same mapping [`crate::redmule::RedMule::dims`] performs from the
+/// latched register file (FT mode halves the usable rows).
+pub fn dims_of(cfg: RedMuleConfig, spec: GemmSpec, mode: ExecMode) -> Dims {
     let rows_per_tile = match mode {
         ExecMode::FaultTolerant => (cfg.l / 2).max(1) as u32,
         ExecMode::Performance => cfg.l as u32,
     };
-    Scheduler::nominal_cycles(&Dims {
+    Dims {
         m: spec.m as u32,
         n: spec.n as u32,
         k: spec.k as u32,
         rows_per_tile,
         d: cfg.d() as u32,
         h: cfg.h as u32,
-    })
+    }
+}
+
+/// Analytic fault-free cycle count for a workload in a mode.
+pub fn analytic_cycles(cfg: RedMuleConfig, spec: GemmSpec, mode: ExecMode) -> u64 {
+    PhaseSchedule::accelerator(&dims_of(cfg, spec, mode)).accelerator_cycles()
+}
+
+// ------------------------------------------------------- phase schedule
+
+/// One phase class of a hosted execution. The accelerator phases mirror
+/// the schedule FSM's states ([`crate::redmule::scheduler`]); the host
+/// phases cover the cluster-core work bracketing them (§3.2/§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Host: program + commit the shadowed register-file context
+    /// (parity-protected builds pay the §3.2 one-time 120 cycles).
+    ConfigStage,
+    /// Accelerator: preload one tile's Y elements into the accumulators.
+    LoadY,
+    /// Accelerator: the tile's N-chunk compute waves.
+    Compute,
+    /// Accelerator: drain the last wave through the `d`-deep pipeline.
+    Drain,
+    /// Accelerator: stream the tile's accumulators out (ECC re-encode on
+    /// protected builds — the staging of results back into the SECDED
+    /// memory happens inside this phase's stores).
+    StoreZ,
+    /// Host: ABFT writeback verification (`m + k` checksum comparisons).
+    AbftVerify,
+    /// Host: one online-ABFT in-place correction.
+    AbftCorrect,
+}
+
+/// One schedule entry: `cycles` consecutive cycles of `kind`, starting
+/// after `start` cycles have elapsed (accelerator phases count
+/// accelerator cycles from task start; host phases carry `start = 0` and
+/// account host cycles instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    /// M/K tile coordinates (accelerator phases; 0 for host phases).
+    pub mt: u16,
+    pub kt: u16,
+    /// Absolute start offset: the phase covers cycles
+    /// `start + 1 ..= start + cycles` of the task's 1-based stepping.
+    pub start: u64,
+    pub cycles: u64,
+}
+
+/// The closed-form per-phase schedule of one fault-free execution — the
+/// refactored form of the old aggregate [`analytic_cycles`] total. The
+/// two-level executor jumps across whole phases of this schedule instead
+/// of stepping them, and sizes its cycle-accurate fault windows from the
+/// phase geometry (e.g. [`PhaseSchedule::drain_depth`] bounds how long a
+/// strike keeps propagating through the FMA pipeline).
+#[derive(Debug, Clone)]
+pub struct PhaseSchedule {
+    pub phases: Vec<Phase>,
+}
+
+impl PhaseSchedule {
+    /// The accelerator-only schedule of `dims`: per-tile LoadY → Compute
+    /// → Drain → StoreZ, in the schedule FSM's tile order. The summed
+    /// cycle count equals [`Scheduler::nominal_cycles`] exactly (pinned
+    /// by `schedule_total_matches_nominal_cycles`).
+    pub fn accelerator(dims: &Dims) -> Self {
+        let mut phases = Vec::with_capacity((dims.tiles_m() * dims.tiles_k() * 4) as usize);
+        let mut start = 0u64;
+        let mut push = |kind, mt: u32, kt: u32, cycles: u64, start: &mut u64| {
+            phases.push(Phase {
+                kind,
+                mt: mt as u16,
+                kt: kt as u16,
+                start: *start,
+                cycles,
+            });
+            *start += cycles;
+        };
+        for mt in 0..dims.tiles_m() {
+            for kt in 0..dims.tiles_k() {
+                push(PhaseKind::LoadY, mt, kt, Scheduler::load_cycles(dims, mt, kt) as u64, &mut start);
+                push(PhaseKind::Compute, mt, kt, dims.chunks_n() as u64 * dims.d as u64, &mut start);
+                push(PhaseKind::Drain, mt, kt, dims.d as u64, &mut start);
+                push(PhaseKind::StoreZ, mt, kt, Scheduler::store_cycles(dims, mt, kt) as u64, &mut start);
+            }
+        }
+        Self { phases }
+    }
+
+    /// The full hosted schedule: ConfigStage, the accelerator phases,
+    /// and — on checksum builds — the writeback AbftVerify pass. The
+    /// host phases' cycle counts match what [`crate::cluster::System`]
+    /// charges to `config_cycles` on the same build.
+    pub fn hosted(cfg: RedMuleConfig, protection: Protection, spec: GemmSpec, mode: ExecMode) -> Self {
+        // ABFT builds execute the augmented (m+1, n, k+1) task.
+        let run_spec = if protection.has_abft_checksums() {
+            GemmSpec::new(spec.m + 1, spec.n, spec.k + 1)
+        } else {
+            spec
+        };
+        // FT mode needs data-protection hardware; without it the
+        // accelerator silently degrades to performance mode.
+        let run_mode = if protection.has_data_protection() {
+            mode
+        } else {
+            ExecMode::Performance
+        };
+        let mut sched = Self::accelerator(&dims_of(cfg, run_spec, run_mode));
+        let config = Phase {
+            kind: PhaseKind::ConfigStage,
+            mt: 0,
+            kt: 0,
+            start: 0,
+            cycles: if protection.has_control_protection() {
+                CONFIG_PARITY_CYCLES
+            } else {
+                8
+            },
+        };
+        sched.phases.insert(0, config);
+        if protection.has_abft_checksums() {
+            sched.phases.push(Phase {
+                kind: PhaseKind::AbftVerify,
+                mt: 0,
+                kt: 0,
+                start: 0,
+                cycles: (run_spec.m + run_spec.k) as u64,
+            });
+        }
+        sched
+    }
+
+    /// The host-phase entry of one online-ABFT in-place correction
+    /// (appended to a schedule when the executor accounts a repair).
+    pub fn abft_correct_phase() -> Phase {
+        Phase {
+            kind: PhaseKind::AbftCorrect,
+            mt: 0,
+            kt: 0,
+            start: 0,
+            cycles: ABFT_CORRECT_CYCLES,
+        }
+    }
+
+    /// Total accelerator cycles (host phases excluded) — equals
+    /// [`Scheduler::nominal_cycles`] for the same dims.
+    pub fn accelerator_cycles(&self) -> u64 {
+        self.phases
+            .iter()
+            .filter(|p| !Self::is_host_phase(p.kind))
+            .map(|p| p.cycles)
+            .sum()
+    }
+
+    /// Total host cycles (ConfigStage / AbftVerify / AbftCorrect).
+    pub fn host_cycles(&self) -> u64 {
+        self.phases
+            .iter()
+            .filter(|p| Self::is_host_phase(p.kind))
+            .map(|p| p.cycles)
+            .sum()
+    }
+
+    fn is_host_phase(kind: PhaseKind) -> bool {
+        matches!(
+            kind,
+            PhaseKind::ConfigStage | PhaseKind::AbftVerify | PhaseKind::AbftCorrect
+        )
+    }
+
+    /// The accelerator phase covering absolute (1-based) cycle `cycle`,
+    /// or `None` past the end of the task.
+    pub fn phase_at(&self, cycle: u64) -> Option<&Phase> {
+        self.phases
+            .iter()
+            .filter(|p| !Self::is_host_phase(p.kind))
+            .find(|p| cycle > p.start && cycle <= p.start + p.cycles)
+    }
+
+    /// The pipeline depth the schedule's Drain phases flush — the bound
+    /// on how many cycles an in-flight corruption keeps propagating
+    /// before it either retires into an accumulator or is gone. The
+    /// two-level executor sizes its cycle-accurate window settling
+    /// margin from this.
+    pub fn drain_depth(&self) -> u64 {
+        self.phases
+            .iter()
+            .filter(|p| p.kind == PhaseKind::Drain)
+            .map(|p| p.cycles)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 /// Peak and achieved throughput for a workload.
@@ -128,6 +322,82 @@ mod tests {
             let m = measured_cycles(cfg, prot, spec, mode).unwrap();
             assert_eq!(a, m, "{prot:?}/{mode:?}");
         }
+    }
+
+    #[test]
+    fn schedule_total_matches_nominal_cycles() {
+        // The per-phase refactor of the aggregate total must not move a
+        // single cycle: Σ phases == Scheduler::nominal_cycles on every
+        // geometry × shape × mode combination the engine matrix uses.
+        for cfg in [RedMuleConfig::paper(), RedMuleConfig::new(8, 2, 2)] {
+            for spec in [
+                GemmSpec::paper_workload(),
+                GemmSpec::new(6, 8, 8),
+                GemmSpec::new(1, 1, 1),
+                GemmSpec::new(13, 17, 19),
+                GemmSpec::new(32, 192, 48),
+            ] {
+                for mode in [ExecMode::Performance, ExecMode::FaultTolerant] {
+                    let dims = dims_of(cfg, spec, mode);
+                    let sched = PhaseSchedule::accelerator(&dims);
+                    assert_eq!(
+                        sched.accelerator_cycles(),
+                        Scheduler::nominal_cycles(&dims),
+                        "{spec:?}/{mode:?}"
+                    );
+                    assert_eq!(sched.host_cycles(), 0);
+                    // Phases tile the cycle axis exactly: contiguous,
+                    // gapless, covering 1..=total.
+                    let mut expect_start = 0u64;
+                    for p in &sched.phases {
+                        assert_eq!(p.start, expect_start, "{p:?}");
+                        expect_start += p.cycles;
+                    }
+                    let total = sched.accelerator_cycles();
+                    assert!(sched.phase_at(0).is_none());
+                    assert!(sched.phase_at(total + 1).is_none());
+                    assert_eq!(sched.phase_at(1).unwrap().kind, PhaseKind::LoadY);
+                    assert_eq!(sched.phase_at(total).unwrap().kind, PhaseKind::StoreZ);
+                    assert_eq!(sched.drain_depth(), dims.d as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hosted_schedule_accounts_host_phases_like_the_cluster() {
+        let cfg = RedMuleConfig::paper();
+        let spec = GemmSpec::paper_workload();
+        // Control-protected builds pay the §3.2 parity cycles up front.
+        let full = PhaseSchedule::hosted(cfg, Protection::Full, spec, ExecMode::FaultTolerant);
+        assert_eq!(full.phases[0].kind, PhaseKind::ConfigStage);
+        assert_eq!(full.phases[0].cycles, CONFIG_PARITY_CYCLES);
+        assert_eq!(full.host_cycles(), CONFIG_PARITY_CYCLES);
+        let base = PhaseSchedule::hosted(cfg, Protection::Baseline, spec, ExecMode::Performance);
+        assert_eq!(base.phases[0].cycles, 8);
+        // ABFT builds append the writeback verification of the augmented
+        // (m+1, k+1) task and run the augmented accelerator schedule.
+        let abft = PhaseSchedule::hosted(cfg, Protection::Abft, spec, ExecMode::Performance);
+        let last = abft.phases.last().unwrap();
+        assert_eq!(last.kind, PhaseKind::AbftVerify);
+        assert_eq!(last.cycles, (spec.m + 1 + spec.k + 1) as u64);
+        let aug = GemmSpec::new(spec.m + 1, spec.n, spec.k + 1);
+        assert_eq!(
+            abft.accelerator_cycles(),
+            analytic_cycles(cfg, aug, ExecMode::Performance)
+        );
+        assert_eq!(
+            PhaseSchedule::abft_correct_phase().cycles,
+            ABFT_CORRECT_CYCLES
+        );
+        // FT on a baseline build degrades to performance dims, exactly
+        // like the latched-mode logic in the accelerator.
+        let degraded =
+            PhaseSchedule::hosted(cfg, Protection::Baseline, spec, ExecMode::FaultTolerant);
+        assert_eq!(
+            degraded.accelerator_cycles(),
+            analytic_cycles(cfg, spec, ExecMode::Performance)
+        );
     }
 
     #[test]

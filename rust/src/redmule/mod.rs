@@ -252,6 +252,16 @@ impl RedMule {
         }
     }
 
+    /// [`RedMule::digest_into`] folded into a standalone value — the
+    /// accelerator half of the fast-forward convergence digest. The
+    /// two-level engine records one of these per reference cycle so a
+    /// faulted run can probe for re-convergence *between* checkpoints.
+    pub fn digest64(&self) -> u64 {
+        let mut h = crate::util::digest::Fnv64::new();
+        self.digest_into(&mut h);
+        h.finish()
+    }
+
     pub fn state(&self) -> RunState {
         match self.ctrl_state {
             CTRL_DONE => RunState::Done,

@@ -178,6 +178,33 @@ impl Tcdm {
         }
     }
 
+    /// Current length of the write log (0 when tracking is disabled).
+    /// The two-level engine uses log-length *watermarks* to delimit the
+    /// writes of a window or reference segment: every store appends one
+    /// entry (duplicates included), so `dirty_log_since(mark)` is exactly
+    /// the set of words touched after the watermark was taken.
+    pub fn dirty_log_len(&self) -> usize {
+        self.dirty.as_ref().map_or(0, |d| d.len())
+    }
+
+    /// The flat word indices written since a [`Tcdm::dirty_log_len`]
+    /// watermark, in write order (duplicates included).
+    pub fn dirty_log_since(&self, watermark: usize) -> &[u32] {
+        match &self.dirty {
+            Some(d) => &d[watermark.min(d.len())..],
+            None => &[],
+        }
+    }
+
+    /// The raw stored codeword at a flat dirty-log index (bank-major
+    /// `bank * words_per_bank + row` — the encoding the write log and
+    /// the deltas use).
+    pub fn raw_codeword_flat(&self, flat_idx: u32) -> u64 {
+        let bank = (flat_idx as usize) / self.words_per_bank;
+        let row = (flat_idx as usize) % self.words_per_bank;
+        self.banks[bank][row]
+    }
+
     /// Linear word index (`byte_addr / 4`) of a flat dirty-log index.
     /// The log and the deltas use the bank-major encoding
     /// `bank * words_per_bank + row`, while task layouts address memory

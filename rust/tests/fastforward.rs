@@ -1,11 +1,13 @@
-//! A/B harness for the checkpointed fast-forward injection engine: the
-//! fast path must be **bit-identical** to the direct path — same outcome
-//! counts at campaign level, same `RunReport` field for field at
-//! single-run level — across protections, fault models, multi-fault
-//! plans and checkpoint intervals (including the K=1 and K>horizon edge
-//! cases). Any missed field in the snapshot/restore/digest machinery
-//! shows up here as a count diff, not as silently corrupted Table-1
-//! classifications.
+//! A/B harness for the checkpointed fast-forward injection engine and
+//! the two-level executor built on it: both fast paths must be
+//! **bit-identical** to the direct path — same outcome counts at
+//! campaign level, same `RunReport` field for field at single-run
+//! level — across protections, fault models, multi-fault plans and
+//! checkpoint intervals (including the K=1 and K>horizon edge cases).
+//! Any missed field in the snapshot/restore/digest machinery — or a
+//! two-level convergence probe accepting a state that is not actually
+//! bit-identical to the reference — shows up here as a count diff, not
+//! as silently corrupted Table-1 classifications.
 
 use redmule_ft::campaign::{problem_seed, Campaign, CampaignConfig};
 use redmule_ft::cluster::{RecoveryPolicy, System};
@@ -27,13 +29,20 @@ fn counts(r: &redmule_ft::campaign::CampaignResult) -> Counts {
     )
 }
 
-fn run_pair(mut cfg: CampaignConfig) -> (Counts, Counts) {
+/// Run one campaign on all three engines: direct, fast-forward, and
+/// two-level. Every test below pins all three to identical counts, so a
+/// regression names the first engine that diverged.
+fn run_engines(mut cfg: CampaignConfig) -> (Counts, Counts, Counts) {
     cfg.fast_forward = false;
+    cfg.two_level = false;
     let direct = Campaign::run(&cfg).unwrap();
     cfg.fast_forward = true;
     let fast = Campaign::run(&cfg).unwrap();
+    cfg.two_level = true;
+    let two = Campaign::run(&cfg).unwrap();
     assert_eq!(direct.total, fast.total);
-    (counts(&direct), counts(&fast))
+    assert_eq!(direct.total, two.total);
+    (counts(&direct), counts(&fast), counts(&two))
 }
 
 #[test]
@@ -48,8 +57,9 @@ fn fast_forward_matches_direct_across_all_protections() {
     ] {
         let mut cfg = CampaignConfig::table1(protection, 300, 0xFA57);
         cfg.threads = 2;
-        let (d, f) = run_pair(cfg);
+        let (d, f, t) = run_engines(cfg);
         assert_eq!(d, f, "{protection:?}: fast path diverged from direct");
+        assert_eq!(d, t, "{protection:?}: two-level diverged from direct");
     }
 }
 
@@ -57,13 +67,15 @@ fn fast_forward_matches_direct_across_all_protections() {
 fn fast_forward_matches_direct_across_checkpoint_intervals() {
     // K = 1 (checkpoint every cycle), an awkward prime, auto, and
     // K > horizon (only checkpoint 0 exists: pure direct-from-start with
-    // convergence probes never firing).
+    // boundary convergence probes never firing — the two-level engine's
+    // mid-segment probes still do).
     for k in [1u64, 7, 0, 100_000] {
         let mut cfg = CampaignConfig::table1(Protection::Baseline, 250, 0xC4EC);
         cfg.threads = 2;
         cfg.checkpoint_interval = k;
-        let (d, f) = run_pair(cfg);
+        let (d, f, t) = run_engines(cfg);
         assert_eq!(d, f, "interval {k}: fast path diverged from direct");
+        assert_eq!(d, t, "interval {k}: two-level diverged from direct");
     }
 }
 
@@ -80,8 +92,9 @@ fn fast_forward_matches_direct_on_multi_fault_plans() {
             cfg.threads = 2;
             cfg.faults_per_run = faults;
             cfg.fault_model = model;
-            let (d, f) = run_pair(cfg);
+            let (d, f, t) = run_engines(cfg);
             assert_eq!(d, f, "{protection:?}/{model:?}/{faults} faults");
+            assert_eq!(d, t, "{protection:?}/{model:?}/{faults} faults (two-level)");
         }
     }
 }
@@ -144,8 +157,18 @@ fn per_run_reports_are_field_identical_between_engines() {
             .record_reference(&layout, &pristine_ref, mode, 16)
             .unwrap()
             .expect("default-tolerance reference must be clean");
+        let (mut sys_ref2, _, pristine_ref2) = stage();
+        let trace_tl = sys_ref2
+            .record_reference_two_level(&layout, &pristine_ref2, mode, 16)
+            .unwrap()
+            .expect("two-level reference must be clean");
+        // The instrumentation must not perturb the recording itself.
+        assert_eq!(trace.cycles, trace_tl.cycles);
+        assert_eq!(trace.z.bits(), trace_tl.z.bits());
+        assert!(trace_tl.two_level.is_some());
         let (mut sys_d, _, pristine_d) = stage();
         let (mut sys_f, _, pristine_f) = stage();
+        let (mut sys_t, _, pristine_t) = stage();
         let registry = FaultRegistry::new(cfg, protection);
         for i in 0..150u64 {
             let mut rng = Xoshiro256::new(0xF00D + i);
@@ -157,29 +180,74 @@ fn per_run_reports_are_field_identical_between_engines() {
             let f = sys_f
                 .run_staged_with_faults_ff(&layout, mode, &plans, &trace, &pristine_f)
                 .unwrap();
-            assert_eq!(d.outcome, f.outcome, "{protection:?} run {i}: {plans:?}");
-            assert_eq!(d.cycles, f.cycles, "{protection:?} run {i} cycles");
-            assert_eq!(
-                d.config_cycles, f.config_cycles,
-                "{protection:?} run {i} config cycles"
-            );
-            assert_eq!(d.retries, f.retries, "{protection:?} run {i} retries");
-            assert_eq!(
-                d.fault_causes, f.fault_causes,
-                "{protection:?} run {i} causes"
-            );
-            assert_eq!(d.irq_seen, f.irq_seen, "{protection:?} run {i} irq");
-            assert_eq!(
-                d.faults_applied, f.faults_applied,
-                "{protection:?} run {i} applied"
-            );
-            assert_eq!(d.abft, f.abft, "{protection:?} run {i} abft info");
-            assert_eq!(
-                d.z.bits(),
-                f.z.bits(),
-                "{protection:?} run {i}: Z regions must be bit-identical"
-            );
+            let t = sys_t
+                .run_staged_with_faults_tl(&layout, mode, &plans, &trace_tl, &pristine_t)
+                .unwrap();
+            for (name, r) in [("fast-forward", &f), ("two-level", &t)] {
+                assert_eq!(d.outcome, r.outcome, "{protection:?}/{name} run {i}: {plans:?}");
+                assert_eq!(d.cycles, r.cycles, "{protection:?}/{name} run {i} cycles");
+                assert_eq!(
+                    d.config_cycles, r.config_cycles,
+                    "{protection:?}/{name} run {i} config cycles"
+                );
+                assert_eq!(d.retries, r.retries, "{protection:?}/{name} run {i} retries");
+                assert_eq!(
+                    d.fault_causes, r.fault_causes,
+                    "{protection:?}/{name} run {i} causes"
+                );
+                assert_eq!(d.irq_seen, r.irq_seen, "{protection:?}/{name} run {i} irq");
+                assert_eq!(
+                    d.faults_applied, r.faults_applied,
+                    "{protection:?}/{name} run {i} applied"
+                );
+                assert_eq!(d.abft, r.abft, "{protection:?}/{name} run {i} abft info");
+                assert_eq!(
+                    d.z.bits(),
+                    r.z.bits(),
+                    "{protection:?}/{name} run {i}: Z regions must be bit-identical"
+                );
+            }
         }
+    }
+}
+
+/// The two-level entry point on a trace recorded *without* the
+/// per-cycle instrumentation must degrade to checkpoint-boundary probes
+/// (the fast-forward behavior) instead of erroring or diverging.
+#[test]
+fn two_level_degrades_gracefully_on_an_uninstrumented_trace() {
+    let cfg = RedMuleConfig::paper();
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, problem_seed(0x2F));
+    let stage = || {
+        let mut sys = System::new(cfg, Protection::Full);
+        sys.redmule.reset();
+        let layout = sys.stage(&problem).unwrap();
+        let pristine = sys.tcdm.clone();
+        sys.tcdm.enable_dirty_tracking();
+        (sys, layout, pristine)
+    };
+    let (mut sys_ref, layout, pristine_ref) = stage();
+    let trace = sys_ref
+        .record_reference(&layout, &pristine_ref, ExecMode::FaultTolerant, 16)
+        .unwrap()
+        .expect("reference must be clean");
+    assert!(trace.two_level.is_none(), "plain recording is uninstrumented");
+    let (mut sys_f, _, pristine_f) = stage();
+    let (mut sys_t, _, pristine_t) = stage();
+    let registry = FaultRegistry::new(cfg, Protection::Full);
+    for i in 0..40u64 {
+        let mut rng = Xoshiro256::new(0x9E77 + i);
+        let plans = registry.sample_plans(trace.cycles, 1, FaultModel::Independent, &mut rng);
+        let f = sys_f
+            .run_staged_with_faults_ff(&layout, ExecMode::FaultTolerant, &plans, &trace, &pristine_f)
+            .unwrap();
+        let t = sys_t
+            .run_staged_with_faults_tl(&layout, ExecMode::FaultTolerant, &plans, &trace, &pristine_t)
+            .unwrap();
+        assert_eq!(f.outcome, t.outcome, "run {i}");
+        assert_eq!(f.cycles, t.cycles, "run {i}");
+        assert_eq!(f.z.bits(), t.z.bits(), "run {i}");
     }
 }
 
@@ -232,4 +300,11 @@ fn reference_trace_matches_the_fault_free_run() {
     assert_eq!(r.outcome, clean.outcome);
     assert_eq!(r.cycles, clean.cycles);
     assert_eq!(r.z.bits(), clean.z.bits());
+    // The two-level entry point short-circuits the clean plan the same way.
+    let r2 = sys2
+        .run_staged_with_faults_tl(&layout2, ExecMode::FaultTolerant, &[], &trace, &pristine2)
+        .unwrap();
+    assert_eq!(r2.outcome, clean.outcome);
+    assert_eq!(r2.cycles, clean.cycles);
+    assert_eq!(r2.z.bits(), clean.z.bits());
 }

@@ -63,6 +63,74 @@ fn sweep_json_is_byte_identical_across_engines_and_threads() {
     }
 }
 
+/// The two-level executor joins the engine matrix: at 1 and 8 threads
+/// its sweep JSON must be byte-identical to the fast-forward reference
+/// (itself pinned to direct above), on both schedulers. A probe that
+/// accepted a not-actually-converged state, a mis-sized fault window or
+/// a divergent per-phase schedule all surface here as a byte diff.
+#[test]
+fn two_level_sweep_json_is_byte_identical_across_engines_and_threads() {
+    let reference = Sweep::run(&grid(0x5EED, 1)).unwrap();
+    let ref_v2 = reference.to_json_v2();
+    let ref_v1 = reference.to_json(false);
+    for threads in [1usize, 8] {
+        for stealing in [true, false] {
+            let mut c = grid(0x5EED, threads);
+            c.two_level = true;
+            c.work_stealing = stealing;
+            let r = Sweep::run(&c).unwrap();
+            assert_eq!(
+                r.to_json_v2(),
+                ref_v2,
+                "v2 diverged: threads={threads} stealing={stealing} two-level"
+            );
+            assert_eq!(
+                r.to_json(false),
+                ref_v1,
+                "v1 diverged: threads={threads} stealing={stealing} two-level"
+            );
+        }
+    }
+}
+
+/// The recovery-policy axis crossed with the engine matrix: the same
+/// grid run per-policy must be thread- and engine-invariant, and the
+/// policy label must land in every cell of the v2 document.
+#[test]
+fn recovery_axis_sweeps_are_thread_and_engine_invariant() {
+    let mut base = SweepConfig::new(40, 0x4EC);
+    base.shapes = vec![GemmSpec::new(6, 8, 8)];
+    base.protections = vec![Protection::Full, Protection::AbftOnline];
+    base.fault_counts = vec![1, 2];
+    base.recoveries = Some(vec![RecoveryPolicy::FullRestart, RecoveryPolicy::TileLevel]);
+    base.threads = 2;
+    assert_eq!(base.n_cells(), 8);
+    let reference = Sweep::run(&base).unwrap();
+    let ref_v2 = reference.to_json_v2();
+    assert!(ref_v2.contains("\"recovery\": \"full-restart\""));
+    assert!(ref_v2.contains("\"recovery\": \"tile-level\""));
+    for threads in [1usize, 8] {
+        for two_level in [false, true] {
+            let mut c = base.clone();
+            c.threads = threads;
+            c.two_level = two_level;
+            let r = Sweep::run(&c).unwrap();
+            assert_eq!(
+                r.to_json_v2(),
+                ref_v2,
+                "recovery axis diverged: threads={threads} two_level={two_level}"
+            );
+        }
+    }
+    let mut direct = base.clone();
+    direct.fast_forward = false;
+    assert_eq!(
+        Sweep::run(&direct).unwrap().to_json_v2(),
+        ref_v2,
+        "recovery axis diverged on the direct engine"
+    );
+}
+
 /// The adaptive + stratified engine exercises the scheduler's sequential
 /// batch logic (allocation from merged counts, stop rule, batch
 /// boundaries) — the stealing scheduler must reproduce the per-cell

@@ -1,0 +1,208 @@
+//! Property tests for the two-level executor's convergence probes and
+//! fault-window sizing (satellite of the two-level tentpole).
+//!
+//! The engine's safety story is that a probe only ever *proves*
+//! bit-identity with the reference — it never assumes it. These tests
+//! attack that claim directly: tamper the instrumented trace so the
+//! functional level's evidence is wrong, and require the engine to fall
+//! back to cycle-accurate stepping with reports field-identical to the
+//! direct engine (silent divergence is the one unacceptable outcome).
+//! The window-rail tests pin the degenerate window geometries: a window
+//! saturating at cycle 0, one clamped at the horizon, one covering the
+//! whole run, and overlapping windows from multi-fault plans.
+
+use redmule_ft::campaign::problem_seed;
+use redmule_ft::cluster::{RefTrace, System};
+use redmule_ft::fault::{FaultModel, FaultPlan, FaultRegistry};
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig, TaskLayout};
+use redmule_ft::tcdm::Tcdm;
+use redmule_ft::util::rng::Xoshiro256;
+
+const CFG_PROT: Protection = Protection::Full;
+
+fn stage(problem: &GemmProblem) -> (System, TaskLayout, Tcdm) {
+    let cfg = RedMuleConfig::paper();
+    let mut sys = System::new(cfg, CFG_PROT);
+    sys.redmule.reset();
+    let layout = sys.stage(problem).unwrap();
+    let pristine = sys.tcdm.clone();
+    sys.tcdm.enable_dirty_tracking();
+    (sys, layout, pristine)
+}
+
+fn record_tl(problem: &GemmProblem) -> RefTrace {
+    let (mut sys, layout, pristine) = stage(problem);
+    sys.record_reference_two_level(&layout, &pristine, ExecMode::FaultTolerant, 16)
+        .unwrap()
+        .expect("fault-free Full-build reference must be clean")
+}
+
+/// Field-for-field report comparison (the same contract the engine A/B
+/// suites pin).
+fn assert_reports_match(
+    d: &redmule_ft::cluster::RunReport,
+    t: &redmule_ft::cluster::RunReport,
+    label: &str,
+) {
+    assert_eq!(d.outcome, t.outcome, "{label}: outcome");
+    assert_eq!(d.cycles, t.cycles, "{label}: cycles");
+    assert_eq!(d.config_cycles, t.config_cycles, "{label}: config cycles");
+    assert_eq!(d.retries, t.retries, "{label}: retries");
+    assert_eq!(d.fault_causes, t.fault_causes, "{label}: causes");
+    assert_eq!(d.irq_seen, t.irq_seen, "{label}: irq");
+    assert_eq!(d.faults_applied, t.faults_applied, "{label}: applied");
+    assert_eq!(d.abft, t.abft, "{label}: abft info");
+    assert_eq!(d.z.bits(), t.z.bits(), "{label}: Z bits");
+}
+
+/// Run one plan set on the direct engine and on the two-level engine
+/// with the given trace, and require identical reports.
+fn assert_tl_matches_direct(problem: &GemmProblem, trace: &RefTrace, plans: &[FaultPlan], label: &str) {
+    let (mut sys_d, layout, pristine_d) = stage(problem);
+    sys_d.tcdm.restore_from(&pristine_d);
+    sys_d.redmule.reset();
+    let d = sys_d
+        .run_staged_with_faults(&layout, ExecMode::FaultTolerant, plans)
+        .unwrap();
+    let (mut sys_t, _, pristine_t) = stage(problem);
+    let t = sys_t
+        .run_staged_with_faults_tl(&layout, ExecMode::FaultTolerant, plans, trace, &pristine_t)
+        .unwrap();
+    assert_reports_match(&d, &t, label);
+}
+
+/// Tampered accelerator digests: every per-cycle digest is flipped, so
+/// no mid-segment (or window-edge) probe can ever match. The engine
+/// must keep stepping cycle-accurately to the natural end of the run
+/// and classify it exactly like the direct engine — a probe that
+/// "mostly matches" must not be accepted, and a failing probe must not
+/// abort the attempt.
+#[test]
+fn tampered_cycle_digests_fall_back_to_cycle_accurate_stepping() {
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, problem_seed(0x71D));
+    let trace = record_tl(&problem);
+    let mut bad = trace.clone();
+    for d in &mut bad.two_level.as_mut().unwrap().cycle_digests {
+        *d = !*d;
+    }
+    let registry = FaultRegistry::new(RedMuleConfig::paper(), CFG_PROT);
+    for i in 0..25u64 {
+        let mut rng = Xoshiro256::new(0xD16 + i);
+        let n = 1 + (i % 3) as usize;
+        let plans = registry.sample_plans(trace.cycles, n, FaultModel::Independent, &mut rng);
+        assert_tl_matches_direct(&problem, &bad, &plans, &format!("digest-tamper run {i}"));
+    }
+}
+
+/// Tampered reference write logs: every recorded TCDM codeword is
+/// flipped, so a probe whose accelerator digest matches will still see
+/// a memory mismatch for any word the reference wrote after the restore
+/// checkpoint. The probe must reject (never "correct" the state toward
+/// the log) and the run must again classify identically to direct.
+#[test]
+fn tampered_segment_logs_fall_back_to_cycle_accurate_stepping() {
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, problem_seed(0x71D));
+    let trace = record_tl(&problem);
+    let mut bad = trace.clone();
+    {
+        let tl = bad.two_level.as_mut().unwrap();
+        for seg in tl.segments.iter_mut().chain(std::iter::once(&mut tl.tail)) {
+            for e in &mut seg.log {
+                e.2 = !e.2;
+            }
+        }
+    }
+    let registry = FaultRegistry::new(RedMuleConfig::paper(), CFG_PROT);
+    for i in 0..25u64 {
+        let mut rng = Xoshiro256::new(0x5E6 + i);
+        let n = 1 + (i % 3) as usize;
+        let plans = registry.sample_plans(trace.cycles, n, FaultModel::Independent, &mut rng);
+        assert_tl_matches_direct(&problem, &bad, &plans, &format!("log-tamper run {i}"));
+    }
+}
+
+/// Window-boundary rails: pin fault cycles to the degenerate window
+/// geometries and require direct-identical reports for each.
+///
+/// * cycle 0 — the settle margin saturates the window start at 0;
+/// * the last reference cycle — the window end clamps at the horizon;
+/// * first + last together — one hull window covering the entire run
+///   (window ≥ horizon: the functional level never gets a probe window
+///   at all);
+/// * a tight multi-fault cluster — overlapping per-fault windows that
+///   must merge into one hull, not probe between the strikes.
+#[test]
+fn window_rails_match_direct_at_the_degenerate_geometries() {
+    let spec = GemmSpec::paper_workload();
+    let problem = GemmProblem::random(&spec, problem_seed(0x3A11));
+    let trace = record_tl(&problem);
+    let registry = FaultRegistry::new(RedMuleConfig::paper(), CFG_PROT);
+    let mut rng = Xoshiro256::new(0xA115);
+    let sample = |rng: &mut Xoshiro256| {
+        registry.sample_plans(trace.cycles, 1, FaultModel::Independent, rng)[0]
+    };
+    // Window start saturates at cycle 0.
+    let mut p = sample(&mut rng);
+    p.cycle = 0;
+    assert_tl_matches_direct(&problem, &trace, &[p], "window start at 0");
+    // Window end clamps at the horizon.
+    let mut p = sample(&mut rng);
+    p.cycle = trace.cycles - 1;
+    assert_tl_matches_direct(&problem, &trace, &[p], "window end at horizon");
+    // Hull covers the whole run: no functional region remains.
+    let (mut a, mut b) = (sample(&mut rng), sample(&mut rng));
+    a.cycle = 0;
+    b.cycle = trace.cycles - 1;
+    assert_tl_matches_direct(&problem, &trace, &[a, b], "window covers horizon");
+    // Overlapping windows from a tight multi-fault cluster mid-run.
+    let mid = trace.cycles / 2;
+    let mut cluster = [sample(&mut rng), sample(&mut rng), sample(&mut rng)];
+    for (i, p) in cluster.iter_mut().enumerate() {
+        p.cycle = mid + 2 * i as u64;
+    }
+    assert_tl_matches_direct(&problem, &trace, &cluster, "overlapping windows");
+}
+
+/// The instrumented recording itself must be a strict superset of the
+/// plain one: identical checkpoints, horizon and clean outcome, plus
+/// well-formed instrumentation (one digest per cycle inclusive, one
+/// segment per checkpoint, empty segment 0).
+#[test]
+fn two_level_recording_is_a_strict_superset_of_the_plain_trace() {
+    let spec = GemmSpec::new(6, 8, 8);
+    let problem = GemmProblem::random(&spec, problem_seed(0x50B));
+    let (mut sys_a, layout, pristine_a) = stage(&problem);
+    let plain = sys_a
+        .record_reference(&layout, &pristine_a, ExecMode::FaultTolerant, 16)
+        .unwrap()
+        .expect("clean");
+    let (mut sys_b, _, pristine_b) = stage(&problem);
+    let tl = sys_b
+        .record_reference_two_level(&layout, &pristine_b, ExecMode::FaultTolerant, 16)
+        .unwrap()
+        .expect("clean");
+    assert!(plain.two_level.is_none());
+    assert_eq!(plain.cycles, tl.cycles);
+    assert_eq!(plain.config_cycles, tl.config_cycles);
+    assert_eq!(plain.z.bits(), tl.z.bits());
+    assert_eq!(plain.checkpoints.len(), tl.checkpoints.len());
+    for (a, b) in plain.checkpoints.iter().zip(&tl.checkpoints) {
+        assert_eq!(a.cycle, b.cycle);
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.tcdm_delta, b.tcdm_delta);
+    }
+    let inst = tl.two_level.as_ref().expect("instrumented");
+    assert_eq!(inst.cycle_digests.len() as u64, tl.cycles + 1);
+    assert_eq!(inst.segments.len(), tl.checkpoints.len());
+    assert!(inst.segments[0].log.is_empty(), "segment 0 pairs with cp0");
+    for seg in inst.segments.iter().chain(std::iter::once(&inst.tail)) {
+        let mut w: Vec<u32> = seg.log.iter().map(|e| e.1).collect();
+        w.sort_unstable();
+        w.dedup();
+        assert_eq!(w, seg.writes, "write-set must canonicalize its log");
+        assert!(seg.log.windows(2).all(|p| p[0].0 <= p[1].0), "log is cycle-ordered");
+    }
+}
