@@ -1,0 +1,70 @@
+//! Campaign-as-a-service: submit a mix of campaign jobs to the
+//! deterministic job engine, torment the scheduler with a chaotic fault
+//! plan (dropped / duplicated / delayed messages and crashing workers),
+//! stream per-batch progress, and verify that every completed job's
+//! counts are byte-identical to the plain single-threaded engine.
+//!
+//! Run with: `cargo run --release --example campaign_service`
+
+use redmule_ft::prelude::*;
+
+fn main() -> redmule_ft::Result<()> {
+    let mut sc = ServiceConfig::new(2025);
+    sc.workers = 3;
+    sc.chunk_injections = 32;
+    sc.fault_plan = ServiceFaultPlan::chaos();
+    let mut svc = CampaignService::new(sc)?;
+
+    // Three jobs: fixed-budget Full, adaptive ABFT (multiple batches →
+    // a streaming CI), fixed-budget Data — each its own campaign seed.
+    let mut expected = Vec::new();
+    for (i, (prot, adaptive)) in [
+        (Protection::Full, false),
+        (Protection::Abft, true),
+        (Protection::Data, false),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut cfg = CampaignConfig::table1(prot, 200, 7 + i as u64);
+        cfg.threads = 1;
+        if adaptive {
+            cfg.precision_target = 0.1;
+            cfg.batch_size = 64;
+        }
+        expected.push(Campaign::run(&cfg)?);
+        svc.submit(JobSpec::new(cfg).with_priority(i as i32));
+    }
+
+    let report = svc.run()?;
+    for (job, want) in report.jobs.iter().zip(&expected) {
+        match &job.outcome {
+            JobOutcome::Completed(got) => {
+                assert_eq!(
+                    (got.total, got.incorrect, got.timeout, got.batches),
+                    (want.total, want.incorrect, want.timeout, want.batches),
+                    "service counts must match the single-threaded engine"
+                );
+                println!(
+                    "job {} ({} requeues): {} injections in {} batches — identical to the single-threaded engine",
+                    job.id, job.requeues, got.total, got.batches
+                );
+                for p in &job.progress {
+                    println!(
+                        "  vt {:>6}  n {:>4}  functional-error CI half-width {:.4}",
+                        p.time, p.total, p.half_width
+                    );
+                }
+            }
+            other => println!("job {}: {}", job.id, other.name()),
+        }
+    }
+    let t = &report.telemetry;
+    println!(
+        "chaos schedule: {} msgs ({} dropped, {} duplicated), {} worker crashes, {} requeues",
+        t.msgs_sent, t.msgs_dropped, t.msgs_duplicated, t.worker_crashes, t.chunk_requeues
+    );
+    assert_eq!(report.trace_cache_resident, 0, "every job must release its pin");
+    println!("trace cache drained: resident {}", report.trace_cache_resident);
+    Ok(())
+}

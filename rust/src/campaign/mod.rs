@@ -339,6 +339,17 @@ pub struct CampaignConfig {
     /// both other engines (`tests/fastforward.rs`,
     /// `tests/shared_trace.rs`, `tests/twolevel.rs`).
     pub two_level: bool,
+    /// Coalesce adjacent per-injection fault windows on the two-level
+    /// engine: a worker's chunk groups its injections by restored
+    /// reference checkpoint and rewinds the TCDM to the shared
+    /// checkpoint image by undoing only the previous window's writes
+    /// ([`crate::tcdm::Tcdm::undo_to_watermark`]) instead of a full
+    /// pristine-restore + delta replay per injection. Counts are
+    /// byte-identical either way — plan streams are `(seed, index)`-pure
+    /// and chunk tallies are additive sums, so processing order cannot
+    /// change a result (`tests/twolevel.rs` A/B-pins it). Default on;
+    /// ignored unless [`CampaignConfig::two_level`].
+    pub tl_coalesce: bool,
     /// Confidence level of every reported interval and of the adaptive
     /// stop rule (`0.95` = the paper's convention and the historical
     /// hardwired level; must be in the open interval (0, 1)). At the
@@ -387,6 +398,7 @@ impl CampaignConfig {
             stratify: false,
             stratify_on: StratifyObjective::FunctionalError,
             two_level: false,
+            tl_coalesce: true,
             confidence: 0.95,
         }
     }
@@ -566,7 +578,7 @@ impl CampaignResult {
 
     /// Fold a worker-local tally into the aggregate (count fields only;
     /// config/time/strata stay with the aggregate).
-    fn merge_counts(&mut self, local: &CampaignResult) {
+    pub(crate) fn merge_counts(&mut self, local: &CampaignResult) {
         self.total += local.total;
         self.correct_no_retry += local.correct_no_retry;
         self.correct_with_retry += local.correct_with_retry;
@@ -582,7 +594,7 @@ impl CampaignResult {
     /// (no-op when the campaign is unstratified). Pure sums, so the
     /// merge order — and therefore the scheduler — cannot change the
     /// result.
-    fn merge_strata(&mut self, local: &[[u64; 4]]) {
+    pub(crate) fn merge_strata(&mut self, local: &[[u64; 4]]) {
         if self.strata.is_empty() {
             return;
         }
@@ -621,7 +633,7 @@ pub struct CleanRun {
 /// the sweep grid exploits (cells differing only along those axes record
 /// one reference instead of one each).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct TraceKey {
+pub(crate) struct TraceKey {
     l: usize,
     h: usize,
     p: usize,
@@ -652,7 +664,7 @@ struct TraceKey {
 }
 
 impl TraceKey {
-    fn of(config: &CampaignConfig, problem: &GemmProblem) -> Self {
+    pub(crate) fn of(config: &CampaignConfig, problem: &GemmProblem) -> Self {
         Self {
             l: config.cfg.l,
             h: config.cfg.h,
@@ -859,6 +871,13 @@ pub(crate) struct InjectScratch {
     plans: Vec<FaultPlan>,
     live: Vec<FaultPlan>,
     fctx: FaultCtx,
+    /// Window-coalescing order buffer of the two-level engine:
+    /// `(base checkpoint index, injection index, pool offset, pool len)`
+    /// per live injection of the current chunk, sorted so injections
+    /// restoring the same checkpoint run back to back.
+    tl_order: Vec<(u32, u64, u32, u32)>,
+    /// Backing pool for the coalesced chunk's derated plan lists.
+    tl_pool: Vec<FaultPlan>,
 }
 
 impl InjectScratch {
@@ -867,6 +886,8 @@ impl InjectScratch {
             plans: Vec::with_capacity(faults_per_run),
             live: Vec::with_capacity(faults_per_run),
             fctx: FaultCtx::clean(),
+            tl_order: Vec::new(),
+            tl_pool: Vec::new(),
         }
     }
 }
@@ -1024,7 +1045,6 @@ impl CellCtx {
         lo: u64,
         hi: u64,
     ) -> Result<(CampaignResult, Vec<[u64; 4]>)> {
-        use crate::fault::registry::derating;
         let config = &self.config;
         let clean = self.clean.as_ref();
         let trace = clean.trace.as_ref();
@@ -1036,59 +1056,22 @@ impl CellCtx {
         // not a clone (§Perf: staging dominates per-run cost on the
         // small Table-1 workload).
         sys.restore_from(&clean.pristine);
+        if let Some(tr) = trace.filter(|_| config.two_level && config.tl_coalesce) {
+            self.run_chunk_tl_coalesced(
+                sys,
+                scratch,
+                assign,
+                lo,
+                hi,
+                tr,
+                &mut local,
+                &mut local_strata,
+            )?;
+            return Ok((local, local_strata));
+        }
         for i in lo..hi {
-            // Per-injection RNG: deterministic regardless of thread
-            // layout, in its own domain so no index can replay the
-            // problem-generation stream.
-            let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
             let stratum = assign.map(|a| a.stratum_of(i));
-            match stratum {
-                Some(s) => self.registry.sample_plans_in_stratum_into(
-                    clean.horizon,
-                    config.faults_per_run,
-                    config.fault_model,
-                    s,
-                    &mut rng,
-                    &mut scratch.plans,
-                ),
-                None => self.registry.sample_plans_into(
-                    clean.horizon,
-                    config.faults_per_run,
-                    config.fault_model,
-                    &mut rng,
-                    &mut scratch.plans,
-                ),
-            }
-            // Masking derate (see fault::registry::derating): an
-            // un-latched pulse is a clean run by construction — the
-            // fault-free execution was verified against golden above, so
-            // skip the simulation when nothing latches. A burst is one
-            // physical event (one latch draw for the whole plan);
-            // independent faults latch independently.
-            scratch.live.clear();
-            match config.fault_model {
-                FaultModel::Burst | FaultModel::SiteBurst => {
-                    // One physical event, ONE latch draw — compared per
-                    // plan, so a site burst spanning sites of mixed kinds
-                    // stays correlated while each site keeps its own
-                    // masking factor. A single-kind burst (always true
-                    // for `Burst`, whose plans share one site) latches
-                    // all-or-nothing as before.
-                    let u = rng.next_f64();
-                    for &plan in &scratch.plans {
-                        if u < derating::for_kind(plan.kind) {
-                            scratch.live.push(plan);
-                        }
-                    }
-                }
-                FaultModel::Independent => {
-                    for &plan in &scratch.plans {
-                        if rng.next_f64() < derating::for_kind(plan.kind) {
-                            scratch.live.push(plan);
-                        }
-                    }
-                }
-            }
+            self.draw_plans(i, stratum, scratch);
             if scratch.live.is_empty() {
                 local.add(Outcome::CorrectNoRetry, 0);
                 if let Some(s) = stratum {
@@ -1145,6 +1128,149 @@ impl CellCtx {
             }
         }
         Ok((local, local_strata))
+    }
+
+    /// Sample injection `i`'s fault plans into `scratch.plans` and the
+    /// derated (latched) subset into `scratch.live`. The stream is
+    /// seeded by the global injection index alone and every engine path
+    /// consumes it identically, so thread chunking, window coalescing
+    /// and execution order can never perturb the drawn plans.
+    fn draw_plans(&self, i: u64, stratum: Option<usize>, scratch: &mut InjectScratch) {
+        use crate::fault::registry::derating;
+        let config = &self.config;
+        let clean = self.clean.as_ref();
+        // Per-injection RNG: deterministic regardless of thread
+        // layout, in its own domain so no index can replay the
+        // problem-generation stream.
+        let mut rng = Xoshiro256::new(injection_seed(config.seed, i));
+        match stratum {
+            Some(s) => self.registry.sample_plans_in_stratum_into(
+                clean.horizon,
+                config.faults_per_run,
+                config.fault_model,
+                s,
+                &mut rng,
+                &mut scratch.plans,
+            ),
+            None => self.registry.sample_plans_into(
+                clean.horizon,
+                config.faults_per_run,
+                config.fault_model,
+                &mut rng,
+                &mut scratch.plans,
+            ),
+        }
+        // Masking derate (see fault::registry::derating): an
+        // un-latched pulse is a clean run by construction — the
+        // fault-free execution was verified against golden above, so
+        // skip the simulation when nothing latches. A burst is one
+        // physical event (one latch draw for the whole plan);
+        // independent faults latch independently.
+        scratch.live.clear();
+        match config.fault_model {
+            FaultModel::Burst | FaultModel::SiteBurst => {
+                // One physical event, ONE latch draw — compared per
+                // plan, so a site burst spanning sites of mixed kinds
+                // stays correlated while each site keeps its own
+                // masking factor. A single-kind burst (always true
+                // for `Burst`, whose plans share one site) latches
+                // all-or-nothing as before.
+                let u = rng.next_f64();
+                for &plan in &scratch.plans {
+                    if u < derating::for_kind(plan.kind) {
+                        scratch.live.push(plan);
+                    }
+                }
+            }
+            FaultModel::Independent => {
+                for &plan in &scratch.plans {
+                    if rng.next_f64() < derating::for_kind(plan.kind) {
+                        scratch.live.push(plan);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Coalesced two-level chunk: pass 1 draws every injection's plans
+    /// (tallying masked runs immediately) and pools the live plan lists
+    /// keyed by the reference checkpoint their fault windows restore
+    /// from; pass 2 runs the pool grouped by checkpoint, so adjacent
+    /// windows rewind the TCDM with [`Tcdm::undo_to_watermark`] (undo
+    /// only the previous window's writes) instead of a full pristine
+    /// restore + delta replay each. Outcome tallies are additive and
+    /// plan streams `(seed, index)`-pure, so the execution reorder is
+    /// invisible in every count — `tests/twolevel.rs` A/B-pins the
+    /// coalesced engine against [`CampaignConfig::tl_coalesce`] `=
+    /// false` byte for byte.
+    #[allow(clippy::too_many_arguments)]
+    fn run_chunk_tl_coalesced(
+        &self,
+        sys: &mut System,
+        scratch: &mut InjectScratch,
+        assign: Option<&BatchAssign>,
+        lo: u64,
+        hi: u64,
+        trace: &RefTrace,
+        local: &mut CampaignResult,
+        local_strata: &mut [[u64; 4]],
+    ) -> Result<()> {
+        let config = &self.config;
+        let clean = self.clean.as_ref();
+        scratch.tl_order.clear();
+        scratch.tl_pool.clear();
+        for i in lo..hi {
+            let stratum = assign.map(|a| a.stratum_of(i));
+            self.draw_plans(i, stratum, scratch);
+            if scratch.live.is_empty() {
+                local.add(Outcome::CorrectNoRetry, 0);
+                if let Some(s) = stratum {
+                    local_strata[s][Outcome::CorrectNoRetry.index()] += 1;
+                }
+                continue;
+            }
+            let first = crate::fault::first_fault_cycle(&scratch.live)
+                .expect("live plan list is nonempty");
+            let base = trace.checkpoint_index_before(first) as u32;
+            let start = scratch.tl_pool.len() as u32;
+            scratch.tl_pool.extend_from_slice(&scratch.live);
+            scratch
+                .tl_order
+                .push((base, i, start, scratch.live.len() as u32));
+        }
+        // Group on restored checkpoint, ascending injection index within
+        // a group — a pure function of the drawn plans, so the grouping
+        // is identical however the batch was chunked across workers.
+        scratch.tl_order.sort_unstable();
+        let mut restore_cache = None;
+        let InjectScratch {
+            tl_order,
+            tl_pool,
+            fctx,
+            ..
+        } = scratch;
+        for &(_, i, start, len) in tl_order.iter() {
+            let plans = &tl_pool[start as usize..(start + len) as usize];
+            let report = sys.run_staged_with_faults_tl_cached(
+                &clean.layout,
+                config.mode,
+                plans,
+                trace,
+                &clean.pristine,
+                fctx,
+                &mut restore_cache,
+            )?;
+            let outcome = classify(&report, &self.golden);
+            local.add(outcome, report.faults_applied);
+            if let Some(info) = report.abft {
+                local.corrections += info.corrections as u64;
+                local.band_recomputes += info.band_recomputes as u64;
+            }
+            if let Some(s) = assign.map(|a| a.stratum_of(i)) {
+                local_strata[s][outcome.index()] += 1;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1365,14 +1491,14 @@ impl Campaign {
 /// indices are laid out stratum-major (`alloc[0]` indices for stratum 0,
 /// then stratum 1, …), so the stratum of a global injection index is a
 /// pure function of the batch schedule — independent of worker threads.
-struct BatchAssign {
+pub(crate) struct BatchAssign {
     start: u64,
     /// Cumulative allocation bounds, as offsets within the batch.
     ends: Vec<u64>,
 }
 
 impl BatchAssign {
-    fn new(start: u64, alloc: &[u64]) -> Self {
+    pub(crate) fn new(start: u64, alloc: &[u64]) -> Self {
         let mut ends = Vec::with_capacity(alloc.len());
         let mut acc = 0u64;
         for &c in alloc {
@@ -1382,7 +1508,7 @@ impl BatchAssign {
         Self { start, ends }
     }
 
-    fn stratum_of(&self, i: u64) -> usize {
+    pub(crate) fn stratum_of(&self, i: u64) -> usize {
         let off = i - self.start;
         self.ends.partition_point(|&e| e <= off)
     }

@@ -141,6 +141,11 @@ pub struct SweepConfig {
     /// JSON across the whole engine matrix — `tests/shared_trace.rs`
     /// pins it.
     pub two_level: bool,
+    /// Coalesce adjacent per-injection fault windows on the two-level
+    /// executor (see [`CampaignConfig::tl_coalesce`]; default on,
+    /// ignored unless [`SweepConfig::two_level`]; results byte-identical
+    /// either way — the CLI escape hatch is `--no-coalesce`).
+    pub tl_coalesce: bool,
     /// Share one recorded reference trace (and staged image) across all
     /// cells with the same clean-run identity (default on; results are
     /// byte-identical either way — the CLI escape hatch is
@@ -180,6 +185,7 @@ impl SweepConfig {
             stratify_on: StratifyObjective::FunctionalError,
             recoveries: None,
             two_level: false,
+            tl_coalesce: true,
             trace_cache: true,
             work_stealing: true,
             confidence: 0.95,
@@ -747,6 +753,7 @@ impl Sweep {
         cc.stratify = config.stratify;
         cc.stratify_on = config.stratify_on;
         cc.two_level = config.two_level;
+        cc.tl_coalesce = config.tl_coalesce;
         cc.confidence = config.confidence;
         if let Some(recovery) = spec.recovery {
             cc.recovery = recovery;
@@ -981,13 +988,13 @@ struct Grid<'a> {
 /// TCDM and L2 allocations survive the hop) plus the injection scratch
 /// buffers. This is what makes chunk execution zero-copy: adopting a
 /// cell's pristine image is a `copy_from_slice` into existing buffers.
-struct WorkerArena {
+pub(crate) struct WorkerArena {
     sys: Option<(RedMuleConfig, Protection, System)>,
     scratch: InjectScratch,
 }
 
 impl WorkerArena {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self {
             sys: None,
             scratch: InjectScratch::new(crate::fault::MAX_PLANS_PER_RUN),
@@ -997,7 +1004,7 @@ impl WorkerArena {
     /// The worker's `System` (configured for `ctx`'s cell) plus its
     /// injection scratch — returned together so the two disjoint
     /// borrows can feed `CellCtx::run_chunk`.
-    fn arena(&mut self, ctx: &CellCtx) -> (&mut System, &mut InjectScratch) {
+    pub(crate) fn arena(&mut self, ctx: &CellCtx) -> (&mut System, &mut InjectScratch) {
         let cfg = ctx.config.cfg;
         let prot = ctx.config.protection;
         let rebuild = match &self.sys {

@@ -1231,6 +1231,35 @@ impl System {
         pristine: &Tcdm,
         ctx: &mut FaultCtx,
     ) -> Result<RunReport> {
+        self.run_staged_with_faults_tl_cached(layout, mode, plans, trace, pristine, ctx, &mut None)
+    }
+
+    /// [`System::run_staged_with_faults_tl_scratch`] with a caller-owned
+    /// checkpoint-restore cache coalescing adjacent fault windows: when
+    /// the previous call on this cache resumed from the same reference
+    /// checkpoint, the TCDM is rewound to the checkpoint image by
+    /// undoing only that window's writes past the recorded log watermark
+    /// ([`Tcdm::undo_to_watermark`]) instead of a full pristine restore
+    /// plus delta replay. Contents, write log and therefore the
+    /// [`RunReport`] stay bit-identical (`tests/twolevel.rs` A/B-pins
+    /// it) because no mid-run path shrinks the log below the watermark —
+    /// every store, scrub writebacks included, appends to it.
+    ///
+    /// Contract on `restore_cache`: reuse it only across consecutive
+    /// calls with the same `trace` and `pristine` on this `System`, with
+    /// no intervening TCDM mutation outside these calls; pass a fresh
+    /// `&mut None` otherwise (which is exactly the uncached engine).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_staged_with_faults_tl_cached(
+        &mut self,
+        layout: &TaskLayout,
+        mode: ExecMode,
+        plans: &[FaultPlan],
+        trace: &RefTrace,
+        pristine: &Tcdm,
+        ctx: &mut FaultCtx,
+        restore_cache: &mut Option<(usize, usize)>,
+    ) -> Result<RunReport> {
         if plans.len() > crate::fault::MAX_PLANS_PER_RUN {
             return Err(Error::Config(format!(
                 "at most {} faults per run ({} planned)",
@@ -1248,8 +1277,19 @@ impl System {
         }
         let base_idx = trace.checkpoint_index_before(first);
         let cp = &trace.checkpoints[base_idx];
-        self.tcdm.restore_from(pristine);
-        self.tcdm.apply_delta(&cp.tcdm_delta);
+        match *restore_cache {
+            // Coalesced: the log prefix `[0, mark)` is the previous
+            // restore's delta replay, still valid — undo only the
+            // writes past it.
+            Some((idx, mark)) if idx == base_idx && self.tcdm.dirty_log_len() >= mark => {
+                self.tcdm.undo_to_watermark(pristine, &cp.tcdm_delta, mark);
+            }
+            _ => {
+                self.tcdm.restore_from(pristine);
+                self.tcdm.apply_delta(&cp.tcdm_delta);
+                *restore_cache = Some((base_idx, self.tcdm.dirty_log_len()));
+            }
+        }
         self.redmule.restore_from(&cp.redmule);
         ctx.reset_with_plans(plans);
         let last = last_fault_cycle(plans).unwrap_or(0);

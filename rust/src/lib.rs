@@ -53,6 +53,7 @@ pub mod golden;
 pub mod perf;
 pub mod redmule;
 pub mod runtime;
+pub mod service;
 pub mod tcdm;
 pub mod util;
 
@@ -67,6 +68,10 @@ pub mod prelude {
     pub use crate::fp::Fp16;
     pub use crate::golden::{GemmProblem, GemmSpec, Mat};
     pub use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+    pub use crate::service::{
+        BackoffPolicy, CampaignService, JobOutcome, JobSpec, ServiceConfig, ServiceFaultPlan,
+        ServiceReport,
+    };
     pub use crate::util::rng::Xoshiro256;
 }
 

@@ -28,11 +28,15 @@
 //! redmule-ft gemm     [--m M --n N --k K] [--config ...] [--mode ft|perf]
 //! redmule-ft golden-check [--artifacts DIR]
 //! redmule-ft serve    [--tasks N] [--critical-pct P]
+//! redmule-ft serve-sim [--jobs N] [--seed S] [--workers W] [--injections N]
+//!                     [--chunk C] [--fault-profile none|drop|dup|delay|crash|chaos]
+//!                     [--cancel-pct P] [--baseline] [--verify]
 //! ```
 
 use redmule_ft::area::{area_report, floorplan};
 use redmule_ft::campaign::{
-    Campaign, CampaignConfig, StratifyObjective, Sweep, SweepConfig, Table1, OUTCOMES,
+    Campaign, CampaignConfig, CampaignResult, StratifyObjective, Sweep, SweepConfig, Table1,
+    OUTCOMES,
 };
 use redmule_ft::cluster::{RecoveryPolicy, System};
 use redmule_ft::coordinator::{Coordinator, Criticality};
@@ -41,6 +45,7 @@ use redmule_ft::golden::{GemmProblem, GemmSpec};
 use redmule_ft::perf::{mode_report, retry_expected_overhead, throughput};
 use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
 use redmule_ft::runtime::GoldenRuntime;
+use redmule_ft::service::{CampaignService, JobOutcome, JobSpec, ServiceConfig, ServiceFaultPlan};
 use redmule_ft::util::rng::Xoshiro256;
 
 use std::collections::HashMap;
@@ -216,6 +221,7 @@ fn main() -> ExitCode {
         "gemm" => cmd_gemm(&args),
         "golden-check" => cmd_golden_check(&args),
         "serve" => cmd_serve(&args),
+        "serve-sim" => cmd_serve_sim(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -280,7 +286,17 @@ fn print_help() {
            perf          performance-mode vs FT-mode cycle model (--m/--n/--k)\n\
            gemm          run one GEMM on the simulator and verify vs golden\n\
            golden-check  execute AOT artifacts via PJRT and compare bit-exactly\n\
-           serve         mixed-criticality coordinator demo (--tasks, --critical-pct)"
+           serve         mixed-criticality coordinator demo (--tasks, --critical-pct)\n\
+           serve-sim     deterministic campaign-service simulation: a priority job\n\
+                         queue over supervised workers on a virtual clock with a\n\
+                         faulty message layer (--jobs, --seed, --workers,\n\
+                         --injections per job, --chunk injections per dispatch,\n\
+                         --fault-profile none|drop|dup|delay|crash|chaos,\n\
+                         --cancel-pct P cancels ~P % of jobs mid-run; stdout is a\n\
+                         deterministic JSON doc whose counts are byte-identical\n\
+                         under every profile — --baseline prints the same doc from\n\
+                         the plain single-threaded engine, --verify re-checks every\n\
+                         completed job against it in-process)"
     );
 }
 
@@ -293,6 +309,7 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     cfg.fast_forward = !args.flag("direct");
     cfg.checkpoint_interval = args.get("checkpoint-interval", 0u64);
     cfg.two_level = two_level_flag(args);
+    cfg.tl_coalesce = !args.flag("no-coalesce");
     cfg.precision_target = args.get("precision", 0.0f64);
     cfg.batch_size = args.get("batch-size", 0u64);
     cfg.min_injections = args.get("min-injections", 0u64);
@@ -412,6 +429,7 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     sc.fast_forward = !args.flag("direct");
     sc.checkpoint_interval = args.get("checkpoint-interval", 0u64);
     sc.two_level = two_level_flag(args);
+    sc.tl_coalesce = !args.flag("no-coalesce");
     if let Some(raw) = args.kv.get("configs") {
         sc.protections = parse_list(raw, "--configs", parse_protection)?;
     }
@@ -718,5 +736,193 @@ fn cmd_serve(args: &Args) -> redmule_ft::Result<()> {
         m.config_cycles,
         m.total_cycles()
     );
+    Ok(())
+}
+
+/// The deterministic job mix of `serve-sim`: consecutive pairs share a
+/// clean-run identity (protection + campaign seed), so the shared
+/// [`redmule_ft::campaign::TraceCache`] is genuinely exercised across
+/// jobs; odd jobs run the adaptive batch schedule so progress streams
+/// and batch barriers are exercised too. Both the service arm and the
+/// `--baseline` arm build jobs through this one function — that is what
+/// makes their byte-for-byte comparison meaningful.
+fn serve_sim_job_config(seed: u64, injections: u64, i: u64) -> CampaignConfig {
+    const PROTS: [Protection; 4] = [
+        Protection::Full,
+        Protection::Abft,
+        Protection::Data,
+        Protection::AbftOnline,
+    ];
+    let family = i / 2;
+    let protection = PROTS[(family % 4) as usize];
+    let job_seed = seed.wrapping_add(family.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut cfg = CampaignConfig::table1(protection, injections, job_seed);
+    cfg.threads = 1;
+    if i % 2 == 1 {
+        cfg.precision_target = 0.05;
+        cfg.batch_size = (injections / 4).max(8);
+    }
+    cfg
+}
+
+/// Schedule-invariant count fields of one campaign result — exactly the
+/// fields the service's byte-identity contract covers (no wall-clock
+/// throughput, no scheduler telemetry).
+fn result_json(r: &CampaignResult) -> String {
+    let strata: Vec<String> = r
+        .strata
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"name\":\"{}\",\"n\":{},\"outcomes\":[{},{},{},{}]}}",
+                s.name, s.n, s.outcomes[0], s.outcomes[1], s.outcomes[2], s.outcomes[3]
+            )
+        })
+        .collect();
+    format!(
+        "{{\"total\":{},\"correct_no_retry\":{},\"correct_with_retry\":{},\"incorrect\":{},\
+         \"timeout\":{},\"applied\":{},\"faults_applied\":{},\"corrections\":{},\
+         \"band_recomputes\":{},\"batches\":{},\"stopped_early\":{},\"strata\":[{}]}}",
+        r.total,
+        r.correct_no_retry,
+        r.correct_with_retry,
+        r.incorrect,
+        r.timeout,
+        r.applied,
+        r.faults_applied,
+        r.corrections,
+        r.band_recomputes,
+        r.batches,
+        r.stopped_early,
+        strata.join(",")
+    )
+}
+
+fn job_json(
+    id: u64,
+    priority: i32,
+    protection: Protection,
+    outcome: &str,
+    result: Option<&CampaignResult>,
+) -> String {
+    format!(
+        "{{\"id\":{id},\"protection\":\"{}\",\"priority\":{priority},\"outcome\":\"{outcome}\",\"result\":{}}}",
+        protection.name(),
+        result.map_or_else(|| "null".to_string(), result_json)
+    )
+}
+
+fn cmd_serve_sim(args: &Args) -> redmule_ft::Result<()> {
+    let n_jobs = args.get("jobs", 6u64);
+    let seed = args.get("seed", 2025u64);
+    let injections = args.get("injections", 400u64);
+    let profile = args
+        .kv
+        .get("fault-profile")
+        .map(String::as_str)
+        .unwrap_or("none");
+    let plan = ServiceFaultPlan::by_name(profile).ok_or_else(|| {
+        redmule_ft::Error::Config(format!(
+            "unknown --fault-profile '{profile}' (none|drop|dup|delay|crash|chaos)"
+        ))
+    })?;
+    let cancel_pct = args.get("cancel-pct", 0u64).min(100);
+
+    if args.flag("baseline") {
+        // Ground truth: the same jobs through the plain single-threaded
+        // engine. The service arm under any fault profile (with no
+        // cancellations) must print this document byte for byte.
+        let mut jobs = Vec::new();
+        for i in 0..n_jobs {
+            let cfg = serve_sim_job_config(seed, injections, i);
+            let protection = cfg.protection;
+            let mut r = Campaign::run(&cfg)?;
+            r.wall_seconds = 0.0;
+            jobs.push(job_json(i, (i % 3) as i32, protection, "completed", Some(&r)));
+        }
+        println!(
+            "{{\"schema\":\"redmule-ft/service-v1\",\"seed\":{seed},\"injections\":{injections},\
+             \"jobs\":[{}],\"cache_resident\":0}}",
+            jobs.join(",")
+        );
+        return Ok(());
+    }
+
+    let mut sc = ServiceConfig::new(seed);
+    sc.workers = args.get("workers", 3u64).max(1) as usize;
+    sc.chunk_injections = args.get("chunk", 64u64);
+    sc.fault_plan = plan;
+    let mut svc = CampaignService::new(sc)?;
+    let mut cancel_rng = Xoshiro256::new(seed ^ 0x5245_444D_5343_414E); // "REDMSCAN"
+    for i in 0..n_jobs {
+        let cfg = serve_sim_job_config(seed, injections, i);
+        let id = svc.submit(JobSpec::new(cfg).with_priority((i % 3) as i32));
+        if cancel_rng.below(100) < cancel_pct {
+            svc.cancel_at(id, 1 + cancel_rng.below(5_000));
+        }
+    }
+    let report = svc.run()?;
+
+    let mut jobs = Vec::new();
+    let mut mismatches = 0u64;
+    for jr in &report.jobs {
+        let cfg = serve_sim_job_config(seed, injections, jr.id);
+        let protection = cfg.protection;
+        let (name, result) = match &jr.outcome {
+            JobOutcome::Completed(r) => ("completed", Some(r)),
+            JobOutcome::Cancelled => ("cancelled", None),
+            JobOutcome::Failed(_) => ("failed", None),
+        };
+        jobs.push(job_json(jr.id, jr.priority, protection, name, result));
+        eprintln!(
+            "job {}: {} ({} requeues, {} progress points)",
+            jr.id,
+            name,
+            jr.requeues,
+            jr.progress.len()
+        );
+        if args.flag("verify") {
+            if let JobOutcome::Completed(r) = &jr.outcome {
+                let mut want = Campaign::run(&cfg)?;
+                want.wall_seconds = 0.0;
+                if result_json(r) != result_json(&want) {
+                    mismatches += 1;
+                    eprintln!("job {}: MISMATCH vs the single-threaded engine", jr.id);
+                }
+            }
+        }
+    }
+    println!(
+        "{{\"schema\":\"redmule-ft/service-v1\",\"seed\":{seed},\"injections\":{injections},\
+         \"jobs\":[{}],\"cache_resident\":{}}}",
+        jobs.join(","),
+        report.trace_cache_resident
+    );
+    let t = &report.telemetry;
+    eprintln!(
+        "serve-sim: profile {profile}, {} events to vt {}, {} msgs ({} dropped, {} duplicated), \
+         {} crashes, {} kills, {} requeues, {} stale dones, {} stale runs",
+        t.events,
+        t.virtual_time,
+        t.msgs_sent,
+        t.msgs_dropped,
+        t.msgs_duplicated,
+        t.worker_crashes,
+        t.workers_killed,
+        t.chunk_requeues,
+        t.stale_dones,
+        t.stale_runs
+    );
+    if report.trace_cache_resident != 0 {
+        return Err(redmule_ft::Error::Sim(format!(
+            "trace cache still holds {} entries after every job terminated",
+            report.trace_cache_resident
+        )));
+    }
+    if mismatches > 0 {
+        return Err(redmule_ft::Error::Sim(format!(
+            "{mismatches} completed job(s) diverged from the single-threaded engine"
+        )));
+    }
     Ok(())
 }

@@ -1,0 +1,1002 @@
+//! Campaign-as-a-service: a deterministic async job engine over the
+//! campaign layer — submission, priorities, per-job cancellation,
+//! streaming per-batch progress, a shared cross-job
+//! [`TraceCache`], supervised workers with timeout, and bounded
+//! exponential backoff with seed-derived jitter.
+//!
+//! There is no tokio and no OS thread pool in here: the engine runs on
+//! the in-crate deterministic runtime of [`sim`] — one real thread, a
+//! virtual clock, a totally ordered event queue, and a message layer
+//! whose drop/duplicate/delay/reorder behavior (plus worker crashes) is
+//! driven by a [`ServiceFaultPlan`] from the same domain-separated RNG
+//! streams the campaign layer already uses. The service layer is
+//! therefore itself a fault-injection target with *checkable*
+//! invariants rather than a best-effort integration test:
+//!
+//! * **exactly-once termination** — every submitted job reaches exactly
+//!   one terminal [`JobOutcome`], under every fault schedule;
+//! * **byte-identical counts** — a completed job's
+//!   [`CampaignResult`] count fields equal the single-threaded
+//!   [`Campaign::run`](crate::campaign::Campaign::run) of the same
+//!   configuration, byte for byte, because injection plans are
+//!   `(seed, index)`-pure, chunk tallies are additive, and batch
+//!   boundaries are pure functions of the merged counts — no lost and
+//!   no double-counted injection survives the invariant;
+//! * **cache drain** — every terminal job (completed, failed *or*
+//!   cancelled) releases its [`TraceCache`] pin, so
+//!   [`ServiceReport::trace_cache_resident`] is 0 after every run.
+//!
+//! # Exactly-once chunk accounting
+//!
+//! A batch is split into chunks; a chunk attempt is sent to a worker
+//! over the faulty link, computed at delivery (results are index-pure,
+//! so *when* a chunk computes is unobservable), and its tally returns
+//! as a `Done` message. The dispatcher merges the **first** `Done` per
+//! chunk and ignores the rest — a stale `Done` from a presumed-dead
+//! attempt merges just as well as the retry's, because both carry the
+//! identical deterministic tally. Timeouts are attempt-stamped, so a
+//! late heartbeat can never kill a newer attempt; requeues back off
+//! exponentially with per-`(job, chunk, attempt)` jitter streams
+//! ([`BackoffPolicy`]).
+
+pub mod sim;
+pub mod supervisor;
+
+mod queue;
+
+pub use sim::ServiceFaultPlan;
+pub use supervisor::BackoffPolicy;
+
+use crate::campaign::sweep::WorkerArena;
+use crate::campaign::{
+    problem_seed, BatchAssign, BatchSchedule, CampaignConfig, CampaignResult, CellCtx, TraceCache,
+    TraceKey,
+};
+use crate::golden::GemmProblem;
+use crate::util::rng::mix64;
+use crate::{Error, Result};
+use queue::ReadyQueue;
+use sim::{crash_fault, link_fault, EventQueue};
+use std::collections::VecDeque;
+
+/// Handle of a submitted job (its submission index).
+pub type JobId = u64;
+
+/// One unit of service work: a full campaign configuration plus a
+/// scheduling priority (higher runs first; FIFO within a priority).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub config: CampaignConfig,
+    pub priority: i32,
+}
+
+impl JobSpec {
+    pub fn new(config: CampaignConfig) -> Self {
+        Self {
+            config,
+            priority: 0,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// The exactly-once terminal state of a job.
+#[derive(Debug, Clone)]
+pub enum JobOutcome {
+    /// The campaign ran to its stop rule; counts are byte-identical to
+    /// the single-threaded CLI run of the same configuration.
+    Completed(CampaignResult),
+    /// Cancelled before completion (its partial tallies are discarded).
+    Cancelled,
+    /// Rejected or aborted with a deterministic error (bad
+    /// configuration, simulation-level failure).
+    Failed(String),
+}
+
+impl JobOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobOutcome::Completed(_) => "completed",
+            JobOutcome::Cancelled => "cancelled",
+            JobOutcome::Failed(_) => "failed",
+        }
+    }
+}
+
+/// One streaming progress sample, emitted every time a batch fully
+/// merges: the confidence interval tightens batch over batch, which is
+/// exactly what a subscribed client would watch.
+#[derive(Debug, Clone)]
+pub struct ProgressUpdate {
+    pub job: JobId,
+    /// Virtual time of the batch close.
+    pub time: u64,
+    /// Injections merged so far.
+    pub total: u64,
+    /// Batches merged so far.
+    pub batches: u64,
+    /// Functional-error CI half-width at the job's confidence level
+    /// (via [`CampaignResult::functional_error_estimate`]).
+    pub half_width: f64,
+}
+
+/// Per-job slice of the final report.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: JobId,
+    pub priority: i32,
+    pub outcome: JobOutcome,
+    pub progress: Vec<ProgressUpdate>,
+    /// Chunk attempts this job lost to timeouts (crashes, drops, stuck
+    /// workers) and requeued.
+    pub requeues: u64,
+}
+
+/// Scheduler-side counters — diagnostics only, deliberately *not* part
+/// of any byte-identity comparison (they vary across fault schedules;
+/// the campaign counts must not).
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    pub events: u64,
+    pub virtual_time: u64,
+    pub msgs_sent: u64,
+    pub msgs_dropped: u64,
+    pub msgs_duplicated: u64,
+    pub worker_crashes: u64,
+    /// Workers force-freed by a supervisor timeout or a cancellation.
+    pub workers_killed: u64,
+    pub chunk_requeues: u64,
+    /// `Done` deliveries ignored as duplicates or stale.
+    pub stale_dones: u64,
+    /// `Run` deliveries ignored as duplicates or stale.
+    pub stale_runs: u64,
+    /// Shared [`TraceCache`] adoptions — jobs with one clean-run
+    /// identity record it once and share it.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Everything `run()` hands back.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub jobs: Vec<JobReport>,
+    /// Clean-run entries still resident in the shared [`TraceCache`] —
+    /// the cache-drain invariant says this is 0.
+    pub trace_cache_resident: usize,
+    pub telemetry: Telemetry,
+}
+
+/// Service-level knobs. Everything that shapes timing is in virtual
+/// ticks; nothing reads a wall clock.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Root seed of every service-level stream (messages, crashes,
+    /// jitter). Job campaigns keep their own per-job seeds.
+    pub seed: u64,
+    /// Simulated worker processes.
+    pub workers: usize,
+    /// Injections per dispatched chunk.
+    pub chunk_injections: u64,
+    /// Supervisor deadline per chunk attempt, in virtual ticks; 0 = auto
+    /// (chunk cost plus round-trip margin — always at least that, so a
+    /// healthy attempt can never be declared dead before its `Done`
+    /// could possibly arrive).
+    pub chunk_timeout: u64,
+    pub backoff: BackoffPolicy,
+    pub fault_plan: ServiceFaultPlan,
+    /// Base one-way message latency in virtual ticks.
+    pub base_latency: u64,
+    /// Virtual ticks a worker spends per injection of a chunk.
+    pub tick_per_injection: u64,
+    /// Watchdog: abort (as a scheduler bug) after this many events.
+    pub max_events: u64,
+}
+
+impl ServiceConfig {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            workers: 4,
+            chunk_injections: 256,
+            chunk_timeout: 0,
+            backoff: BackoffPolicy::default(),
+            fault_plan: ServiceFaultPlan::none(),
+            base_latency: 1,
+            tick_per_injection: 1,
+            max_events: 10_000_000,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("service needs at least one worker".into()));
+        }
+        if self.chunk_injections == 0 {
+            return Err(Error::Config("service chunk size must be >= 1".into()));
+        }
+        if self.max_events == 0 {
+            return Err(Error::Config("service event watchdog must be >= 1".into()));
+        }
+        self.fault_plan.validate().map_err(Error::Config)?;
+        self.backoff.validate().map_err(Error::Config)?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ internals
+
+#[derive(Debug, Clone)]
+struct ChunkCounts {
+    local: CampaignResult,
+    strata: Vec<[u64; 4]>,
+}
+
+#[derive(Clone)]
+enum Ev {
+    /// A chunk assignment arriving at a worker (faulty link).
+    Run {
+        worker: usize,
+        job: JobId,
+        batch: u64,
+        idx: u32,
+        attempt: u32,
+        lo: u64,
+        hi: u64,
+    },
+    /// A chunk tally arriving back at the dispatcher (faulty link).
+    Done {
+        job: JobId,
+        batch: u64,
+        idx: u32,
+        counts: Box<ChunkCounts>,
+    },
+    /// A crashed worker finished restarting (reliable local timer).
+    WorkerUp { worker: usize, gen: u64 },
+    /// A worker finished computing and is free again (local, reliable).
+    WorkerDone { worker: usize, gen: u64 },
+    /// A requeued chunk's backoff expired.
+    Retry {
+        job: JobId,
+        batch: u64,
+        idx: u32,
+        attempt: u32,
+    },
+    /// Supervisor deadline of one chunk attempt.
+    Timeout {
+        job: JobId,
+        batch: u64,
+        idx: u32,
+        attempt: u32,
+    },
+    /// Client-requested cancellation.
+    Cancel { job: JobId },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CState {
+    Ready,
+    InFlight,
+    Waiting,
+    Merged,
+}
+
+struct ChunkRt {
+    lo: u64,
+    hi: u64,
+    attempt: u32,
+    state: CState,
+}
+
+struct Batch {
+    start: u64,
+    size: u64,
+    assign: Option<BatchAssign>,
+    chunks: Vec<ChunkRt>,
+    /// Chunk indices ready for dispatch (may hold stale entries for
+    /// chunks merged by a late `Done`; consumers skip non-`Ready` ones).
+    ready: VecDeque<u32>,
+    outstanding: u32,
+}
+
+struct RunState {
+    ctx: CellCtx,
+    sched: BatchSchedule,
+    result: CampaignResult,
+    /// First injection index of the *next* batch.
+    start: u64,
+    batch: Batch,
+}
+
+enum Phase {
+    Queued,
+    Running(Box<RunState>),
+    Done(JobOutcome),
+}
+
+struct JobRt {
+    spec: JobSpec,
+    problem: GemmProblem,
+    /// The pinned clean-run identity; taken (exactly once) on any
+    /// terminal transition.
+    key: Option<TraceKey>,
+    phase: Phase,
+    progress: Vec<ProgressUpdate>,
+    requeues: u64,
+    in_ready: bool,
+}
+
+struct Reservation {
+    job: JobId,
+    batch: u64,
+    idx: u32,
+    attempt: u32,
+    /// Set when the (first copy of the) `Run` actually arrived.
+    started: bool,
+}
+
+struct WorkerRt {
+    up: bool,
+    /// Bumped whenever the supervisor force-frees or crashes the worker;
+    /// stale `WorkerDone`/`WorkerUp` timers carry the old generation and
+    /// are ignored.
+    gen: u64,
+    res: Option<Reservation>,
+    arena: WorkerArena,
+}
+
+/// The deterministic campaign service. Build with [`CampaignService::new`],
+/// [`CampaignService::submit`] jobs (plus optional
+/// [`CampaignService::cancel_at`] schedules), then [`CampaignService::run`]
+/// the whole simulation to quiescence.
+pub struct CampaignService {
+    cfg: ServiceConfig,
+    cache: TraceCache,
+    jobs: Vec<JobRt>,
+    workers: Vec<WorkerRt>,
+    queue: EventQueue<Ev>,
+    ready: ReadyQueue,
+    msg_seq: u64,
+    exec_seq: u64,
+    telemetry: Telemetry,
+}
+
+impl CampaignService {
+    pub fn new(cfg: ServiceConfig) -> Result<Self> {
+        cfg.validate()?;
+        let workers = (0..cfg.workers)
+            .map(|_| WorkerRt {
+                up: true,
+                gen: 0,
+                res: None,
+                arena: WorkerArena::new(),
+            })
+            .collect();
+        Ok(Self {
+            cfg,
+            cache: TraceCache::new(),
+            jobs: Vec::new(),
+            workers,
+            queue: EventQueue::new(),
+            ready: ReadyQueue::new(),
+            msg_seq: 0,
+            exec_seq: 0,
+            telemetry: Telemetry::default(),
+        })
+    }
+
+    /// Submit a job. Its clean-run identity is pinned in the shared
+    /// [`TraceCache`] immediately (so a later-starting job can never
+    /// evict an identity a queued job still needs) and released exactly
+    /// once on the terminal transition. The problem instance is the
+    /// same one [`Campaign::run`](crate::campaign::Campaign::run) would
+    /// draw — that is what makes service-vs-CLI byte-identity a
+    /// meaningful assertion.
+    pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        let id = self.jobs.len() as JobId;
+        let problem =
+            GemmProblem::random(&spec.config.spec, problem_seed(spec.config.seed));
+        let key = TraceKey::of(&spec.config, &problem);
+        self.cache.retain(key.clone());
+        self.ready.push(spec.priority, id, id);
+        self.jobs.push(JobRt {
+            spec,
+            problem,
+            key: Some(key),
+            phase: Phase::Queued,
+            progress: Vec::new(),
+            requeues: 0,
+            in_ready: true,
+        });
+        id
+    }
+
+    /// Schedule a cancellation of `job` at virtual time `time` (fires
+    /// mid-run like any other event; cancelling a terminal job is a
+    /// no-op).
+    pub fn cancel_at(&mut self, job: JobId, time: u64) {
+        self.queue.push_at(time, Ev::Cancel { job });
+    }
+
+    /// Run the simulation to quiescence and report. Errors only on
+    /// scheduler bugs (watchdog overrun, a non-terminal job at
+    /// quiescence) — per-job failures are [`JobOutcome::Failed`].
+    pub fn run(mut self) -> Result<ServiceReport> {
+        self.pump();
+        let mut events = 0u64;
+        while let Some((_, ev)) = self.queue.pop() {
+            events += 1;
+            if events > self.cfg.max_events {
+                return Err(Error::Sim(format!(
+                    "campaign service watchdog: {events} events without quiescing"
+                )));
+            }
+            self.handle(ev);
+            self.pump();
+        }
+        self.telemetry.events = events;
+        self.telemetry.virtual_time = self.queue.now();
+        self.telemetry.cache_hits = self.cache.hits();
+        self.telemetry.cache_misses = self.cache.misses();
+        for (i, jr) in self.jobs.iter().enumerate() {
+            if !matches!(jr.phase, Phase::Done(_)) {
+                return Err(Error::Sim(format!(
+                    "service quiesced with job {i} non-terminal — scheduler bug"
+                )));
+            }
+            debug_assert!(jr.key.is_none(), "terminal job {i} still holds its pin");
+        }
+        let trace_cache_resident = self.cache.len();
+        let jobs = self
+            .jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, jr)| JobReport {
+                id: i as JobId,
+                priority: jr.spec.priority,
+                outcome: match jr.phase {
+                    Phase::Done(o) => o,
+                    _ => unreachable!("checked above"),
+                },
+                progress: jr.progress,
+                requeues: jr.requeues,
+            })
+            .collect();
+        Ok(ServiceReport {
+            jobs,
+            trace_cache_resident,
+            telemetry: self.telemetry,
+        })
+    }
+
+    // ------------------------------------------------------ dispatcher
+
+    /// Assign ready chunks to free workers until one side runs out.
+    fn pump(&mut self) {
+        loop {
+            let Some(w) = self
+                .workers
+                .iter()
+                .position(|wk| wk.up && wk.res.is_none())
+            else {
+                return;
+            };
+            // Highest-priority job with dispatchable work; lazily
+            // prepared on first pick.
+            let j = loop {
+                let Some(job) = self.ready.pop() else { return };
+                let j = job as usize;
+                self.jobs[j].in_ready = false;
+                if matches!(self.jobs[j].phase, Phase::Queued) {
+                    self.prepare(j);
+                }
+                if self.has_ready_chunk(j) {
+                    break j;
+                }
+            };
+            let Some(idx) = self.take_ready_chunk(j) else {
+                continue;
+            };
+            self.assign_chunk(w, j, idx);
+            if self.has_ready_chunk(j) {
+                self.mark_job_ready(j);
+            }
+        }
+    }
+
+    /// Lazy job start: validate + stage + record (or adopt from the
+    /// shared cache), then open the first batch. Failures are terminal.
+    fn prepare(&mut self, j: usize) {
+        let prepared = CellCtx::prepare(
+            &self.jobs[j].spec.config,
+            &self.jobs[j].problem,
+            Some(&self.cache),
+        );
+        match prepared {
+            Ok(ctx) => {
+                let sched = ctx.schedule();
+                let result = ctx.init_result();
+                self.jobs[j].phase = Phase::Running(Box::new(RunState {
+                    ctx,
+                    sched,
+                    result,
+                    start: 0,
+                    batch: Batch {
+                        start: 0,
+                        size: 0,
+                        assign: None,
+                        chunks: Vec::new(),
+                        ready: VecDeque::new(),
+                        outstanding: 0,
+                    },
+                }));
+                self.open_batch(j);
+            }
+            Err(e) => self.finish(j, JobOutcome::Failed(e.to_string())),
+        }
+    }
+
+    /// Open the next batch (size, stratum allocation and chunk split are
+    /// pure functions of the merged counts so far — identical to the
+    /// single-threaded engine's batch loop), or finalize when the
+    /// schedule is exhausted.
+    fn open_batch(&mut self, j: usize) {
+        let done = {
+            let Phase::Running(rs) = &mut self.jobs[j].phase else {
+                return;
+            };
+            let size = rs.sched.batch_at(rs.start);
+            if size == 0 {
+                true
+            } else {
+                let assign = if rs.ctx.config.stratify {
+                    Some(BatchAssign::new(rs.start, &rs.ctx.allocate(&rs.result, size)))
+                } else {
+                    None
+                };
+                let chunk_len = self.cfg.chunk_injections;
+                let mut chunks = Vec::new();
+                let mut ready = VecDeque::new();
+                let mut lo = rs.start;
+                let end = rs.start + size;
+                while lo < end {
+                    let hi = (lo + chunk_len).min(end);
+                    ready.push_back(chunks.len() as u32);
+                    chunks.push(ChunkRt {
+                        lo,
+                        hi,
+                        attempt: 0,
+                        state: CState::Ready,
+                    });
+                    lo = hi;
+                }
+                rs.batch = Batch {
+                    start: rs.start,
+                    size,
+                    assign,
+                    outstanding: chunks.len() as u32,
+                    chunks,
+                    ready,
+                };
+                false
+            }
+        };
+        if done {
+            self.finalize_completed(j);
+        } else {
+            self.mark_job_ready(j);
+        }
+    }
+
+    fn finalize_completed(&mut self, j: usize) {
+        let outcome = {
+            let Phase::Running(rs) = &mut self.jobs[j].phase else {
+                return;
+            };
+            let target = rs.ctx.config.precision_target;
+            rs.result.stopped_early = rs.sched.stopped_early(rs.start, &rs.result, target);
+            // Virtual worlds have no wall clock; the comparison contract
+            // is "count fields byte-identical", and 0.0 keeps the field
+            // honest rather than pretending ticks are seconds.
+            rs.result.wall_seconds = 0.0;
+            JobOutcome::Completed(rs.result.clone())
+        };
+        self.finish(j, outcome);
+    }
+
+    /// The exactly-once terminal transition: set the outcome, release
+    /// the cache pin, and kill any worker still reserved for this job.
+    fn finish(&mut self, j: usize, outcome: JobOutcome) {
+        if matches!(self.jobs[j].phase, Phase::Done(_)) {
+            return;
+        }
+        self.jobs[j].phase = Phase::Done(outcome);
+        if let Some(key) = self.jobs[j].key.take() {
+            self.cache.release(&key);
+        }
+        let job = j as JobId;
+        for wk in &mut self.workers {
+            if wk.res.as_ref().is_some_and(|r| r.job == job) {
+                wk.res = None;
+                wk.gen += 1;
+                self.telemetry.workers_killed += 1;
+            }
+        }
+    }
+
+    /// Drop stale (merged) entries off the ready deque, then report
+    /// whether a dispatchable chunk remains.
+    fn has_ready_chunk(&mut self, j: usize) -> bool {
+        let Phase::Running(rs) = &mut self.jobs[j].phase else {
+            return false;
+        };
+        while let Some(&idx) = rs.batch.ready.front() {
+            if rs.batch.chunks[idx as usize].state == CState::Ready {
+                return true;
+            }
+            rs.batch.ready.pop_front();
+        }
+        false
+    }
+
+    fn take_ready_chunk(&mut self, j: usize) -> Option<u32> {
+        let Phase::Running(rs) = &mut self.jobs[j].phase else {
+            return None;
+        };
+        while let Some(idx) = rs.batch.ready.pop_front() {
+            if rs.batch.chunks[idx as usize].state == CState::Ready {
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    fn mark_job_ready(&mut self, j: usize) {
+        if self.jobs[j].in_ready || !self.has_ready_chunk(j) {
+            return;
+        }
+        self.jobs[j].in_ready = true;
+        self.ready
+            .push(self.jobs[j].spec.priority, j as u64, j as u64);
+    }
+
+    fn chunk_cost(&self, lo: u64, hi: u64) -> u64 {
+        (hi - lo)
+            .saturating_mul(self.cfg.tick_per_injection)
+            .saturating_add(1)
+    }
+
+    /// Supervisor deadline of one attempt: never below the chunk cost
+    /// plus a full round trip at maximum link delay, so a healthy
+    /// attempt cannot be declared dead before its `Done` could arrive.
+    fn deadline(&self, cost: u64) -> u64 {
+        let round_trip = (self.cfg.base_latency)
+            .saturating_add(self.cfg.fault_plan.delay_max)
+            .saturating_mul(2)
+            .saturating_add(2);
+        self.cfg.chunk_timeout.max(cost.saturating_add(round_trip))
+    }
+
+    fn assign_chunk(&mut self, w: usize, j: usize, idx: u32) {
+        let (batch, attempt, lo, hi) = {
+            let Phase::Running(rs) = &mut self.jobs[j].phase else {
+                return;
+            };
+            let c = &mut rs.batch.chunks[idx as usize];
+            c.state = CState::InFlight;
+            (rs.batch.start, c.attempt, c.lo, c.hi)
+        };
+        let job = j as JobId;
+        self.workers[w].res = Some(Reservation {
+            job,
+            batch,
+            idx,
+            attempt,
+            started: false,
+        });
+        self.send(
+            0,
+            Ev::Run {
+                worker: w,
+                job,
+                batch,
+                idx,
+                attempt,
+                lo,
+                hi,
+            },
+        );
+        let deadline = self.deadline(self.chunk_cost(lo, hi));
+        self.queue.push_after(
+            deadline,
+            Ev::Timeout {
+                job,
+                batch,
+                idx,
+                attempt,
+            },
+        );
+    }
+
+    /// Send `ev` over the faulty link, `extra` ticks from now: the
+    /// message's fate (drop / duplicate / per-copy delay) is a pure
+    /// function of the global message sequence number.
+    fn send(&mut self, extra: u64, ev: Ev) {
+        let fault = link_fault(self.cfg.seed, &self.cfg.fault_plan, self.msg_seq);
+        self.msg_seq += 1;
+        self.telemetry.msgs_sent += 1;
+        let base = extra + self.cfg.base_latency;
+        if fault.dropped {
+            self.telemetry.msgs_dropped += 1;
+        } else {
+            self.queue.push_after(base + fault.delays[0], ev.clone());
+        }
+        if fault.duplicated {
+            self.telemetry.msgs_duplicated += 1;
+            self.queue.push_after(base + fault.delays[1], ev);
+        }
+    }
+
+    // --------------------------------------------------- event handlers
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Run {
+                worker,
+                job,
+                batch,
+                idx,
+                attempt,
+                lo,
+                hi,
+            } => self.on_run(worker, job, batch, idx, attempt, lo, hi),
+            Ev::Done {
+                job,
+                batch,
+                idx,
+                counts,
+            } => self.on_done(job, batch, idx, *counts),
+            Ev::WorkerUp { worker, gen } => {
+                let wk = &mut self.workers[worker];
+                if wk.gen == gen && !wk.up {
+                    wk.up = true;
+                }
+            }
+            Ev::WorkerDone { worker, gen } => {
+                let wk = &mut self.workers[worker];
+                if wk.gen == gen && wk.res.as_ref().is_some_and(|r| r.started) {
+                    wk.res = None;
+                }
+            }
+            Ev::Retry {
+                job,
+                batch,
+                idx,
+                attempt,
+            } => self.on_retry(job, batch, idx, attempt),
+            Ev::Timeout {
+                job,
+                batch,
+                idx,
+                attempt,
+            } => self.on_timeout(job, batch, idx, attempt),
+            Ev::Cancel { job } => {
+                let j = job as usize;
+                if j < self.jobs.len() && !matches!(self.jobs[j].phase, Phase::Done(_)) {
+                    self.finish(j, JobOutcome::Cancelled);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_run(
+        &mut self,
+        w: usize,
+        job: JobId,
+        batch: u64,
+        idx: u32,
+        attempt: u32,
+        lo: u64,
+        hi: u64,
+    ) {
+        let matches = self.workers[w].up
+            && self.workers[w].res.as_ref().is_some_and(|r| {
+                r.job == job && r.batch == batch && r.idx == idx && r.attempt == attempt
+                    && !r.started
+            });
+        if !matches {
+            self.telemetry.stale_runs += 1;
+            return;
+        }
+        if let Some(r) = &mut self.workers[w].res {
+            r.started = true;
+        }
+        let cost = self.chunk_cost(lo, hi);
+        let exec = self.exec_seq;
+        self.exec_seq += 1;
+        let (died, worked) = crash_fault(self.cfg.seed, &self.cfg.fault_plan, exec, cost);
+        if died {
+            // The process dies `worked` ticks in: partial state is lost
+            // (worker-local arenas hold nothing observable), no `Done`
+            // is ever sent, and the supervisor's timeout requeues the
+            // chunk. The worker restarts after the plan's restart time.
+            let wk = &mut self.workers[w];
+            wk.res = None;
+            wk.up = false;
+            wk.gen += 1;
+            let gen = wk.gen;
+            self.telemetry.worker_crashes += 1;
+            self.queue.push_after(
+                worked + self.cfg.fault_plan.worker_restart.max(1),
+                Ev::WorkerUp { worker: w, gen },
+            );
+            return;
+        }
+        // Compute the chunk. Results are a pure function of
+        // `(config, [lo, hi))` — independent of worker, attempt, and
+        // virtual time — so computing at delivery time and timestamping
+        // the completion `cost` ticks later is unobservable.
+        let j = job as usize;
+        let computed = {
+            let jr = &self.jobs[j];
+            let Phase::Running(rs) = &jr.phase else {
+                // Unreachable: a terminal transition kills this
+                // reservation, which un-matches the delivery above.
+                self.workers[w].res = None;
+                return;
+            };
+            let wk = &mut self.workers[w];
+            let (sys, scratch) = wk.arena.arena(&rs.ctx);
+            rs.ctx
+                .run_chunk(sys, scratch, rs.batch.assign.as_ref(), lo, hi)
+        };
+        let gen = self.workers[w].gen;
+        match computed {
+            Ok((local, strata)) => {
+                self.queue
+                    .push_after(cost, Ev::WorkerDone { worker: w, gen });
+                self.send(
+                    cost,
+                    Ev::Done {
+                        job,
+                        batch,
+                        idx,
+                        counts: Box::new(ChunkCounts { local, strata }),
+                    },
+                );
+            }
+            Err(e) => {
+                // Deterministic simulation-level failure: every retry
+                // would fail identically, so fail the job (freeing its
+                // workers) instead of spinning on requeues.
+                self.workers[w].res = None;
+                self.finish(j, JobOutcome::Failed(e.to_string()));
+            }
+        }
+    }
+
+    fn on_done(&mut self, job: JobId, batch: u64, idx: u32, counts: ChunkCounts) {
+        let now = self.queue.now();
+        let j = job as usize;
+        let closed = {
+            let jr = &mut self.jobs[j];
+            let Phase::Running(rs) = &mut jr.phase else {
+                self.telemetry.stale_dones += 1;
+                return;
+            };
+            if rs.batch.start != batch
+                || rs.batch.chunks[idx as usize].state == CState::Merged
+            {
+                // A duplicate delivery, or a straggler from an attempt
+                // the supervisor presumed dead. Merging the *first*
+                // arrival — whichever attempt produced it — is correct
+                // because every attempt's tally is byte-identical.
+                self.telemetry.stale_dones += 1;
+                return;
+            }
+            rs.batch.chunks[idx as usize].state = CState::Merged;
+            rs.batch.outstanding -= 1;
+            rs.result.merge_counts(&counts.local);
+            rs.result.merge_strata(&counts.strata);
+            if rs.batch.outstanding > 0 {
+                None
+            } else {
+                // Batch barrier: the stop rule and the next stratum
+                // allocation read the fully merged counts, exactly like
+                // the single-threaded batch loop.
+                rs.result.batches += 1;
+                rs.start += rs.batch.size;
+                let target = rs.ctx.config.precision_target;
+                let cont = rs.sched.continues(rs.start, &rs.result, target);
+                let hw = rs.result.functional_error_estimate().half_width();
+                let (total, batches) = (rs.result.total, rs.result.batches);
+                jr.progress.push(ProgressUpdate {
+                    job,
+                    time: now,
+                    total,
+                    batches,
+                    half_width: hw,
+                });
+                Some(cont)
+            }
+        };
+        match closed {
+            Some(true) => self.open_batch(j),
+            Some(false) => self.finalize_completed(j),
+            None => {}
+        }
+    }
+
+    fn on_retry(&mut self, job: JobId, batch: u64, idx: u32, attempt: u32) {
+        let j = job as usize;
+        {
+            let Phase::Running(rs) = &mut self.jobs[j].phase else {
+                return;
+            };
+            if rs.batch.start != batch {
+                return;
+            }
+            let c = &mut rs.batch.chunks[idx as usize];
+            if c.state != CState::Waiting || c.attempt != attempt {
+                return;
+            }
+            c.state = CState::Ready;
+            rs.batch.ready.push_back(idx);
+        }
+        self.mark_job_ready(j);
+    }
+
+    fn on_timeout(&mut self, job: JobId, batch: u64, idx: u32, attempt: u32) {
+        // Free a worker still reserved for this exact attempt — the
+        // supervisor kills stuck processes whether or not the chunk
+        // still needs requeueing (its `Run` or `Done` may merely have
+        // been dropped).
+        for wk in &mut self.workers {
+            if wk.res.as_ref().is_some_and(|r| {
+                r.job == job && r.batch == batch && r.idx == idx && r.attempt == attempt
+            }) {
+                wk.res = None;
+                wk.gen += 1;
+                self.telemetry.workers_killed += 1;
+            }
+        }
+        let j = job as usize;
+        {
+            let jr = &mut self.jobs[j];
+            let Phase::Running(rs) = &mut jr.phase else {
+                return;
+            };
+            if rs.batch.start != batch {
+                return;
+            }
+            let c = &mut rs.batch.chunks[idx as usize];
+            if c.state != CState::InFlight || c.attempt != attempt {
+                // Already merged (a late `Done` beat the deadline),
+                // already requeued, or a stale deadline of an older
+                // attempt.
+                return;
+            }
+            c.state = CState::Waiting;
+            c.attempt += 1;
+            jr.requeues += 1;
+        }
+        self.telemetry.chunk_requeues += 1;
+        let delay =
+            self.cfg
+                .backoff
+                .delay(self.cfg.seed, job, mix64(batch, idx as u64), attempt);
+        self.queue.push_after(
+            delay,
+            Ev::Retry {
+                job,
+                batch,
+                idx,
+                attempt: attempt + 1,
+            },
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! The service's ready-job queue: which job the dispatcher serves next.
+//!
+//! Ordering is `(priority descending, submission order ascending)` — a
+//! pure function of the submitted jobs, never of timing — so the
+//! scheduler cannot introduce nondeterminism even under a hostile
+//! message schedule. The queue holds at most one entry per job (the
+//! dispatcher re-inserts a job only while it still has ready chunks),
+//! so there is no lazy-deletion ambiguity to reason about.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Max-heap over `(priority, Reverse(submission seq))`: highest priority
+/// first, FIFO within a priority.
+#[derive(Debug, Default)]
+pub(crate) struct ReadyQueue {
+    heap: BinaryHeap<(i32, Reverse<u64>, u64)>,
+}
+
+impl ReadyQueue {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn push(&mut self, priority: i32, submit_seq: u64, job: u64) {
+        self.heap.push((priority, Reverse(submit_seq), job));
+    }
+
+    /// The next job to serve, by `(priority desc, submission asc)`.
+    pub(crate) fn pop(&mut self) -> Option<u64> {
+        self.heap.pop().map(|(_, _, job)| job)
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_then_submission_order() {
+        let mut q = ReadyQueue::new();
+        q.push(0, 0, 10);
+        q.push(5, 1, 11);
+        q.push(5, 2, 12);
+        q.push(-3, 3, 13);
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![11, 12, 10, 13]);
+        assert!(q.is_empty());
+    }
+}

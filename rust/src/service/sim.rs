@@ -1,0 +1,332 @@
+//! Deterministic simulation substrate of the campaign service — the
+//! FoundationDB idea in ~200 lines: one real thread, a virtual clock, a
+//! total event order, and a faulty message layer whose every decision is
+//! a pure function of a seed and a global message sequence number.
+//!
+//! Nothing here reads a wall clock or an OS scheduler, so a service run
+//! is a pure function of `(jobs, ServiceConfig)` — replaying the same
+//! seed replays the exact interleaving, including every dropped,
+//! duplicated, delayed and reordered message and every worker crash.
+//! That is what turns the service layer itself into a fault-injection
+//! target with byte-exact invariants instead of a flaky integration
+//! test.
+
+use crate::campaign::stream_seed;
+use crate::util::rng::Xoshiro256;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Message-layer fault decisions (drop / duplicate / per-copy delay) —
+/// one RNG stream per global message sequence number.
+pub const DOMAIN_SVC_MSG: u64 = 0x5245_444D_534D_5347; // "REDMSMSG"
+/// Worker-crash decisions — one RNG stream per chunk execution.
+pub const DOMAIN_SVC_CRASH: u64 = 0x5245_444D_5343_5253; // "REDMSCRS"
+/// Requeue-backoff jitter — one RNG stream per (job, chunk, attempt).
+pub const DOMAIN_SVC_JITTER: u64 = 0x5245_444D_534A_4954; // "REDMSJIT"
+/// Random service-fault-plan sampling ([`ServiceFaultPlan::sample`]).
+pub const DOMAIN_SVC_PLAN: u64 = 0x5245_444D_5350_4C4E; // "REDMSPLN"
+
+/// The service layer's fault schedule: how hostile the simulated world
+/// is to the job engine. All probabilities are per *decision* (one
+/// message send, one chunk execution) and are drawn from domain-
+/// separated streams, so the schedule perturbs nothing in the campaign
+/// layer's plan or problem streams — which is exactly why merged counts
+/// must come out byte-identical under every schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceFaultPlan {
+    /// Probability a message copy is dropped in flight.
+    pub drop_prob: f64,
+    /// Probability a message is duplicated (a second independently
+    /// delayed copy is delivered).
+    pub dup_prob: f64,
+    /// Per-copy uniform extra delay in `[0, delay_max]` virtual ticks —
+    /// unequal delays are what reorder messages.
+    pub delay_max: u64,
+    /// Probability a worker process dies mid-chunk (its partial work and
+    /// its `Done` are lost; the supervisor's timeout recovers the chunk).
+    pub crash_prob: f64,
+    /// Virtual ticks a crashed worker takes to restart.
+    pub worker_restart: u64,
+}
+
+impl ServiceFaultPlan {
+    /// A perfectly reliable world — the control arm every fault profile
+    /// is diffed against.
+    pub fn none() -> Self {
+        Self {
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            delay_max: 0,
+            crash_prob: 0.0,
+            worker_restart: 0,
+        }
+    }
+
+    /// Lossy links: a third of all message copies vanish.
+    pub fn drops() -> Self {
+        Self {
+            drop_prob: 1.0 / 3.0,
+            ..Self::none()
+        }
+    }
+
+    /// Duplicating + reordering links: a third of all messages arrive
+    /// twice, every copy up to 32 ticks late.
+    pub fn dups() -> Self {
+        Self {
+            dup_prob: 1.0 / 3.0,
+            delay_max: 32,
+            ..Self::none()
+        }
+    }
+
+    /// Heavily delayed (and therefore reordered) links.
+    pub fn delays() -> Self {
+        Self {
+            delay_max: 256,
+            ..Self::none()
+        }
+    }
+
+    /// Crash-prone workers: a quarter of chunk executions die mid-run.
+    pub fn crashes() -> Self {
+        Self {
+            crash_prob: 0.25,
+            worker_restart: 64,
+            ..Self::none()
+        }
+    }
+
+    /// Everything at once.
+    pub fn chaos() -> Self {
+        Self {
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            delay_max: 64,
+            crash_prob: 0.2,
+            worker_restart: 48,
+        }
+    }
+
+    /// A named profile (the CLI / CI matrix vocabulary).
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "none" => Self::none(),
+            "drop" => Self::drops(),
+            "dup" => Self::dups(),
+            "delay" => Self::delays(),
+            "crash" => Self::crashes(),
+            "chaos" => Self::chaos(),
+            _ => return None,
+        })
+    }
+
+    /// A random schedule for the randomized invariant sweep: every
+    /// probability capped well below 1 so forward progress stays almost
+    /// sure, drawn from its own domain so schedules never correlate with
+    /// the campaign streams of the jobs they torment.
+    pub fn sample(seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(stream_seed(seed, DOMAIN_SVC_PLAN, 0));
+        Self {
+            drop_prob: rng.next_f64() * 0.35,
+            dup_prob: rng.next_f64() * 0.35,
+            delay_max: rng.below(96),
+            crash_prob: rng.next_f64() * 0.3,
+            worker_restart: 1 + rng.below(128),
+        }
+    }
+
+    /// Configuration sanity: probabilities in `[0, 0.9]` (1.0 would make
+    /// nontermination certain rather than measure-zero).
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("drop_prob", self.drop_prob),
+            ("dup_prob", self.dup_prob),
+            ("crash_prob", self.crash_prob),
+        ] {
+            if !(0.0..=0.9).contains(&p) || !p.is_finite() {
+                return Err(format!("service fault plan {name} must be in [0, 0.9], got {p}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The fate of one message send: a pure function of `(seed, msg_seq)`,
+/// never of RNG call order — two runs that send the same messages in the
+/// same order see the same fates regardless of anything else the engine
+/// drew in between.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkFault {
+    pub dropped: bool,
+    pub duplicated: bool,
+    /// Extra delay of the primary and (if duplicated) the second copy.
+    pub delays: [u64; 2],
+}
+
+/// Draw message `msg_seq`'s fate under `plan`. The stream shape is fixed
+/// (both delay draws always happen) so the decision layout can never
+/// shift between schedule variants.
+pub fn link_fault(seed: u64, plan: &ServiceFaultPlan, msg_seq: u64) -> LinkFault {
+    let mut rng = Xoshiro256::new(stream_seed(seed, DOMAIN_SVC_MSG, msg_seq));
+    let dropped = rng.next_f64() < plan.drop_prob;
+    let duplicated = rng.next_f64() < plan.dup_prob;
+    let bound = plan.delay_max.saturating_add(1);
+    let delays = [rng.below(bound), rng.below(bound)];
+    LinkFault {
+        dropped,
+        duplicated,
+        delays,
+    }
+}
+
+/// Crash draw for chunk execution `exec_seq`: `(died, ticks worked
+/// before dying)` — the partial work is bounded by the chunk's full
+/// cost, and the stream is again pure in the sequence number.
+pub fn crash_fault(seed: u64, plan: &ServiceFaultPlan, exec_seq: u64, cost: u64) -> (bool, u64) {
+    let mut rng = Xoshiro256::new(stream_seed(seed, DOMAIN_SVC_CRASH, exec_seq));
+    let died = rng.next_f64() < plan.crash_prob;
+    let worked = rng.below(cost.saturating_add(1));
+    (died, worked)
+}
+
+struct Entry<E> {
+    time: u64,
+    seq: u64,
+    ev: E,
+}
+
+// Total order on (time, seq) only — the payload needs no Ord, and the
+// monotone sequence number makes the order total, so `BinaryHeap`'s
+// unspecified tie handling can never surface: determinism is
+// structural, not a testing artifact.
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.time, self.seq) == (other.time, other.seq)
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// The virtual clock and event queue: a discrete-event loop delivering
+/// events in `(time, insertion sequence)` order. Time only moves when
+/// an event is popped, so "now" is always the timestamp of the event
+/// being handled.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+        }
+    }
+
+    /// The virtual time of the most recently popped event.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute virtual time `time` (clamped to `now` —
+    /// the past is immutable).
+    pub fn push_at(&mut self, time: u64, ev: E) {
+        let entry = Entry {
+            time: time.max(self.now),
+            seq: self.seq,
+            ev,
+        };
+        self.seq += 1;
+        self.heap.push(entry);
+    }
+
+    /// Schedule `ev` `delay` ticks from now (saturating).
+    pub fn push_after(&mut self, delay: u64, ev: E) {
+        self.push_at(self.now.saturating_add(delay), ev);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        Some((e.time, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_then_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push_at(5, "b");
+        q.push_at(3, "a");
+        q.push_at(5, "c");
+        q.push_at(0, "zero");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(0, "zero"), (3, "a"), (5, "b"), (5, "c")]);
+    }
+
+    #[test]
+    fn the_clock_never_runs_backwards() {
+        let mut q = EventQueue::new();
+        q.push_at(10, ());
+        assert_eq!(q.pop(), Some((10, ())));
+        // An event scheduled "in the past" lands at now.
+        q.push_at(3, ());
+        assert_eq!(q.pop(), Some((10, ())));
+        assert_eq!(q.now(), 10);
+    }
+
+    #[test]
+    fn link_faults_are_pure_in_the_sequence_number() {
+        let plan = ServiceFaultPlan::chaos();
+        for msg in 0..64u64 {
+            let a = link_fault(7, &plan, msg);
+            let b = link_fault(7, &plan, msg);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.duplicated, b.duplicated);
+            assert_eq!(a.delays, b.delays);
+            assert!(a.delays[0] <= plan.delay_max && a.delays[1] <= plan.delay_max);
+        }
+    }
+
+    #[test]
+    fn named_profiles_round_trip() {
+        for name in ["none", "drop", "dup", "delay", "crash", "chaos"] {
+            let p = ServiceFaultPlan::by_name(name).expect(name);
+            assert!(p.validate().is_ok(), "{name}");
+        }
+        assert!(ServiceFaultPlan::by_name("nope").is_none());
+        assert!(ServiceFaultPlan::sample(99).validate().is_ok());
+    }
+}

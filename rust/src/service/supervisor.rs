@@ -1,0 +1,112 @@
+//! Supervision policy: how long a chunk attempt may run before it is
+//! presumed dead, and how long a presumed-dead chunk waits before being
+//! requeued.
+//!
+//! The backoff is bounded exponential with *seed-derived* jitter: the
+//! jitter of `(job, chunk, attempt)` comes from its own domain-separated
+//! RNG stream ([`crate::service::sim::DOMAIN_SVC_JITTER`]), never from a
+//! wall clock — so a retry schedule is replayable, and the property
+//! tests in `tests/service_sim.rs` can pin it (seed-pure, bounded by
+//! `cap + jitter_max`, deterministic base component monotone in the
+//! attempt number).
+
+use super::sim::DOMAIN_SVC_JITTER;
+use crate::campaign::stream_seed;
+use crate::util::rng::{mix64, Xoshiro256};
+
+/// Bounded exponential backoff with deterministic jitter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    /// Delay of the first retry, in virtual ticks.
+    pub base: u64,
+    /// Hard ceiling on the exponential component.
+    pub cap: u64,
+    /// Jitter drawn uniformly from `[0, jitter_max]` on top of the
+    /// exponential component (decorrelates retry storms).
+    pub jitter_max: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        Self {
+            base: 8,
+            cap: 4096,
+            jitter_max: 16,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// The deterministic exponential component: `min(base << attempt,
+    /// cap)`, saturating (never overflow-wraps back down). Monotone
+    /// nondecreasing in `attempt` by construction.
+    pub fn exp_component(&self, attempt: u32) -> u64 {
+        if self.base == 0 {
+            return 0;
+        }
+        let shifted = if attempt >= self.base.leading_zeros() {
+            u64::MAX
+        } else {
+            self.base << attempt
+        };
+        shifted.min(self.cap)
+    }
+
+    /// The full requeue delay of `(job, chunk_tag, attempt)`: exponential
+    /// component plus the attempt's own jittered stream. A pure function
+    /// of its arguments — no clock, no shared RNG state.
+    pub fn delay(&self, seed: u64, job: u64, chunk_tag: u64, attempt: u32) -> u64 {
+        let exp = self.exp_component(attempt);
+        if self.jitter_max == 0 {
+            return exp;
+        }
+        let stream = stream_seed(seed, DOMAIN_SVC_JITTER, mix64(mix64(job, chunk_tag), attempt as u64));
+        exp.saturating_add(Xoshiro256::new(stream).below(self.jitter_max.saturating_add(1)))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cap == 0 {
+            return Err("backoff cap must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_component_is_monotone_capped_and_saturating() {
+        let p = BackoffPolicy {
+            base: 8,
+            cap: 1 << 20,
+            jitter_max: 0,
+        };
+        let mut prev = 0;
+        for a in 0..=80u32 {
+            let e = p.exp_component(a);
+            assert!(e >= prev, "attempt {a}");
+            assert!(e <= p.cap);
+            prev = e;
+        }
+        assert_eq!(p.exp_component(200), p.cap, "deep attempts saturate at the cap");
+    }
+
+    #[test]
+    fn delay_is_seed_pure_and_bounded() {
+        let p = BackoffPolicy::default();
+        for a in 0..12u32 {
+            let d1 = p.delay(42, 3, 17, a);
+            let d2 = p.delay(42, 3, 17, a);
+            assert_eq!(d1, d2);
+            assert!(d1 >= p.exp_component(a));
+            assert!(d1 <= p.cap + p.jitter_max);
+        }
+        // Distinct chunks get distinct jitter streams (decorrelated
+        // storms) under the same seed.
+        let spread: std::collections::HashSet<u64> =
+            (0..64u64).map(|c| p.delay(42, 3, c, 0)).collect();
+        assert!(spread.len() > 1, "jitter must actually vary across chunks");
+    }
+}

@@ -178,6 +178,49 @@ impl Tcdm {
         }
     }
 
+    /// Rewind to a checkpointed state recorded at a dirty-log watermark:
+    /// every word written after `watermark` is restored to the
+    /// checkpoint image — `pristine` overlaid with the sorted canonical
+    /// `delta`, exactly the state a full [`Tcdm::restore_from`] +
+    /// [`Tcdm::apply_delta`] pair produces — and the log is truncated
+    /// back to `watermark`.
+    ///
+    /// Contract: dirty tracking is enabled, `delta` is a canonical
+    /// (sorted, de-duplicated) [`Tcdm::dirty_delta`], and the log prefix
+    /// `[0, watermark)` was written by applying exactly that delta after
+    /// a pristine restore. Then contents *and* log are bit-identical to
+    /// redoing the full restore — the two-level campaign engine leans on
+    /// this to coalesce adjacent fault windows onto one checkpoint
+    /// restore, undoing only the previous window's writes.
+    pub fn undo_to_watermark(&mut self, pristine: &Tcdm, delta: &[(u32, u64)], watermark: usize) {
+        assert_eq!(self.n_banks, pristine.n_banks);
+        assert_eq!(self.words_per_bank, pristine.words_per_bank);
+        let mut dirty = self
+            .dirty
+            .take()
+            .expect("undo_to_watermark requires dirty tracking");
+        debug_assert!(watermark <= dirty.len());
+        for &idx in &dirty[watermark.min(dirty.len())..] {
+            let cw = match delta.binary_search_by_key(&idx, |e| e.0) {
+                Ok(at) => delta[at].1,
+                Err(_) => {
+                    let (b, r) = (
+                        (idx as usize) / self.words_per_bank,
+                        (idx as usize) % self.words_per_bank,
+                    );
+                    pristine.banks[b][r]
+                }
+            };
+            let (b, r) = (
+                (idx as usize) / self.words_per_bank,
+                (idx as usize) % self.words_per_bank,
+            );
+            self.banks[b][r] = cw;
+        }
+        dirty.truncate(watermark);
+        self.dirty = Some(dirty);
+    }
+
     /// Current length of the write log (0 when tracking is disabled).
     /// The two-level engine uses log-length *watermarks* to delimit the
     /// writes of a window or reference segment: every store appends one
@@ -572,5 +615,52 @@ mod tests {
     fn out_of_range_access_panics() {
         let mut t = Tcdm::new(4, 256);
         t.write_word(4 * 256, 0);
+    }
+
+    #[test]
+    fn undo_to_watermark_equals_full_restore_plus_delta() {
+        // The pristine image the campaign engine snapshots after staging.
+        let mut pristine = Tcdm::new(4, 1024);
+        for i in 0..64u32 {
+            pristine.write_word(i * 4, 0xD00D_0000 | i);
+        }
+        // A recorded checkpoint delta: the canonical (sorted, deduped)
+        // difference of some mid-run state against pristine.
+        let mut mid = pristine.clone();
+        mid.enable_dirty_tracking();
+        mid.write_word(8, 0xAAAA_AAAA);
+        mid.write_word(40, 0xBBBB_BBBB);
+        mid.write_word(200, 0xCCCC_CCCC);
+        let delta = mid.dirty_delta(&pristine);
+        // Path A (reference): full restore + delta replay per window.
+        let window = |t: &mut Tcdm| {
+            t.write_word(8, 0x1111_1111); // overlaps a delta word
+            t.write_word(40, 0xBBBB_BBBB); // rewrite to the delta value
+            t.write_word(96, 0x2222_2222); // pristine-only word
+            t.write_word(96, 0x3333_3333); // duplicate log entry
+        };
+        let mut a = pristine.clone();
+        a.enable_dirty_tracking();
+        a.restore_from(&pristine);
+        a.apply_delta(&delta);
+        window(&mut a);
+        a.restore_from(&pristine);
+        a.apply_delta(&delta);
+        // Path B (coalesced): one restore, then rewind past the watermark.
+        let mut b = pristine.clone();
+        b.enable_dirty_tracking();
+        b.restore_from(&pristine);
+        b.apply_delta(&delta);
+        let mark = b.dirty_log_len();
+        window(&mut b);
+        b.undo_to_watermark(&pristine, &delta, mark);
+        // Contents AND write log are bit-identical — the two-level
+        // window probes read both.
+        assert_eq!(a.dirty_delta(&pristine), b.dirty_delta(&pristine));
+        assert_eq!(a.dirty_log_since(0), b.dirty_log_since(0));
+        assert_eq!(b.dirty_log_len(), mark);
+        for w in 0..(4 * 1024 / 4) as u32 {
+            assert_eq!(a.read_word(w * 4).0, b.read_word(w * 4).0, "word {w}");
+        }
     }
 }

@@ -1,0 +1,371 @@
+//! Simulation tests of the campaign service — the deterministic async
+//! job engine — under hostile schedules (satellites of the
+//! campaign-as-a-service tentpole).
+//!
+//! The contract under test, for *every* fault schedule the message layer
+//! can produce (drops, duplicates, delays/reorders, worker crashes):
+//!
+//! * every submitted job terminates exactly once ([`CampaignService::run`]
+//!   errors at quiescence otherwise — here we also assert the outcomes);
+//! * a completed job's counts are byte-identical to the plain
+//!   single-threaded [`Campaign::run`] of the same configuration — no
+//!   injection is ever lost or double-counted;
+//! * every terminal job releases its [`TraceCache`] pin, so the shared
+//!   cache is fully drained (`trace_cache_resident == 0`);
+//! * the whole run is a pure function of its seeds — replaying a seed
+//!   replays every outcome, progress sample and telemetry counter.
+
+use redmule_ft::campaign::{Campaign, CampaignConfig, CampaignResult};
+use redmule_ft::golden::GemmSpec;
+use redmule_ft::redmule::Protection;
+use redmule_ft::service::{
+    BackoffPolicy, CampaignService, JobOutcome, JobSpec, ServiceConfig, ServiceFaultPlan,
+    ServiceReport,
+};
+
+/// A small, fast campaign cell (6x8x8 workload) — the service machinery
+/// under test is indifferent to the cell size.
+fn small_cfg(protection: Protection, injections: u64, seed: u64, adaptive: bool) -> CampaignConfig {
+    let mut cfg = CampaignConfig::table1(protection, injections, seed);
+    cfg.spec = GemmSpec::new(6, 8, 8);
+    cfg.threads = 1;
+    if adaptive {
+        cfg.precision_target = 0.2;
+        cfg.batch_size = (injections / 3).max(4);
+    }
+    cfg
+}
+
+/// The standard job mix: a fixed-budget job, an adaptive multi-batch
+/// job, and a third protection — enough shape diversity to exercise
+/// batch barriers, progress streaming and distinct clean-run identities.
+fn job_mix() -> Vec<CampaignConfig> {
+    vec![
+        small_cfg(Protection::Full, 48, 0xA11CE, false),
+        small_cfg(Protection::Abft, 48, 0xB0B, true),
+        small_cfg(Protection::Data, 32, 0xC0DE, false),
+    ]
+}
+
+/// Byte-identity over every schedule-invariant field (wall-clock time is
+/// explicitly out of contract — virtual worlds have none).
+fn assert_counts_match(got: &CampaignResult, want: &CampaignResult, label: &str) {
+    assert_eq!(got.total, want.total, "{label}: total");
+    assert_eq!(got.correct_no_retry, want.correct_no_retry, "{label}: no-retry");
+    assert_eq!(got.correct_with_retry, want.correct_with_retry, "{label}: retry");
+    assert_eq!(got.incorrect, want.incorrect, "{label}: incorrect");
+    assert_eq!(got.timeout, want.timeout, "{label}: timeout");
+    assert_eq!(got.applied, want.applied, "{label}: applied");
+    assert_eq!(got.faults_applied, want.faults_applied, "{label}: faults applied");
+    assert_eq!(got.corrections, want.corrections, "{label}: corrections");
+    assert_eq!(got.band_recomputes, want.band_recomputes, "{label}: band recomputes");
+    assert_eq!(got.batches, want.batches, "{label}: batches");
+    assert_eq!(got.stopped_early, want.stopped_early, "{label}: stopped early");
+    assert_eq!(got.strata.len(), want.strata.len(), "{label}: strata layout");
+    for (g, w) in got.strata.iter().zip(&want.strata) {
+        assert_eq!(g.n, w.n, "{label}: stratum {} n", g.name);
+        assert_eq!(g.outcomes, w.outcomes, "{label}: stratum {} outcomes", g.name);
+    }
+}
+
+fn completed(report: &ServiceReport, id: u64, label: &str) -> &CampaignResult {
+    match &report.jobs[id as usize].outcome {
+        JobOutcome::Completed(r) => r,
+        other => panic!("{label}: job {id} should complete, got {other:?}"),
+    }
+}
+
+#[test]
+fn a_reliable_world_reproduces_the_single_threaded_engine() {
+    let cfg = small_cfg(Protection::Full, 40, 0x0FF1CE, false);
+    let want = Campaign::run(&cfg).unwrap();
+    let mut sc = ServiceConfig::new(1);
+    sc.workers = 3;
+    sc.chunk_injections = 7;
+    let mut svc = CampaignService::new(sc).unwrap();
+    let id = svc.submit(JobSpec::new(cfg));
+    let report = svc.run().unwrap();
+    assert_counts_match(completed(&report, id, "reliable"), &want, "reliable");
+    assert_eq!(report.trace_cache_resident, 0, "pin must be released");
+    assert!(
+        !report.jobs[0].progress.is_empty(),
+        "batch closes must stream progress"
+    );
+    assert_eq!(report.telemetry.chunk_requeues, 0, "nothing fails in a reliable world");
+}
+
+/// The randomized invariant sweep: 100 sampled fault schedules (each a
+/// different mixture of drops, duplicates, delays and crashes, each with
+/// its own worker count and chunking), and under every one of them the
+/// merged counts must equal the single-threaded engine's byte for byte,
+/// with the cache drained and every job completed exactly once.
+#[test]
+fn randomized_fault_schedules_preserve_byte_identity() {
+    let mix = job_mix();
+    let expected: Vec<CampaignResult> =
+        mix.iter().map(|c| Campaign::run(c).unwrap()).collect();
+    for svc_seed in 0..100u64 {
+        let mut sc = ServiceConfig::new(svc_seed);
+        sc.workers = 1 + (svc_seed % 3) as usize;
+        sc.chunk_injections = 1 + svc_seed % 19;
+        sc.fault_plan = ServiceFaultPlan::sample(svc_seed);
+        let mut svc = CampaignService::new(sc).unwrap();
+        for cfg in &mix {
+            svc.submit(JobSpec::new(cfg.clone()));
+        }
+        let report = svc
+            .run()
+            .unwrap_or_else(|e| panic!("schedule {svc_seed}: {e}"));
+        assert_eq!(
+            report.trace_cache_resident, 0,
+            "schedule {svc_seed}: cache must drain"
+        );
+        assert_eq!(report.jobs.len(), mix.len());
+        for (jr, want) in report.jobs.iter().zip(&expected) {
+            let label = format!("schedule {svc_seed} job {}", jr.id);
+            assert_counts_match(completed(&report, jr.id, &label), want, &label);
+        }
+    }
+}
+
+/// Worker death mid-chunk: the attempt's partial work and its `Done` are
+/// lost, the supervisor requeues the chunk, and nothing is lost or
+/// double-counted. With crashes as the only fault source, requeues and
+/// crashes pair up exactly one-to-one.
+#[test]
+fn worker_death_mid_chunk_requeues_without_losing_or_double_counting() {
+    let cfg = small_cfg(Protection::Full, 40, 0xDEAD, false);
+    let want = Campaign::run(&cfg).unwrap();
+    let mut sc = ServiceConfig::new(3);
+    sc.workers = 2;
+    sc.chunk_injections = 4;
+    sc.fault_plan = ServiceFaultPlan {
+        crash_prob: 0.5,
+        worker_restart: 16,
+        ..ServiceFaultPlan::none()
+    };
+    let mut svc = CampaignService::new(sc).unwrap();
+    let id = svc.submit(JobSpec::new(cfg));
+    let report = svc.run().unwrap();
+    let t = &report.telemetry;
+    assert!(t.worker_crashes > 0, "the plan must actually crash workers");
+    assert_eq!(
+        t.chunk_requeues, t.worker_crashes,
+        "every crashed attempt requeues exactly once (and nothing else does)"
+    );
+    assert_eq!(report.jobs[0].requeues, t.chunk_requeues);
+    assert_counts_match(completed(&report, id, "crashes"), &want, "crashes");
+    assert_eq!(report.trace_cache_resident, 0);
+}
+
+/// Cancellation storm: immediate, mid-run, duplicate and far-future
+/// cancels plus an unknown job id. Every job still terminates exactly
+/// once, cancelled jobs free their cache pins, and a cancel landing
+/// after completion is a no-op.
+#[test]
+fn cancellation_storm_terminates_exactly_once_and_drains_the_cache() {
+    let mix = job_mix();
+    let expected: Vec<CampaignResult> =
+        mix.iter().map(|c| Campaign::run(c).unwrap()).collect();
+    let mut sc = ServiceConfig::new(99);
+    sc.workers = 2;
+    sc.chunk_injections = 5;
+    sc.fault_plan = ServiceFaultPlan::chaos();
+    let mut svc = CampaignService::new(sc).unwrap();
+    for cfg in &mix {
+        svc.submit(JobSpec::new(cfg.clone()));
+    }
+    svc.cancel_at(0, 1); // before any real work
+    svc.cancel_at(1, 300); // mid-run (either side of completion is legal)
+    svc.cancel_at(2, 50_000_000); // far future: must land after completion
+    svc.cancel_at(2, 50_000_001); // duplicate cancel: idempotent
+    svc.cancel_at(99, 10); // unknown job id: ignored
+    let report = svc.run().unwrap();
+    assert_eq!(report.trace_cache_resident, 0, "cancelled pins must be freed too");
+    assert!(
+        matches!(report.jobs[0].outcome, JobOutcome::Cancelled),
+        "an immediate cancel wins the race against the first chunk"
+    );
+    match &report.jobs[1].outcome {
+        JobOutcome::Cancelled => {}
+        JobOutcome::Completed(r) => assert_counts_match(r, &expected[1], "race job"),
+        other => panic!("job 1: {other:?}"),
+    }
+    assert_counts_match(
+        completed(&report, 2, "late-cancel"),
+        &expected[2],
+        "late-cancel",
+    );
+}
+
+/// Replay: the whole run — outcomes, every progress sample, every
+/// telemetry counter — is a pure function of the seeds.
+#[test]
+fn identical_seeds_replay_identical_runs() {
+    let run_once = || {
+        let mut sc = ServiceConfig::new(7);
+        sc.workers = 2;
+        sc.chunk_injections = 7;
+        sc.fault_plan = ServiceFaultPlan::chaos();
+        let mut svc = CampaignService::new(sc).unwrap();
+        for cfg in job_mix() {
+            svc.submit(JobSpec::new(cfg));
+        }
+        svc.cancel_at(1, 400);
+        svc.run().unwrap()
+    };
+    let a = run_once();
+    let b = run_once();
+    let (ta, tb) = (&a.telemetry, &b.telemetry);
+    assert_eq!(ta.events, tb.events);
+    assert_eq!(ta.virtual_time, tb.virtual_time);
+    assert_eq!(ta.msgs_sent, tb.msgs_sent);
+    assert_eq!(ta.msgs_dropped, tb.msgs_dropped);
+    assert_eq!(ta.msgs_duplicated, tb.msgs_duplicated);
+    assert_eq!(ta.worker_crashes, tb.worker_crashes);
+    assert_eq!(ta.workers_killed, tb.workers_killed);
+    assert_eq!(ta.chunk_requeues, tb.chunk_requeues);
+    assert_eq!(ta.stale_dones, tb.stale_dones);
+    assert_eq!(ta.stale_runs, tb.stale_runs);
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(ja.outcome.name(), jb.outcome.name(), "job {}", ja.id);
+        assert_eq!(ja.requeues, jb.requeues, "job {}", ja.id);
+        assert_eq!(ja.progress.len(), jb.progress.len(), "job {}", ja.id);
+        for (pa, pb) in ja.progress.iter().zip(&jb.progress) {
+            assert_eq!(pa.time, pb.time);
+            assert_eq!(pa.total, pb.total);
+            assert_eq!(pa.batches, pb.batches);
+            assert_eq!(
+                pa.half_width.to_bits(),
+                pb.half_width.to_bits(),
+                "CI stream must replay bit-exactly"
+            );
+        }
+        if let (JobOutcome::Completed(ra), JobOutcome::Completed(rb)) = (&ja.outcome, &jb.outcome)
+        {
+            assert_counts_match(ra, rb, "replay");
+        }
+    }
+}
+
+/// With one worker, a higher-priority job submitted *later* closes its
+/// first batch before an earlier low-priority submission gets a turn.
+#[test]
+fn priorities_order_dispatch_under_contention() {
+    let mut sc = ServiceConfig::new(5);
+    sc.workers = 1;
+    sc.chunk_injections = 64;
+    let mut svc = CampaignService::new(sc).unwrap();
+    let lo = svc.submit(JobSpec::new(small_cfg(Protection::Full, 24, 1, false)).with_priority(-1));
+    let hi = svc.submit(JobSpec::new(small_cfg(Protection::Data, 24, 2, false)).with_priority(5));
+    let report = svc.run().unwrap();
+    let first_close = |id: u64| {
+        report.jobs[id as usize]
+            .progress
+            .first()
+            .unwrap_or_else(|| panic!("job {id} has no progress"))
+            .time
+    };
+    assert!(
+        first_close(hi) < first_close(lo),
+        "priority must beat submission order"
+    );
+    completed(&report, lo, "lo");
+    completed(&report, hi, "hi");
+}
+
+/// Two jobs with one clean-run identity share the recorded trace through
+/// the cross-job cache: one miss (the recording), at least one hit (the
+/// adoption), identical counts, and a fully drained cache afterwards.
+#[test]
+fn jobs_with_one_clean_run_identity_share_the_trace_cache() {
+    let cfg = small_cfg(Protection::Full, 24, 0x5EED, false);
+    let mut sc = ServiceConfig::new(11);
+    sc.workers = 2;
+    sc.chunk_injections = 6;
+    let mut svc = CampaignService::new(sc).unwrap();
+    svc.submit(JobSpec::new(cfg.clone()));
+    svc.submit(JobSpec::new(cfg));
+    let report = svc.run().unwrap();
+    assert!(
+        report.telemetry.cache_hits >= 1,
+        "the twin job must adopt the shared recording"
+    );
+    let a = completed(&report, 0, "twin a").clone();
+    let b = completed(&report, 1, "twin b");
+    assert_counts_match(&a, b, "twins");
+    assert_eq!(report.trace_cache_resident, 0);
+}
+
+/// Property sweep over the backoff policy through the public API: the
+/// exponential component is monotone and capped, the full delay is
+/// replayable, bounded, and jitter decorrelates across chunks.
+#[test]
+fn backoff_is_bounded_exponential_with_replayable_jitter() {
+    let p = BackoffPolicy {
+        base: 4,
+        cap: 512,
+        jitter_max: 32,
+    };
+    for job in 0..8u64 {
+        for chunk in 0..8u64 {
+            let mut prev = 0u64;
+            for attempt in 0..40u32 {
+                let exp = p.exp_component(attempt);
+                assert!(exp >= prev, "monotone at attempt {attempt}");
+                assert!(exp <= p.cap, "capped at attempt {attempt}");
+                prev = exp;
+                let d = p.delay(1234, job, chunk, attempt);
+                assert_eq!(d, p.delay(1234, job, chunk, attempt), "replayable");
+                assert!(d >= exp && d <= p.cap + p.jitter_max, "bounded");
+            }
+        }
+    }
+    let distinct: std::collections::HashSet<u64> =
+        (0..128u64).map(|c| p.delay(9, 0, c, 3)).collect();
+    assert!(
+        distinct.len() > 8,
+        "jitter streams must decorrelate retry storms across chunks"
+    );
+    // Degenerate policies stay well-defined.
+    let flat = BackoffPolicy {
+        base: 0,
+        cap: 1,
+        jitter_max: 0,
+    };
+    assert_eq!(flat.delay(0, 0, 0, 63), 0);
+    assert!(BackoffPolicy { base: 1, cap: 0, jitter_max: 0 }.validate().is_err());
+}
+
+/// Configuration rails: invalid service configs are rejected up front,
+/// and an unknown fault profile has no name.
+#[test]
+fn service_configuration_rails() {
+    let mut sc = ServiceConfig::new(0);
+    sc.workers = 0;
+    assert!(CampaignService::new(sc).is_err(), "zero workers");
+    let mut sc = ServiceConfig::new(0);
+    sc.chunk_injections = 0;
+    assert!(CampaignService::new(sc).is_err(), "zero chunk");
+    let mut sc = ServiceConfig::new(0);
+    sc.fault_plan.drop_prob = 0.95;
+    assert!(CampaignService::new(sc).is_err(), "certain drops never terminate");
+    assert!(ServiceFaultPlan::by_name("none").is_some());
+    assert!(ServiceFaultPlan::by_name("certain-doom").is_none());
+    // A failing job (invalid campaign config) is terminal, frees its
+    // pin, and does not poison its neighbors.
+    let mut bad = small_cfg(Protection::Full, 16, 1, false);
+    bad.faults_per_run = 0;
+    let good = small_cfg(Protection::Data, 16, 2, false);
+    let want = Campaign::run(&good).unwrap();
+    let mut svc = CampaignService::new(ServiceConfig::new(4)).unwrap();
+    let bad_id = svc.submit(JobSpec::new(bad));
+    let good_id = svc.submit(JobSpec::new(good));
+    let report = svc.run().unwrap();
+    assert!(
+        matches!(report.jobs[bad_id as usize].outcome, JobOutcome::Failed(_)),
+        "invalid config fails terminally"
+    );
+    assert_counts_match(completed(&report, good_id, "neighbor"), &want, "neighbor");
+    assert_eq!(report.trace_cache_resident, 0, "failed pins are freed too");
+}

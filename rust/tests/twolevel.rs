@@ -206,3 +206,46 @@ fn two_level_recording_is_a_strict_superset_of_the_plain_trace() {
         assert!(seg.log.windows(2).all(|p| p[0].0 <= p[1].0), "log is cycle-ordered");
     }
 }
+
+/// A/B pin of the coalesced restore order: grouping a chunk's injections
+/// by restore checkpoint and rewinding between them via the dirty-log
+/// watermark (instead of a full pristine restore per injection) is a
+/// pure scheduling change — every campaign count, the applied/fault
+/// tallies and the batch metadata must come out byte-identical to the
+/// per-injection order, across protections and multi-fault models.
+#[test]
+fn coalesced_two_level_campaign_counts_match_per_injection_order() {
+    use redmule_ft::campaign::{Campaign, CampaignConfig};
+    use redmule_ft::cluster::RecoveryPolicy;
+
+    for (prot, model, faults) in [
+        (Protection::Full, FaultModel::Independent, 1usize),
+        (Protection::Abft, FaultModel::Burst, 2),
+        (Protection::AbftOnline, FaultModel::Independent, 1),
+    ] {
+        let mut cfg = CampaignConfig::table1(prot, 240, 0xC0A1);
+        cfg.threads = 1;
+        cfg.two_level = true;
+        cfg.faults_per_run = faults;
+        cfg.fault_model = model;
+        if prot == Protection::AbftOnline {
+            cfg.recovery = RecoveryPolicy::InPlaceCorrect;
+        }
+        cfg.tl_coalesce = true;
+        let a = Campaign::run(&cfg).unwrap();
+        cfg.tl_coalesce = false;
+        let b = Campaign::run(&cfg).unwrap();
+        let label = format!("{prot:?}/{model:?}/{faults}");
+        assert_eq!(a.total, b.total, "{label}: total");
+        assert_eq!(a.correct_no_retry, b.correct_no_retry, "{label}: no-retry");
+        assert_eq!(a.correct_with_retry, b.correct_with_retry, "{label}: retry");
+        assert_eq!(a.incorrect, b.incorrect, "{label}: incorrect");
+        assert_eq!(a.timeout, b.timeout, "{label}: timeout");
+        assert_eq!(a.applied, b.applied, "{label}: applied");
+        assert_eq!(a.faults_applied, b.faults_applied, "{label}: faults applied");
+        assert_eq!(a.corrections, b.corrections, "{label}: corrections");
+        assert_eq!(a.band_recomputes, b.band_recomputes, "{label}: band recomputes");
+        assert_eq!(a.batches, b.batches, "{label}: batches");
+        assert_eq!(a.stopped_early, b.stopped_early, "{label}: stopped early");
+    }
+}
