@@ -1,0 +1,67 @@
+//! Precision & op-family sweep: cross the numeric-format axis (FP16 vs
+//! the two FP8 storage grids, whose cast units carry their own fault
+//! sites) and the GEMM op family against the protection ladder.
+//!
+//! ```text
+//! cargo run --release --example precision_sweep [injections]
+//! ```
+//!
+//! The equivalent CLI invocation is
+//! `redmule-ft sweep --configs baseline,full --format fp16,fp8-e4m3 \
+//!  --op mul,addmax --shapes 6x8x8 --faults 1 --injections 200`.
+
+use redmule_ft::campaign::{Sweep, SweepConfig};
+use redmule_ft::fp::{Fp8Format, GemmFormat, GemmOp};
+use redmule_ft::golden::GemmSpec;
+use redmule_ft::redmule::Protection;
+
+fn main() -> redmule_ft::Result<()> {
+    let injections: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    let mut cfg = SweepConfig::new(injections, 17);
+    cfg.protections = vec![Protection::Baseline, Protection::Full];
+    cfg.formats = vec![GemmFormat::Fp16, GemmFormat::Fp8(Fp8Format::E4M3)];
+    cfg.ops = vec![GemmOp::Mul, GemmOp::AddMax];
+    cfg.shapes = vec![GemmSpec::new(6, 8, 8)];
+    cfg.fault_counts = vec![1];
+    eprintln!(
+        "precision_sweep: {} cells x {injections} injections...",
+        cfg.n_cells()
+    );
+
+    let r = Sweep::run(&cfg)?;
+    println!("{}", r.to_json_v2());
+
+    // Replication catches faults regardless of the numeric format or the
+    // reduction op: the fully protected build never does worse than
+    // baseline in any (format, op) cell pair.
+    for fmt in [GemmFormat::Fp16, GemmFormat::Fp8(Fp8Format::E4M3)] {
+        for op in [GemmOp::Mul, GemmOp::AddMax] {
+            let fe = |prot: Protection| {
+                r.cells
+                    .iter()
+                    .filter(|c| c.protection == prot && c.format == fmt && c.op == op)
+                    .map(|c| c.result.functional_errors())
+                    .min()
+                    .expect("cell present")
+            };
+            let (base, full) = (fe(Protection::Baseline), fe(Protection::Full));
+            assert!(
+                full <= base,
+                "{}/{}: full protection must not exceed baseline errors",
+                fmt.name(),
+                op.name()
+            );
+        }
+    }
+    eprintln!(
+        "precision_sweep OK: {} runs in {:.1} s ({:.0} runs/s)",
+        r.total_runs(),
+        r.wall_seconds,
+        r.runs_per_sec()
+    );
+    Ok(())
+}

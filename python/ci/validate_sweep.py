@@ -27,6 +27,10 @@ import sys
 PROTECTIONS = ("baseline", "data", "full", "per-ce", "abft", "abft-online")
 RECOVERIES = ("full-restart", "tile-level", "in-place-correct")
 ENGINES = ("direct", "fast-forward", "two-level")
+# Non-default axis values only: cells on the fp16 / mul defaults omit the
+# "format" / "op" fields entirely (byte-identity of pre-existing sweeps).
+FORMATS = ("fp8-e4m3", "fp8-e5m2")
+OPS = ("addmax", "addmin", "mulmax", "mulmin")
 OUTCOME_KEYS = ("correct_no_retry", "correct_with_retry", "incorrect", "timeout")
 EPS = 1e-6
 
@@ -43,6 +47,13 @@ def check_coords(c):
         fail(f"bad shape in {c}")
     if c["protection"] not in PROTECTIONS:
         fail(f"unknown protection {c['protection']}")
+    # Format / op discriminants (precision & op-family axes): optional so
+    # default-path documents stay byte-identical, but when present they
+    # must name a known non-default value (same idiom as "engine").
+    if "format" in c and c["format"] not in FORMATS:
+        fail(f"unknown format {c['format']} (expected one of {FORMATS})")
+    if "op" in c and c["op"] not in OPS:
+        fail(f"unknown op {c['op']} (expected one of {OPS})")
     if c["faults"] < 1:
         fail(f"bad fault count in {c}")
 
@@ -214,6 +225,8 @@ def main():
     ap.add_argument("--injections", type=int, default=None)
     ap.add_argument("--max-injections", type=int, default=None)
     ap.add_argument("--fault-model", default=None)
+    ap.add_argument("--expect-format", default=None)
+    ap.add_argument("--expect-op", default=None)
     ap.add_argument("--expect-stopped-early", action="store_true")
     args = ap.parse_args()
 
@@ -229,6 +242,17 @@ def main():
 
     if args.cells is not None and len(cells) != args.cells:
         fail(f"{len(cells)} cells != expected {args.cells}")
+
+    # Single-valued format/op sweeps: every cell must carry the expected
+    # discriminant (a missing field means the cell ran the default).
+    if args.expect_format is not None:
+        for c in cells:
+            if c.get("format") != args.expect_format:
+                fail(f"cell format {c.get('format')} != {args.expect_format}")
+    if args.expect_op is not None:
+        for c in cells:
+            if c.get("op") != args.expect_op:
+                fail(f"cell op {c.get('op')} != {args.expect_op}")
 
     print(
         f"validate_sweep: OK ({args.schema}, {len(cells)} cells, "

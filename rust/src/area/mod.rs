@@ -62,6 +62,12 @@ pub mod coeff {
     /// decode), per instance.
     pub const GE_ECC_ENCODER: f64 = 160.0;
     pub const GE_ECC_DECODER: f64 = 230.0;
+    /// FP16 → FP8 narrowing lane (RTNE rounder + saturation/special-case
+    /// logic), per cast-unit lane. FPnew's cast slice is small next to an
+    /// FMA datapath.
+    pub const GE_CAST_NARROW: f64 = 180.0;
+    /// FP8 → FP16 widening lane (exact expand, no rounding), per lane.
+    pub const GE_CAST_WIDEN: f64 = 60.0;
 }
 
 /// One line of the area breakdown.
@@ -177,6 +183,20 @@ pub fn area_report(cfg: RedMuleConfig, protection: Protection) -> AreaReport {
         false,
     );
     push("top_glue", GE_TOP_GLUE / 1000.0, false);
+
+    // ----------------------------------------- FP8 cast units (hybrid mode)
+    // Present only when the build's task datatype routes operands through
+    // the cast path. They are *datapath* area (`dp/`), not fault-tolerance
+    // overhead: an unprotected FP8 build carries them too — which is
+    // precisely why they widen the unprotected cross-section.
+    if cfg.format.is_fp8() {
+        let cast_lane = GE_CAST_NARROW + GE_CAST_WIDEN;
+        let code_reg = 8.0 * GE_PER_FF_BIT;
+        push("dp/castin_x", (l * cast_lane + code_reg) / 1000.0, false);
+        push("dp/castin_w", (h * cast_lane + code_reg) / 1000.0, false);
+        push("dp/castin_y", (l * cast_lane + code_reg) / 1000.0, false);
+        push("dp/castout_z", (16.0 * cast_lane + code_reg) / 1000.0, false);
+    }
 
     // --------------------------------------------- §3.1 data protection
     if protection.has_data_protection() {
@@ -398,6 +418,39 @@ mod tests {
         let f = paper(Protection::Full);
         let total: f64 = f.items.iter().map(|i| i.kge).sum();
         assert!((f.items.iter().map(|i| i.kge / total).sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cast_units_appear_only_on_fp8_builds_and_are_not_ft_overhead() {
+        use crate::fp::{Fp8Format, GemmFormat};
+        let fp16 = paper(Protection::Baseline);
+        assert!(
+            !fp16.items.iter().any(|i| i.name.starts_with("dp/cast")),
+            "FP16 build must not carry cast units"
+        );
+        let cfg8 = RedMuleConfig::paper().with_format(GemmFormat::Fp8(Fp8Format::E4M3));
+        for p in [Protection::Baseline, Protection::Full, Protection::Abft] {
+            let r8 = area_report(cfg8, p);
+            for name in ["dp/castin_x", "dp/castin_w", "dp/castin_y", "dp/castout_z"] {
+                let item = r8
+                    .items
+                    .iter()
+                    .find(|i| i.name == name)
+                    .unwrap_or_else(|| panic!("{name} missing on fp8 {p:?} build"));
+                assert!(!item.ft_overhead, "{name} is datapath, not FT overhead");
+                assert!(item.kge > 0.0);
+            }
+            // The hatched-items invariant holds on FP8 builds too.
+            for i in &r8.items {
+                assert_eq!(i.ft_overhead, i.name.starts_with("ft/"), "{}", i.name);
+            }
+        }
+        // Cast units are a small share of the build, and byte-identical
+        // totals on the default path.
+        let base8 = area_report(cfg8, Protection::Baseline);
+        let share = base8.share_of("dp/cast");
+        assert!(share > 0.0 && share < 0.05, "cast share {share:.4}");
+        assert_eq!(fp16.total_kge(), paper(Protection::Baseline).total_kge());
     }
 
     #[test]

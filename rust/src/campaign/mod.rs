@@ -638,6 +638,13 @@ pub(crate) struct TraceKey {
     h: usize,
     p: usize,
     protection: &'static str,
+    /// Numeric format and op discriminants: both change the staged golden
+    /// expectations and (for FP8) the fault-site population and every
+    /// value crossing the cast units, so cells differing on either axis
+    /// must never share a reference trace even when the workload images
+    /// (`problem_digest`) coincide.
+    format: &'static str,
+    op: &'static str,
     ft_mode: bool,
     /// Recovery-policy discriminant (0 = full restart, 1 = tile-level,
     /// 2 = in-place correct): the policy changes retry behavior, not the
@@ -670,6 +677,8 @@ impl TraceKey {
             h: config.cfg.h,
             p: config.cfg.p,
             protection: config.protection.name(),
+            format: config.cfg.format.name(),
+            op: config.cfg.op.name(),
             ft_mode: config.mode == ExecMode::FaultTolerant,
             recovery: match config.recovery {
                 RecoveryPolicy::FullRestart => 0,
@@ -706,8 +715,8 @@ type CacheSlot = Arc<OnceLock<std::result::Result<Arc<CleanRun>, String>>>;
 /// rest block and adopt), while distinct keys build fully in parallel.
 ///
 /// Memory: the sweep engine pins every cell's clean-run identity up
-/// front ([`TraceCache::retain`]) and releases it as the cell completes
-/// ([`TraceCache::release`]); the `Arc<CleanRun>` slot is evicted when
+/// front (`TraceCache::retain`) and releases it as the cell completes
+/// (`TraceCache::release`); the `Arc<CleanRun>` slot is evicted when
 /// the last unfinished cell sharing the key lets go, so peak memory is
 /// one `CleanRun` per identity *still in use* rather than per identity
 /// ever seen — the cache is empty again at sweep end. Callers that
@@ -947,6 +956,20 @@ impl CellCtx {
                     .into(),
             ));
         }
+        if !config.cfg.op.is_linear() && config.protection.has_abft_checksums() {
+            return Err(Error::Config(format!(
+                "op '{}' breaks the ABFT checksum identity (only the linear 'mul' \
+                 reduction preserves row/column sums) — use a non-ABFT protection level",
+                config.cfg.op.name()
+            )));
+        }
+        if config.cfg.format.is_fp8() && config.protection.has_online_abft() {
+            return Err(Error::Config(format!(
+                "format '{}' cannot run online ABFT: the dual-plane residuals are exact \
+                 only on the FP16 path — use plain 'abft' or a lower protection level",
+                config.cfg.format.name()
+            )));
+        }
         let registry = FaultRegistry::new(config.cfg, config.protection);
         if config.stratify {
             let sched = BatchSchedule::of(config);
@@ -960,7 +983,7 @@ impl CellCtx {
                 )));
             }
         }
-        let golden = problem.golden_z();
+        let golden = problem.golden_z_for(config.cfg.format, config.cfg.op);
         let clean = match cache {
             Some(c) => c.get_or_record(TraceKey::of(config, problem), || {
                 Campaign::record_clean_run(config, problem, &golden)

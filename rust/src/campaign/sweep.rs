@@ -1,11 +1,16 @@
 //! Scenario-grid sweep campaigns — the scale-out generalization of the
 //! single-cell Table-1 campaign.
 //!
-//! A [`SweepConfig`] spans five axes:
+//! A [`SweepConfig`] spans seven axes:
 //!
 //! * **array geometry** (`RedMuleConfig` L/H/P instances): compare how
 //!   array shape trades throughput against cross-section — more rows mean
 //!   more exposed state per cycle but fewer cycles per workload,
+//! * **numeric format** ([`GemmFormat`]): FP16 or an FP8 storage grid
+//!   (E4M3/E5M2) — FP8 cells add the cast-unit fault sites to the
+//!   population and quantize the golden expectations,
+//! * **GEMM op** ([`GemmOp`]): the `(x op1 w) op2 acc` reduction family
+//!   (mul/addmax/addmin/mulmax/mulmin),
 //! * **protection build** (baseline / data / full / per-CE / ABFT),
 //! * **GEMM shape** (the workload the faults land in),
 //! * **fault count** per run, under an [`FaultModel`] (independent SEUs,
@@ -63,6 +68,7 @@
 
 use crate::cluster::{recovery_valid, RecoveryPolicy, System};
 use crate::fault::FaultModel;
+use crate::fp::{GemmFormat, GemmOp};
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
 use crate::redmule::{Protection, RedMuleConfig};
 use crate::util::stats::OutcomeEstimate;
@@ -91,6 +97,15 @@ pub struct SweepConfig {
     /// loop of the cell enumeration. Replicated (data-protected) cells
     /// need an even row count.
     pub geometries: Vec<RedMuleConfig>,
+    /// Numeric-format axis, crossed right after geometry (empty = the
+    /// default FP16 only, byte-identical to pre-axis sweeps). FP8 ×
+    /// online-ABFT combinations are rejected up front — the dual-plane
+    /// residuals are exact only on the FP16 path.
+    pub formats: Vec<GemmFormat>,
+    /// GEMM-op axis, crossed after format (empty = the default `mul`
+    /// only). Non-linear ops × ABFT-checksum builds are rejected up
+    /// front — only `mul` preserves the row/column-sum identity.
+    pub ops: Vec<GemmOp>,
     pub protections: Vec<Protection>,
     pub shapes: Vec<GemmSpec>,
     /// Faults per run, each entry one grid column (all ≥ 1).
@@ -167,6 +182,8 @@ impl SweepConfig {
     pub fn new(injections: u64, seed: u64) -> Self {
         Self {
             geometries: vec![RedMuleConfig::paper()],
+            formats: vec![GemmFormat::Fp16],
+            ops: vec![GemmOp::Mul],
             protections: vec![Protection::Baseline, Protection::Data, Protection::Full],
             shapes: vec![GemmSpec::paper_workload(), GemmSpec::new(6, 8, 8)],
             fault_counts: vec![1, 2],
@@ -204,7 +221,11 @@ impl SweepConfig {
                 self.shapes.len() * self.fault_counts.len() * t
             })
             .sum();
-        self.geometries.len().max(1) * per_geometry * recoveries
+        self.geometries.len().max(1)
+            * self.formats.len().max(1)
+            * self.ops.len().max(1)
+            * per_geometry
+            * recoveries
     }
 }
 
@@ -212,6 +233,8 @@ impl SweepConfig {
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     pub geometry: RedMuleConfig,
+    pub format: GemmFormat,
+    pub op: GemmOp,
     pub protection: Protection,
     pub shape: GemmSpec,
     pub faults: usize,
@@ -232,9 +255,10 @@ pub struct SweepResult {
     pub stratified: bool,
     /// Confidence level of the reported intervals.
     pub confidence: f64,
-    /// Cells in deterministic grid order (geometry-major, then
-    /// protection, shape, fault count, tolerance factor and — when the
-    /// recovery axis is crossed — recovery policy innermost).
+    /// Cells in deterministic grid order (geometry-major, then numeric
+    /// format, GEMM op, protection, shape, fault count, tolerance factor
+    /// and — when the recovery axis is crossed — recovery policy
+    /// innermost).
     pub cells: Vec<SweepCell>,
     /// Which execution engine produced the counts: `"direct"`,
     /// `"fast-forward"` or `"two-level"`. Reported in the timing sidecar
@@ -289,6 +313,7 @@ impl SweepResult {
                 "\"geometry\": {{\"l\": {}, \"h\": {}, \"p\": {}}}, ",
                 c.geometry.l, c.geometry.h, c.geometry.p
             ));
+            Self::format_op_fields(&mut s, c);
             s.push_str(&format!("\"protection\": \"{}\", ", c.protection.name()));
             s.push_str(&format!("\"mode\": \"{}\", ", r.config.mode.name()));
             s.push_str(&format!(
@@ -325,12 +350,26 @@ impl SweepResult {
         s
     }
 
+    /// Format/op coordinate fields, emitted only when the cell deviates
+    /// from the `fp16`/`mul` defaults: default-path documents must stay
+    /// byte-identical to pre-axis sweeps (the A/B contract every engine
+    /// and schema test pins).
+    fn format_op_fields(s: &mut String, c: &SweepCell) {
+        if c.format != GemmFormat::Fp16 {
+            s.push_str(&format!("\"format\": \"{}\", ", c.format.name()));
+        }
+        if c.op != GemmOp::Mul {
+            s.push_str(&format!("\"op\": \"{}\", ", c.op.name()));
+        }
+    }
+
     /// Shared cell-coordinate prefix of the v2 and timing documents.
     fn cell_coords(s: &mut String, c: &SweepCell) {
         s.push_str(&format!(
             "\"geometry\": {{\"l\": {}, \"h\": {}, \"p\": {}}}, ",
             c.geometry.l, c.geometry.h, c.geometry.p
         ));
+        Self::format_op_fields(s, c);
         s.push_str(&format!("\"protection\": \"{}\", ", c.protection.name()));
         s.push_str(&format!(
             "\"shape\": {{\"m\": {}, \"n\": {}, \"k\": {}}}, ",
@@ -511,6 +550,8 @@ impl SweepResult {
 #[derive(Debug, Clone, Copy)]
 struct CellSpec {
     geometry: RedMuleConfig,
+    format: GemmFormat,
+    op: GemmOp,
     protection: Protection,
     shape_idx: usize,
     shape: GemmSpec,
@@ -597,6 +638,40 @@ impl Sweep {
                     .into(),
             ));
         }
+        // Format/op axes are crossed against *every* protection, so a
+        // combination the hardware cannot honour is a configuration
+        // error up front, not a cell to skip silently — same contract as
+        // the recovery axis below.
+        for &op in &config.ops {
+            if !op.is_linear() {
+                if let Some(p) = config
+                    .protections
+                    .iter()
+                    .find(|p| p.has_abft_checksums())
+                {
+                    return Err(Error::Config(format!(
+                        "op '{}' breaks the ABFT checksum identity (only the linear \
+                         'mul' reduction preserves row/column sums) — drop it or the \
+                         {} protection from the grid",
+                        op.name(),
+                        p.name()
+                    )));
+                }
+            }
+        }
+        for &format in &config.formats {
+            if format.is_fp8() {
+                if let Some(p) = config.protections.iter().find(|p| p.has_online_abft()) {
+                    return Err(Error::Config(format!(
+                        "format '{}' cannot run online ABFT (the dual-plane residuals \
+                         are exact only on the FP16 path) — drop it or the {} \
+                         protection from the grid",
+                        format.name(),
+                        p.name()
+                    )));
+                }
+            }
+        }
         // The recovery axis is crossed against *every* protection, so a
         // pair the hardware cannot honour (e.g. in-place correction
         // without online ABFT) is a configuration error, not a cell to
@@ -626,28 +701,49 @@ impl Sweep {
             Some(rs) => rs.iter().map(|&r| Some(r)).collect(),
             None => vec![None],
         };
+        // Empty format/op axes mean "default only" — byte-identical grid
+        // enumeration to pre-axis sweeps.
+        let default_formats = [GemmFormat::Fp16];
+        let default_ops = [GemmOp::Mul];
+        let format_axis: &[GemmFormat] = if config.formats.is_empty() {
+            &default_formats
+        } else {
+            &config.formats
+        };
+        let op_axis: &[GemmOp] = if config.ops.is_empty() {
+            &default_ops
+        } else {
+            &config.ops
+        };
         let mut specs: Vec<CellSpec> = Vec::new();
         for &geometry in &config.geometries {
-            for &protection in &config.protections {
-                for (shape_idx, &shape) in config.shapes.iter().enumerate() {
-                    for &faults in &config.fault_counts {
-                        let tols: &[f64] =
-                            if protection.has_abft_checksums() && !config.tol_factors.is_empty() {
-                                &config.tol_factors
-                            } else {
-                                &default_tols
-                            };
-                        for &tol_factor in tols {
-                            for &recovery in &recovery_axis {
-                                specs.push(CellSpec {
-                                    geometry,
-                                    protection,
-                                    shape_idx,
-                                    shape,
-                                    faults,
-                                    tol_factor,
-                                    recovery,
-                                });
+            for &format in format_axis {
+                for &op in op_axis {
+                    for &protection in &config.protections {
+                        for (shape_idx, &shape) in config.shapes.iter().enumerate() {
+                            for &faults in &config.fault_counts {
+                                let tols: &[f64] = if protection.has_abft_checksums()
+                                    && !config.tol_factors.is_empty()
+                                {
+                                    &config.tol_factors
+                                } else {
+                                    &default_tols
+                                };
+                                for &tol_factor in tols {
+                                    for &recovery in &recovery_axis {
+                                        specs.push(CellSpec {
+                                            geometry,
+                                            format,
+                                            op,
+                                            protection,
+                                            shape_idx,
+                                            shape,
+                                            faults,
+                                            tol_factor,
+                                            recovery,
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -738,7 +834,7 @@ impl Sweep {
         let tag = ((spec.shape_idx as u64) << 32) | spec.faults as u64;
         let seed = stream_seed(config.seed, DOMAIN_SWEEP_CELL, tag);
         let mut cc = CampaignConfig::table1(spec.protection, config.injections, seed);
-        cc.cfg = spec.geometry;
+        cc.cfg = spec.geometry.with_format(spec.format).with_op(spec.op);
         cc.spec = spec.shape;
         cc.threads = config.threads;
         cc.faults_per_run = spec.faults;
@@ -833,6 +929,8 @@ impl Sweep {
         let result = Campaign::run_with_problem_cached(&cc, problem, cache)?;
         Ok(SweepCell {
             geometry: spec.geometry,
+            format: spec.format,
+            op: spec.op,
             protection: spec.protection,
             shape: spec.shape,
             faults: spec.faults,
@@ -1125,6 +1223,8 @@ impl Grid<'_> {
         prog.result.wall_seconds = prog.busy_seconds;
         SweepCell {
             geometry: spec.geometry,
+            format: spec.format,
+            op: spec.op,
             protection: spec.protection,
             shape: spec.shape,
             faults: spec.faults,
@@ -1480,6 +1580,108 @@ mod tests {
                 "geometry {g}"
             );
         }
+    }
+
+    #[test]
+    fn format_and_op_axes_multiply_the_grid_and_tag_only_non_default_cells() {
+        use crate::fp::Fp8Format;
+        let mut c = SweepConfig::new(25, 21);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        c.protections = vec![Protection::Baseline, Protection::Full];
+        c.fault_counts = vec![1];
+        c.formats = vec![GemmFormat::Fp16, GemmFormat::Fp8(Fp8Format::E4M3)];
+        c.ops = vec![GemmOp::Mul, GemmOp::AddMax];
+        c.threads = 2;
+        assert_eq!(c.n_cells(), 8);
+        let r = Sweep::run(&c).unwrap();
+        assert_eq!(r.cells.len(), 8);
+        // Axis order: format outside op outside protection.
+        assert_eq!(r.cells[0].format, GemmFormat::Fp16);
+        assert_eq!(r.cells[0].op, GemmOp::Mul);
+        assert_eq!(r.cells[2].op, GemmOp::AddMax);
+        assert_eq!(r.cells[4].format, GemmFormat::Fp8(Fp8Format::E4M3));
+        // Same-coordinate cells share the campaign seed across the new
+        // axes (controlled comparison, like geometry/protection).
+        assert_eq!(r.cells[0].result.config.seed, r.cells[4].result.config.seed);
+        // JSON tags only the non-default cells, in both schemas.
+        for j in [r.to_json(false), r.to_json_v2()] {
+            assert_eq!(j.matches("\"format\": \"fp8-e4m3\"").count(), 4);
+            assert_eq!(j.matches("\"op\": \"addmax\"").count(), 4);
+            assert!(!j.contains("\"format\": \"fp16\""));
+            assert!(!j.contains("\"op\": \"mul\""));
+        }
+        // Every cell ran its full budget (the FP8/op paths complete).
+        for cell in &r.cells {
+            assert_eq!(cell.result.total, 25);
+        }
+    }
+
+    #[test]
+    fn default_format_and_op_axes_are_byte_identical_to_unset_axes() {
+        // Explicitly listing the defaults must reproduce the axis-free
+        // documents byte for byte — the tentpole's A/B contract.
+        let base = tiny(29, 2);
+        let mut explicit = base.clone();
+        explicit.formats = vec![GemmFormat::Fp16];
+        explicit.ops = vec![GemmOp::Mul];
+        let a = Sweep::run(&base).unwrap();
+        let b = Sweep::run(&explicit).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+        assert_eq!(a.to_json_v2(), b.to_json_v2());
+        // And an *empty* axis means "default only", not zero cells.
+        let mut empty = base.clone();
+        empty.formats = vec![];
+        empty.ops = vec![];
+        assert_eq!(empty.n_cells(), base.n_cells());
+        assert_eq!(Sweep::run(&empty).unwrap().to_json_v2(), a.to_json_v2());
+    }
+
+    #[test]
+    fn fp8_and_op_sweeps_are_thread_invariant_across_engines() {
+        use crate::fp::Fp8Format;
+        let mut c = SweepConfig::new(60, 37);
+        c.shapes = vec![GemmSpec::new(6, 8, 8)];
+        // No ABFT build here: a non-linear op × checksums is rejected.
+        c.protections = vec![Protection::Full];
+        c.fault_counts = vec![1];
+        c.formats = vec![GemmFormat::Fp8(Fp8Format::E5M2)];
+        c.ops = vec![GemmOp::MulMin];
+        c.threads = 1;
+        let a = Sweep::run(&c).unwrap();
+        let mut c8 = c.clone();
+        c8.threads = 8;
+        assert_eq!(a.to_json_v2(), Sweep::run(&c8).unwrap().to_json_v2());
+        let mut direct = c.clone();
+        direct.fast_forward = false;
+        assert_eq!(a.to_json(false), Sweep::run(&direct).unwrap().to_json(false));
+    }
+
+    #[test]
+    fn rejected_format_and_op_combinations_fail_before_any_cell_runs() {
+        use crate::fp::Fp8Format;
+        // Non-linear op × ABFT checksums.
+        let mut c = SweepConfig::new(10, 1);
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.fault_counts = vec![1];
+        c.protections = vec![Protection::Abft];
+        c.ops = vec![GemmOp::AddMax];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // FP8 × online ABFT.
+        let mut c = SweepConfig::new(10, 1);
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.fault_counts = vec![1];
+        c.protections = vec![Protection::AbftOnline];
+        c.formats = vec![GemmFormat::Fp8(Fp8Format::E4M3)];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        // FP8 × plain (offline) ABFT is allowed — the format-aware
+        // tolerance absorbs the quantization noise.
+        let mut c = SweepConfig::new(10, 1);
+        c.shapes = vec![GemmSpec::new(4, 4, 4)];
+        c.fault_counts = vec![1];
+        c.protections = vec![Protection::Abft];
+        c.formats = vec![GemmFormat::Fp8(Fp8Format::E4M3)];
+        c.threads = 1;
+        assert!(Sweep::run(&c).is_ok());
     }
 
     #[test]

@@ -20,8 +20,8 @@
 use crate::dma::{Dma, L2Mem};
 use crate::fault::{first_fault_cycle, last_fault_cycle, FaultCtx, FaultPlan};
 use crate::golden::{
-    abft_tolerance_scaled, analyze_residuals, correct_from_residual, AbftMismatch, GemmProblem,
-    Mat, ResidualVerdict, ABFT_TOL_FACTOR,
+    abft_tolerance_scaled_for, analyze_residuals, correct_from_residual, AbftMismatch,
+    GemmProblem, Mat, ResidualVerdict, ABFT_TOL_FACTOR,
 };
 use crate::redmule::fault_unit::cause;
 use crate::redmule::regfile::{
@@ -638,7 +638,13 @@ impl System {
             let unit_row = i - r0; // band sub-tasks index rows from 0
             let obs = self.redmule.abft.row_sum(unit_row);
             let abs = self.redmule.abft.row_abs(unit_row);
-            let tol = abft_tolerance_scaled(self.abft_tol_factor, n, k_data, abs);
+            let tol = abft_tolerance_scaled_for(
+                self.redmule.cfg.format,
+                self.abft_tol_factor,
+                n,
+                k_data,
+                abs,
+            );
             let dev = (obs - carried.to_f64()).abs();
             if !carried.is_finite() || !dev.is_finite() || dev > tol {
                 mm.rows.push(i);
@@ -650,7 +656,13 @@ impl System {
                 let carried = self.tcdm.read_fp16(addr).0;
                 let obs = self.redmule.abft.col_sum(j);
                 let abs = self.redmule.abft.col_abs(j);
-                let tol = abft_tolerance_scaled(self.abft_tol_factor, n, m_aug - 1, abs);
+                let tol = abft_tolerance_scaled_for(
+                    self.redmule.cfg.format,
+                    self.abft_tol_factor,
+                    n,
+                    m_aug - 1,
+                    abs,
+                );
                 let dev = (obs - carried.to_f64()).abs();
                 if !carried.is_finite() || !dev.is_finite() || dev > tol {
                     mm.cols.push(j);
@@ -1198,7 +1210,7 @@ impl System {
     ///    through the full accelerator model — faults land exactly as in
     ///    the direct path;
     /// 3. **re-convergence**: past the window, mid-segment probes (every
-    ///    [`exec::EARLY_PROBE_STRIDE`] cycles, plus every checkpoint
+    ///    `exec::EARLY_PROBE_STRIDE` cycles, plus every checkpoint
     ///    boundary) prove bit-identity with the reference from the
     ///    per-cycle digests + segment write logs, and the recorded clean
     ///    tail substitutes for the rest.

@@ -7,7 +7,8 @@
 //! a [`FaultCtx`]:
 //!
 //! * **Transient (SET)** sites are combinational values: the model calls
-//!   [`FaultCtx::fp16`] / [`FaultCtx::u32`] / [`FaultCtx::flag`] at the
+//!   [`FaultCtx::fp16`] / [`FaultCtx::u8`] / [`FaultCtx::u32`] /
+//!   [`FaultCtx::flag`] at the
 //!   architectural point where the value is produced in a given cycle. If
 //!   the planned site is not exercised in the planned cycle the fault is
 //!   *masked* — exactly like a SET on an idle net.
@@ -184,6 +185,16 @@ impl FaultCtx {
         } else {
             Fp16::from_bits(v.to_bits() ^ m as u16)
         }
+    }
+
+    /// Pass an 8-bit code (the cast units' FP8 code path) through a
+    /// potential fault site.
+    #[inline]
+    pub fn u8(&mut self, site: SiteId, v: u8) -> u8 {
+        if self.plans.is_empty() {
+            return v;
+        }
+        v ^ self.xor_mask(site, 7) as u8
     }
 
     /// Pass a 32-bit word (address, config, counter) through a fault site.

@@ -347,6 +347,47 @@ impl FaultRegistry {
             g.finish(&mut entries);
         }
 
+        // --- FP8 cast units (hybrid-format builds only): the fetch-path
+        //     cast-in unit of each operand stream and the store-path
+        //     cast-out unit on Z. Each contributes its 8-bit code nets
+        //     (SET; one lane per consumer row / CE column / store lane —
+        //     matching the hook indices in the model) and one 8-bit
+        //     code-holding register (SEU, single-beat lifetime). Datapath
+        //     area, not FT overhead: it exists on *every* protection
+        //     build of an FP8 task and widens the unprotected
+        //     cross-section.
+        if cfg.format.is_fp8() {
+            let castin: [(Module, &str, u32); 3] = [
+                (Module::StreamerX, "dp/castin_x", l),
+                (Module::StreamerW, "dp/castin_w", h),
+                (Module::StreamerY, "dp/castin_y", l),
+            ];
+            for (module, item, lanes) in castin {
+                let mut g = Group::new(kge(item));
+                g.add_range(module, streamer_unit::CASTIN_NET, 0..lanes, 8, Transient);
+                g.add(
+                    SiteId::new(module, streamer_unit::CASTIN_REG, 0),
+                    8,
+                    StateUpset,
+                );
+                g.finish(&mut entries);
+            }
+            let mut g = Group::new(kge("dp/castout_z"));
+            g.add_range(
+                Module::StreamerZ,
+                streamer_unit::CASTOUT_NET,
+                0..16,
+                8,
+                Transient,
+            );
+            g.add(
+                SiteId::new(Module::StreamerZ, streamer_unit::CASTOUT_REG, 0),
+                8,
+                StateUpset,
+            );
+            g.finish(&mut entries);
+        }
+
         // --- Scheduler FSM + its control nets to the rows.
         let mut g = Group::new(kge("sched_fsm"));
         g.add(SiteId::new(Module::SchedFsm, sched_unit::STATE_REG, 0), 3, StateUpset);
@@ -792,6 +833,51 @@ mod tests {
             "one checker net per CE on the paper instance"
         );
         assert!(p.total_weight() > b.total_weight());
+    }
+
+    #[test]
+    fn fp8_population_adds_cast_sites_in_the_streamer_stratum() {
+        use crate::fp::{Fp8Format, GemmFormat};
+        let cfg8 = RedMuleConfig::paper().with_format(GemmFormat::Fp8(Fp8Format::E4M3));
+        for p in [Protection::Baseline, Protection::Full, Protection::Abft] {
+            let f16 = FaultRegistry::new(RedMuleConfig::paper(), p);
+            let f8 = FaultRegistry::new(cfg8, p);
+            // Paper instance: (12 + 1) + (4 + 1) + (12 + 1) cast-in sites
+            // plus 16 + 1 cast-out sites.
+            assert_eq!(f8.n_entries(), f16.n_entries() + 48, "{p:?}");
+            assert!(f8.total_weight() > f16.total_weight(), "{p:?}");
+            let cast_units = [
+                crate::fault::site::streamer_unit::CASTIN_NET,
+                crate::fault::site::streamer_unit::CASTIN_REG,
+                crate::fault::site::streamer_unit::CASTOUT_NET,
+                crate::fault::site::streamer_unit::CASTOUT_REG,
+            ];
+            assert!(
+                !f16.entries().iter().any(|e| matches!(
+                    e.site.module(),
+                    Module::StreamerX | Module::StreamerW | Module::StreamerY | Module::StreamerZ
+                ) && cast_units.contains(&e.site.unit())),
+                "{p:?}: FP16 population must not contain cast sites"
+            );
+            for e in f8.entries() {
+                let is_cast = cast_units.contains(&e.site.unit())
+                    && matches!(
+                        e.site.module(),
+                        Module::StreamerX
+                            | Module::StreamerW
+                            | Module::StreamerY
+                            | Module::StreamerZ
+                    );
+                if is_cast {
+                    assert_eq!(e.bits, 8, "cast sites are 8-bit codes");
+                    assert_eq!(
+                        stratum_of_module(e.site.module()),
+                        1,
+                        "cast sites land in the streamer stratum"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

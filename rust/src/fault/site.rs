@@ -155,6 +155,22 @@ pub mod streamer_unit {
     /// Store data net (SET); index = lane (0..16 primary copy, 16..32
     /// redundant copy, 32..48 post-checker segment).
     pub const STORE_NET: u8 = 6;
+    /// Cast-in unit output code net (SET, FP8 formats only): the 8-bit
+    /// FP8 code between the narrowing stage and the widening stage of the
+    /// fetch-path cast unit; index = consumer row (X/Y) or CE column (W).
+    pub const CASTIN_NET: u8 = 7;
+    /// Cast-in unit code-holding register (SEU, FP8 formats only): the
+    /// 8-bit register latching the code between cast pipeline stages. One
+    /// per stream; rewritten every beat, so an upset corrupts the next
+    /// value cast through the stream.
+    pub const CASTIN_REG: u8 = 8;
+    /// Cast-out unit output code net (SET, FP8 formats only, `StreamerZ`):
+    /// the 8-bit code produced by the store-path narrowing stage before it
+    /// is widened back onto the FP16 carrier; index = store lane.
+    pub const CASTOUT_NET: u8 = 9;
+    /// Cast-out unit code-holding register (SEU, FP8 formats only,
+    /// `StreamerZ`); same single-beat semantics as [`CASTIN_REG`].
+    pub const CASTOUT_REG: u8 = 10;
 }
 
 /// CE-array unit tags.

@@ -24,7 +24,9 @@
 pub mod fma;
 pub mod fp16;
 pub mod fp8;
+pub mod ops;
 
 pub use fma::{add16, fma16, mul16};
 pub use fp16::Fp16;
 pub use fp8::{Fp8, Fp8Format};
+pub use ops::{max16, min16, op_step16, GemmFormat, GemmOp};

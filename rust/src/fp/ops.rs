@@ -1,0 +1,337 @@
+//! GEMM numeric formats and the computation-op family.
+//!
+//! Upstream RedMulE is not a pure FP16 multiply-accumulate engine: the
+//! streamers carry FP8↔FP16 casting units on the input and output paths
+//! (hybrid-FP8 mode), and the scheduler supports a family of GEMM-shaped
+//! reductions `Z = (X op1 W) op2 Z` beyond FMA — element-wise add/mul
+//! combined with a running max/min. Both knobs live here as plain enums so
+//! every layer (config → golden model → fault sites → sweep axes) speaks
+//! the same vocabulary.
+//!
+//! * [`GemmFormat`] — the *storage* format of the operands. `Fp16` is the
+//!   paper instance and the crate-wide default. `Fp8(_)` keeps compute and
+//!   accumulation in FP16 but stores operands on the FP8 grid: a cast-in
+//!   unit narrows-then-widens every fetched value (idempotent when the
+//!   value is already on the grid) and a cast-out unit narrows every
+//!   stored result. The cast units are modelled as real pipeline
+//!   components with their own fault-site populations (`dp/castin*`,
+//!   `dp/castout*` in [`crate::area`] / [`crate::fault::registry`]).
+//! * [`GemmOp`] — which reduction step each CE performs. Only
+//!   [`GemmOp::Mul`] (fused multiply-add) satisfies the linear checksum
+//!   identity that ABFT relies on; the max/min family is rejected on ABFT
+//!   builds up front (see [`GemmOp::is_linear`]).
+//!
+//! [`op_step16`] is the single shared definition of one reduction step,
+//! used by the CE array, the per-CE recompute checkers and the golden
+//! model, so the three can never drift apart.
+
+use super::fma::{add16, fma16, mul16};
+use super::fp16::Fp16;
+use super::fp8::{Fp8, Fp8Format};
+
+/// Numeric storage format of a GEMM task (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmFormat {
+    /// IEEE binary16 end to end — the paper instance and the default.
+    Fp16,
+    /// FP8 storage grid with FP16 compute: cast-in on fetch, cast-out on
+    /// store. The TCDM still holds 16-bit carriers (task layout, DMA and
+    /// ECC are unchanged); the *values* are constrained to the FP8 grid.
+    Fp8(Fp8Format),
+}
+
+impl GemmFormat {
+    pub const ALL: [GemmFormat; 3] = [
+        GemmFormat::Fp16,
+        GemmFormat::Fp8(Fp8Format::E4M3),
+        GemmFormat::Fp8(Fp8Format::E5M2),
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmFormat::Fp16 => "fp16",
+            GemmFormat::Fp8(Fp8Format::E4M3) => "fp8-e4m3",
+            GemmFormat::Fp8(Fp8Format::E5M2) => "fp8-e5m2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fp16" => Some(GemmFormat::Fp16),
+            "fp8-e4m3" | "e4m3" => Some(GemmFormat::Fp8(Fp8Format::E4M3)),
+            "fp8-e5m2" | "e5m2" => Some(GemmFormat::Fp8(Fp8Format::E5M2)),
+            _ => None,
+        }
+    }
+
+    /// Does this format route values through the cast units?
+    #[inline]
+    pub fn is_fp8(self) -> bool {
+        matches!(self, GemmFormat::Fp8(_))
+    }
+
+    /// Unit roundoff of the storage grid: the maximum *relative* error of
+    /// rounding a real number to the nearest representable value. This is
+    /// what makes the ABFT residual tolerance format-aware: checksum
+    /// residuals on an FP8 grid carry quantization noise proportional to
+    /// this bound instead of FP16's (see
+    /// [`crate::golden::abft_tolerance_scaled_for`]).
+    pub fn unit_roundoff(self) -> f64 {
+        match self {
+            // binary16: 11-bit significand, u = 2^-11 = 1/2048 (= EPS16).
+            GemmFormat::Fp16 => 2f64.powi(-11),
+            // E4M3: 4-bit significand, u = 2^-4.
+            GemmFormat::Fp8(Fp8Format::E4M3) => 2f64.powi(-4),
+            // E5M2: 3-bit significand, u = 2^-3.
+            GemmFormat::Fp8(Fp8Format::E5M2) => 2f64.powi(-3),
+        }
+    }
+
+    /// Snap one FP16 value onto this format's storage grid (saturating
+    /// RTNE narrowing + exact widening). Identity for [`GemmFormat::Fp16`]
+    /// and idempotent for all formats — the clean cast-in of a value that
+    /// is already on the grid returns it unchanged.
+    #[inline]
+    pub fn snap(self, v: Fp16) -> Fp16 {
+        match self {
+            GemmFormat::Fp16 => v,
+            GemmFormat::Fp8(f) => Fp8::from_fp16(v, f, true).to_fp16(),
+        }
+    }
+}
+
+impl Default for GemmFormat {
+    fn default() -> Self {
+        GemmFormat::Fp16
+    }
+}
+
+/// Which reduction step each CE performs: `acc ← (x op1 w) op2 acc`.
+///
+/// [`GemmOp::Mul`] is the classic GEMM (`op1 = ×` fused with `op2 = +`
+/// into a single-rounding FMA). The other four combine an element-wise
+/// stage (`add`/`mul`, each individually rounded) with a running
+/// `max`/`min` — the upstream datapath's op family used for pooling-like
+/// and tropical-algebra workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmOp {
+    /// `acc ← fma(x, w, acc)` — single rounding, the default.
+    Mul,
+    /// `acc ← max(x + w, acc)`.
+    AddMax,
+    /// `acc ← min(x + w, acc)`.
+    AddMin,
+    /// `acc ← max(x × w, acc)`.
+    MulMax,
+    /// `acc ← min(x × w, acc)`.
+    MulMin,
+}
+
+impl GemmOp {
+    pub const ALL: [GemmOp; 5] = [
+        GemmOp::Mul,
+        GemmOp::AddMax,
+        GemmOp::AddMin,
+        GemmOp::MulMax,
+        GemmOp::MulMin,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmOp::Mul => "mul",
+            GemmOp::AddMax => "addmax",
+            GemmOp::AddMin => "addmin",
+            GemmOp::MulMax => "mulmax",
+            GemmOp::MulMin => "mulmin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mul" | "gemm" => Some(GemmOp::Mul),
+            "addmax" => Some(GemmOp::AddMax),
+            "addmin" => Some(GemmOp::AddMin),
+            "mulmax" => Some(GemmOp::MulMax),
+            "mulmin" => Some(GemmOp::MulMin),
+            _ => None,
+        }
+    }
+
+    /// Does the reduction satisfy the linear checksum identity
+    /// (`checksum(Z) = checksum(X)·W`) that ABFT relies on? Only the FMA
+    /// reduction does; max/min reductions are rejected on ABFT builds.
+    #[inline]
+    pub fn is_linear(self) -> bool {
+        matches!(self, GemmOp::Mul)
+    }
+}
+
+impl Default for GemmOp {
+    fn default() -> Self {
+        GemmOp::Mul
+    }
+}
+
+/// Monotone total-order key: `a.to_f64() < b.to_f64() ⇔ key(a) < key(b)`
+/// for non-NaN values, with `+0` strictly above `−0` so max/min ties on
+/// signed zeros are deterministic at the bit level.
+#[inline]
+fn ord_key(x: Fp16) -> u16 {
+    let b = x.to_bits();
+    if b & 0x8000 != 0 {
+        !b
+    } else {
+        b | 0x8000
+    }
+}
+
+/// IEEE-754 `maxNum` on binary16: the larger operand; a quiet-NaN operand
+/// loses to a non-NaN one; two NaNs give the canonical NaN. Ties on
+/// `±0` pick `+0`.
+#[inline]
+pub fn max16(a: Fp16, b: Fp16) -> Fp16 {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Fp16::NAN,
+        (true, false) => b,
+        (false, true) => a,
+        (false, false) => {
+            if ord_key(a) >= ord_key(b) {
+                a
+            } else {
+                b
+            }
+        }
+    }
+}
+
+/// IEEE-754 `minNum` on binary16 (see [`max16`]). Ties on `±0` pick `−0`.
+#[inline]
+pub fn min16(a: Fp16, b: Fp16) -> Fp16 {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Fp16::NAN,
+        (true, false) => b,
+        (false, true) => a,
+        (false, false) => {
+            if ord_key(a) <= ord_key(b) {
+                a
+            } else {
+                b
+            }
+        }
+    }
+}
+
+/// One reduction step of the op family: `(x op1 w) op2 acc`.
+///
+/// This is the single definition shared by the CE array, the per-CE
+/// recompute checkers and the golden model.
+#[inline]
+pub fn op_step16(op: GemmOp, x: Fp16, w: Fp16, acc: Fp16) -> Fp16 {
+    match op {
+        GemmOp::Mul => fma16(x, w, acc),
+        GemmOp::AddMax => max16(add16(x, w), acc),
+        GemmOp::AddMin => min16(add16(x, w), acc),
+        GemmOp::MulMax => max16(mul16(x, w), acc),
+        GemmOp::MulMin => min16(mul16(x, w), acc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_names_round_trip() {
+        for f in GemmFormat::ALL {
+            assert_eq!(GemmFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(GemmFormat::parse("e4m3"), Some(GemmFormat::Fp8(Fp8Format::E4M3)));
+        assert_eq!(GemmFormat::parse("nope"), None);
+        assert_eq!(GemmFormat::default(), GemmFormat::Fp16);
+    }
+
+    #[test]
+    fn op_names_round_trip() {
+        for o in GemmOp::ALL {
+            assert_eq!(GemmOp::parse(o.name()), Some(o));
+        }
+        assert_eq!(GemmOp::parse("gemm"), Some(GemmOp::Mul));
+        assert_eq!(GemmOp::parse("nope"), None);
+        assert_eq!(GemmOp::default(), GemmOp::Mul);
+        assert!(GemmOp::Mul.is_linear());
+        for o in [GemmOp::AddMax, GemmOp::AddMin, GemmOp::MulMax, GemmOp::MulMin] {
+            assert!(!o.is_linear(), "{o:?}");
+        }
+    }
+
+    #[test]
+    fn unit_roundoff_ordering() {
+        let u16_ = GemmFormat::Fp16.unit_roundoff();
+        let e4 = GemmFormat::Fp8(Fp8Format::E4M3).unit_roundoff();
+        let e5 = GemmFormat::Fp8(Fp8Format::E5M2).unit_roundoff();
+        assert_eq!(u16_, 1.0 / 2048.0);
+        assert_eq!(e4, 1.0 / 16.0);
+        assert_eq!(e5, 1.0 / 8.0);
+        assert!(u16_ < e4 && e4 < e5);
+    }
+
+    #[test]
+    fn snap_is_identity_for_fp16_and_idempotent_for_fp8() {
+        for bits in (0u16..=0xFFFF).step_by(11) {
+            let v = Fp16(bits);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(GemmFormat::Fp16.snap(v), v);
+            for f in [Fp8Format::E4M3, Fp8Format::E5M2] {
+                let g = GemmFormat::Fp8(f);
+                let once = g.snap(v);
+                assert_eq!(g.snap(once), once, "bits=0x{bits:04X} fmt={f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_min_follow_ieee_nan_and_zero_rules() {
+        let two = Fp16::from_f64(2.0);
+        assert_eq!(max16(Fp16::ONE, two), two);
+        assert_eq!(min16(Fp16::ONE, two), Fp16::ONE);
+        assert_eq!(max16(Fp16::NEG_ONE, Fp16::ONE), Fp16::ONE);
+        // NaN loses to a number; two NaNs canonicalize.
+        assert_eq!(max16(Fp16::NAN, Fp16::ONE), Fp16::ONE);
+        assert_eq!(min16(Fp16::ONE, Fp16::NAN), Fp16::ONE);
+        assert!(max16(Fp16::NAN, Fp16::NAN).is_nan());
+        // Signed-zero ties are deterministic: max → +0, min → −0.
+        assert_eq!(max16(Fp16::ZERO, Fp16::NEG_ZERO).to_bits(), 0x0000);
+        assert_eq!(max16(Fp16::NEG_ZERO, Fp16::ZERO).to_bits(), 0x0000);
+        assert_eq!(min16(Fp16::ZERO, Fp16::NEG_ZERO).to_bits(), 0x8000);
+        assert_eq!(min16(Fp16::NEG_ZERO, Fp16::ZERO).to_bits(), 0x8000);
+        // Infinities order correctly.
+        assert_eq!(max16(Fp16::INFINITY, two), Fp16::INFINITY);
+        assert_eq!(min16(Fp16::NEG_INFINITY, two), Fp16::NEG_INFINITY);
+    }
+
+    #[test]
+    fn op_step_matches_componentwise_reference() {
+        // Cross-check against f64 componentwise evaluation on a grid of
+        // exact values (no double-rounding hazard at these magnitudes).
+        let vals: Vec<Fp16> = [-4.0, -1.5, -0.5, 0.0, 0.25, 1.0, 3.0]
+            .iter()
+            .map(|&v| Fp16::from_f64(v))
+            .collect();
+        for &x in &vals {
+            for &w in &vals {
+                for &acc in &vals {
+                    let am = op_step16(GemmOp::AddMax, x, w, acc).to_f64();
+                    assert_eq!(am, (x.to_f64() + w.to_f64()).max(acc.to_f64()));
+                    let mm = op_step16(GemmOp::MulMin, x, w, acc).to_f64();
+                    assert_eq!(mm, (x.to_f64() * w.to_f64()).min(acc.to_f64()));
+                    assert_eq!(
+                        op_step16(GemmOp::Mul, x, w, acc),
+                        fma16(x, w, acc)
+                    );
+                }
+            }
+        }
+    }
+}

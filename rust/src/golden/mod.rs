@@ -14,7 +14,7 @@
 //! simulator and the PJRT-executed artifact all bit-identical. Run
 //! classification in the fault campaign compares raw `u16` patterns.
 
-use crate::fp::{add16, fma16, Fp16, Fp8, Fp8Format};
+use crate::fp::{add16, op_step16, Fp16, Fp8, Fp8Format, GemmFormat, GemmOp};
 use crate::util::rng::Xoshiro256;
 
 // ------------------------------------------------------------------ ABFT
@@ -217,6 +217,37 @@ pub fn abft_tolerance_scaled(factor: f64, inner: usize, terms: usize, abs_sum: f
     factor * EPS16 * (inner + terms + 1) as f64 * (1.0 + abs_sum)
 }
 
+/// Format-aware variant of [`abft_tolerance_scaled`]: the tolerance grain
+/// is the storage format's unit roundoff instead of FP16's.
+///
+/// On an FP8 task every value crossing the cast units is re-rounded onto
+/// the FP8 grid — the carried checksum inputs at fetch, and every data
+/// element of `Z` at store — so fault-free residuals carry quantization
+/// noise proportional to `2^-4` (E4M3) / `2^-3` (E5M2) rather than FP16's
+/// `2^-11`. Keeping the FP16 bound would flag clean FP8 runs as corrupted
+/// on essentially every workload; widening it is the honest trade: the
+/// detection floor rises with the grid coarseness, and the campaign
+/// measures exactly how much coverage that costs. For
+/// [`GemmFormat::Fp16`] this is *identical* (same expression, same
+/// floating-point evaluation) to [`abft_tolerance_scaled`], preserving
+/// byte-identity of every default-path campaign. Calibration mirrors the
+/// FP16 one: fault-free FP8 deviations measured over the campaign
+/// workload distribution stay well under the F=1 bound (see
+/// `fp8_abft_carried_checksums_are_within_format_tolerance`).
+#[inline]
+pub fn abft_tolerance_scaled_for(
+    format: GemmFormat,
+    factor: f64,
+    inner: usize,
+    terms: usize,
+    abs_sum: f64,
+) -> f64 {
+    match format {
+        GemmFormat::Fp16 => abft_tolerance_scaled(factor, inner, terms, abs_sum),
+        f => factor * f.unit_roundoff() * (inner + terms + 1) as f64 * (1.0 + abs_sum),
+    }
+}
+
 /// A row-major FP16 matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Mat {
@@ -339,6 +370,16 @@ impl Mat {
                 .collect(),
         }
     }
+
+    /// Snap every element onto a [`GemmFormat`]'s storage grid — what the
+    /// cast-in units do to each fetched operand. Identity (a plain clone)
+    /// for [`GemmFormat::Fp16`].
+    pub fn snap_to(&self, format: GemmFormat) -> Mat {
+        match format {
+            GemmFormat::Fp16 => self.clone(),
+            GemmFormat::Fp8(f) => self.quantize_fp8(f),
+        }
+    }
 }
 
 /// GEMM problem dimensions: `X[M][N] · W[N][K] + Y[M][K]`.
@@ -401,6 +442,25 @@ impl GemmProblem {
     /// Bit-exact reference result in the hardware accumulation order.
     pub fn golden_z(&self) -> Mat {
         gemm_golden(&self.x, &self.w, &self.y)
+    }
+
+    /// Bit-exact reference for an arbitrary task datatype: the storage
+    /// [`GemmFormat`] and reduction [`GemmOp`] of the accelerator config.
+    ///
+    /// Mirrors the hardware cast model exactly: every operand is snapped
+    /// onto the storage grid (the cast-in units re-quantize each fetched
+    /// value, idempotently), the reduction runs in FP16, and the final
+    /// result is snapped once more (the cast-out unit narrows every
+    /// store). For `(Fp16, Mul)` this is bit-identical to
+    /// [`GemmProblem::golden_z`].
+    pub fn golden_z_for(&self, format: GemmFormat, op: GemmOp) -> Mat {
+        let z = gemm_golden_op(
+            &self.x.snap_to(format),
+            &self.w.snap_to(format),
+            &self.y.snap_to(format),
+            op,
+        );
+        z.snap_to(format)
     }
 
     /// Order-stable FNV-1a digest of the problem's exact bit content
@@ -494,6 +554,15 @@ pub fn split_abft_z(z_aug: &Mat) -> (Mat, Vec<Fp16>, Vec<Fp16>) {
 /// `Z = Y + X·W` with the RedMulE accumulation order (ascending `n`,
 /// single-rounded FMA at every step).
 pub fn gemm_golden(x: &Mat, w: &Mat, y: &Mat) -> Mat {
+    gemm_golden_op(x, w, y, GemmOp::Mul)
+}
+
+/// The op-family generalization of [`gemm_golden`]: each output element
+/// is the ascending-`n` fold `acc ← (x op1 w) op2 acc` seeded with `Y`,
+/// using the single shared step definition [`op_step16`] — the same one
+/// the CE array and the per-CE recompute checkers execute, so golden and
+/// simulator can never drift apart.
+pub fn gemm_golden_op(x: &Mat, w: &Mat, y: &Mat, op: GemmOp) -> Mat {
     assert_eq!(x.cols, w.rows, "inner dimensions must agree");
     assert_eq!(y.rows, x.rows);
     assert_eq!(y.cols, w.cols);
@@ -503,7 +572,7 @@ pub fn gemm_golden(x: &Mat, w: &Mat, y: &Mat) -> Mat {
         for j in 0..k {
             let mut acc = y.at(i, j);
             for t in 0..n {
-                acc = fma16(x.at(i, t), w.at(t, j), acc);
+                acc = op_step16(op, x.at(i, t), w.at(t, j), acc);
             }
             z.set(i, j, acc);
         }
@@ -514,6 +583,7 @@ pub fn gemm_golden(x: &Mat, w: &Mat, y: &Mat) -> Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::fma16;
 
     #[test]
     fn identity_weight_passes_x_through_plus_y() {
@@ -604,6 +674,142 @@ mod tests {
             let rt = Fp8::from_fp16(*v, Fp8Format::E4M3, true).to_fp16();
             assert_eq!(rt.to_bits(), v.to_bits());
         }
+    }
+
+    #[test]
+    fn golden_z_for_default_path_is_bit_identical_to_golden_z() {
+        for spec in [GemmSpec::paper_workload(), GemmSpec::new(5, 7, 3)] {
+            let p = GemmProblem::random(&spec, 0xD0 + spec.n as u64);
+            assert_eq!(
+                p.golden_z_for(GemmFormat::Fp16, GemmOp::Mul).bits(),
+                p.golden_z().bits()
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_golden_is_on_the_grid_and_idempotent_under_requantization() {
+        let spec = GemmSpec::paper_workload();
+        let p = GemmProblem::random(&spec, 42);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let g = GemmFormat::Fp8(fmt);
+            let z = p.golden_z_for(g, GemmOp::Mul);
+            // Cast-out leaves every stored element on the FP8 grid.
+            assert_eq!(z.snap_to(g).bits(), z.bits(), "{fmt:?}");
+            // A problem whose operands already live on the grid gives the
+            // same result whether or not the host pre-quantized it: the
+            // cast-in is idempotent.
+            let pq = GemmProblem {
+                spec,
+                x: p.x.snap_to(g),
+                w: p.w.snap_to(g),
+                y: p.y.snap_to(g),
+            };
+            assert_eq!(pq.golden_z_for(g, GemmOp::Mul).bits(), z.bits());
+            // And differs from the FP16 result on generic data.
+            assert_ne!(z.bits(), p.golden_z().bits(), "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn op_family_golden_matches_componentwise_f64_reference() {
+        // For max/min-reduced ops every intermediate is exactly
+        // representable after one rounding, so the f64 componentwise fold
+        // (rounding each op1 result to FP16 first) is an independent
+        // reference.
+        let spec = GemmSpec::new(6, 9, 7);
+        let p = GemmProblem::random(&spec, 911);
+        for op in [GemmOp::AddMax, GemmOp::AddMin, GemmOp::MulMax, GemmOp::MulMin] {
+            let z = gemm_golden_op(&p.x, &p.w, &p.y, op);
+            for i in 0..spec.m {
+                for j in 0..spec.k {
+                    let mut acc = p.y.at(i, j).to_f64();
+                    for t in 0..spec.n {
+                        let (x, w) = (p.x.at(i, t).to_f64(), p.w.at(t, j).to_f64());
+                        let e = match op {
+                            GemmOp::AddMax | GemmOp::AddMin => Fp16::from_f64(x + w).to_f64(),
+                            _ => Fp16::from_f64(x * w).to_f64(),
+                        };
+                        acc = match op {
+                            GemmOp::AddMax | GemmOp::MulMax => acc.max(e),
+                            _ => acc.min(e),
+                        };
+                    }
+                    assert_eq!(z.at(i, j).to_f64(), acc, "{op:?} at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_min_reductions_bound_each_other() {
+        let spec = GemmSpec::paper_workload();
+        let p = GemmProblem::random(&spec, 31337);
+        let zmax = gemm_golden_op(&p.x, &p.w, &p.y, GemmOp::MulMax);
+        let zmin = gemm_golden_op(&p.x, &p.w, &p.y, GemmOp::MulMin);
+        for i in 0..spec.m {
+            for j in 0..spec.k {
+                let y = p.y.at(i, j).to_f64();
+                assert!(zmax.at(i, j).to_f64() >= y, "max reduction can only raise y");
+                assert!(zmin.at(i, j).to_f64() <= y, "min reduction can only lower y");
+                assert!(zmax.at(i, j).to_f64() >= zmin.at(i, j).to_f64());
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_abft_carried_checksums_are_within_format_tolerance() {
+        // Empirical calibration of the format-aware tolerance, mirroring
+        // `abft_carried_checksums_are_within_tolerance`: the augmented
+        // problem's operands (including the checksum row/column) and the
+        // final Z all pass through the cast units, so residuals carry FP8
+        // quantization noise. The F=1 format bound must hold on clean
+        // runs for both formats across shapes and seeds.
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            let g = GemmFormat::Fp8(fmt);
+            let u = g.unit_roundoff();
+            for (m, n, k) in [(12, 16, 16), (5, 7, 3), (24, 33, 17)] {
+                for seed in 0..8u64 {
+                    let p = GemmProblem::random(&GemmSpec::new(m, n, k), 9_000 + seed * 131 + n as u64);
+                    // The hardware path: host augments the (unquantized)
+                    // problem, every fetched operand is cast-in, Z is
+                    // cast-out. golden_z_for models exactly that.
+                    let z_aug = p.augment_abft().golden_z_for(g, GemmOp::Mul);
+                    let (data, carried_rows, carried_cols) = split_abft_z(&z_aug);
+                    for i in 0..m {
+                        let obs: f64 = (0..k).map(|j| data.at(i, j).to_f64()).sum();
+                        let abs: f64 = (0..k).map(|j| data.at(i, j).to_f64().abs()).sum();
+                        let dev = (obs - carried_rows[i].to_f64()).abs();
+                        let tol = abft_tolerance_scaled_for(g, 1.0, n, k, abs);
+                        assert!(
+                            dev <= tol,
+                            "{fmt:?} row {i} of ({m},{n},{k}) seed {seed}: dev {dev} > tol {tol}"
+                        );
+                    }
+                    for j in 0..k {
+                        let obs: f64 = (0..m).map(|i| data.at(i, j).to_f64()).sum();
+                        let abs: f64 = (0..m).map(|i| data.at(i, j).to_f64().abs()).sum();
+                        let dev = (obs - carried_cols[j].to_f64()).abs();
+                        let tol = abft_tolerance_scaled_for(g, 1.0, n, m, abs);
+                        assert!(
+                            dev <= tol,
+                            "{fmt:?} col {j} of ({m},{n},{k}) seed {seed}: dev {dev} > tol {tol}"
+                        );
+                    }
+                }
+            }
+            // And the format bound is genuinely looser than FP16's.
+            assert!(u > EPS16);
+            assert!(
+                abft_tolerance_scaled_for(g, 4.0, 16, 16, 10.0)
+                    > abft_tolerance_scaled(4.0, 16, 16, 10.0)
+            );
+        }
+        // FP16 delegates to the exact legacy expression.
+        assert_eq!(
+            abft_tolerance_scaled_for(GemmFormat::Fp16, 4.0, 16, 16, 10.0).to_bits(),
+            abft_tolerance_scaled(4.0, 16, 16, 10.0).to_bits()
+        );
     }
 
     #[test]

@@ -18,6 +18,21 @@
 //!   [`cluster`]), the mixed-criticality [`coordinator`], and the
 //!   [`runtime`] that loads the HLO artifacts via PJRT.
 //!
+//! See `ARCHITECTURE.md` at the repository root for the module graph, the
+//! three execution engines, and the determinism contract that ties them
+//! together.
+//!
+//! ## Precision and op family
+//!
+//! The datapath is parameterised on a numeric format
+//! ([`fp::GemmFormat`]: FP16, or FP8 E4M3 / E5M2 carried on FP16 rails
+//! through cast-in/cast-out stages that are themselves fault sites) and a
+//! GEMM op family ([`fp::GemmOp`]: `mul` plus the `addmax` / `addmin` /
+//! `mulmax` / `mulmin` max-/min-plus variants). Both are plumbed from
+//! [`redmule::RedMuleConfig`] through the golden model, the fault-site
+//! registry, the area model and the sweep grid; the defaults (`fp16`,
+//! `mul`) reproduce the paper configuration bit-for-bit.
+//!
 //! ## Quick start
 //!
 //! ```text
@@ -65,7 +80,7 @@ pub mod prelude {
     pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System};
     pub use crate::coordinator::{Coordinator, Criticality, TaskRequest};
     pub use crate::fault::{FaultKind, FaultModel, FaultPlan, FaultRegistry};
-    pub use crate::fp::Fp16;
+    pub use crate::fp::{Fp16, Fp8, Fp8Format, GemmFormat, GemmOp};
     pub use crate::golden::{GemmProblem, GemmSpec, Mat};
     pub use crate::redmule::{ExecMode, Protection, RedMuleConfig};
     pub use crate::service::{

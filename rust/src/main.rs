@@ -5,6 +5,7 @@
 //! ```text
 //! redmule-ft campaign [--config baseline|data|full|abft|abft-online|per-ce] [--injections N]
 //!                     [--seed S] [--threads T] [--report]
+//!                     [--format fp16|fp8-e4m3|fp8-e5m2] [--op mul|addmax|addmin|mulmax|mulmin]
 //!                     [--direct] [--checkpoint-interval K]
 //!                     [--two-level | --no-two-level]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
@@ -12,6 +13,7 @@
 //!                     [--confidence C]
 //! redmule-ft sweep    [--injections N] [--seed S] [--threads T]
 //!                     [--configs a,b,..] [--geoms LxHxP,..] [--shapes MxNxK,..]
+//!                     [--format f,..] [--op o,..]
 //!                     [--faults 1,2,..] [--model independent|burst|site-burst]
 //!                     [--tols F,..] [--recoveries full-restart,tile-level,..]
 //!                     [--schema v1|v2] [--timing [--timing-out F]]
@@ -26,6 +28,7 @@
 //! redmule-ft floorplan [--config ...]
 //! redmule-ft perf     [--m M --n N --k K]
 //! redmule-ft gemm     [--m M --n N --k K] [--config ...] [--mode ft|perf]
+//!                     [--format F] [--op O]
 //! redmule-ft golden-check [--artifacts DIR]
 //! redmule-ft serve    [--tasks N] [--critical-pct P]
 //! redmule-ft serve-sim [--jobs N] [--seed S] [--workers W] [--injections N]
@@ -41,6 +44,7 @@ use redmule_ft::campaign::{
 use redmule_ft::cluster::{RecoveryPolicy, System};
 use redmule_ft::coordinator::{Coordinator, Criticality};
 use redmule_ft::fault::FaultModel;
+use redmule_ft::fp::{GemmFormat, GemmOp};
 use redmule_ft::golden::{GemmProblem, GemmSpec};
 use redmule_ft::perf::{mode_report, retry_expected_overhead, throughput};
 use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
@@ -149,6 +153,32 @@ fn parse_shape(s: &str) -> Option<GemmSpec> {
     Some(GemmSpec::new(m, n, k))
 }
 
+/// Resolve a single-valued `--format` (campaign / gemm). `None` means
+/// the flag was absent and the default ([`GemmFormat::Fp16`]) applies.
+fn format_of(args: &Args) -> redmule_ft::Result<Option<GemmFormat>> {
+    match args.kv.get("format") {
+        None => Ok(None),
+        Some(raw) => GemmFormat::parse(raw).map(Some).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --format {raw} (expected fp16, fp8-e4m3 or fp8-e5m2)"
+            ))
+        }),
+    }
+}
+
+/// Resolve a single-valued `--op` (campaign / gemm). `None` means the
+/// flag was absent and the default ([`GemmOp::Mul`]) applies.
+fn op_of(args: &Args) -> redmule_ft::Result<Option<GemmOp>> {
+    match args.kv.get("op") {
+        None => Ok(None),
+        Some(raw) => GemmOp::parse(raw).map(Some).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --op {raw} (expected mul, addmax, addmin, mulmax or mulmin)"
+            ))
+        }),
+    }
+}
+
 /// Parse a recovery-policy token for the sweep's `--recoveries` axis.
 fn parse_recovery(s: &str) -> Option<RecoveryPolicy> {
     match s {
@@ -249,6 +279,10 @@ fn print_help() {
            campaign      run one SFI campaign column (--config baseline|data|full|abft|\n\
                          abft-online|per-ce — abft-online corrects single errors in\n\
                          place from the fused store residuals,\n\
+                         --format fp16|fp8-e4m3|fp8-e5m2 picks the numeric format\n\
+                         (FP8 adds cast-in/cast-out fault sites on every stream),\n\
+                         --op mul|addmax|addmin|mulmax|mulmin picks the GEMM op\n\
+                         family (non-mul ops reject ABFT-checksum builds),\n\
                          --injections, --seed, --threads, --report; --direct disables the\n\
                          checkpointed fast-forward engine, --checkpoint-interval K tunes it,\n\
                          --two-level runs fast-forward's functional level with\n\
@@ -261,7 +295,9 @@ fn print_help() {
                          picks the Neyman objective outcome (functional-error |\n\
                          correct-no-retry | correct-with-retry | incorrect | timeout))\n\
            sweep         run a scenario-grid campaign and print JSON (--configs a,b,..,\n\
-                         --geoms LxHxP,.. array geometries, --shapes MxNxK,..,\n\
+                         --geoms LxHxP,.. array geometries, --format f,.. / --op o,..\n\
+                         cross the numeric-format and op-family axes (cells keep the\n\
+                         fp16 / mul defaults when unset), --shapes MxNxK,..,\n\
                          --faults 1,2,.., --model independent|burst|site-burst,\n\
                          --tols F,.. for ABFT cells, --recoveries full-restart,\n\
                          tile-level,in-place-correct crosses the recovery-policy\n\
@@ -305,6 +341,12 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     let injections = args.get("injections", 20_000u64);
     let seed = args.get("seed", 2025u64);
     let mut cfg = CampaignConfig::table1(protection, injections, seed);
+    if let Some(f) = format_of(args)? {
+        cfg.cfg = cfg.cfg.with_format(f);
+    }
+    if let Some(o) = op_of(args)? {
+        cfg.cfg = cfg.cfg.with_op(o);
+    }
     cfg.threads = args.get("threads", cfg.threads);
     cfg.fast_forward = !args.flag("direct");
     cfg.checkpoint_interval = args.get("checkpoint-interval", 0u64);
@@ -317,8 +359,13 @@ fn cmd_campaign(args: &Args) -> redmule_ft::Result<()> {
     cfg.stratify = args.flag("stratify");
     cfg.stratify_on = stratify_on(args)?;
     cfg.confidence = args.get("confidence", 0.95f64);
+    let fo_note = if cfg.cfg.format != GemmFormat::Fp16 || cfg.cfg.op != GemmOp::Mul {
+        format!(" [{} / {}]", cfg.cfg.format.name(), cfg.cfg.op.name())
+    } else {
+        String::new()
+    };
     eprintln!(
-        "campaign: {} build, {} injections{}, seed {}, {} threads, {} engine{}",
+        "campaign: {} build{fo_note}, {} injections{}, seed {}, {} threads, {} engine{}",
         protection.name(),
         injections,
         if cfg.precision_target > 0.0 {
@@ -436,6 +483,12 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     if let Some(raw) = args.kv.get("geoms") {
         sc.geometries = parse_list(raw, "--geoms", parse_geometry)?;
     }
+    if let Some(raw) = args.kv.get("format") {
+        sc.formats = parse_list(raw, "--format", GemmFormat::parse)?;
+    }
+    if let Some(raw) = args.kv.get("op") {
+        sc.ops = parse_list(raw, "--op", GemmOp::parse)?;
+    }
     if let Some(raw) = args.kv.get("shapes") {
         sc.shapes = parse_list(raw, "--shapes", parse_shape)?;
     }
@@ -477,10 +530,13 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
         )));
     }
     eprintln!(
-        "sweep: {} cells ({} geometries x {} protections x {} shapes x {} fault counts, \
-         {} model), {} injections/cell{}, seed {}, {} threads, {} engine, schema {}",
+        "sweep: {} cells ({} geometries x {} formats x {} ops x {} protections x {} shapes \
+         x {} fault counts, {} model), {} injections/cell{}, seed {}, {} threads, {} engine, \
+         schema {}",
         sc.n_cells(),
         sc.geometries.len(),
+        sc.formats.len().max(1),
+        sc.ops.len().max(1),
         sc.protections.len(),
         sc.shapes.len(),
         sc.fault_counts.len(),
@@ -623,7 +679,13 @@ fn cmd_perf(args: &Args) -> redmule_ft::Result<()> {
 }
 
 fn cmd_gemm(args: &Args) -> redmule_ft::Result<()> {
-    let cfg = args.redmule_cfg();
+    let mut cfg = args.redmule_cfg();
+    if let Some(f) = format_of(args)? {
+        cfg = cfg.with_format(f);
+    }
+    if let Some(o) = op_of(args)? {
+        cfg = cfg.with_op(o);
+    }
     let protection = args.protection();
     let mode = match args.kv.get("mode").map(|s| s.as_str()) {
         Some("perf") | Some("performance") => ExecMode::Performance,
@@ -635,16 +697,18 @@ fn cmd_gemm(args: &Args) -> redmule_ft::Result<()> {
         args.get("k", 16usize),
     );
     let p = GemmProblem::random(&spec, args.get("seed", 1u64));
-    let golden = p.golden_z();
+    let golden = p.golden_z_for(cfg.format, cfg.op);
     let mut sys = System::new(cfg, protection);
     let r = sys.run_gemm(&p, mode)?;
     println!(
-        "({},{},{}) [{}/{}]: {:?} in {} cycles, golden match = {}",
+        "({},{},{}) [{}/{}] {} {}: {:?} in {} cycles, golden match = {}",
         spec.m,
         spec.n,
         spec.k,
         protection.name(),
         mode.name(),
+        cfg.format.name(),
+        cfg.op.name(),
         r.outcome,
         r.cycles,
         r.z_matches(&golden)

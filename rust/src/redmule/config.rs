@@ -1,5 +1,7 @@
 //! RedMulE instance configuration and execution modes.
 
+use crate::fp::{GemmFormat, GemmOp};
+
 /// Hardware build parameters of a RedMulE instance (§2.1): a 2-D array of
 /// `L` rows × `H` compute elements per row, each CE an FP16 FMA with `P`
 /// internal pipeline registers.
@@ -9,6 +11,12 @@
 /// cycles; issuing one output column per cycle for `D` cycles hides that
 /// latency completely, which is exactly how RedMulE reaches one FMA per CE
 /// per cycle in steady state.
+///
+/// Beyond the array geometry the config carries the *task datatype*: the
+/// operand storage [`GemmFormat`] (FP16, or an FP8 grid routed through
+/// cast-in/cast-out units) and the reduction [`GemmOp`] (classic FMA or
+/// the add/mul-max/min family). Both default to the paper instance
+/// (`Fp16` / `Mul`), so every pre-existing call site is unchanged.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RedMuleConfig {
     /// Number of compute rows (paper instance: 12).
@@ -17,17 +25,39 @@ pub struct RedMuleConfig {
     pub h: usize,
     /// Pipeline registers per CE (paper instance: 3).
     pub p: usize,
+    /// Operand storage format (default [`GemmFormat::Fp16`]).
+    pub format: GemmFormat,
+    /// Reduction op each CE performs (default [`GemmOp::Mul`]).
+    pub op: GemmOp,
 }
 
 impl RedMuleConfig {
     pub fn new(l: usize, h: usize, p: usize) -> Self {
         assert!(l >= 1 && h >= 1 && p >= 1, "degenerate array");
-        Self { l, h, p }
+        Self {
+            l,
+            h,
+            p,
+            format: GemmFormat::Fp16,
+            op: GemmOp::Mul,
+        }
     }
 
     /// The instance evaluated in the paper: L=12, H=4, P=3, FP16.
     pub fn paper() -> Self {
         Self::new(12, 4, 3)
+    }
+
+    /// Same geometry, different operand storage format.
+    pub fn with_format(mut self, format: GemmFormat) -> Self {
+        self.format = format;
+        self
+    }
+
+    /// Same geometry, different reduction op.
+    pub fn with_op(mut self, op: GemmOp) -> Self {
+        self.op = op;
+        self
     }
 
     /// In-flight output columns per row (`D = H·P`), which is also the
@@ -254,5 +284,23 @@ mod tests {
     #[should_panic(expected = "degenerate")]
     fn zero_rows_rejected() {
         RedMuleConfig::new(0, 4, 3);
+    }
+
+    #[test]
+    fn format_and_op_default_to_paper_instance() {
+        use crate::fp::{Fp8Format, GemmFormat, GemmOp};
+        let c = RedMuleConfig::paper();
+        assert_eq!(c.format, GemmFormat::Fp16);
+        assert_eq!(c.op, GemmOp::Mul);
+        let c8 = c
+            .with_format(GemmFormat::Fp8(Fp8Format::E4M3))
+            .with_op(GemmOp::AddMax);
+        assert_eq!(c8.format, GemmFormat::Fp8(Fp8Format::E4M3));
+        assert_eq!(c8.op, GemmOp::AddMax);
+        // Geometry untouched, and the default-path config still compares
+        // equal to a freshly built one (WorkerArena reuse relies on this).
+        assert_eq!((c8.l, c8.h, c8.p), (c.l, c.h, c.p));
+        assert_eq!(RedMuleConfig::paper(), c);
+        assert_ne!(c8, c);
     }
 }

@@ -13,6 +13,16 @@
 //! every datum passing through its [`FaultCtx`] hook, steps the FSMs and
 //! their replicas, evaluates the build's detectors, and drives the
 //! abort/interrupt sequence of §3.3 when a fault is flagged.
+//!
+//! On FP8 builds ([`RedMuleConfig::format`] ≠ `Fp16`) every fetched
+//! operand additionally passes through a fetch-path *cast-in* unit
+//! (narrow to the 8-bit code, expose the code on its own fault sites,
+//! widen back onto the FP16 carrier) and every stored result through the
+//! store-path *cast-out* unit — see the `CASTIN_*`/`CASTOUT_*` tags in
+//! [`crate::fault::site::streamer_unit`]. Both stages are combinational
+//! (zero extra cycles) and identity on FP16 builds, so the default path
+//! is bit-for-bit unchanged. The reduction itself is selected by
+//! [`RedMuleConfig::op`] (see [`crate::fp::op_step16`]).
 
 pub mod abft;
 pub mod array;
@@ -30,7 +40,7 @@ use crate::fault::site::{
     streamer_unit, wbuf_unit, Module, SiteId,
 };
 use crate::fault::{FaultCtx, FaultPlan};
-use crate::fp::{fma16, Fp16};
+use crate::fp::{op_step16, Fp16, Fp8, GemmFormat};
 use crate::tcdm::Tcdm;
 use abft::AbftUnit;
 use array::{CeArray, InFlight};
@@ -93,6 +103,11 @@ pub struct RedMule {
     /// Global mirror of the wave identities in the (row-uniform) pipeline,
     /// drives the W broadcast buffer.
     wave_pipe: Vec<Option<(u16, u16)>>,
+    /// Pending SEU masks on the cast units' 8-bit code registers, one per
+    /// stream (X/W/Y/Z). The register is rewritten every beat, so an upset
+    /// corrupts exactly the next code cast through that stream and is then
+    /// cleared. Always zero on FP16 builds (the sites are not populated).
+    cast_upset: [u8; 4],
 }
 
 impl RedMule {
@@ -114,6 +129,7 @@ impl RedMule {
             irq_line: false,
             mode: ExecMode::Performance,
             wave_pipe: vec![None; cfg.d()],
+            cast_upset: [0; 4],
         }
     }
 
@@ -185,6 +201,7 @@ impl RedMule {
         self.irq_line = false;
         self.mode = ExecMode::Performance;
         self.wave_pipe.fill(None);
+        self.cast_upset = [0; 4];
     }
 
     pub fn irq(&self) -> bool {
@@ -212,6 +229,7 @@ impl RedMule {
         self.irq_line = snap.irq_line;
         self.mode = snap.mode;
         self.wave_pipe.clone_from(&snap.wave_pipe);
+        self.cast_upset = snap.cast_upset;
     }
 
     /// Fold every piece of *behavioral* architectural state into a
@@ -249,6 +267,9 @@ impl RedMule {
                     h.write_u16(*cc);
                 }
             }
+        }
+        for m in &self.cast_upset {
+            h.write_u8(*m);
         }
     }
 
@@ -422,6 +443,51 @@ impl RedMule {
         );
     }
 
+    // ------------------------------------------------------- cast units
+
+    /// Fetch-path cast unit (FP8 builds only; identity on FP16). Models
+    /// the streamer's narrow → code-register → widen pipeline: the value
+    /// is rounded to the 8-bit code, any pending [`Self::cast_upset`] SEU
+    /// is consumed, the code crosses the `CASTIN_NET` fault site, and the
+    /// (possibly corrupted) code is widened back onto the FP16 carrier.
+    /// `lane` indexes the consumer row (X/Y) or CE column (W).
+    fn cast_in(
+        &mut self,
+        stream: usize,
+        module: Module,
+        lane: u16,
+        v: Fp16,
+        ctx: &mut FaultCtx,
+    ) -> Fp16 {
+        let GemmFormat::Fp8(f) = self.cfg.format else {
+            return v;
+        };
+        let mut code = Fp8::from_fp16(v, f, true).bits;
+        code ^= core::mem::take(&mut self.cast_upset[stream]);
+        let code = ctx.u8(SiteId::new(module, streamer_unit::CASTIN_NET, lane), code);
+        Fp8::new(code, f).to_fp16()
+    }
+
+    /// Store-path cast unit on the Z streamer (FP8 builds only; identity
+    /// on FP16). Same narrow → upset → net → widen structure as
+    /// [`Self::cast_in`]; `lane` is the store lane (0..16). In FT mode
+    /// only the primary copy routes through the hooked unit — the
+    /// redundant copy is cast nominally by the caller so cast-stage
+    /// faults surface at the Z output checker, mirroring how the replica
+    /// W fetch keeps parity generation independent of the primary path.
+    fn cast_out(&mut self, lane: u16, v: Fp16, ctx: &mut FaultCtx) -> Fp16 {
+        let GemmFormat::Fp8(f) = self.cfg.format else {
+            return v;
+        };
+        let mut code = Fp8::from_fp16(v, f, true).bits;
+        code ^= core::mem::take(&mut self.cast_upset[STREAM_Z]);
+        let code = ctx.u8(
+            SiteId::new(Module::StreamerZ, streamer_unit::CASTOUT_NET, lane),
+            code,
+        );
+        Fp8::new(code, f).to_fp16()
+    }
+
     // ------------------------------------------------------------ phases
 
     /// Preload Y elements of the current tile into the accumulators.
@@ -459,6 +525,11 @@ impl RedMule {
                 if dbl {
                     *detect |= cause::ECC_DOUBLE;
                 }
+                // One cast unit per consumer row (like `DEC_NET`): a cast
+                // fault corrupts a single copy and surfaces at the Z
+                // output checker.
+                let va = self.cast_in(STREAM_Y, Module::StreamerY, row_a as u16, va, ctx);
+                let vb = self.cast_in(STREAM_Y, Module::StreamerY, row_b as u16, vb, ctx);
                 if c < dims.d {
                     self.array.set_acc(row_a, c as usize, va);
                     self.array.set_acc(row_b, c as usize, vb);
@@ -474,6 +545,7 @@ impl RedMule {
                     ctx,
                     detect,
                 );
+                let v = self.cast_in(STREAM_Y, Module::StreamerY, lr as u16, v, ctx);
                 if (lr as usize) < self.cfg.l && c < dims.d {
                     self.array.set_acc(lr as usize, c as usize, v);
                 }
@@ -571,15 +643,20 @@ impl RedMule {
             let addr = wrap_addr(issue.addr, tcdm_bytes);
             self.perf.tcdm_reads += 1;
             let mut v = tcdm.read_fp16(addr).0;
+            // Cast-in sits between the TCDM response and the parity
+            // generator's tap, so a cast-stage fault misaligns value and
+            // parity and is caught at the CEs (FT mode).
+            v = self.cast_in(STREAM_W, Module::StreamerW, j as u16, v, ctx);
             // The tiny unprotected window: decode output before the parity
             // generator taps it.
             v = ctx.fp16(SiteId::new(Module::WBuf, wbuf_unit::PRE_PARITY_NET, j as u16), v);
             let par = if self.protection.has_control_protection() {
                 // §3.2: parity generated by *separate logic* — the replica
-                // address path fetches its own copy, so a control fault
-                // misaligns data and parity and is caught at the CEs.
+                // address path fetches its own copy (cast through its own
+                // nominal unit), so a control or cast fault misaligns data
+                // and parity and is caught at the CEs.
                 let addr_rep = wrap_addr(issue.addr_rep, tcdm_bytes);
-                weight_parity(tcdm.read_fp16(addr_rep).0)
+                weight_parity(self.cfg.format.snap(tcdm.read_fp16(addr_rep).0))
             } else {
                 weight_parity(v)
             };
@@ -626,16 +703,17 @@ impl RedMule {
                 }
                 let entry = self.array.ce_entry_slot(row, j).as_mut().unwrap();
                 let acc_in = entry.val;
-                let res = fma16(x, wv, acc_in);
+                let res = op_step16(self.cfg.op, x, wv, acc_in);
                 entry.val = ctx.fp16(SiteId::new(Module::CeArray, ce_unit::FMA_NET, idx), res);
                 if per_ce {
                     // [8]-style localized checker: an independent reduced
-                    // FMA recomputes from the *register* operands and
-                    // compares at the CE output. Catches transients on the
-                    // CE's own operand/result nets — and nothing upstream
-                    // of the operand registers, which is exactly the
-                    // coverage gap §1 argues about.
-                    let recompute = fma16(x_raw, wv_reg, acc_in);
+                    // datapath recomputes the configured op from the
+                    // *register* operands and compares at the CE output.
+                    // Catches transients on the CE's own operand/result
+                    // nets — and nothing upstream of the operand
+                    // registers, which is exactly the coverage gap §1
+                    // argues about.
+                    let recompute = op_step16(self.cfg.op, x_raw, wv_reg, acc_in);
                     let eq_nominal = recompute.to_bits() == entry.val.to_bits();
                     let eq = ctx.flag(
                         SiteId::new(Module::Checker, checker_unit::PERCE_CMP_NET, idx),
@@ -687,6 +765,8 @@ impl RedMule {
                     if dbl {
                         *detect |= cause::ECC_DOUBLE;
                     }
+                    let va = self.cast_in(STREAM_X, Module::StreamerX, ra as u16, va, ctx);
+                    let vb = self.cast_in(STREAM_X, Module::StreamerX, rb as u16, vb, ctx);
                     self.array.set_x(bank, ra, j, va);
                     self.array.set_x(bank, rb, j, vb);
                 } else {
@@ -700,6 +780,7 @@ impl RedMule {
                         ctx,
                         detect,
                     );
+                    let v = self.cast_in(STREAM_X, Module::StreamerX, lr as u16, v, ctx);
                     self.array.set_x(bank, lr as usize, j, v);
                 }
             }
@@ -747,14 +828,22 @@ impl RedMule {
                 if c as usize >= self.cfg.d() || rb >= self.cfg.l {
                     continue;
                 }
+                // Cast-out runs where each copy leaves its accumulator;
+                // the hooked unit serves the primary copy and the
+                // redundant copy is cast nominally, so a cast-stage fault
+                // desynchronizes the pair and trips the output checker.
+                let a0 = self.array.acc_at(ra, c as usize);
+                let a1 = self.array.acc_at(rb, c as usize);
+                let z0 = self.cast_out(lane, a0, ctx);
+                let z1 = self.cfg.format.snap(a1);
                 // The two copies travel on separate store nets ...
                 let v0 = ctx.fp16(
                     SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, lane),
-                    self.array.acc_at(ra, c as usize),
+                    z0,
                 );
                 let v1 = ctx.fp16(
                     SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, 16 + lane),
-                    self.array.acc_at(rb, c as usize),
+                    z1,
                 );
                 // ... and the checker compares them (§3.1, Fig. 1 (4)).
                 let eq_nominal = v0.to_bits() == v1.to_bits();
@@ -786,9 +875,11 @@ impl RedMule {
                 if lr as usize >= self.cfg.l || c as usize >= self.cfg.d() {
                     continue;
                 }
+                let a = self.array.acc_at(lr as usize, c as usize);
+                let z = self.cast_out(lane, a, ctx);
                 ctx.fp16(
                     SiteId::new(Module::StreamerZ, streamer_unit::STORE_NET, lane),
-                    self.array.acc_at(lr as usize, c as usize),
+                    z,
                 )
             };
 
@@ -936,11 +1027,21 @@ impl RedMule {
     }
 
     fn flip_stream_mask(&mut self, stream: usize, unit: u8, bit: u8) -> bool {
-        if unit == streamer_unit::ADDR_REG {
-            self.streamers[stream].flip_mask_bit(bit);
-            true
-        } else {
-            false
+        match unit {
+            streamer_unit::ADDR_REG => {
+                self.streamers[stream].flip_mask_bit(bit);
+                true
+            }
+            // Cast-unit code registers (FP8 builds only — the registry
+            // never samples these sites on FP16 populations). The pending
+            // mask is consumed by the stream's next cast.
+            streamer_unit::CASTIN_REG | streamer_unit::CASTOUT_REG
+                if self.cfg.format.is_fp8() =>
+            {
+                self.cast_upset[stream] ^= 1 << (bit % 8);
+                true
+            }
+            _ => false,
         }
     }
 

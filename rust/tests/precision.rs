@@ -1,0 +1,224 @@
+//! Integration + property tests for the precision (FP8 storage grids)
+//! and GEMM op-family axes: cast-path numerics vs the golden model,
+//! engine-matrix byte-identity on the default path, thread invariance of
+//! FP8 / op campaigns, and the up-front rejection of invalid
+//! format × protection combinations.
+//!
+//! Property tests follow the repo convention (hand-rolled seeded sweeps;
+//! proptest is not vendored offline): every case derives from a seed via
+//! `Xoshiro256`, so failures reproduce exactly.
+
+use redmule_ft::campaign::{Campaign, CampaignConfig};
+use redmule_ft::cluster::System;
+use redmule_ft::fp::{max16, min16, Fp16, Fp8Format, GemmFormat, GemmOp};
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+use redmule_ft::util::rng::{mix64, Xoshiro256};
+
+// ---------------------------------------------------- cast numerics
+
+/// Property: snapping onto any storage grid is idempotent — the clean
+/// cast-in of a value already on the grid returns it bit-for-bit. This
+/// is what makes a fault-free FP8 run reproduce `golden_z_for` exactly.
+#[test]
+fn prop_snap_is_idempotent_on_every_format() {
+    for case in 0..2000u64 {
+        let mut rng = Xoshiro256::new(mix64(case, 0xF8F8));
+        let v = Fp16::from_bits(rng.next_u64() as u16);
+        for fmt in GemmFormat::ALL {
+            let once = fmt.snap(v);
+            let twice = fmt.snap(once);
+            if once.is_nan() {
+                assert!(twice.is_nan(), "case {case} {fmt:?}: NaN not sticky");
+            } else {
+                assert_eq!(
+                    once.to_bits(),
+                    twice.to_bits(),
+                    "case {case} {fmt:?}: snap not idempotent on {v:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: for finite in-range values the snapped value stays within
+/// the format's unit roundoff (relative), and out-of-range magnitudes
+/// saturate to the format's largest finite value with the sign kept.
+#[test]
+fn prop_snap_error_bounded_by_unit_roundoff_and_saturates() {
+    let max_finite = |fmt: GemmFormat| match fmt {
+        GemmFormat::Fp16 => 65504.0,
+        GemmFormat::Fp8(Fp8Format::E4M3) => 448.0,
+        GemmFormat::Fp8(Fp8Format::E5M2) => 57344.0,
+    };
+    for case in 0..2000u64 {
+        let mut rng = Xoshiro256::new(mix64(case, 0x5A7C));
+        // Log-uniform magnitude across the normal range, random sign.
+        let exp = rng.below(20) as i32 - 6;
+        let frac = 1.0 + rng.next_u64() as f64 / u64::MAX as f64;
+        let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+        let v = Fp16::from_f64(sign * frac * 2f64.powi(exp));
+        for fmt in GemmFormat::ALL {
+            let s = fmt.snap(v);
+            let (a, b) = (v.to_f64(), s.to_f64());
+            if a.abs() <= max_finite(fmt) {
+                let rel = (b - a).abs() / a.abs().max(f64::MIN_POSITIVE);
+                assert!(
+                    rel <= fmt.unit_roundoff(),
+                    "case {case} {fmt:?}: |{b} - {a}| rel err {rel} > u"
+                );
+            } else {
+                assert_eq!(
+                    b,
+                    sign * max_finite(fmt),
+                    "case {case} {fmt:?}: {a} must saturate"
+                );
+            }
+        }
+    }
+}
+
+/// The max/min reduction steps are IEEE maxNum/minNum with a total-order
+/// tie-break on ±0: NaN loses to any number, and the zeros order by sign.
+#[test]
+fn max_min_follow_maxnum_semantics() {
+    let one = Fp16::from_f64(1.0);
+    let neg = Fp16::from_f64(-2.0);
+    assert_eq!(max16(Fp16::NAN, one).to_bits(), one.to_bits());
+    assert_eq!(max16(neg, Fp16::NAN).to_bits(), neg.to_bits());
+    assert_eq!(min16(Fp16::NAN, neg).to_bits(), neg.to_bits());
+    assert!(max16(Fp16::NAN, Fp16::NAN).is_nan());
+    let pz = Fp16::ZERO;
+    let nz = Fp16::from_bits(0x8000);
+    assert_eq!(max16(nz, pz).to_bits(), pz.to_bits());
+    assert_eq!(max16(pz, nz).to_bits(), pz.to_bits());
+    assert_eq!(min16(nz, pz).to_bits(), nz.to_bits());
+    assert_eq!(min16(pz, nz).to_bits(), nz.to_bits());
+}
+
+// -------------------------------------- accelerator vs golden model
+
+/// A fault-free run reproduces `golden_z_for` bit-for-bit in every
+/// format × op × mode combination — the cast units and the non-FMA
+/// reduction steps land in the datapath exactly where the golden model
+/// puts them.
+#[test]
+fn clean_runs_are_bit_exact_vs_golden_for_every_format_and_op() {
+    let spec = GemmSpec::new(7, 9, 11);
+    for (i, fmt) in GemmFormat::ALL.into_iter().enumerate() {
+        for (j, op) in GemmOp::ALL.into_iter().enumerate() {
+            let p = GemmProblem::random(&spec, mix64(i as u64, j as u64) | 1);
+            let golden = p.golden_z_for(fmt, op);
+            for (protection, mode) in [
+                (Protection::Baseline, ExecMode::Performance),
+                (Protection::Full, ExecMode::FaultTolerant),
+            ] {
+                let cfg = RedMuleConfig::paper().with_format(fmt).with_op(op);
+                let mut sys = System::new(cfg, protection);
+                let r = sys.run_gemm(&p, mode).unwrap();
+                assert_eq!(r.retries, 0, "{fmt:?}/{op:?}/{protection:?}: clean run retried");
+                assert!(
+                    r.z_matches(&golden),
+                    "{fmt:?}/{op:?}/{protection:?}/{mode:?}: Z diverged from golden"
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------- campaign-level A/B
+
+type Counts = (u64, u64, u64, u64, u64, u64);
+
+fn counts(r: &redmule_ft::campaign::CampaignResult) -> Counts {
+    (
+        r.correct_no_retry,
+        r.correct_with_retry,
+        r.incorrect,
+        r.timeout,
+        r.applied,
+        r.faults_applied,
+    )
+}
+
+/// Run one campaign on all three engines and pin them to identical
+/// counts (same harness as `tests/fastforward.rs`, here exercising the
+/// cast-path fault sites and the non-FMA reduction steps).
+fn run_engines(mut cfg: CampaignConfig) -> Counts {
+    cfg.fast_forward = false;
+    cfg.two_level = false;
+    let direct = Campaign::run(&cfg).unwrap();
+    cfg.fast_forward = true;
+    let fast = Campaign::run(&cfg).unwrap();
+    cfg.two_level = true;
+    let two = Campaign::run(&cfg).unwrap();
+    assert_eq!(counts(&direct), counts(&fast), "fast-forward diverged");
+    assert_eq!(counts(&direct), counts(&two), "two-level diverged");
+    counts(&direct)
+}
+
+/// Explicitly configuring the defaults (`fp16`, `mul`) is byte-identical
+/// to not configuring them at all, on every engine — the tentpole's
+/// default-path contract at campaign level.
+#[test]
+fn explicit_default_format_and_op_change_nothing() {
+    let mut plain = CampaignConfig::table1(Protection::Full, 200, 0xF0_0D);
+    plain.threads = 2;
+    let mut tagged = plain.clone();
+    tagged.cfg = tagged.cfg.with_format(GemmFormat::Fp16).with_op(GemmOp::Mul);
+    assert_eq!(run_engines(plain), run_engines(tagged));
+}
+
+/// FP8 campaigns (cast-unit fault sites live) agree across all three
+/// engines; so do non-FMA op campaigns.
+#[test]
+fn engine_matrix_agrees_on_fp8_and_op_campaigns() {
+    for (fmt, op) in [
+        (GemmFormat::Fp8(Fp8Format::E4M3), GemmOp::Mul),
+        (GemmFormat::Fp8(Fp8Format::E5M2), GemmOp::MulMin),
+        (GemmFormat::Fp16, GemmOp::AddMax),
+    ] {
+        let mut cfg = CampaignConfig::table1(Protection::Full, 200, 0xCA57);
+        cfg.threads = 2;
+        cfg.cfg = cfg.cfg.with_format(fmt).with_op(op);
+        run_engines(cfg);
+    }
+}
+
+/// Thread count is invisible: one FP8 campaign and one addmax campaign
+/// produce identical counts on 1 and 8 threads.
+#[test]
+fn fp8_and_addmax_campaigns_are_thread_invariant() {
+    for (fmt, op) in [
+        (GemmFormat::Fp8(Fp8Format::E4M3), GemmOp::Mul),
+        (GemmFormat::Fp16, GemmOp::AddMax),
+    ] {
+        let mut cfg = CampaignConfig::table1(Protection::Data, 240, 0x7EAD);
+        cfg.cfg = cfg.cfg.with_format(fmt).with_op(op);
+        cfg.threads = 1;
+        let one = Campaign::run(&cfg).unwrap();
+        cfg.threads = 8;
+        let eight = Campaign::run(&cfg).unwrap();
+        assert_eq!(counts(&one), counts(&eight), "{fmt:?}/{op:?}");
+    }
+}
+
+/// Invalid combinations fail before any injection runs: a non-linear op
+/// cannot carry ABFT checksums, and FP8 storage cannot run the online
+/// in-place corrector.
+#[test]
+fn invalid_format_and_op_combinations_are_rejected() {
+    let mut cfg = CampaignConfig::table1(Protection::Abft, 10, 1);
+    cfg.cfg = cfg.cfg.with_op(GemmOp::AddMax);
+    assert!(Campaign::run(&cfg).is_err(), "addmax x abft must be rejected");
+
+    let mut cfg = CampaignConfig::table1(Protection::AbftOnline, 10, 1);
+    cfg.cfg = cfg.cfg.with_format(GemmFormat::Fp8(Fp8Format::E4M3));
+    assert!(Campaign::run(&cfg).is_err(), "fp8 x abft-online must be rejected");
+
+    // The plain checksum build *does* accept FP8 — the verify tolerance
+    // is scaled to the grid's unit roundoff.
+    let mut cfg = CampaignConfig::table1(Protection::Abft, 50, 1);
+    cfg.cfg = cfg.cfg.with_format(GemmFormat::Fp8(Fp8Format::E4M3));
+    Campaign::run(&cfg).unwrap();
+}
