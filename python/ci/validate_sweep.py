@@ -11,11 +11,15 @@ Validates one document against the schema family it claims:
                                  estimate table of every cell
 * ``redmule-ft/bench-sweep-v1`` — the wall-clock sidecar (plus optional
                                  trace-cache hit/miss counters)
+* ``redmule-ft/mesh-campaign-v1`` — the ``mesh --json`` document: outcome
+                                 counts, NoC event counters and the
+                                 per-``mesh/noc-*``-stratum attribution
 
 Usage:
-    validate_sweep.py FILE --schema v1|v2|bench-sweep
+    validate_sweep.py FILE --schema v1|v2|bench-sweep|mesh-campaign
         [--cells N] [--injections N] [--max-injections N]
         [--fault-model M] [--expect-stopped-early]
+        [--expect-no-functional-errors] [--expect-retirement]
 
 Exits non-zero with a diagnostic on the first violation.
 """
@@ -32,6 +36,17 @@ ENGINES = ("direct", "fast-forward", "two-level")
 FORMATS = ("fp8-e4m3", "fp8-e5m2")
 OPS = ("addmax", "addmin", "mulmax", "mulmin")
 OUTCOME_KEYS = ("correct_no_retry", "correct_with_retry", "incorrect", "timeout")
+# The mesh interconnect fault domain (disjoint from the datapath strata).
+NOC_STRATA = ("mesh/noc-link", "mesh/noc-router", "mesh/noc-tile")
+MESH_CELL_KEYS = (
+    "tiles",
+    "shards",
+    "retired_tiles",
+    "reassigned_shards",
+    "noc_applied",
+    "noc_detected",
+    "noc_corrected",
+)
 EPS = 1e-6
 
 
@@ -54,6 +69,11 @@ def check_coords(c):
         fail(f"unknown format {c['format']} (expected one of {FORMATS})")
     if "op" in c and c["op"] not in OPS:
         fail(f"unknown op {c['op']} (expected one of {OPS})")
+    # Mesh tile-count discriminant: single-tile cells omit the field
+    # entirely (byte-identity of pre-existing sweeps), so when present
+    # it must be a genuine multi-tile count.
+    if "tiles" in c and (not isinstance(c["tiles"], int) or c["tiles"] < 2):
+        fail(f"bad tiles {c.get('tiles')} (single-tile cells omit the field)")
     if c["faults"] < 1:
         fail(f"bad fault count in {c}")
 
@@ -162,8 +182,30 @@ def check_v2(d, args):
         for key in ("corrections", "band_recomputes"):
             if not isinstance(c[key], int) or c[key] < 0:
                 fail(f"{tagbase}: bad {key} {c[key]}")
-        if c["recovery"] != "in-place-correct" and c["corrections"] != 0:
+        # Mesh cells legitimately report corrections with any recovery
+        # policy: theirs are reduction-ABFT localizations on the NoC,
+        # not in-place datapath corrections.
+        if (
+            c["recovery"] != "in-place-correct"
+            and "mesh" not in c
+            and c["corrections"] != 0
+        ):
             fail(f"{tagbase}: corrections reported without in-place recovery")
+        # Mesh cells (tiles axis): the NoC attribution rides in a "mesh"
+        # object; a multi-tile cell without one is malformed, as is a
+        # mesh block on a single-tile cell.
+        if "mesh" in c:
+            m = c["mesh"]
+            if c.get("tiles") != m.get("tiles"):
+                fail(
+                    f"{tagbase}: mesh block tiles {m.get('tiles')} "
+                    f"!= cell tiles {c.get('tiles')}"
+                )
+            for key in MESH_CELL_KEYS:
+                if not isinstance(m.get(key), int) or m[key] < 0:
+                    fail(f"{tagbase}: bad mesh field {key}={m.get(key)}")
+        elif c.get("tiles", 1) != 1:
+            fail(f"{tagbase}: multi-tile cell carries no mesh block")
         weighted = "/weighted" if d["stratified"] else ""
         counts = 0
         for key in OUTCOME_KEYS:
@@ -217,10 +259,51 @@ def check_bench_sweep(d, args):
     return d["cells"]
 
 
+def check_mesh_campaign(d, args):
+    if d["schema"] != "redmule-ft/mesh-campaign-v1":
+        fail(f"schema {d['schema']} != redmule-ft/mesh-campaign-v1")
+    if d["tiles"] < 1 or d["shards"] < 1:
+        fail(f"bad mesh geometry: tiles={d['tiles']} shards={d['shards']}")
+    o = d["outcomes"]
+    total = sum(o[k] for k in OUTCOME_KEYS)
+    if total != d["injections"]:
+        fail(f"outcome counts {total} do not partition injections {d['injections']}")
+    if not 0 <= d["applied_runs"] <= d["injections"]:
+        fail(f"applied_runs {d['applied_runs']} out of range")
+    for key, v in d["events"].items():
+        if not isinstance(v, int) or v < 0:
+            fail(f"bad event counter {key}={v}")
+    strata = d["strata"]
+    if tuple(s["name"] for s in strata) != NOC_STRATA:
+        fail(f"NoC strata {[s['name'] for s in strata]} != {list(NOC_STRATA)}")
+    share_total = sum(s["share"] for s in strata)
+    if abs(share_total - 1.0) > 1e-3:
+        fail(f"NoC stratum shares sum to {share_total}, expected 1")
+    for s in strata:
+        for key in ("applied", "detected", "corrected", "functional_errors"):
+            if not isinstance(s[key], int) or s[key] < 0:
+                fail(f"{s['name']}: bad {key} {s[key]}")
+    fe = o["incorrect"] + o["timeout"]
+    if args.expect_no_functional_errors and fe != 0:
+        fail(f"{fe} functional errors (expected a fully absorbed campaign)")
+    if args.expect_retirement:
+        e = d["events"]
+        if e["tiles_retired"] < 1 or e["shards_reassigned"] < 1:
+            fail(
+                "expected crash retirement: "
+                f"tiles_retired={e['tiles_retired']} "
+                f"shards_reassigned={e['shards_reassigned']}"
+            )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("file")
-    ap.add_argument("--schema", choices=("v1", "v2", "bench-sweep"), required=True)
+    ap.add_argument(
+        "--schema",
+        choices=("v1", "v2", "bench-sweep", "mesh-campaign"),
+        required=True,
+    )
     ap.add_argument("--cells", type=int, default=None)
     ap.add_argument("--injections", type=int, default=None)
     ap.add_argument("--max-injections", type=int, default=None)
@@ -228,10 +311,20 @@ def main():
     ap.add_argument("--expect-format", default=None)
     ap.add_argument("--expect-op", default=None)
     ap.add_argument("--expect-stopped-early", action="store_true")
+    ap.add_argument("--expect-no-functional-errors", action="store_true")
+    ap.add_argument("--expect-retirement", action="store_true")
     args = ap.parse_args()
 
     with open(args.file) as f:
         d = json.load(f)
+
+    if args.schema == "mesh-campaign":
+        check_mesh_campaign(d, args)
+        print(
+            f"validate_sweep: OK (mesh-campaign, {d['tiles']} tiles, "
+            f"{d['shards']} shards, {d['injections']} runs)"
+        )
+        return
 
     if args.fault_model is not None and d.get("fault_model") != args.fault_model:
         fail(f"fault_model {d.get('fault_model')} != {args.fault_model}")

@@ -68,6 +68,25 @@ pub mod coeff {
     pub const GE_CAST_NARROW: f64 = 180.0;
     /// FP8 → FP16 widening lane (exact expand, no rounding), per lane.
     pub const GE_CAST_WIDEN: f64 = 60.0;
+    /// Per-tile NoC link interface: 64-bit serializer/deserializer,
+    /// elastic FIFO, credit logic. One uplink per tile toward the
+    /// reduction root.
+    pub const GE_NOC_LINK_IF: f64 = 5200.0;
+    /// One 5-port wormhole router slice (buffers, allocator, crossbar)
+    /// amortized per tile of the mesh.
+    pub const GE_NOC_ROUTER: f64 = 14000.0;
+    /// Per-tile mesh sequencer: shard descriptor fetch, result push DMA,
+    /// doorbell/handshake FSM.
+    pub const GE_NOC_TILE_CTRL: f64 = 7500.0;
+    /// Per-link CRC-16 generator + checker + seq/ack retransmit buffer
+    /// control (FT overhead of the reliable-transport option).
+    pub const GE_NOC_CRC: f64 = 1900.0;
+    /// Reduction/merge engine at the mesh root (one instance): band
+    /// placement address generation + commit FIFO.
+    pub const GE_NOC_REDUCE: f64 = 9000.0;
+    /// Tile heartbeat watchdog + retirement sequencer (FT overhead of
+    /// the graceful-degradation option), per tile.
+    pub const GE_NOC_HEARTBEAT: f64 = 1500.0;
 }
 
 /// One line of the area breakdown.
@@ -329,6 +348,91 @@ pub fn area_report(cfg: RedMuleConfig, protection: Protection) -> AreaReport {
     }
 }
 
+/// Area report for an N-tile RedMulE mesh: `tiles` copies of the
+/// per-tile build plus the interconnect (`mesh/noc*` items). The three
+/// recovery options (per-link CRC + retransmit, reduction-tree ABFT,
+/// tile retirement) are the mesh's FT hardware and are marked
+/// `ft_overhead` when enabled; the bare links/routers/sequencers are
+/// plumbing every mesh carries. The same `mesh/noc*` GE coefficients
+/// weight the interconnect fault-site sampling in
+/// [`crate::mesh::NocRegistry`], mirroring how the single-tile registry
+/// keys site weights off [`area_report`].
+pub fn mesh_area_report(
+    cfg: RedMuleConfig,
+    protection: Protection,
+    tiles: usize,
+    link_crc: bool,
+    reduction_abft: bool,
+    tile_retirement: bool,
+) -> AreaReport {
+    use coeff::*;
+    let tile = area_report(cfg, protection);
+    let t = tiles as f64;
+    let mut items = Vec::new();
+    let tile_ft = tile.ft_overhead_kge();
+    items.push(AreaItem {
+        name: "mesh/tiles_base",
+        kge: (tile.total_kge() - tile_ft) * t,
+        ft_overhead: false,
+    });
+    if tile_ft > 0.0 {
+        items.push(AreaItem {
+            name: "mesh/tiles_ft",
+            kge: tile_ft * t,
+            ft_overhead: true,
+        });
+    }
+    items.push(AreaItem {
+        name: "mesh/noc-link-if",
+        kge: GE_NOC_LINK_IF * t / 1000.0,
+        ft_overhead: false,
+    });
+    items.push(AreaItem {
+        name: "mesh/noc-router",
+        kge: GE_NOC_ROUTER * t / 1000.0,
+        ft_overhead: false,
+    });
+    items.push(AreaItem {
+        name: "mesh/noc-tile-ctrl",
+        kge: GE_NOC_TILE_CTRL * t / 1000.0,
+        ft_overhead: false,
+    });
+    items.push(AreaItem {
+        name: "mesh/noc-reduce",
+        kge: GE_NOC_REDUCE / 1000.0,
+        ft_overhead: false,
+    });
+    if link_crc {
+        items.push(AreaItem {
+            name: "mesh/noc-crc",
+            kge: GE_NOC_CRC * t / 1000.0,
+            ft_overhead: true,
+        });
+    }
+    if reduction_abft {
+        // 16 column lanes × 48-bit fixed-point accumulate/compare at the
+        // reduction root (same bit inventory style as `ft/abft_*`).
+        let abft_ge = 16.0 * 48.0 * (GE_PER_FF_BIT + GE_PER_ADDER_BIT + GE_PER_CMP_BIT);
+        items.push(AreaItem {
+            name: "mesh/noc-abft",
+            kge: abft_ge / 1000.0,
+            ft_overhead: true,
+        });
+    }
+    if tile_retirement {
+        items.push(AreaItem {
+            name: "mesh/noc-heartbeat",
+            kge: GE_NOC_HEARTBEAT * t / 1000.0,
+            ft_overhead: true,
+        });
+    }
+    AreaReport {
+        cfg,
+        protection,
+        items,
+    }
+}
+
 /// Published totals for the paper instance (kGE), used by tests and the
 /// Fig. 2b bench to report model-vs-paper.
 pub mod published {
@@ -460,5 +564,30 @@ mod tests {
         assert!(text.contains("streamer"));
         assert!(text.contains("ft/replica_fsms"));
         assert!(text.contains("TOTAL"));
+    }
+
+    #[test]
+    fn mesh_report_scales_with_tiles_and_marks_ft_options() {
+        let cfg = RedMuleConfig::paper();
+        let m4 = mesh_area_report(cfg, Protection::Full, 4, true, true, true);
+        let m8 = mesh_area_report(cfg, Protection::Full, 8, true, true, true);
+        assert!(m8.total_kge() > m4.total_kge());
+        // Every recovery option contributes hatched (FT) area; the bare
+        // interconnect does not.
+        for name in ["mesh/noc-crc", "mesh/noc-abft", "mesh/noc-heartbeat", "mesh/tiles_ft"] {
+            let i = m4.items.iter().find(|i| i.name == name).expect(name);
+            assert!(i.ft_overhead, "{name}");
+        }
+        for name in ["mesh/noc-link-if", "mesh/noc-router", "mesh/noc-tile-ctrl", "mesh/noc-reduce"]
+        {
+            let i = m4.items.iter().find(|i| i.name == name).expect(name);
+            assert!(!i.ft_overhead, "{name}");
+        }
+        // Unprotected mesh carries no FT items beyond the tiles' own.
+        let bare = mesh_area_report(cfg, Protection::Baseline, 4, false, false, false);
+        assert_eq!(bare.ft_overhead_kge(), 0.0);
+        // Tile compute dominates; the NoC is a modest share.
+        let noc_share = m4.share_of("mesh/noc");
+        assert!(noc_share > 0.0 && noc_share < 0.2, "noc share {noc_share:.4}");
     }
 }

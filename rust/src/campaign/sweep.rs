@@ -1,7 +1,7 @@
 //! Scenario-grid sweep campaigns — the scale-out generalization of the
 //! single-cell Table-1 campaign.
 //!
-//! A [`SweepConfig`] spans seven axes:
+//! A [`SweepConfig`] spans these axes:
 //!
 //! * **array geometry** (`RedMuleConfig` L/H/P instances): compare how
 //!   array shape trades throughput against cross-section — more rows mean
@@ -19,7 +19,14 @@
 //!   (arXiv:2305.01024) both validate ABFT under multi-error regimes,
 //!   not just single upsets,
 //! * **ABFT tolerance factor** (ABFT cells only): the detection-rate vs
-//!   false-positive trade of floating-point checksum verification.
+//!   false-positive trade of floating-point checksum verification,
+//! * **mesh tile count** ([`SweepConfig::tiles`], default single-tile):
+//!   multi-tile cells shard the workload across a RedMulE mesh and
+//!   inject *interconnect* faults through the [`crate::mesh`] campaign
+//!   (NoC link flips, lost/duplicated/delayed result messages, tile
+//!   crashes) instead of datapath faults — the `"tiles"` / `"mesh"`
+//!   JSON fields appear only on those cells, so single-tile documents
+//!   stay byte-identical to pre-axis sweeps.
 //!
 //! The grid is the cartesian product of the axes; every *cell* is a full
 //! campaign ([`Campaign::run_with_problem`]) sharing one workload per
@@ -66,10 +73,11 @@
 //! lives in the [`SweepResult::timing_json`] sidecar
 //! (`redmule-ft/bench-sweep-v1`), never in the deterministic document.
 
-use crate::cluster::{recovery_valid, RecoveryPolicy, System};
+use crate::cluster::{recovery_valid, RecoveryPolicy, System, TileEngine};
 use crate::fault::FaultModel;
 use crate::fp::{GemmFormat, GemmOp};
 use crate::golden::{GemmProblem, GemmSpec, ABFT_TOL_FACTOR};
+use crate::mesh::{MeshCampaign, MeshCampaignConfig, MeshCellInfo, MeshConfig, MeshFaultProfile};
 use crate::redmule::{Protection, RedMuleConfig};
 use crate::util::stats::OutcomeEstimate;
 use crate::{Error, Result};
@@ -174,6 +182,20 @@ pub struct SweepConfig {
     /// Confidence level of every reported interval and of the adaptive
     /// stop rule (see [`CampaignConfig::confidence`]; default 0.95).
     pub confidence: f64,
+    /// Mesh tile-count axis, crossed innermost (after recovery). Empty
+    /// or `[1]` = single-tile only — byte-identical grid enumeration
+    /// and JSON to pre-axis sweeps (the `"tiles"` / `"mesh"` fields are
+    /// emitted only for multi-tile cells). Cells with `tiles > 1` run
+    /// the [`crate::mesh`] campaign: the shape's workload is sharded
+    /// across that many tiles and the faults strike the *interconnect*
+    /// ([`MeshFaultProfile`]), not the datapath — `fault_model` and the
+    /// statistical knobs (`stratify`, `precision_target`) do not apply
+    /// and crossing them with a multi-tile axis is a configuration
+    /// error.
+    pub tiles: Vec<usize>,
+    /// NoC fault profile of mesh cells (`tiles > 1`); single-tile cells
+    /// ignore it. Default [`MeshFaultProfile::Chaos`].
+    pub mesh_profile: MeshFaultProfile,
 }
 
 impl SweepConfig {
@@ -206,6 +228,8 @@ impl SweepConfig {
             trace_cache: true,
             work_stealing: true,
             confidence: 0.95,
+            tiles: vec![1],
+            mesh_profile: MeshFaultProfile::Chaos,
         }
     }
 
@@ -226,6 +250,7 @@ impl SweepConfig {
             * self.ops.len().max(1)
             * per_geometry
             * recoveries
+            * self.tiles.len().max(1)
     }
 }
 
@@ -239,6 +264,13 @@ pub struct SweepCell {
     pub shape: GemmSpec,
     pub faults: usize,
     pub tol_factor: f64,
+    /// Mesh tile count of the cell (1 = the single-`System` path).
+    pub tiles: usize,
+    /// Mesh attribution of a multi-tile cell — shard map, retirement
+    /// and NoC applied/detected/corrected totals. `None` on single-tile
+    /// cells; carried here (not in [`CampaignResult::strata`]) so the
+    /// campaign-level stratified estimators never see mesh counts.
+    pub mesh: Option<MeshCellInfo>,
     pub result: CampaignResult,
 }
 
@@ -256,9 +288,9 @@ pub struct SweepResult {
     /// Confidence level of the reported intervals.
     pub confidence: f64,
     /// Cells in deterministic grid order (geometry-major, then numeric
-    /// format, GEMM op, protection, shape, fault count, tolerance factor
-    /// and — when the recovery axis is crossed — recovery policy
-    /// innermost).
+    /// format, GEMM op, protection, shape, fault count, tolerance
+    /// factor, then — when the axes are crossed — recovery policy and
+    /// mesh tile count innermost).
     pub cells: Vec<SweepCell>,
     /// Which execution engine produced the counts: `"direct"`,
     /// `"fast-forward"` or `"two-level"`. Reported in the timing sidecar
@@ -350,16 +382,19 @@ impl SweepResult {
         s
     }
 
-    /// Format/op coordinate fields, emitted only when the cell deviates
-    /// from the `fp16`/`mul` defaults: default-path documents must stay
-    /// byte-identical to pre-axis sweeps (the A/B contract every engine
-    /// and schema test pins).
+    /// Format/op/tiles coordinate fields, emitted only when the cell
+    /// deviates from the `fp16`/`mul`/single-tile defaults: default-path
+    /// documents must stay byte-identical to pre-axis sweeps (the A/B
+    /// contract every engine and schema test pins).
     fn format_op_fields(s: &mut String, c: &SweepCell) {
         if c.format != GemmFormat::Fp16 {
             s.push_str(&format!("\"format\": \"{}\", ", c.format.name()));
         }
         if c.op != GemmOp::Mul {
             s.push_str(&format!("\"op\": \"{}\", ", c.op.name()));
+        }
+        if c.tiles != 1 {
+            s.push_str(&format!("\"tiles\": {}, ", c.tiles));
         }
     }
 
@@ -480,6 +515,23 @@ impl SweepResult {
                 "\"corrections\": {}, \"band_recomputes\": {}, ",
                 r.corrections, r.band_recomputes
             ));
+            // Mesh attribution, multi-tile cells only: the default
+            // (single-tile) document stays byte-identical to pre-axis
+            // sweeps.
+            if let Some(m) = &c.mesh {
+                s.push_str(&format!(
+                    "\"mesh\": {{\"tiles\": {}, \"shards\": {}, \"retired_tiles\": {}, \
+                     \"reassigned_shards\": {}, \"noc_applied\": {}, \"noc_detected\": {}, \
+                     \"noc_corrected\": {}}}, ",
+                    m.tiles,
+                    m.shards,
+                    m.retired_tiles,
+                    m.reassigned_shards,
+                    m.noc_applied,
+                    m.noc_detected,
+                    m.noc_corrected
+                ));
+            }
             s.push_str("\"outcomes\": {");
             for (j, &o) in OUTCOMES.iter().enumerate() {
                 Self::v2_outcome(&mut s, Self::outcome_key(o), &r.estimate_of(o), false);
@@ -560,6 +612,8 @@ struct CellSpec {
     /// Recovery-policy override; `None` keeps the build's Table-1
     /// default so a sweep without the axis stays byte-identical.
     recovery: Option<RecoveryPolicy>,
+    /// Mesh tile count; 1 = the exact single-`System` campaign path.
+    tiles: usize,
 }
 
 /// The sweep driver.
@@ -672,6 +726,38 @@ impl Sweep {
                 }
             }
         }
+        // The mesh tile axis: multi-tile cells run the NoC-fault mesh
+        // campaign, which has its own fault domain and no stratified /
+        // adaptive machinery — crossing those knobs with it would
+        // silently mean something different per cell, so reject up
+        // front like every other invalid axis pairing.
+        if config.tiles.iter().any(|&t| t == 0) {
+            return Err(Error::Config("sweep tile counts must be >= 1".into()));
+        }
+        if config.tiles.iter().any(|&t| t > 1) {
+            if config.stratify {
+                return Err(Error::Config(
+                    "mesh cells (tiles > 1) have their own NoC fault domain and do not \
+                     run stratified allocation — drop --stratify or the multi-tile axis"
+                        .into(),
+                ));
+            }
+            if config.precision_target > 0.0 {
+                return Err(Error::Config(
+                    "mesh cells (tiles > 1) run a fixed injection budget — drop the \
+                     precision target or the multi-tile axis"
+                        .into(),
+                ));
+            }
+            if config.recoveries.is_some() {
+                return Err(Error::Config(
+                    "mesh cells (tiles > 1) take their recovery options from the mesh \
+                     build (link CRC / reduction ABFT / tile retirement), not the \
+                     single-tile recovery axis — drop one of the two axes"
+                        .into(),
+                ));
+            }
+        }
         // The recovery axis is crossed against *every* protection, so a
         // pair the hardware cannot honour (e.g. in-place correction
         // without online ABFT) is a configuration error, not a cell to
@@ -715,6 +801,12 @@ impl Sweep {
         } else {
             &config.ops
         };
+        let default_tiles = [1usize];
+        let tile_axis: &[usize] = if config.tiles.is_empty() {
+            &default_tiles
+        } else {
+            &config.tiles
+        };
         let mut specs: Vec<CellSpec> = Vec::new();
         for &geometry in &config.geometries {
             for &format in format_axis {
@@ -731,17 +823,20 @@ impl Sweep {
                                 };
                                 for &tol_factor in tols {
                                     for &recovery in &recovery_axis {
-                                        specs.push(CellSpec {
-                                            geometry,
-                                            format,
-                                            op,
-                                            protection,
-                                            shape_idx,
-                                            shape,
-                                            faults,
-                                            tol_factor,
-                                            recovery,
-                                        });
+                                        for &tiles in tile_axis {
+                                            specs.push(CellSpec {
+                                                geometry,
+                                                format,
+                                                op,
+                                                protection,
+                                                shape_idx,
+                                                shape,
+                                                faults,
+                                                tol_factor,
+                                                recovery,
+                                                tiles,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -772,9 +867,11 @@ impl Sweep {
         // it lets go — never earlier (an unstarted cell would re-record
         // and perturb the hit/miss counters), never later (the old
         // cache held every identity until sweep end).
+        // Mesh cells never record or adopt a reference trace (the NoC
+        // campaign has its own tile pool), so they take no pin.
         if let Some(c) = cache.as_ref() {
-            for spec in &specs {
-                c.retain(Self::trace_key(config, spec, problems));
+            for spec in specs.iter().filter(|s| s.tiles == 1) {
+                c.retain(Self::trace_key(config, spec, &problems));
             }
         }
         let cells = if config.work_stealing {
@@ -811,13 +908,18 @@ impl Sweep {
 
     /// Release one cell's pin on its shared clean run, evicting the
     /// cache entry if this cell was its last user. Called on every cell
-    /// completion path — success and failure — of both engines.
+    /// completion path — success and failure — of both engines. Mesh
+    /// cells hold no pin (see the pin loop in [`Sweep::run`]), so the
+    /// release is a no-op for them.
     fn release_trace(
         config: &SweepConfig,
         spec: &CellSpec,
         problems: &[GemmProblem],
         cache: Option<&TraceCache>,
     ) {
+        if spec.tiles != 1 {
+            return;
+        }
         if let Some(c) = cache {
             c.release(&Self::trace_key(config, spec, problems));
         }
@@ -855,6 +957,75 @@ impl Sweep {
             cc.recovery = recovery;
         }
         cc
+    }
+
+    /// The mesh-campaign configuration of a multi-tile cell. Seeding
+    /// reuses [`Sweep::cell_config`]'s per-(shape, fault count) stream,
+    /// so mesh columns at the same coordinates are controlled
+    /// comparisons like every other axis. The NoC recovery options
+    /// follow the protection column: a baseline build gets the
+    /// unprotected transport, every protected build the full link-CRC /
+    /// reduction-ABFT / retirement stack. The tile engine follows the
+    /// sweep's engine toggles.
+    fn mesh_cell_config(
+        config: &SweepConfig,
+        spec: &CellSpec,
+        threads: usize,
+    ) -> MeshCampaignConfig {
+        let cc = Self::cell_config(config, spec);
+        let mut mesh = if spec.protection == Protection::Baseline {
+            MeshConfig::unprotected(spec.tiles)
+        } else {
+            MeshConfig::new(spec.tiles)
+        };
+        mesh.cfg = cc.cfg;
+        mesh.protection = spec.protection;
+        mesh.engine = if config.two_level {
+            TileEngine::TwoLevel
+        } else if config.fast_forward {
+            TileEngine::FastForward
+        } else {
+            TileEngine::Direct
+        };
+        MeshCampaignConfig {
+            mesh,
+            spec: spec.shape,
+            injections: config.injections,
+            faults_per_run: spec.faults,
+            profile: config.mesh_profile,
+            seed: cc.seed,
+            threads,
+        }
+    }
+
+    /// Run one multi-tile cell as a mesh campaign — the `tiles > 1`
+    /// branch of both schedulers. The mesh result folds into the same
+    /// [`CampaignResult`] outcome table as a single-tile cell
+    /// (NoC attribution rides in [`SweepCell::mesh`], never in the
+    /// campaign strata), so downstream consumers see one uniform grid.
+    fn run_mesh_cell(
+        config: &SweepConfig,
+        spec: &CellSpec,
+        problem: &GemmProblem,
+        threads: usize,
+    ) -> Result<SweepCell> {
+        let started = std::time::Instant::now();
+        let mc = Self::mesh_cell_config(config, spec, threads);
+        let mr = MeshCampaign::run_with_problem(&mc, problem)?;
+        let result =
+            mr.to_campaign_result(Self::cell_config(config, spec), started.elapsed().as_secs_f64());
+        Ok(SweepCell {
+            geometry: spec.geometry,
+            format: spec.format,
+            op: spec.op,
+            protection: spec.protection,
+            shape: spec.shape,
+            faults: spec.faults,
+            tol_factor: spec.tol_factor,
+            tiles: spec.tiles,
+            mesh: Some(mr.cell_info()),
+            result,
+        })
     }
 
     /// Legacy execution: fan whole cells out over the worker pool, one
@@ -924,6 +1095,9 @@ impl Sweep {
         threads: usize,
         cache: Option<&TraceCache>,
     ) -> Result<SweepCell> {
+        if spec.tiles > 1 {
+            return Self::run_mesh_cell(config, spec, problem, threads);
+        }
         let mut cc = Self::cell_config(config, spec);
         cc.threads = threads;
         let result = Campaign::run_with_problem_cached(&cc, problem, cache)?;
@@ -935,6 +1109,8 @@ impl Sweep {
             shape: spec.shape,
             faults: spec.faults,
             tol_factor: spec.tol_factor,
+            tiles: 1,
+            mesh: None,
             result,
         })
     }
@@ -1229,6 +1405,8 @@ impl Grid<'_> {
             shape: spec.shape,
             faults: spec.faults,
             tol_factor: spec.tol_factor,
+            tiles: 1,
+            mesh: None,
             result: prog.result,
         }
     }
@@ -1242,6 +1420,27 @@ impl Grid<'_> {
     /// fails fast with the panic's message instead).
     fn run_init(&self, cell: usize) {
         let spec = &self.specs[cell];
+        // Multi-tile cells run the whole mesh campaign as one unit: the
+        // mesh engine has its own deterministic tile pool and inner
+        // thread split, so chunking it through the grid scheduler would
+        // only duplicate that machinery. Panics are caught for the same
+        // reason as below — an escaped one would hang the pool.
+        if spec.tiles > 1 {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                Sweep::run_mesh_cell(
+                    self.config,
+                    spec,
+                    &self.problems[spec.shape_idx],
+                    self.config.threads.max(1),
+                )
+            }));
+            let out = match caught {
+                Ok(r) => r,
+                Err(p) => Err(panic_error("mesh cell", p)),
+            };
+            self.finalize(cell, out);
+            return;
+        }
         let cc = Sweep::cell_config(self.config, spec);
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             CellCtx::prepare(&cc, &self.problems[spec.shape_idx], self.cache)
@@ -2020,5 +2219,93 @@ mod tests {
         // Timing variant adds the fields without breaking the rest.
         let jt = r.to_json(true);
         assert!(jt.contains("wall_seconds") && jt.contains("runs_per_sec"));
+    }
+
+    #[test]
+    fn default_tile_axis_is_byte_identical_and_emits_no_mesh_fields() {
+        // The explicit `tiles = [1]` default and an empty axis are the
+        // same grid, and neither leaks the mesh fields into the JSON —
+        // the A/B contract that keeps historical documents stable.
+        let a = Sweep::run(&tiny(23, 2)).unwrap();
+        let mut empty = tiny(23, 2);
+        empty.tiles = Vec::new();
+        let b = Sweep::run(&empty).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+        assert_eq!(a.to_json_v2(), b.to_json_v2());
+        for doc in [a.to_json(false), a.to_json_v2(), a.timing_json()] {
+            assert!(!doc.contains("\"tiles\""), "single-tile docs must not carry tiles");
+            assert!(!doc.contains("\"mesh\""), "single-tile docs must not carry mesh");
+        }
+        assert!(a.cells.iter().all(|c| c.tiles == 1 && c.mesh.is_none()));
+    }
+
+    fn mesh_tiny(seed: u64, threads: usize) -> SweepConfig {
+        let mut c = SweepConfig::new(10, seed);
+        c.shapes = vec![GemmSpec::new(12, 6, 5)];
+        c.protections = vec![Protection::Baseline, Protection::Full];
+        c.fault_counts = vec![1];
+        c.tiles = vec![1, 3];
+        c.threads = threads;
+        c
+    }
+
+    #[test]
+    fn mesh_tile_axis_runs_both_schedulers_byte_identically() {
+        let c = mesh_tiny(31, 2);
+        assert_eq!(c.n_cells(), 4, "2 protections x 1 shape x 1 fault x 2 tiles");
+        let a = Sweep::run(&c).unwrap();
+        assert_eq!(a.cells.len(), 4);
+        // Multi-tile cells carry the mesh block with consistent shard
+        // accounting; single-tile cells stay on the exact legacy path.
+        for cell in &a.cells {
+            if cell.tiles == 1 {
+                assert!(cell.mesh.is_none());
+            } else {
+                let m = cell.mesh.as_ref().expect("mesh cell info");
+                assert_eq!(m.tiles, 3);
+                assert!(m.shards >= m.tiles);
+                assert_eq!(cell.result.total, 10);
+                // CRITICAL: mesh attribution never rides in the
+                // campaign strata (the stratified estimators key off
+                // non-empty strata).
+                assert!(cell.result.strata.is_empty());
+            }
+        }
+        // Scheduler/thread invariance extends to the mesh axis.
+        let mut legacy = mesh_tiny(31, 1);
+        legacy.work_stealing = false;
+        let b = Sweep::run(&legacy).unwrap();
+        assert_eq!(a.to_json(false), b.to_json(false));
+        assert_eq!(a.to_json_v2(), b.to_json_v2());
+        // The mesh fields surface in both documents for mesh cells only.
+        let v1 = a.to_json(false);
+        let v2 = a.to_json_v2();
+        assert_eq!(v1.matches("\"tiles\": 3").count(), 2);
+        assert_eq!(v2.matches("\"mesh\": {\"tiles\": 3").count(), 2);
+        // The full-protection chaos cell must correct everything the
+        // NoC throws at it: zero functional errors.
+        let full = a
+            .cells
+            .iter()
+            .find(|c| c.tiles == 3 && c.protection == Protection::Full)
+            .unwrap();
+        assert_eq!(full.result.functional_errors(), 0);
+        assert!(full.mesh.as_ref().unwrap().noc_applied > 0);
+    }
+
+    #[test]
+    fn mesh_axis_rejects_incompatible_knobs_up_front() {
+        let mut c = mesh_tiny(1, 1);
+        c.tiles = vec![1, 0];
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = mesh_tiny(1, 1);
+        c.stratify = true;
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = mesh_tiny(1, 1);
+        c.precision_target = 0.1;
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
+        let mut c = mesh_tiny(1, 1);
+        c.recoveries = Some(vec![RecoveryPolicy::FullRestart]);
+        assert!(matches!(Sweep::run(&c), Err(Error::Config(_))));
     }
 }

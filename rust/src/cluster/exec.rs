@@ -31,6 +31,42 @@
 use super::{FfResume, System};
 use crate::fault::FaultCtx;
 
+/// Which execution engine a mesh tile runs its clean shard attempts on
+/// — the same three engines the campaign matrix exercises, selectable
+/// per mesh. `Direct` steps the cycle-accurate model; `FastForward` and
+/// `TwoLevel` use the functional level (bit-identical to the golden
+/// model on clean runs by the crate's clean-run contract) priced with
+/// the closed-form [`crate::perf::PhaseSchedule`]. Tile results are
+/// byte-identical across all three, which `tests/mesh.rs` pins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileEngine {
+    Direct,
+    FastForward,
+    TwoLevel,
+}
+
+impl TileEngine {
+    pub fn name(self) -> &'static str {
+        match self {
+            TileEngine::Direct => "direct",
+            TileEngine::FastForward => "fast-forward",
+            TileEngine::TwoLevel => "two-level",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "direct" => TileEngine::Direct,
+            "fast-forward" | "ff" => TileEngine::FastForward,
+            "two-level" | "tl" => TileEngine::TwoLevel,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [TileEngine; 3] =
+        [TileEngine::Direct, TileEngine::FastForward, TileEngine::TwoLevel];
+}
+
 /// Mid-segment convergence probe spacing of the two-level engine, in
 /// cycles. Small enough that a settled run is caught within a few cycles
 /// (instead of up to a checkpoint interval later), large enough that the

@@ -35,6 +35,8 @@ use crate::{Error, Result};
 
 pub(crate) mod exec;
 
+pub use exec::TileEngine;
+
 /// Timeout budget: a run that exceeds `TIMEOUT_FACTOR ×` the fault-free
 /// cycle count is classified as hung (§4.2's "Timeout" row).
 pub const TIMEOUT_FACTOR: u64 = 20;
@@ -549,6 +551,84 @@ impl System {
         let zeros = vec![crate::fp::Fp16::ZERO; spec.m * spec.k];
         self.tcdm.write_fp16_slice(layout.z_addr, &zeros);
         Ok(layout)
+    }
+
+    /// Checksum of the X/W operand images *at rest in TCDM* under
+    /// `layout` — the ABFT input-staging check. Reading goes through the
+    /// same TCDM port the accelerator fetches from, so anything that
+    /// corrupted the staged image after DMA (an SEU in a TCDM word, a
+    /// botched DMA burst) changes this digest.
+    pub fn staged_input_digest(&mut self, layout: &TaskLayout) -> u64 {
+        let x = self
+            .tcdm
+            .read_fp16_slice(layout.x_addr, (layout.m * layout.n) as usize);
+        let w = self
+            .tcdm
+            .read_fp16_slice(layout.w_addr, (layout.n * layout.k) as usize);
+        let mut h = Fnv64::new();
+        for v in x.iter().chain(w.iter()) {
+            h.write_u16(v.to_bits());
+        }
+        h.finish()
+    }
+
+    /// The digest [`System::staged_input_digest`] must report for a
+    /// correctly staged `p` on this build (ABFT builds stage the
+    /// augmented problem, so the expected image is augmented too).
+    pub fn expected_input_digest(&self, p: &GemmProblem) -> u64 {
+        let digest = |x: &Mat, w: &Mat| {
+            let mut h = Fnv64::new();
+            for v in x.data.iter().chain(w.data.iter()) {
+                h.write_u16(v.to_bits());
+            }
+            h.finish()
+        };
+        if self.protection().has_abft_checksums() {
+            let a = p.augment_abft();
+            digest(&a.x, &a.w)
+        } else {
+            digest(&p.x, &p.w)
+        }
+    }
+
+    /// Verify the staged X/W images at rest in TCDM before compute — the
+    /// input-staging half of the ABFT story (the writeback checksums
+    /// only cover the compute/store path; a corrupted *input* image
+    /// yields a wrong result whose checksums are self-consistent).
+    /// Opt-in: the default campaign path never calls this, so all
+    /// pinned streams and baselines are untouched.
+    pub fn verify_staged_inputs(&mut self, p: &GemmProblem, layout: &TaskLayout) -> bool {
+        self.staged_input_digest(layout) == self.expected_input_digest(p)
+    }
+
+    /// Repair a corrupted staged input image by re-running the X/W DMA
+    /// transfers (Y and Z are left untouched). Pairs with
+    /// [`System::verify_staged_inputs`]: detect, restage, re-verify.
+    pub fn restage_inputs(&mut self, p: &GemmProblem, layout: &TaskLayout) -> Result<()> {
+        let (x, w) = if self.protection().has_abft_checksums() {
+            let a = p.augment_abft();
+            (a.x.data, a.w.data)
+        } else {
+            (p.x.data.clone(), p.w.data.clone())
+        };
+        let word_pad = |elems: usize| (2 * elems).div_ceil(4) * 4;
+        self.l2.write_fp16_slice(layout.x_addr as usize, &x);
+        self.dma.copy_in(
+            &self.l2,
+            layout.x_addr as usize,
+            &mut self.tcdm,
+            layout.x_addr,
+            word_pad(x.len()),
+        );
+        self.l2.write_fp16_slice(layout.w_addr as usize, &w);
+        self.dma.copy_in(
+            &self.l2,
+            layout.w_addr as usize,
+            &mut self.tcdm,
+            layout.w_addr,
+            word_pad(w.len()),
+        );
+        Ok(())
     }
 
     /// Program the shadowed register-file context for `layout` and commit

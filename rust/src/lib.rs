@@ -65,6 +65,7 @@ pub mod ecc;
 pub mod fault;
 pub mod fp;
 pub mod golden;
+pub mod mesh;
 pub mod perf;
 pub mod redmule;
 pub mod runtime;
@@ -77,11 +78,14 @@ pub mod prelude {
     pub use crate::campaign::{
         Campaign, CampaignConfig, Outcome, Sweep, SweepConfig, Table1, TraceCache,
     };
-    pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System};
+    pub use crate::cluster::{HostOutcome, RecoveryPolicy, RunReport, System, TileEngine};
     pub use crate::coordinator::{Coordinator, Criticality, TaskRequest};
     pub use crate::fault::{FaultKind, FaultModel, FaultPlan, FaultRegistry};
     pub use crate::fp::{Fp16, Fp8, Fp8Format, GemmFormat, GemmOp};
     pub use crate::golden::{GemmProblem, GemmSpec, Mat};
+    pub use crate::mesh::{
+        Mesh, MeshCampaign, MeshCampaignConfig, MeshConfig, MeshFaultProfile, MeshReport,
+    };
     pub use crate::redmule::{ExecMode, Protection, RedMuleConfig};
     pub use crate::service::{
         BackoffPolicy, CampaignService, JobOutcome, JobSpec, ServiceConfig, ServiceFaultPlan,

@@ -16,6 +16,7 @@
 //!                     [--format f,..] [--op o,..]
 //!                     [--faults 1,2,..] [--model independent|burst|site-burst]
 //!                     [--tols F,..] [--recoveries full-restart,tile-level,..]
+//!                     [--tiles 1,4,..] [--mesh-profile chaos|mixed|..]
 //!                     [--schema v1|v2] [--timing [--timing-out F]]
 //!                     [--precision P] [--batch-size B] [--min-injections N]
 //!                     [--max-injections N] [--stratify] [--stratify-on O]
@@ -23,8 +24,14 @@
 //!                     [--direct] [--checkpoint-interval K]
 //!                     [--two-level | --no-two-level]
 //!                     [--no-trace-cache] [--per-cell]
+//! redmule-ft mesh     [--tiles N] [--shards S] [--config ...] [--m M --n N --k K]
+//!                     [--profile none|flip|drop|dup|reorder|crash|mixed|chaos]
+//!                     [--engine direct|ff|tl] [--faults F] [--injections N]
+//!                     [--seed S] [--threads T] [--unprotected-noc | --no-link-crc
+//!                     --no-reduction-abft --no-retirement] [--verify-staging] [--json]
 //! redmule-ft table1   [--injections N] [--seed S] [--threads T] [--abft]
 //! redmule-ft area     [--config baseline|data|full|abft] [--l L --h H --p P]
+//!                     [--tiles N]
 //! redmule-ft floorplan [--config ...]
 //! redmule-ft perf     [--m M --n N --k K]
 //! redmule-ft gemm     [--m M --n N --k K] [--config ...] [--mode ft|perf]
@@ -36,16 +43,17 @@
 //!                     [--cancel-pct P] [--baseline] [--verify]
 //! ```
 
-use redmule_ft::area::{area_report, floorplan};
+use redmule_ft::area::{area_report, floorplan, mesh_area_report};
 use redmule_ft::campaign::{
     Campaign, CampaignConfig, CampaignResult, StratifyObjective, Sweep, SweepConfig, Table1,
     OUTCOMES,
 };
-use redmule_ft::cluster::{RecoveryPolicy, System};
+use redmule_ft::cluster::{RecoveryPolicy, System, TileEngine};
 use redmule_ft::coordinator::{Coordinator, Criticality};
 use redmule_ft::fault::FaultModel;
 use redmule_ft::fp::{GemmFormat, GemmOp};
 use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::mesh::{MeshCampaign, MeshCampaignConfig, MeshConfig, MeshFaultProfile};
 use redmule_ft::perf::{mode_report, retry_expected_overhead, throughput};
 use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
 use redmule_ft::runtime::GoldenRuntime;
@@ -244,6 +252,7 @@ fn main() -> ExitCode {
     let r = match args.cmd.as_str() {
         "campaign" => cmd_campaign(&args),
         "sweep" => cmd_sweep(&args),
+        "mesh" => cmd_mesh(&args),
         "table1" => cmd_table1(&args),
         "area" => cmd_area(&args),
         "floorplan" => cmd_floorplan(&args),
@@ -311,13 +320,28 @@ fn print_help() {
                          --timing writes the bench-sweep sidecar (--timing-out FILE;\n\
                          v1 keeps its legacy inline fields), --direct /\n\
                          --checkpoint-interval / --two-level as in campaign;\n\
+                         --tiles 1,4,.. crosses the mesh tile-count axis (multi-tile\n\
+                         cells shard the workload across a RedMulE mesh and inject\n\
+                         interconnect faults under --mesh-profile, default chaos),\n\
                          --no-trace-cache\n\
                          disables the shared reference-trace cache and --per-cell\n\
                          the grid-wide work stealing — byte-identical output either\n\
                          way, only slower)\n\
+           mesh          run a multi-tile NoC fault campaign: one GEMM sharded over\n\
+                         --tiles RedMulE instances, faults on the interconnect\n\
+                         (--profile none|flip|drop|dup|reorder|crash|mixed|chaos),\n\
+                         recovery by per-link CRC + retransmit, reduction-tree ABFT\n\
+                         and crashed-tile retirement (--unprotected-noc or the\n\
+                         individual --no-link-crc/--no-reduction-abft/\n\
+                         --no-retirement flags switch them off, --engine picks the\n\
+                         tile execution engine, --verify-staging checks staged\n\
+                         inputs at rest, --json prints the deterministic document)\n\
            table1        run the Table-1 columns (--injections, --seed, --threads;\n\
                          --abft appends the ABFT checksum and online-ABFT columns)\n\
-           area          GE area model breakdown (--config, --l/--h/--p)\n\
+           area          GE area model breakdown (--config, --l/--h/--p; --tiles N\n\
+                         adds the mesh interconnect: N tile instances plus NoC\n\
+                         links/routers, link CRC, the reduction-ABFT checker and\n\
+                         heartbeat watchdogs)\n\
            floorplan     Fig. 2a textual floorplan (--config)\n\
            perf          performance-mode vs FT-mode cycle model (--m/--n/--k)\n\
            gemm          run one GEMM on the simulator and verify vs golden\n\
@@ -509,6 +533,19 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     if let Some(raw) = args.kv.get("recoveries") {
         sc.recoveries = Some(parse_list(raw, "--recoveries", parse_recovery)?);
     }
+    if let Some(raw) = args.kv.get("tiles") {
+        sc.tiles = parse_list(raw, "--tiles", |t| {
+            t.parse::<usize>().ok().filter(|&n| n >= 1)
+        })?;
+    }
+    if let Some(raw) = args.kv.get("mesh-profile") {
+        sc.mesh_profile = MeshFaultProfile::parse(raw).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --mesh-profile {raw} (expected none|flip|drop|dup|reorder|\
+                 crash|mixed|chaos)"
+            ))
+        })?;
+    }
     sc.precision_target = args.get("precision", 0.0f64);
     sc.batch_size = args.get("batch-size", 0u64);
     sc.min_injections = args.get("min-injections", 0u64);
@@ -599,6 +636,87 @@ fn cmd_sweep(args: &Args) -> redmule_ft::Result<()> {
     Ok(())
 }
 
+fn cmd_mesh(args: &Args) -> redmule_ft::Result<()> {
+    let tiles = args.get("tiles", 4usize);
+    let mut mesh = if args.flag("unprotected-noc") {
+        MeshConfig::unprotected(tiles)
+    } else {
+        MeshConfig::new(tiles)
+    };
+    mesh.shards = args.get("shards", 0usize);
+    mesh.cfg = args.redmule_cfg();
+    if let Some(f) = format_of(args)? {
+        mesh.cfg = mesh.cfg.with_format(f);
+    }
+    if let Some(o) = op_of(args)? {
+        mesh.cfg = mesh.cfg.with_op(o);
+    }
+    mesh.protection = args.protection();
+    if let Some(raw) = args.kv.get("engine") {
+        mesh.engine = TileEngine::parse(raw).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --engine {raw} (expected direct, fast-forward/ff or two-level/tl)"
+            ))
+        })?;
+    }
+    if args.flag("no-link-crc") {
+        mesh.link_crc = false;
+    }
+    if args.flag("no-reduction-abft") {
+        mesh.reduction_abft = false;
+    }
+    if args.flag("no-retirement") {
+        mesh.tile_retirement = false;
+    }
+    if args.flag("verify-staging") {
+        mesh.verify_staging = true;
+    }
+    let mut mc = MeshCampaignConfig::new(
+        tiles,
+        args.get("injections", 200u64),
+        args.get("seed", 2025u64),
+    );
+    mc.mesh = mesh;
+    mc.spec = GemmSpec::new(
+        args.get("m", mc.spec.m),
+        args.get("n", mc.spec.n),
+        args.get("k", mc.spec.k),
+    );
+    mc.faults_per_run = args.get("faults", mc.faults_per_run);
+    mc.threads = args.get("threads", 1usize);
+    if let Some(raw) = args.kv.get("profile") {
+        mc.profile = MeshFaultProfile::parse(raw).ok_or_else(|| {
+            redmule_ft::Error::Config(format!(
+                "unknown --profile {raw} (expected none|flip|drop|dup|reorder|crash|\
+                 mixed|chaos)"
+            ))
+        })?;
+    }
+    eprintln!(
+        "mesh: {} tiles x {} shards on {} ({}x{}x{}), {} injections, profile {}, \
+         engine {}, crc={} abft={} retirement={}",
+        mc.mesh.tiles,
+        mc.mesh.shard_count(mc.spec.m),
+        mc.mesh.protection.name(),
+        mc.spec.m,
+        mc.spec.n,
+        mc.spec.k,
+        mc.injections,
+        mc.profile.name(),
+        mc.mesh.engine.name(),
+        mc.mesh.link_crc,
+        mc.mesh.reduction_abft,
+        mc.mesh.tile_retirement,
+    );
+    let r = MeshCampaign::run(&mc)?;
+    if args.flag("json") {
+        println!("{}", r.to_json());
+    } else {
+        println!("{}", r.render());
+    }
+    Ok(())
+}
+
 fn cmd_table1(args: &Args) -> redmule_ft::Result<()> {
     let injections = args.get("injections", 20_000u64);
     let seed = args.get("seed", 2025u64);
@@ -614,6 +732,18 @@ fn cmd_table1(args: &Args) -> redmule_ft::Result<()> {
 
 fn cmd_area(args: &Args) -> redmule_ft::Result<()> {
     let cfg = args.redmule_cfg();
+    let tiles = args.get("tiles", 1usize);
+    if tiles > 1 {
+        // Mesh variant: tile instances plus the NoC fault-domain
+        // hardware (links, routers, CRC, reduction checker, heartbeat).
+        let base = mesh_area_report(cfg, Protection::Baseline, tiles, false, false, false);
+        for p in [Protection::Baseline, Protection::Full] {
+            let r = mesh_area_report(cfg, p, tiles, true, true, true);
+            println!("{}", r.render());
+            println!("overhead vs unprotected mesh: {:+.1} %\n", r.overhead_vs(&base));
+        }
+        return Ok(());
+    }
     let base = area_report(cfg, Protection::Baseline);
     for p in [
         Protection::Baseline,

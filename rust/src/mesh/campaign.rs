@@ -1,0 +1,508 @@
+//! Fault-injection campaigns over the mesh interconnect domain.
+//!
+//! Same statistical machine as the single-tile campaign — `(seed,
+//! index)`-pure injection streams, chunked worker threads merged in
+//! canonical chunk order — but the sampled population is the NoC
+//! ([`NocRegistry`]) and the unit under test is a whole sharded mesh
+//! run. Outcomes reuse the Table-1 classes ([`Outcome`]); detected /
+//! corrected events are attributed to the three `mesh/noc*` strata.
+//!
+//! Stream domains are distinct from every existing campaign/sweep
+//! domain, so mesh campaigns perturb no previously sampled stream (the
+//! mini-Table-1 pins and all A/B baselines stay valid).
+
+use super::noc::{MeshFaultProfile, NocRegistry, NOC_STRATUM_NAMES, N_NOC_STRATA};
+use super::{Mesh, MeshConfig, MeshEvents, MeshReport, TilePool};
+use crate::campaign::{stream_seed, CampaignConfig, CampaignResult, Outcome, OUTCOMES};
+use crate::golden::{GemmProblem, GemmSpec, Mat};
+use crate::util::digest::Fnv64;
+use crate::util::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// Stream domain for the mesh campaign workload. ("REDMMSPR")
+pub const DOMAIN_MESH_PROBLEM: u64 = 0x5245_444D_4D53_5052;
+/// Stream domain for mesh injection plans. ("REDMMSIN")
+pub const DOMAIN_MESH_INJECT: u64 = 0x5245_444D_4D53_494E;
+
+/// Configuration of one mesh campaign.
+#[derive(Debug, Clone)]
+pub struct MeshCampaignConfig {
+    pub mesh: MeshConfig,
+    /// The full (pre-sharding) GEMM shape.
+    pub spec: GemmSpec,
+    pub injections: u64,
+    /// Faults sampled per injection (class profiles; `chaos` always
+    /// builds its composed 5-fault plan).
+    pub faults_per_run: usize,
+    pub profile: MeshFaultProfile,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl MeshCampaignConfig {
+    pub fn new(tiles: usize, injections: u64, seed: u64) -> Self {
+        Self {
+            mesh: MeshConfig::new(tiles),
+            spec: GemmSpec::new(48, 16, 16),
+            injections,
+            faults_per_run: 2,
+            profile: MeshFaultProfile::Chaos,
+            seed,
+            threads: 1,
+        }
+    }
+}
+
+/// Per-stratum attribution of one mesh campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocStratumStats {
+    pub name: &'static str,
+    /// Gate-equivalent area share of the stratum (the `mixed` sampling
+    /// weight), from [`NocRegistry::stratum_shares`].
+    pub share: f64,
+    pub applied: u64,
+    pub detected: u64,
+    pub corrected: u64,
+    /// Injections ending in a functional error that had at least one
+    /// applied fault in this stratum.
+    pub functional_errors: u64,
+}
+
+/// Summary the sweep engine carries per mesh cell (`"mesh"` object of
+/// sweep-v2 JSON). Kept separate from [`CampaignResult::strata`]: the
+/// single-tile stratified estimators must never see mesh strata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeshCellInfo {
+    pub tiles: usize,
+    pub shards: usize,
+    pub retired_tiles: u64,
+    pub reassigned_shards: u64,
+    pub noc_applied: u64,
+    pub noc_detected: u64,
+    pub noc_corrected: u64,
+}
+
+/// Result of one mesh campaign.
+#[derive(Debug, Clone)]
+pub struct MeshCampaignResult {
+    pub config: MeshCampaignConfig,
+    pub total: u64,
+    pub correct_no_retry: u64,
+    pub correct_with_retry: u64,
+    pub incorrect: u64,
+    pub timeout: u64,
+    /// Injections where at least one interconnect fault actually struck
+    /// (crash points past a tile's workload, or fates on never-sent
+    /// messages, are architecturally masked).
+    pub applied_runs: u64,
+    pub events: MeshEvents,
+    pub strata: Vec<NocStratumStats>,
+    /// FNV-64 digest of the golden result (workload identity check).
+    pub golden_digest: u64,
+}
+
+impl MeshCampaignResult {
+    pub fn correct(&self) -> u64 {
+        self.correct_no_retry + self.correct_with_retry
+    }
+
+    pub fn functional_errors(&self) -> u64 {
+        self.incorrect + self.timeout
+    }
+
+    pub fn cell_info(&self) -> MeshCellInfo {
+        MeshCellInfo {
+            tiles: self.config.mesh.tiles,
+            shards: self.config.mesh.shard_count(self.config.spec.m),
+            retired_tiles: self.events.tiles_retired,
+            reassigned_shards: self.events.shards_reassigned,
+            noc_applied: self.events.applied(),
+            noc_detected: self.events.detected(),
+            noc_corrected: self.events.corrected(),
+        }
+    }
+
+    /// Repackage the outcome counts as a [`CampaignResult`] so mesh
+    /// cells flow through the sweep's existing JSON/aggregation
+    /// machinery. `strata` stays EMPTY on purpose: the stratified
+    /// estimators are defined over the single-tile site population, and
+    /// mesh attribution travels in [`MeshCellInfo`] instead.
+    pub fn to_campaign_result(&self, config: CampaignConfig, wall_seconds: f64) -> CampaignResult {
+        CampaignResult {
+            config,
+            total: self.total,
+            correct_no_retry: self.correct_no_retry,
+            correct_with_retry: self.correct_with_retry,
+            incorrect: self.incorrect,
+            timeout: self.timeout,
+            applied: self.applied_runs,
+            faults_applied: self.events.applied(),
+            corrections: self.events.abft_localized,
+            band_recomputes: self.events.shard_recomputes,
+            wall_seconds,
+            batches: 1,
+            stopped_early: false,
+            strata: Vec::new(),
+        }
+    }
+
+    /// Text report in the campaign `--report` style.
+    pub fn render(&self) -> String {
+        let c = &self.config;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Mesh campaign — {} tiles, {} shards, {}x{}x{}, engine {}, tile protection {}, profile {}\n",
+            c.mesh.tiles,
+            c.mesh.shard_count(c.spec.m),
+            c.spec.m,
+            c.spec.n,
+            c.spec.k,
+            c.mesh.engine.name(),
+            c.mesh.protection.name(),
+            c.profile.name(),
+        ));
+        s.push_str(&format!(
+            "mesh recovery: link-crc={} reduction-abft={} tile-retirement={}\n",
+            c.mesh.link_crc, c.mesh.reduction_abft, c.mesh.tile_retirement
+        ));
+        let counts = [
+            self.correct_no_retry,
+            self.correct_with_retry,
+            self.incorrect,
+            self.timeout,
+        ];
+        for (o, n) in OUTCOMES.iter().zip(counts) {
+            let pct = 100.0 * n as f64 / self.total.max(1) as f64;
+            s.push_str(&format!("{:<22} {:>8}  {:>6.2}%\n", o.name(), n, pct));
+        }
+        let e = &self.events;
+        s.push_str(&format!(
+            "interconnect events: crc_detected={} retransmits={} drops_recovered={} dups_discarded={} reorders_fixed={} abft_localized={} shard_recomputes={} tiles_retired={} shards_reassigned={}\n",
+            e.crc_detected,
+            e.retransmits,
+            e.drops_recovered,
+            e.dups_discarded,
+            e.reorders_fixed,
+            e.abft_localized,
+            e.shard_recomputes,
+            e.tiles_retired,
+            e.shards_reassigned,
+        ));
+        s.push_str(&format!(
+            "{:<18} {:>6} {:>8} {:>9} {:>10} {:>12}\n",
+            "stratum", "share", "applied", "detected", "corrected", "func-errors"
+        ));
+        for st in &self.strata {
+            s.push_str(&format!(
+                "{:<18} {:>6.3} {:>8} {:>9} {:>10} {:>12}\n",
+                st.name, st.share, st.applied, st.detected, st.corrected, st.functional_errors
+            ));
+        }
+        s
+    }
+
+    /// Deterministic JSON (no wall-clock fields): byte-identical across
+    /// thread counts and tile schedules, which the CI mesh sweep-smoke
+    /// diffs directly.
+    pub fn to_json(&self) -> String {
+        let c = &self.config;
+        let mut s = String::new();
+        s.push_str("{\"schema\": \"redmule-ft/mesh-campaign-v1\", ");
+        s.push_str(&format!(
+            "\"tiles\": {}, \"shards\": {}, \"shape\": \"{}x{}x{}\", ",
+            c.mesh.tiles,
+            c.mesh.shard_count(c.spec.m),
+            c.spec.m,
+            c.spec.n,
+            c.spec.k
+        ));
+        s.push_str(&format!(
+            "\"engine\": \"{}\", \"protection\": \"{}\", \"profile\": \"{}\", ",
+            c.mesh.engine.name(),
+            c.mesh.protection.name(),
+            c.profile.name()
+        ));
+        s.push_str(&format!(
+            "\"link_crc\": {}, \"reduction_abft\": {}, \"tile_retirement\": {}, ",
+            c.mesh.link_crc, c.mesh.reduction_abft, c.mesh.tile_retirement
+        ));
+        s.push_str(&format!(
+            "\"injections\": {}, \"applied_runs\": {}, \"seed\": {}, \"golden_digest\": \"{:#018x}\", ",
+            self.total, self.applied_runs, c.seed, self.golden_digest
+        ));
+        s.push_str(&format!(
+            "\"outcomes\": {{\"correct_no_retry\": {}, \"correct_with_retry\": {}, \"incorrect\": {}, \"timeout\": {}}}, ",
+            self.correct_no_retry, self.correct_with_retry, self.incorrect, self.timeout
+        ));
+        let e = &self.events;
+        s.push_str(&format!(
+            "\"events\": {{\"crc_detected\": {}, \"retransmits\": {}, \"drops_recovered\": {}, \"dups_discarded\": {}, \"reorders_fixed\": {}, \"abft_localized\": {}, \"shard_recomputes\": {}, \"tiles_retired\": {}, \"shards_reassigned\": {}, \"staging_repairs\": {}}}, ",
+            e.crc_detected,
+            e.retransmits,
+            e.drops_recovered,
+            e.dups_discarded,
+            e.reorders_fixed,
+            e.abft_localized,
+            e.shard_recomputes,
+            e.tiles_retired,
+            e.shards_reassigned,
+            e.staging_repairs,
+        ));
+        s.push_str("\"strata\": [");
+        for (i, st) in self.strata.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"name\": \"{}\", \"share\": {:.6}, \"applied\": {}, \"detected\": {}, \"corrected\": {}, \"functional_errors\": {}}}",
+                st.name, st.share, st.applied, st.detected, st.corrected, st.functional_errors
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Classify one mesh run against the golden result, mirroring the
+/// single-tile [`crate::campaign::classify`] semantics.
+pub fn classify_mesh(report: &MeshReport, golden: &Mat) -> Outcome {
+    if !report.completed {
+        Outcome::Timeout
+    } else if report.z != *golden {
+        Outcome::Incorrect
+    } else if report.events.recovered() {
+        Outcome::CorrectWithRetry
+    } else {
+        Outcome::CorrectNoRetry
+    }
+}
+
+#[derive(Default)]
+struct Partial {
+    outcomes: [u64; 4],
+    applied_runs: u64,
+    events: MeshEvents,
+    strata_fe: [u64; N_NOC_STRATA],
+}
+
+/// The mesh campaign engine.
+pub struct MeshCampaign;
+
+impl MeshCampaign {
+    /// Run on the canonical seeded workload for this config.
+    pub fn run(config: &MeshCampaignConfig) -> Result<MeshCampaignResult> {
+        let problem = GemmProblem::random(
+            &config.spec,
+            stream_seed(config.seed, DOMAIN_MESH_PROBLEM, 0),
+        );
+        Self::run_with_problem(config, &problem)
+    }
+
+    /// Run against a caller-provided workload (the sweep engine shares
+    /// one problem per shape across cells).
+    pub fn run_with_problem(
+        config: &MeshCampaignConfig,
+        problem: &GemmProblem,
+    ) -> Result<MeshCampaignResult> {
+        if problem.spec != config.spec {
+            return Err(Error::Config(
+                "mesh campaign problem shape does not match config.spec".into(),
+            ));
+        }
+        let golden = problem.golden_z_for(config.mesh.cfg.format, config.mesh.cfg.op);
+        let tiles = config.mesh.tiles;
+        let shards = config.mesh.shard_count(config.spec.m);
+        let mut shards_of = vec![0u64; tiles];
+        for s in 0..shards {
+            shards_of[s % tiles] += 1;
+        }
+        let registry = NocRegistry::new(tiles, shards_of);
+
+        let n = config.injections;
+        let threads = config.threads.max(1).min(n.max(1) as usize);
+        let chunk = n.div_ceil(threads as u64);
+        let mut partials: Vec<Partial> = Vec::new();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for w in 0..threads {
+                let lo = w as u64 * chunk;
+                let hi = ((w as u64 + 1) * chunk).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let golden = &golden;
+                let registry = &registry;
+                handles.push(
+                    scope.spawn(move || Self::run_range(config, problem, golden, registry, lo, hi)),
+                );
+            }
+            // Joined (and merged) in spawn order: thread-count invariant.
+            for h in handles {
+                let p = h
+                    .join()
+                    .map_err(|_| Error::Sim("mesh campaign worker panicked".into()))??;
+                partials.push(p);
+            }
+            Ok(())
+        })?;
+
+        let mut outcomes = [0u64; 4];
+        let mut applied_runs = 0u64;
+        let mut events = MeshEvents::default();
+        let mut strata_fe = [0u64; N_NOC_STRATA];
+        for p in &partials {
+            for i in 0..4 {
+                outcomes[i] += p.outcomes[i];
+            }
+            applied_runs += p.applied_runs;
+            for s in 0..N_NOC_STRATA {
+                strata_fe[s] += p.strata_fe[s];
+            }
+            events.merge(&p.events);
+        }
+        let shares = NocRegistry::stratum_shares();
+        let strata = (0..N_NOC_STRATA)
+            .map(|s| NocStratumStats {
+                name: NOC_STRATUM_NAMES[s],
+                share: shares[s],
+                applied: events.strata[s][0],
+                detected: events.strata[s][1],
+                corrected: events.strata[s][2],
+                functional_errors: strata_fe[s],
+            })
+            .collect();
+        let mut h = Fnv64::new();
+        for &b in &golden.bits() {
+            h.write_u16(b);
+        }
+        Ok(MeshCampaignResult {
+            config: config.clone(),
+            total: n,
+            correct_no_retry: outcomes[0],
+            correct_with_retry: outcomes[1],
+            incorrect: outcomes[2],
+            timeout: outcomes[3],
+            applied_runs,
+            events,
+            strata,
+            golden_digest: h.finish(),
+        })
+    }
+
+    fn run_range(
+        config: &MeshCampaignConfig,
+        problem: &GemmProblem,
+        golden: &Mat,
+        registry: &NocRegistry,
+        lo: u64,
+        hi: u64,
+    ) -> Result<Partial> {
+        let mut pool = TilePool::new(config.mesh.cfg, config.mesh.protection, config.mesh.tiles);
+        let mut p = Partial::default();
+        for i in lo..hi {
+            let mut rng = Xoshiro256::new(stream_seed(config.seed, DOMAIN_MESH_INJECT, i));
+            let plan = registry.sample(&mut rng, config.faults_per_run, config.profile);
+            let report = Mesh::run_with_pool(&config.mesh, problem, &plan, &mut pool)?;
+            let outcome = classify_mesh(&report, golden);
+            p.outcomes[outcome.index()] += 1;
+            if report.faults_applied > 0 {
+                p.applied_runs += 1;
+            }
+            if outcome.is_functional_error() {
+                for s in 0..N_NOC_STRATA {
+                    if report.events.strata[s][0] > 0 {
+                        p.strata_fe[s] += 1;
+                    }
+                }
+            }
+            p.events.merge(&report.events);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TileEngine;
+
+    fn tiny(tiles: usize, profile: MeshFaultProfile) -> MeshCampaignConfig {
+        let mut c = MeshCampaignConfig::new(tiles, 12, 0xC0FFEE);
+        c.spec = GemmSpec::new(16, 6, 5);
+        c.mesh.engine = TileEngine::FastForward;
+        c.profile = profile;
+        c
+    }
+
+    #[test]
+    fn full_protection_chaos_has_zero_functional_errors() {
+        let c = tiny(4, MeshFaultProfile::Chaos);
+        let r = MeshCampaign::run(&c).unwrap();
+        assert_eq!(r.total, 12);
+        assert_eq!(r.functional_errors(), 0, "\n{}", r.render());
+        // Chaos applies all five faults every injection; recovery fired.
+        assert!(r.events.applied() > 0);
+        assert!(r.events.detected() > 0);
+        assert!(r.correct_with_retry > 0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_result() {
+        let mut a = tiny(3, MeshFaultProfile::Mixed);
+        let mut b = tiny(3, MeshFaultProfile::Mixed);
+        a.threads = 1;
+        b.threads = 8;
+        let ra = MeshCampaign::run(&a).unwrap();
+        let rb = MeshCampaign::run(&b).unwrap();
+        assert_eq!(ra.to_json(), rb.to_json());
+    }
+
+    #[test]
+    fn unprotected_mesh_fails_under_each_transport_fault_class() {
+        for profile in [
+            MeshFaultProfile::Drop,
+            MeshFaultProfile::Dup,
+            MeshFaultProfile::Crash,
+        ] {
+            let mut c = tiny(3, profile);
+            c.mesh = MeshConfig::unprotected(3);
+            c.mesh.engine = TileEngine::FastForward;
+            c.faults_per_run = 1;
+            let r = MeshCampaign::run(&c).unwrap();
+            assert!(
+                r.functional_errors() > 0,
+                "profile {} should break an unprotected mesh\n{}",
+                profile.name(),
+                r.render()
+            );
+        }
+    }
+
+    #[test]
+    fn stratum_attribution_lands_in_the_right_stratum() {
+        let mut c = tiny(4, MeshFaultProfile::Flip);
+        c.faults_per_run = 1;
+        let r = MeshCampaign::run(&c).unwrap();
+        assert!(r.strata[0].applied > 0, "\n{}", r.render());
+        assert_eq!(r.strata[1].applied, 0);
+        assert_eq!(r.strata[2].applied, 0);
+        assert_eq!(r.strata[0].name, "mesh/noc-link");
+        // CRC detects and retransmission corrects every flip.
+        assert_eq!(r.strata[0].detected, r.strata[0].applied);
+        assert_eq!(r.functional_errors(), 0);
+    }
+
+    #[test]
+    fn campaign_result_conversion_keeps_strata_empty() {
+        let c = tiny(2, MeshFaultProfile::Chaos);
+        let r = MeshCampaign::run(&c).unwrap();
+        let cc = CampaignConfig::table1(c.mesh.protection, r.total, c.seed);
+        let conv = r.to_campaign_result(cc, 0.0);
+        assert!(conv.strata.is_empty());
+        assert_eq!(conv.total, r.total);
+        assert_eq!(conv.functional_errors(), r.functional_errors());
+        let info = r.cell_info();
+        assert_eq!(info.tiles, 2);
+        assert_eq!(info.noc_applied, r.events.applied());
+    }
+}

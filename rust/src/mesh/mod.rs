@@ -1,0 +1,922 @@
+//! RedMulE Mesh: a deterministic multi-tile sharded-GEMM simulation.
+//!
+//! One large `Z = X·W + Y` is sharded into contiguous **row bands** and
+//! distributed round-robin over N [`System`] tiles (the sweep engine's
+//! worker-arena + `reconfigure` machinery, promoted to a tile pool).
+//! Row-band sharding keeps every per-element FMA chain intact, so the
+//! gathered result is **bit-identical** to the single-`System` run for
+//! any tile count — the property the mesh determinism tests pin.
+//!
+//! Tiles push their finished bands to a reduction root over a modeled
+//! NoC. That transfer-and-reduction layer is a first-class fault domain
+//! ([`noc`]): link SETs on in-flight results, lost / duplicated /
+//! reordered messages, and tile crashes mid-shard, each attributed to
+//! its own `mesh/noc*` stratum. Three composable recovery options
+//! defend it:
+//!
+//! * **Per-link CRC + bounded retransmit** (`link_crc`) — CRC-16 +
+//!   sequence numbers + ACK/NACK: corrupted messages are retransmitted
+//!   (clean, up to [`MAX_RETRANSMITS`]), duplicates are discarded,
+//!   placement trusts the CRC-protected header, and a lost message is
+//!   re-sent after [`RETRANSMIT_TIMEOUT`]. Without it the root gathers
+//!   by physical ingress: per-link arrival index → assigned shard, so
+//!   a drop shifts every later band on that link, a duplicate shifts
+//!   them the other way, and a reorder swaps bands — real, distinct
+//!   failure modes per fault class.
+//! * **Reduction-tree ABFT** (`reduction_abft`) — every message carries
+//!   exact fixed-point column sums of its band
+//!   ([`crate::golden::fp16_to_fixed`]; exact integer addition is
+//!   associative, so the check is reduction-order invariant). The root
+//!   verifies a binary tree over the gathered bands, descends into the
+//!   mismatching half, and recomputes only the corrupted shard on its
+//!   owning tile. A misplaced-but-intact band carries its own matching
+//!   checksums, so misplacement is CRC's job, not ABFT's — the classic
+//!   division of labor between transport and algorithmic checks.
+//! * **Tile retirement** (`tile_retirement`) — a heartbeat watchdog
+//!   detects a wedged tile; its unfinished shards are reassigned
+//!   round-robin over the survivors and pulled by the host over a
+//!   supervised channel (recovery traffic is never struck by sampled
+//!   plans: fate ordinals only cover attempt-0 traffic).
+//!
+//! Determinism contract: fault fates are keyed by canonical message
+//! identity, message delivery is a total order on
+//! `(arrival, tile, ordinal, attempt, copy)`, and per-tile virtual
+//! clocks advance independently of host scheduling — so a mesh run is
+//! byte-identical across thread counts and tile-stepping orders.
+
+pub mod campaign;
+pub mod noc;
+
+pub use campaign::{MeshCampaign, MeshCampaignConfig, MeshCampaignResult, MeshCellInfo, NocStratumStats};
+pub use noc::{crc16, MeshFaultProfile, NocFault, NocFaultKind, NocRegistry, NOC_STRATUM_NAMES, N_NOC_STRATA};
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::cluster::{HostOutcome, System, TileEngine};
+use crate::fp::Fp16;
+use crate::golden::{fp16_to_fixed, GemmProblem, GemmSpec, Mat};
+use crate::perf::PhaseSchedule;
+use crate::redmule::{ExecMode, Protection, RedMuleConfig};
+use crate::util::digest::Fnv64;
+use crate::{Error, Result};
+
+/// NoC cycles from a tile's result push to root ingress (serialization
+/// + hops), identical per link — tiles are one hop from the root.
+pub const LINK_LATENCY: u64 = 32;
+/// Sender-side ACK timeout before a lost message is retransmitted.
+pub const RETRANSMIT_TIMEOUT: u64 = 64;
+/// Retransmission budget per message (per-link seq/ack window).
+pub const MAX_RETRANSMITS: u32 = 3;
+/// Root merge-engine occupancy per committed message.
+pub const MERGE_CYCLES_PER_MSG: u64 = 4;
+/// Heartbeat watchdog latency before a wedged tile is declared dead.
+pub const HEARTBEAT_TIMEOUT: u64 = 128;
+
+/// Configuration of one mesh run.
+#[derive(Debug, Clone)]
+pub struct MeshConfig {
+    pub tiles: usize,
+    /// Row-band shard count; 0 = auto (`min(2·tiles, m)` — two waves
+    /// per tile so a crash always strands reassignable work).
+    pub shards: usize,
+    /// Per-tile hardware build.
+    pub cfg: RedMuleConfig,
+    /// Per-tile protection mode (composes with the mesh options below).
+    pub protection: Protection,
+    /// Which execution backend each tile runs.
+    pub engine: TileEngine,
+    /// Per-link CRC-16 + seq/ack + bounded retransmit.
+    pub link_crc: bool,
+    /// Fixed-point column checksums verified over the reduction tree.
+    pub reduction_abft: bool,
+    /// Heartbeat watchdog + crashed-tile shard reassignment.
+    pub tile_retirement: bool,
+    /// Tile *stepping* order for the compute pass (empty = identity).
+    /// A pure scheduling choice: results are byte-identical under any
+    /// permutation, which `tests/mesh.rs` pins.
+    pub tile_order: Vec<usize>,
+    /// Verify staged X/W images at rest in TCDM before each tile run
+    /// (direct engine only; see `System::verify_staged_inputs`).
+    pub verify_staging: bool,
+}
+
+impl MeshConfig {
+    /// Fully protected mesh on the paper build.
+    pub fn new(tiles: usize) -> Self {
+        Self {
+            tiles,
+            shards: 0,
+            cfg: RedMuleConfig::paper(),
+            protection: Protection::Full,
+            engine: TileEngine::Direct,
+            link_crc: true,
+            reduction_abft: true,
+            tile_retirement: true,
+            tile_order: Vec::new(),
+            verify_staging: false,
+        }
+    }
+
+    /// Same build with every mesh recovery option off.
+    pub fn unprotected(tiles: usize) -> Self {
+        Self {
+            link_crc: false,
+            reduction_abft: false,
+            tile_retirement: false,
+            ..Self::new(tiles)
+        }
+    }
+
+    /// Runtime execution mode per tile, derived exactly like the
+    /// single-tile campaign default: fault-tolerant iff the build has
+    /// the §3.1 data-path machinery.
+    pub fn mode(&self) -> ExecMode {
+        if self.protection.has_data_protection() {
+            ExecMode::FaultTolerant
+        } else {
+            ExecMode::Performance
+        }
+    }
+
+    /// Effective shard count for an `m`-row problem.
+    pub fn shard_count(&self, m: usize) -> usize {
+        let want = if self.shards == 0 {
+            (2 * self.tiles).min(m)
+        } else {
+            self.shards.min(m)
+        };
+        want.max(1)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.tiles == 0 {
+            return Err(Error::Config("mesh needs at least 1 tile".into()));
+        }
+        if !self.tile_order.is_empty() {
+            let mut seen = vec![false; self.tiles];
+            let mut ok = self.tile_order.len() == self.tiles;
+            if ok {
+                for &t in &self.tile_order {
+                    if t >= self.tiles || seen[t] {
+                        ok = false;
+                        break;
+                    }
+                    seen[t] = true;
+                }
+            }
+            if !ok {
+                return Err(Error::Config(format!(
+                    "tile_order must be a permutation of 0..{}",
+                    self.tiles
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split `m` rows into `shards` contiguous bands, sizes differing by at
+/// most one row, returned as `(row0, row1)` half-open ranges.
+pub fn shard_rows(m: usize, shards: usize) -> Vec<(usize, usize)> {
+    let base = m / shards;
+    let rem = m % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut r0 = 0;
+    for s in 0..shards {
+        let rows = base + usize::from(s < rem);
+        out.push((r0, r0 + rows));
+        r0 += rows;
+    }
+    out
+}
+
+/// Slice the row band `[r0, r1)` of a problem into a standalone
+/// sub-problem (X and Y bands, full W).
+pub fn sub_problem(p: &GemmProblem, r0: usize, r1: usize) -> GemmProblem {
+    let rows = r1 - r0;
+    let n = p.spec.n;
+    let k = p.spec.k;
+    GemmProblem {
+        spec: GemmSpec::new(rows, n, k),
+        x: Mat {
+            rows,
+            cols: n,
+            data: p.x.data[r0 * n..r1 * n].to_vec(),
+        },
+        w: p.w.clone(),
+        y: Mat {
+            rows,
+            cols: k,
+            data: p.y.data[r0 * k..r1 * k].to_vec(),
+        },
+    }
+}
+
+/// Interconnect event counters of one mesh run, plus per-stratum
+/// `[applied, detected, corrected]` attribution (indexed by
+/// [`noc::NOC_STRATUM_NAMES`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MeshEvents {
+    pub crc_detected: u64,
+    pub retransmits: u64,
+    pub drops_recovered: u64,
+    pub dups_discarded: u64,
+    pub reorders_fixed: u64,
+    pub abft_localized: u64,
+    pub shard_recomputes: u64,
+    pub tiles_retired: u64,
+    pub shards_reassigned: u64,
+    pub staging_repairs: u64,
+    pub strata: [[u64; 3]; noc::N_NOC_STRATA],
+}
+
+impl MeshEvents {
+    pub fn applied(&self) -> u64 {
+        self.strata.iter().map(|s| s[0]).sum()
+    }
+
+    pub fn detected(&self) -> u64 {
+        self.strata.iter().map(|s| s[1]).sum()
+    }
+
+    pub fn corrected(&self) -> u64 {
+        self.strata.iter().map(|s| s[2]).sum()
+    }
+
+    /// Did any recovery machinery fire?
+    pub fn recovered(&self) -> bool {
+        self.detected() > 0 || self.staging_repairs > 0
+    }
+
+    pub fn merge(&mut self, o: &MeshEvents) {
+        self.crc_detected += o.crc_detected;
+        self.retransmits += o.retransmits;
+        self.drops_recovered += o.drops_recovered;
+        self.dups_discarded += o.dups_discarded;
+        self.reorders_fixed += o.reorders_fixed;
+        self.abft_localized += o.abft_localized;
+        self.shard_recomputes += o.shard_recomputes;
+        self.tiles_retired += o.tiles_retired;
+        self.shards_reassigned += o.shards_reassigned;
+        self.staging_repairs += o.staging_repairs;
+        for s in 0..noc::N_NOC_STRATA {
+            for j in 0..3 {
+                self.strata[s][j] += o.strata[s][j];
+            }
+        }
+    }
+}
+
+/// Result of one mesh run.
+#[derive(Debug, Clone)]
+pub struct MeshReport {
+    /// The gathered result (missing bands zero when `!completed`).
+    pub z: Mat,
+    /// Every band slot received a result.
+    pub completed: bool,
+    pub events: MeshEvents,
+    /// Virtual cycles: max over tile clocks and the root merge clock.
+    pub cycles: u64,
+    /// Final shard → tile ownership after any reassignment.
+    pub shard_map: Vec<usize>,
+    pub retired_tiles: Vec<usize>,
+    pub faults_applied: u32,
+}
+
+impl MeshReport {
+    /// FNV-64 digest of the result bits — what the determinism tests
+    /// and the CI sweep-smoke compare across schedules.
+    pub fn z_digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for &b in &self.z.bits() {
+            h.write_u16(b);
+        }
+        h.write_bool(self.completed);
+        h.finish()
+    }
+}
+
+/// Tile pool: lazily constructed `System` instances, one per tile,
+/// reused across shards (and across injections when the caller holds
+/// the pool) exactly like the sweep's worker arenas.
+pub struct TilePool {
+    cfg: RedMuleConfig,
+    protection: Protection,
+    systems: Vec<Option<System>>,
+}
+
+impl TilePool {
+    pub fn new(cfg: RedMuleConfig, protection: Protection, tiles: usize) -> Self {
+        Self {
+            cfg,
+            protection,
+            systems: (0..tiles).map(|_| None).collect(),
+        }
+    }
+
+    pub fn get(&mut self, tile: usize) -> &mut System {
+        let slot = &mut self.systems[tile];
+        if slot.is_none() {
+            *slot = Some(System::new(self.cfg, self.protection));
+        }
+        slot.as_mut().unwrap()
+    }
+}
+
+/// One in-flight (or retransmitted) result message at the root.
+#[derive(Clone)]
+struct Msg {
+    words: Vec<u16>,
+    crc: u16,
+    /// Simulation bookkeeping (NOT read by the unprotected gather —
+    /// the CRC path reads the shard id from the protected header).
+    shard: usize,
+    delayed: bool,
+}
+
+/// Serialize a band result: CRC-protected header (shard id), band Z
+/// bits, then the exact fixed-point column sums as 4×16-bit limbs.
+fn encode_msg(shard: usize, data: &[Fp16], k: usize) -> Vec<u16> {
+    let mut words = Vec::with_capacity(2 + data.len() + 4 * k);
+    words.push((shard & 0xFFFF) as u16);
+    words.push(((shard >> 16) & 0xFFFF) as u16);
+    for v in data {
+        words.push(v.to_bits());
+    }
+    for c in 0..k {
+        let rows = data.len() / k;
+        let mut s: i64 = 0;
+        for r in 0..rows {
+            s += fp16_to_fixed(data[r * k + c]);
+        }
+        let u = s as u64;
+        words.push((u & 0xFFFF) as u16);
+        words.push(((u >> 16) & 0xFFFF) as u16);
+        words.push(((u >> 32) & 0xFFFF) as u16);
+        words.push(((u >> 48) & 0xFFFF) as u16);
+    }
+    words
+}
+
+/// Inverse of [`encode_msg`]. Message length is flip-invariant, so the
+/// band row count is recovered from the length, never from (possibly
+/// corrupted) header fields.
+fn decode_msg(words: &[u16], k: usize) -> (usize, Vec<Fp16>, Vec<i64>) {
+    let shard = (words[0] as usize) | ((words[1] as usize) << 16);
+    let body = words.len() - 2 - 4 * k;
+    let rows = body / k;
+    let data: Vec<Fp16> = words[2..2 + rows * k]
+        .iter()
+        .map(|&b| Fp16::from_bits(b))
+        .collect();
+    let base = 2 + rows * k;
+    let mut csum = Vec::with_capacity(k);
+    for c in 0..k {
+        let u = (words[base + 4 * c] as u64)
+            | ((words[base + 4 * c + 1] as u64) << 16)
+            | ((words[base + 4 * c + 2] as u64) << 32)
+            | ((words[base + 4 * c + 3] as u64) << 48);
+        csum.push(u as i64);
+    }
+    (shard, data, csum)
+}
+
+fn fixed_col_sums(data: &[Fp16], k: usize) -> Vec<i64> {
+    let rows = data.len() / k;
+    (0..k)
+        .map(|c| (0..rows).map(|r| fp16_to_fixed(data[r * k + c])).sum())
+        .collect()
+}
+
+/// Run one clean tile attempt for a band sub-problem on the configured
+/// engine backend. The direct engine steps the cycle-accurate `System`;
+/// the fast-forward and two-level engines use the functional level —
+/// valid because clean runs are bit-identical to the golden model on
+/// every engine (the crate's clean-run contract, pinned by
+/// `tests/precision.rs`) — and price cycles with the closed-form
+/// [`PhaseSchedule`].
+fn tile_compute(
+    config: &MeshConfig,
+    sys: &mut System,
+    sub: &GemmProblem,
+    events: &mut MeshEvents,
+) -> Result<(Mat, u64)> {
+    match config.engine {
+        TileEngine::Direct => {
+            sys.redmule.reset();
+            let layout = sys.stage(sub)?;
+            if config.verify_staging && !sys.verify_staged_inputs(sub, &layout) {
+                sys.restage_inputs(sub, &layout)?;
+                events.staging_repairs += 1;
+            }
+            let r = sys.run_staged_with_fault(&layout, config.mode(), None)?;
+            if r.outcome != HostOutcome::Completed {
+                return Err(Error::Sim(format!(
+                    "clean tile run ended {:?} on a {} build",
+                    r.outcome,
+                    config.protection.name()
+                )));
+            }
+            Ok((r.z, r.cycles))
+        }
+        TileEngine::FastForward | TileEngine::TwoLevel => {
+            let z = sub.golden_z_for(config.cfg.format, config.cfg.op);
+            let cycles =
+                PhaseSchedule::hosted(config.cfg, config.protection, sub.spec, config.mode())
+                    .host_cycles();
+            Ok((z, cycles))
+        }
+    }
+}
+
+/// Per-message sampled fate, folded from the plan (pure function of the
+/// plan — independent of scheduling).
+#[derive(Default, Clone)]
+struct Fate {
+    flips: Vec<u32>,
+    drop: bool,
+    dup: bool,
+    delay: u64,
+}
+
+/// The mesh simulator.
+pub struct Mesh;
+
+impl Mesh {
+    /// Run with no interconnect faults.
+    pub fn run_clean(config: &MeshConfig, problem: &GemmProblem) -> Result<MeshReport> {
+        Self::run(config, problem, &[])
+    }
+
+    /// Run one sharded GEMM under an interconnect fault plan.
+    pub fn run(config: &MeshConfig, problem: &GemmProblem, plan: &[NocFault]) -> Result<MeshReport> {
+        let mut pool = TilePool::new(config.cfg, config.protection, config.tiles);
+        Self::run_with_pool(config, problem, plan, &mut pool)
+    }
+
+    /// [`Mesh::run`] with a caller-owned tile pool (the campaign hot
+    /// loop reuses one pool across injections, like the sweep arenas).
+    pub fn run_with_pool(
+        config: &MeshConfig,
+        problem: &GemmProblem,
+        plan: &[NocFault],
+        pool: &mut TilePool,
+    ) -> Result<MeshReport> {
+        config.validate()?;
+        let m = problem.spec.m;
+        let k = problem.spec.k;
+        let tiles = config.tiles;
+        let shards = config.shard_count(m);
+        let bands = shard_rows(m, shards);
+        let band_len: Vec<usize> = bands.iter().map(|&(r0, r1)| (r1 - r0) * k).collect();
+
+        // Canonical round-robin shard → tile assignment; `assigned[t]`
+        // ascending defines each uplink's attempt-0 message ordinals.
+        let assign: Vec<usize> = (0..shards).map(|s| s % tiles).collect();
+        let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); tiles];
+        for (s, &t) in assign.iter().enumerate() {
+            assigned[t].push(s);
+        }
+
+        let mut events = MeshEvents::default();
+
+        // Fold the plan into per-message fates and per-tile crash points.
+        let mut crash_after: Vec<Option<u64>> = vec![None; tiles];
+        let mut fates: HashMap<(usize, u64), Fate> = HashMap::new();
+        for f in plan {
+            if f.tile >= tiles {
+                continue;
+            }
+            match f.kind {
+                NocFaultKind::TileCrash { after_shards } => {
+                    crash_after[f.tile] =
+                        Some(crash_after[f.tile].map_or(after_shards, |c| c.min(after_shards)));
+                }
+                kind => {
+                    let n_msgs = assigned[f.tile].len() as u64;
+                    if n_msgs == 0 {
+                        continue;
+                    }
+                    let e = fates.entry((f.tile, f.msg_ordinal % n_msgs)).or_default();
+                    match kind {
+                        NocFaultKind::LinkFlip { bit } => e.flips.push(bit),
+                        NocFaultKind::Drop => e.drop = true,
+                        NocFaultKind::Dup => e.dup = true,
+                        NocFaultKind::Delay { cycles } => e.delay = e.delay.max(cycles),
+                        NocFaultKind::TileCrash { .. } => unreachable!(),
+                    }
+                }
+            }
+        }
+        let crashed: Vec<bool> = (0..tiles)
+            .map(|t| crash_after[t].is_some_and(|a| (a as usize) < assigned[t].len()))
+            .collect();
+        for t in 0..tiles {
+            if crashed[t] {
+                events.strata[2][0] += 1;
+            }
+        }
+
+        // ------------------------------------------------- compute pass
+        let order: Vec<usize> = if config.tile_order.is_empty() {
+            (0..tiles).collect()
+        } else {
+            config.tile_order.clone()
+        };
+        let mut shard_z: Vec<Option<Mat>> = vec![None; shards];
+        let mut done_at: Vec<u64> = vec![0; shards];
+        let mut tile_clock: Vec<u64> = vec![0; tiles];
+        for &t in &order {
+            for (ord, &s) in assigned[t].iter().enumerate() {
+                if crash_after[t].is_some_and(|a| ord as u64 >= a) {
+                    break;
+                }
+                let (r0, r1) = bands[s];
+                let sub = sub_problem(problem, r0, r1);
+                let (z, cycles) = tile_compute(config, pool.get(t), &sub, &mut events)?;
+                tile_clock[t] += cycles;
+                done_at[s] = tile_clock[t];
+                shard_z[s] = Some(z);
+            }
+        }
+
+        // ------------------------------------------------- transit pass
+        // Clean encodings are kept per shard so NACK-triggered
+        // retransmissions resend uncorrupted store-and-forward copies.
+        let mut enc: Vec<Option<(Vec<u16>, u16)>> = vec![None; shards];
+        // Delivery is a total order on (arrival, tile, ordinal, attempt,
+        // copy): unique per message instance, independent of scheduling.
+        type Key = (u64, usize, u64, u32, u32);
+        let mut heap: BinaryHeap<Reverse<(Key, usize)>> = BinaryHeap::new();
+        let mut msgs: Vec<Msg> = Vec::new();
+        for s in 0..shards {
+            let Some(z) = &shard_z[s] else { continue };
+            let t = assign[s];
+            let ord = assigned[t].iter().position(|&x| x == s).unwrap() as u64;
+            let clean = encode_msg(s, &z.data, k);
+            let crc = crc16(&clean);
+            enc[s] = Some((clean.clone(), crc));
+            let mut words = clean;
+            let mut arrival = done_at[s] + LINK_LATENCY;
+            let mut delayed = false;
+            let mut dropped = false;
+            let mut dup = false;
+            if let Some(f) = fates.get(&(t, ord)) {
+                for &bit in &f.flips {
+                    let nbits = (words.len() * 16) as u32;
+                    let b = bit % nbits;
+                    words[(b / 16) as usize] ^= 1 << (b % 16);
+                    events.strata[0][0] += 1;
+                }
+                if f.delay > 0 {
+                    arrival += f.delay;
+                    delayed = true;
+                    events.strata[1][0] += 1;
+                }
+                if f.dup {
+                    dup = true;
+                    events.strata[1][0] += 1;
+                }
+                if f.drop {
+                    dropped = true;
+                    events.strata[1][0] += 1;
+                }
+            }
+            if dropped {
+                if config.link_crc {
+                    // No ACK within the window: the sender retransmits
+                    // its buffered clean copy once.
+                    let (cw, cc) = enc[s].clone().unwrap();
+                    events.retransmits += 1;
+                    events.drops_recovered += 1;
+                    events.strata[1][1] += 1;
+                    events.strata[1][2] += 1;
+                    let idx = msgs.len();
+                    msgs.push(Msg {
+                        words: cw,
+                        crc: cc,
+                        shard: s,
+                        delayed: false,
+                    });
+                    heap.push(Reverse((
+                        (done_at[s] + RETRANSMIT_TIMEOUT + LINK_LATENCY, t, ord, 1, 0),
+                        idx,
+                    )));
+                }
+                continue;
+            }
+            let idx = msgs.len();
+            msgs.push(Msg {
+                words: words.clone(),
+                crc,
+                shard: s,
+                delayed,
+            });
+            heap.push(Reverse(((arrival, t, ord, 0, 0), idx)));
+            if dup {
+                // The duplicated grant forwards the same (possibly
+                // corrupted) flits one slot later.
+                let idx = msgs.len();
+                msgs.push(Msg {
+                    words,
+                    crc,
+                    shard: s,
+                    delayed,
+                });
+                heap.push(Reverse(((arrival + 1, t, ord, 0, 1), idx)));
+            }
+        }
+
+        // ------------------------------------------------ delivery pass
+        let mut slots: Vec<Option<Vec<Fp16>>> = vec![None; shards];
+        let mut slot_csum: Vec<Option<Vec<i64>>> = vec![None; shards];
+        // Unprotected gather state: per-link arrival index → shard via
+        // the static assignment (each uplink is believed FIFO).
+        let mut link_idx: Vec<usize> = vec![0; tiles];
+        let mut retrans: HashMap<(usize, u64), u32> = HashMap::new();
+        let mut agg_clock: u64 = 0;
+        while let Some(Reverse((key, idx))) = heap.pop() {
+            let (arrival, t, ord, _attempt, _copy) = key;
+            agg_clock = agg_clock.max(arrival) + MERGE_CYCLES_PER_MSG;
+            let msg = msgs[idx].clone();
+            if config.link_crc {
+                if crc16(&msg.words) != msg.crc {
+                    events.crc_detected += 1;
+                    events.strata[0][1] += 1;
+                    let cnt = retrans.entry((t, ord)).or_insert(0);
+                    if *cnt < MAX_RETRANSMITS {
+                        *cnt += 1;
+                        let attempt = *cnt;
+                        events.retransmits += 1;
+                        events.strata[0][2] += 1;
+                        let (cw, cc) = enc[msg.shard].clone().unwrap();
+                        let nidx = msgs.len();
+                        msgs.push(Msg {
+                            words: cw,
+                            crc: cc,
+                            shard: msg.shard,
+                            delayed: false,
+                        });
+                        heap.push(Reverse((
+                            (arrival + RETRANSMIT_TIMEOUT, t, ord, attempt, 0),
+                            nidx,
+                        )));
+                    }
+                    continue;
+                }
+                let (shard, data, csum) = decode_msg(&msg.words, k);
+                if shard >= shards || slots[shard].is_some() {
+                    // Sequence-number dedup (duplicate grant, or a
+                    // retransmission racing a late original).
+                    if shard < shards {
+                        events.dups_discarded += 1;
+                        events.strata[1][1] += 1;
+                        events.strata[1][2] += 1;
+                    }
+                    continue;
+                }
+                if msg.delayed {
+                    events.reorders_fixed += 1;
+                    events.strata[1][1] += 1;
+                    events.strata[1][2] += 1;
+                }
+                slots[shard] = Some(data);
+                slot_csum[shard] = Some(csum);
+            } else {
+                // Dumb gather: commit to `assigned[t][arrival index]`.
+                // Correct for any cross-tile timing when links really
+                // are FIFO and lossless; a drop shifts every later band
+                // on the link, a dup shifts them back, a reorder swaps.
+                let li = link_idx[t];
+                link_idx[t] += 1;
+                if li >= assigned[t].len() {
+                    continue;
+                }
+                let slot = assigned[t][li];
+                let (_shard, data, csum) = decode_msg(&msg.words, k);
+                let want = band_len[slot];
+                let mut fill = vec![Fp16::ZERO; want];
+                let n = want.min(data.len());
+                fill[..n].copy_from_slice(&data[..n]);
+                slots[slot] = Some(fill);
+                slot_csum[slot] = Some(csum);
+            }
+        }
+
+        // -------------------------------------------- retirement pass
+        let mut shard_map = assign.clone();
+        let mut retired: Vec<usize> = Vec::new();
+        if config.tile_retirement && crashed.iter().any(|&c| c) {
+            let survivors: Vec<usize> = (0..tiles).filter(|&t| !crashed[t]).collect();
+            for t in 0..tiles {
+                if crashed[t] {
+                    // Heartbeat watchdog: detection always fires.
+                    events.strata[2][1] += 1;
+                    retired.push(t);
+                }
+            }
+            events.tiles_retired = retired.len() as u64;
+            agg_clock += HEARTBEAT_TIMEOUT;
+            if !survivors.is_empty() {
+                let missing: Vec<usize> =
+                    (0..shards).filter(|&s| shard_z[s].is_none()).collect();
+                for (i, &s) in missing.iter().enumerate() {
+                    let t = survivors[i % survivors.len()];
+                    let (r0, r1) = bands[s];
+                    let sub = sub_problem(problem, r0, r1);
+                    let (z, cycles) = tile_compute(config, pool.get(t), &sub, &mut events)?;
+                    tile_clock[t] += cycles;
+                    // Host-supervised pull: placed by shard id on both
+                    // transports, and never struck by sampled fates
+                    // (recovery ordinals sit past attempt-0 traffic).
+                    slot_csum[s] = Some(fixed_col_sums(&z.data, k));
+                    slots[s] = Some(z.data);
+                    shard_map[s] = t;
+                    events.shards_reassigned += 1;
+                }
+                for t in 0..tiles {
+                    if crashed[t] {
+                        events.strata[2][2] += 1;
+                    }
+                }
+            }
+        }
+
+        let completed = slots.iter().all(|s| s.is_some());
+
+        // --------------------------------------- reduction-tree verify
+        if completed && config.reduction_abft {
+            Self::verify_node(
+                config, problem, &bands, &shard_map, pool, &mut slots, &mut slot_csum,
+                &mut tile_clock, &mut events, 0, shards, k,
+            )?;
+        }
+
+        // ----------------------------------------------------- gather
+        let mut z = Mat::zeros(m, k);
+        for s in 0..shards {
+            if let Some(data) = &slots[s] {
+                let (r0, _) = bands[s];
+                let n = band_len[s].min(data.len());
+                z.data[r0 * k..r0 * k + n].copy_from_slice(&data[..n]);
+            }
+        }
+
+        let compute_max = tile_clock.iter().copied().max().unwrap_or(0);
+        Ok(MeshReport {
+            z,
+            completed,
+            cycles: agg_clock.max(compute_max),
+            shard_map,
+            retired_tiles: retired,
+            faults_applied: events.applied() as u32,
+            events,
+        })
+    }
+
+    /// Verify the carried fixed-point column checksums over the binary
+    /// reduction tree for shard range `[l, r)`. Exact integer sums are
+    /// associative, so every interior node's check is reduction-order
+    /// invariant; a mismatch descends into the failing half and the
+    /// corrupted leaf is recomputed on its owning tile.
+    #[allow(clippy::too_many_arguments)]
+    fn verify_node(
+        config: &MeshConfig,
+        problem: &GemmProblem,
+        bands: &[(usize, usize)],
+        shard_map: &[usize],
+        pool: &mut TilePool,
+        slots: &mut [Option<Vec<Fp16>>],
+        slot_csum: &mut [Option<Vec<i64>>],
+        tile_clock: &mut [u64],
+        events: &mut MeshEvents,
+        l: usize,
+        r: usize,
+        k: usize,
+    ) -> Result<()> {
+        let mut ok = true;
+        'cols: for c in 0..k {
+            let mut carried = 0i64;
+            let mut observed = 0i64;
+            for s in l..r {
+                carried += slot_csum[s].as_ref().unwrap()[c];
+                let data = slots[s].as_ref().unwrap();
+                let rows = data.len() / k;
+                for row in 0..rows {
+                    observed += fp16_to_fixed(data[row * k + c]);
+                }
+            }
+            if carried != observed {
+                ok = false;
+                break 'cols;
+            }
+        }
+        if ok {
+            return Ok(());
+        }
+        if r - l == 1 {
+            let s = l;
+            events.abft_localized += 1;
+            events.strata[0][1] += 1;
+            let t = shard_map[s];
+            let (r0, r1) = bands[s];
+            let sub = sub_problem(problem, r0, r1);
+            let (z, cycles) = tile_compute(config, pool.get(t), &sub, events)?;
+            tile_clock[t] += cycles;
+            slot_csum[s] = Some(fixed_col_sums(&z.data, k));
+            slots[s] = Some(z.data);
+            events.shard_recomputes += 1;
+            events.strata[0][2] += 1;
+            return Ok(());
+        }
+        let mid = l + (r - l) / 2;
+        Self::verify_node(
+            config, problem, bands, shard_map, pool, slots, slot_csum, tile_clock, events, l, mid,
+            k,
+        )?;
+        Self::verify_node(
+            config, problem, bands, shard_map, pool, slots, slot_csum, tile_clock, events, mid, r,
+            k,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_rows_partitions_exactly() {
+        for m in [1, 5, 12, 16, 37] {
+            for shards in 1..=m.min(9) {
+                let bands = shard_rows(m, shards);
+                assert_eq!(bands.len(), shards);
+                assert_eq!(bands[0].0, 0);
+                assert_eq!(bands[shards - 1].1, m);
+                for w in bands.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                let max = bands.iter().map(|&(a, b)| b - a).max().unwrap();
+                let min = bands.iter().map(|&(a, b)| b - a).min().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn msg_codec_round_trips() {
+        let p = GemmProblem::random(&GemmSpec::new(4, 3, 5), 99);
+        let words = encode_msg(7, &p.y.data, 5);
+        let crc = crc16(&words);
+        let (shard, data, csum) = decode_msg(&words, 5);
+        assert_eq!(shard, 7);
+        assert_eq!(data, p.y.data);
+        assert_eq!(csum, fixed_col_sums(&p.y.data, 5));
+        assert_eq!(crc, crc16(&words));
+    }
+
+    #[test]
+    fn sub_problem_bands_recompose_the_golden() {
+        let p = GemmProblem::random(&GemmSpec::new(10, 6, 7), 5);
+        let golden = p.golden_z();
+        let bands = shard_rows(10, 4);
+        let mut z = Mat::zeros(10, 7);
+        for &(r0, r1) in &bands {
+            let sub = sub_problem(&p, r0, r1);
+            let zb = sub.golden_z();
+            for (i, &v) in zb.data.iter().enumerate() {
+                z.data[r0 * 7 + i] = v;
+            }
+        }
+        assert_eq!(z, golden);
+    }
+
+    #[test]
+    fn clean_mesh_matches_golden_for_any_tile_count() {
+        let p = GemmProblem::random(&GemmSpec::new(12, 8, 6), 11);
+        let golden = p.golden_z();
+        for tiles in [1, 2, 3, 5] {
+            let mut cfg = MeshConfig::new(tiles);
+            cfg.engine = TileEngine::FastForward;
+            let r = Mesh::run_clean(&cfg, &p).unwrap();
+            assert!(r.completed);
+            assert_eq!(r.z, golden, "tiles={tiles}");
+            assert_eq!(r.faults_applied, 0);
+            assert_eq!(r.events, MeshEvents::default());
+        }
+    }
+
+    #[test]
+    fn unprotected_clean_mesh_is_also_correct() {
+        // The ingress-indexed gather must be exact when nothing fails,
+        // even with unequal band sizes racing across links.
+        let p = GemmProblem::random(&GemmSpec::new(11, 4, 3), 3);
+        let golden = p.golden_z();
+        let mut cfg = MeshConfig::unprotected(3);
+        cfg.engine = TileEngine::FastForward;
+        let r = Mesh::run_clean(&cfg, &p).unwrap();
+        assert!(r.completed);
+        assert_eq!(r.z, golden);
+    }
+}

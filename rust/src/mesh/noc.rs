@@ -1,0 +1,397 @@
+//! The mesh interconnect (NoC/DMA) fault domain.
+//!
+//! The mesh's transfer-and-reduction layer is a first-class fault-site
+//! population, parallel to the per-tile [`crate::fault::FaultRegistry`]:
+//! three strata (`mesh/noc-link`, `mesh/noc-router`, `mesh/noc-tile`)
+//! weighted by the same gate-equivalent coefficients the mesh area model
+//! charges for them ([`crate::area::coeff`]), sampled from
+//! `(seed, index)`-pure streams exactly like datapath faults.
+//!
+//! Fault *fates* are keyed by the canonical identity of the struck
+//! message — `(tile, msg_ordinal)`, the ordinal counting the tile's
+//! attempt-0 result pushes in its canonical (ascending shard) order —
+//! never by wall-clock or scheduling order. A plan therefore lands on
+//! the same message no matter how many worker threads run the campaign
+//! or in which order tiles are stepped, which is what keeps mesh
+//! results byte-identical across thread counts and tile schedules.
+
+use crate::area::coeff::{GE_NOC_LINK_IF, GE_NOC_ROUTER, GE_NOC_TILE_CTRL};
+use crate::util::rng::Xoshiro256;
+
+/// Number of interconnect strata.
+pub const N_NOC_STRATA: usize = 3;
+
+/// Stratum display names. The `mesh/noc` prefix keeps campaign reports
+/// unambiguous next to the per-tile strata (`dp/…`, `ft/…`).
+pub const NOC_STRATUM_NAMES: [&str; N_NOC_STRATA] =
+    ["mesh/noc-link", "mesh/noc-router", "mesh/noc-tile"];
+
+/// Upper bound on a sampled router-delay fate, in NoC cycles. Large
+/// enough to reorder a message behind everything a busy tile sends
+/// later; small next to a shard's compute time.
+pub const MAX_DELAY_CYCLES: u64 = 96;
+
+/// One interconnect fault class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NocFaultKind {
+    /// SET on a link wire: one bit of the in-flight serialized result
+    /// message flips. `bit` is a raw draw, reduced modulo the message's
+    /// payload width at strike time.
+    LinkFlip { bit: u32 },
+    /// Router buffer overrun / misroute: the message never arrives.
+    Drop,
+    /// Duplicated switch grant: the message is delivered twice.
+    Dup,
+    /// Stalled virtual channel: delivery is delayed by `cycles`,
+    /// reordering the message behind later traffic.
+    Delay { cycles: u64 },
+    /// The tile's mesh sequencer wedges after completing `after_shards`
+    /// of its assigned shards; nothing more is computed or sent.
+    TileCrash { after_shards: u64 },
+}
+
+impl NocFaultKind {
+    /// Index into [`NOC_STRATUM_NAMES`].
+    pub fn stratum(self) -> usize {
+        match self {
+            NocFaultKind::LinkFlip { .. } => 0,
+            NocFaultKind::Drop | NocFaultKind::Dup | NocFaultKind::Delay { .. } => 1,
+            NocFaultKind::TileCrash { .. } => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NocFaultKind::LinkFlip { .. } => "link-flip",
+            NocFaultKind::Drop => "drop",
+            NocFaultKind::Dup => "dup",
+            NocFaultKind::Delay { .. } => "delay",
+            NocFaultKind::TileCrash { .. } => "tile-crash",
+        }
+    }
+}
+
+/// One planned interconnect fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NocFault {
+    /// Tile whose uplink / router ingress / sequencer is struck.
+    pub tile: usize,
+    /// Canonical ordinal of the struck message on that tile's uplink
+    /// (ignored by [`NocFaultKind::TileCrash`]). Reassigned-shard
+    /// pushes get ordinals past every tile's attempt-0 count, so a plan
+    /// can never strike recovery traffic — fates stay a pure function
+    /// of the sampled plan.
+    pub msg_ordinal: u64,
+    pub kind: NocFaultKind,
+}
+
+/// Which interconnect fault classes an injection samples from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MeshFaultProfile {
+    /// No interconnect faults (clean mesh).
+    None,
+    /// Link SETs only.
+    Flip,
+    /// Lost messages only.
+    Drop,
+    /// Duplicated messages only.
+    Dup,
+    /// Delayed (reordered) messages only.
+    Reorder,
+    /// Tile crashes only.
+    Crash,
+    /// Area-weighted mix across all three strata.
+    Mixed,
+    /// The composed worst case: one flip + one drop + one dup + one
+    /// reorder on distinct messages plus one tile crash, per injection.
+    #[default]
+    Chaos,
+}
+
+impl MeshFaultProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            MeshFaultProfile::None => "none",
+            MeshFaultProfile::Flip => "flip",
+            MeshFaultProfile::Drop => "drop",
+            MeshFaultProfile::Dup => "dup",
+            MeshFaultProfile::Reorder => "reorder",
+            MeshFaultProfile::Crash => "crash",
+            MeshFaultProfile::Mixed => "mixed",
+            MeshFaultProfile::Chaos => "chaos",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" => MeshFaultProfile::None,
+            "flip" => MeshFaultProfile::Flip,
+            "drop" => MeshFaultProfile::Drop,
+            "dup" => MeshFaultProfile::Dup,
+            "reorder" => MeshFaultProfile::Reorder,
+            "crash" => MeshFaultProfile::Crash,
+            "mixed" => MeshFaultProfile::Mixed,
+            "chaos" => MeshFaultProfile::Chaos,
+            _ => return None,
+        })
+    }
+}
+
+/// The interconnect fault-site population of one mesh run: which tiles
+/// exist and how many attempt-0 result messages each uplink carries.
+/// Strata are weighted by their gate-equivalent area, mirroring the
+/// per-tile registry's area-keyed site weights.
+#[derive(Debug, Clone)]
+pub struct NocRegistry {
+    pub tiles: usize,
+    /// Attempt-0 message count per tile (its originally assigned shards).
+    pub shards_of: Vec<u64>,
+}
+
+impl NocRegistry {
+    pub fn new(tiles: usize, shards_of: Vec<u64>) -> Self {
+        assert!(tiles > 0 && shards_of.len() == tiles);
+        Self { tiles, shards_of }
+    }
+
+    /// Normalized area share of each stratum — the weights
+    /// [`NocRegistry::sample`] draws with under the `mixed` profile,
+    /// and what campaign reports print as the stratum `share`.
+    pub fn stratum_shares() -> [f64; N_NOC_STRATA] {
+        let total = GE_NOC_LINK_IF + GE_NOC_ROUTER + GE_NOC_TILE_CTRL;
+        [
+            GE_NOC_LINK_IF / total,
+            GE_NOC_ROUTER / total,
+            GE_NOC_TILE_CTRL / total,
+        ]
+    }
+
+    fn victim(&self, rng: &mut Xoshiro256) -> (usize, u64) {
+        // Tiles are identical hardware, so the struck tile is uniform;
+        // the ordinal is uniform over that uplink's attempt-0 traffic.
+        let tile = rng.below(self.tiles as u64) as usize;
+        let ordinal = rng.below(self.shards_of[tile].max(1));
+        (tile, ordinal)
+    }
+
+    fn sample_one(&self, rng: &mut Xoshiro256, profile: MeshFaultProfile) -> NocFault {
+        let class = match profile {
+            MeshFaultProfile::Mixed => {
+                let shares = Self::stratum_shares();
+                let u = rng.next_f64();
+                if u < shares[0] {
+                    0
+                } else if u < shares[0] + shares[1] {
+                    1
+                } else {
+                    2
+                }
+            }
+            MeshFaultProfile::Flip => 0,
+            MeshFaultProfile::Drop | MeshFaultProfile::Dup | MeshFaultProfile::Reorder => 1,
+            MeshFaultProfile::Crash => 2,
+            MeshFaultProfile::None | MeshFaultProfile::Chaos => unreachable!(),
+        };
+        let (tile, msg_ordinal) = self.victim(rng);
+        let kind = match class {
+            0 => NocFaultKind::LinkFlip {
+                bit: rng.next_u32(),
+            },
+            1 => match profile {
+                MeshFaultProfile::Drop => NocFaultKind::Drop,
+                MeshFaultProfile::Dup => NocFaultKind::Dup,
+                MeshFaultProfile::Reorder => NocFaultKind::Delay {
+                    cycles: 1 + rng.below(MAX_DELAY_CYCLES),
+                },
+                // Mixed: the three router failure modes are equally
+                // likely within the router stratum.
+                _ => match rng.below(3) {
+                    0 => NocFaultKind::Drop,
+                    1 => NocFaultKind::Dup,
+                    _ => NocFaultKind::Delay {
+                        cycles: 1 + rng.below(MAX_DELAY_CYCLES),
+                    },
+                },
+            },
+            _ => NocFaultKind::TileCrash {
+                after_shards: rng.below(self.shards_of[tile].max(1)),
+            },
+        };
+        NocFault {
+            tile,
+            msg_ordinal,
+            kind,
+        }
+    }
+
+    /// Sample one injection's interconnect plan. Class profiles draw `n`
+    /// independent faults of that class; `chaos` builds the composed
+    /// acceptance scenario regardless of `n`.
+    pub fn sample(&self, rng: &mut Xoshiro256, n: usize, profile: MeshFaultProfile) -> Vec<NocFault> {
+        match profile {
+            MeshFaultProfile::None => Vec::new(),
+            MeshFaultProfile::Chaos => self.chaos_plan(rng),
+            _ => (0..n).map(|_| self.sample_one(rng, profile)).collect(),
+        }
+    }
+
+    /// One flip + one drop + one dup + one reorder on (preferably)
+    /// distinct messages, plus one tile crash mid-shard.
+    pub fn chaos_plan(&self, rng: &mut Xoshiro256) -> Vec<NocFault> {
+        let mut used: Vec<(usize, u64)> = Vec::with_capacity(4);
+        let mut pick = |rng: &mut Xoshiro256| {
+            // Bounded rejection keeps the draw deterministic even on
+            // meshes too small for four distinct victims.
+            for _ in 0..16 {
+                let v = self.victim(rng);
+                if !used.contains(&v) {
+                    used.push(v);
+                    return v;
+                }
+            }
+            let v = self.victim(rng);
+            used.push(v);
+            v
+        };
+        let (ft, fo) = pick(rng);
+        let flip_bit = rng.next_u32();
+        let (dt, do_) = pick(rng);
+        let (ut, uo) = pick(rng);
+        let (rt, ro) = pick(rng);
+        let delay = 1 + rng.below(MAX_DELAY_CYCLES);
+        let crash_tile = rng.below(self.tiles as u64) as usize;
+        let crash_after = rng.below(self.shards_of[crash_tile].max(1));
+        vec![
+            NocFault {
+                tile: ft,
+                msg_ordinal: fo,
+                kind: NocFaultKind::LinkFlip { bit: flip_bit },
+            },
+            NocFault {
+                tile: dt,
+                msg_ordinal: do_,
+                kind: NocFaultKind::Drop,
+            },
+            NocFault {
+                tile: ut,
+                msg_ordinal: uo,
+                kind: NocFaultKind::Dup,
+            },
+            NocFault {
+                tile: rt,
+                msg_ordinal: ro,
+                kind: NocFaultKind::Delay { cycles: delay },
+            },
+            NocFault {
+                tile: crash_tile,
+                msg_ordinal: 0,
+                kind: NocFaultKind::TileCrash {
+                    after_shards: crash_after,
+                },
+            },
+        ]
+    }
+}
+
+/// CRC-16/CCITT-FALSE over the message words, little-endian byte order.
+/// This is the per-link integrity check of the reliable transport: a
+/// corrupted payload (or header) fails the check at the reduction root
+/// and triggers a NACK + bounded retransmit.
+pub fn crc16(words: &[u16]) -> u16 {
+    let mut crc: u16 = 0xFFFF;
+    for &w in words {
+        for byte in w.to_le_bytes() {
+            crc ^= (byte as u16) << 8;
+            for _ in 0..8 {
+                crc = if crc & 0x8000 != 0 {
+                    (crc << 1) ^ 0x1021
+                } else {
+                    crc << 1
+                };
+            }
+        }
+    }
+    crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc16_matches_known_vector() {
+        // CRC-16/CCITT-FALSE("123456789") = 0x29B1; "123456789" as
+        // little-endian u16 words is [0x3231, 0x3433, ...] plus a
+        // trailing odd byte — use an even-length ASCII vector instead.
+        let bytes = b"12345678";
+        let words: Vec<u16> = bytes
+            .chunks(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect();
+        let c = crc16(&words);
+        // Self-consistency: deterministic, sensitive to any bit flip.
+        assert_eq!(c, crc16(&words));
+        for w in 0..words.len() {
+            for b in 0..16 {
+                let mut f = words.clone();
+                f[w] ^= 1 << b;
+                assert_ne!(crc16(&f), c, "flip at word {w} bit {b} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn stratum_shares_are_normalized() {
+        let s = NocRegistry::stratum_shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(s.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn chaos_plan_covers_all_classes() {
+        let reg = NocRegistry::new(4, vec![2, 2, 2, 2]);
+        let mut rng = Xoshiro256::new(7);
+        let plan = reg.chaos_plan(&mut rng);
+        assert_eq!(plan.len(), 5);
+        let mut strata = [0u32; N_NOC_STRATA];
+        for f in &plan {
+            strata[f.kind.stratum()] += 1;
+            assert!(f.tile < 4);
+        }
+        assert_eq!(strata, [1, 3, 1]);
+    }
+
+    #[test]
+    fn sampling_is_seed_pure() {
+        let reg = NocRegistry::new(3, vec![3, 3, 2]);
+        for profile in [
+            MeshFaultProfile::Flip,
+            MeshFaultProfile::Mixed,
+            MeshFaultProfile::Chaos,
+        ] {
+            let a = reg.sample(&mut Xoshiro256::new(42), 4, profile);
+            let b = reg.sample(&mut Xoshiro256::new(42), 4, profile);
+            assert_eq!(a, b);
+        }
+        assert!(reg
+            .sample(&mut Xoshiro256::new(1), 8, MeshFaultProfile::None)
+            .is_empty());
+    }
+
+    #[test]
+    fn profile_names_round_trip() {
+        for p in [
+            MeshFaultProfile::None,
+            MeshFaultProfile::Flip,
+            MeshFaultProfile::Drop,
+            MeshFaultProfile::Dup,
+            MeshFaultProfile::Reorder,
+            MeshFaultProfile::Crash,
+            MeshFaultProfile::Mixed,
+            MeshFaultProfile::Chaos,
+        ] {
+            assert_eq!(MeshFaultProfile::parse(p.name()), Some(p));
+        }
+        assert_eq!(MeshFaultProfile::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,252 @@
+//! Mesh determinism + recovery acceptance suite.
+//!
+//! The mesh contract has three legs, all pinned here:
+//!
+//! 1. **Sharding is exact.** Row-band sharding leaves every output
+//!    element's FMA chain intact, so a clean mesh result is
+//!    *bit-identical* to the single-`System` path for any tile count,
+//!    any tile scheduling order and any tile execution engine — and a
+//!    1-tile mesh is byte-identical to the existing engine matrix.
+//! 2. **The NoC is a real fault domain.** Without the mesh recovery
+//!    stack, link flips / lost / duplicated / reordered result messages
+//!    and tile crashes produce functional errors; with link CRC +
+//!    reduction-tree ABFT + tile retirement enabled a ≥4-tile mesh
+//!    under the chaos profile completes with **zero** functional
+//!    errors, every event attributed to a `mesh/noc-*` stratum.
+//! 3. **The default path is untouched.** The single-tile fault-site
+//!    registry gains no strata, and default sweep documents carry no
+//!    mesh fields (asserted in `campaign::sweep`'s own tests).
+
+use redmule_ft::fault::{N_STRATA, STRATUM_NAMES};
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::mesh::{
+    Mesh, MeshCampaign, MeshCampaignConfig, MeshConfig, MeshFaultProfile, NocRegistry,
+    NOC_STRATUM_NAMES,
+};
+use redmule_ft::prelude::TileEngine;
+use redmule_ft::redmule::Protection;
+use redmule_ft::util::rng::Xoshiro256;
+
+/// A shape small enough for direct-engine tiles but uneven enough
+/// (m not divisible by typical tile counts) to exercise ragged bands.
+fn spec() -> GemmSpec {
+    GemmSpec::new(14, 6, 5)
+}
+
+fn problem(seed: u64) -> GemmProblem {
+    GemmProblem::random(&spec(), seed)
+}
+
+#[test]
+fn one_tile_mesh_matches_the_single_system_path_across_the_engine_matrix() {
+    let p = problem(42);
+    for protection in [
+        Protection::Baseline,
+        Protection::Data,
+        Protection::Full,
+        Protection::Abft,
+    ] {
+        // The single-System reference result, run in the exact mode the
+        // mesh derives for this build.
+        let mut cfg1 = MeshConfig::new(1);
+        cfg1.protection = protection;
+        let mut sys = redmule_ft::cluster::System::new(
+            redmule_ft::redmule::RedMuleConfig::paper(),
+            protection,
+        );
+        let reference = sys.run_gemm(&p, cfg1.mode()).unwrap();
+        for engine in TileEngine::ALL {
+            let mut cfg = cfg1.clone();
+            cfg.engine = engine;
+            let r = Mesh::run_clean(&cfg, &p).unwrap();
+            assert!(r.completed);
+            assert_eq!(
+                r.z.bits(),
+                reference.z.bits(),
+                "1-tile mesh diverged from System on {} / {}",
+                protection.name(),
+                engine.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_result_is_tile_count_and_shard_count_invariant() {
+    let p = problem(7);
+    let golden = p.golden_z();
+    let mut digests = Vec::new();
+    for tiles in [1usize, 2, 3, 4, 5, 7] {
+        let mut cfg = MeshConfig::new(tiles);
+        cfg.engine = TileEngine::FastForward;
+        let r = Mesh::run_clean(&cfg, &p).unwrap();
+        assert_eq!(r.z.bits(), golden.bits(), "tiles={tiles}");
+        digests.push(r.z_digest());
+    }
+    assert!(digests.windows(2).all(|w| w[0] == w[1]));
+    // Explicit shard-count overrides cannot change a bit either.
+    for shards in [1usize, 3, 5, 14] {
+        let mut cfg = MeshConfig::new(3);
+        cfg.engine = TileEngine::FastForward;
+        cfg.shards = shards;
+        let r = Mesh::run_clean(&cfg, &p).unwrap();
+        assert_eq!(r.z.bits(), golden.bits(), "shards={shards}");
+    }
+}
+
+#[test]
+fn tile_scheduling_order_cannot_change_the_report() {
+    // Same faulted run under every compute-order permutation of a
+    // 3-tile mesh: the fault fates key on canonical message identity,
+    // not scheduling, so z, events and cycles are all identical.
+    let p = problem(12);
+    let base = MeshConfig {
+        engine: TileEngine::FastForward,
+        ..MeshConfig::new(3)
+    };
+    let shards = base.shard_count(spec().m);
+    let mut shards_of = vec![0u64; 3];
+    for s in 0..shards {
+        shards_of[s % 3] += 1;
+    }
+    let registry = NocRegistry::new(3, shards_of);
+    let mut rng = Xoshiro256::new(99);
+    let plan = registry.sample(&mut rng, 0, MeshFaultProfile::Chaos);
+    assert!(!plan.is_empty());
+    let orders: [Vec<usize>; 4] =
+        [vec![], vec![0, 1, 2], vec![2, 1, 0], vec![1, 2, 0]];
+    let reference = Mesh::run(&base, &p, &plan).unwrap();
+    for order in orders {
+        let mut cfg = base.clone();
+        cfg.tile_order = order.clone();
+        let r = Mesh::run(&cfg, &p, &plan).unwrap();
+        assert_eq!(r.z.bits(), reference.z.bits(), "order {order:?}");
+        assert_eq!(r.events, reference.events, "order {order:?}");
+        assert_eq!(r.cycles, reference.cycles, "order {order:?}");
+        assert_eq!(r.shard_map, reference.shard_map, "order {order:?}");
+    }
+}
+
+#[test]
+fn mesh_campaign_json_is_thread_invariant() {
+    let mut mc = MeshCampaignConfig::new(4, 24, 2026);
+    mc.spec = spec();
+    mc.mesh.engine = TileEngine::FastForward;
+    mc.threads = 1;
+    let a = MeshCampaign::run(&mc).unwrap();
+    mc.threads = 8;
+    let b = MeshCampaign::run(&mc).unwrap();
+    assert_eq!(a.to_json(), b.to_json());
+    assert_eq!(a.total, 24);
+}
+
+/// Protected meshes must absorb every single-kind profile; the
+/// unprotected transport must demonstrably NOT (otherwise the fault
+/// domain is cosmetic).
+#[test]
+fn transport_profiles_are_harmful_unprotected_and_harmless_protected() {
+    for profile in [
+        MeshFaultProfile::Flip,
+        MeshFaultProfile::Drop,
+        MeshFaultProfile::Dup,
+        MeshFaultProfile::Reorder,
+        MeshFaultProfile::Crash,
+        MeshFaultProfile::Mixed,
+    ] {
+        let mut mc = MeshCampaignConfig::new(3, 16, 7);
+        mc.spec = spec();
+        mc.mesh.engine = TileEngine::FastForward;
+        mc.profile = profile;
+        let protected = MeshCampaign::run(&mc).unwrap();
+        assert_eq!(
+            protected.functional_errors(),
+            0,
+            "protected mesh failed under {}",
+            profile.name()
+        );
+        assert!(protected.applied_runs > 0, "{} never applied", profile.name());
+    }
+    // Unprotected: each harmful profile must produce at least one
+    // functional error over the same budget.
+    for profile in [
+        MeshFaultProfile::Flip,
+        MeshFaultProfile::Drop,
+        MeshFaultProfile::Dup,
+        MeshFaultProfile::Crash,
+    ] {
+        let mut mc = MeshCampaignConfig::new(3, 16, 7);
+        mc.spec = spec();
+        mc.mesh = MeshConfig::unprotected(3);
+        mc.mesh.engine = TileEngine::FastForward;
+        mc.profile = profile;
+        let bare = MeshCampaign::run(&mc).unwrap();
+        assert!(
+            bare.functional_errors() > 0,
+            "unprotected mesh shrugged off {}",
+            profile.name()
+        );
+    }
+}
+
+/// The ISSUE acceptance scenario: a ≥4-tile mesh under the chaos
+/// profile (flip + drop + dup + delay + one tile crash per injection)
+/// with the full recovery stack completes every run with zero
+/// functional errors, and the report attributes detected/corrected
+/// events to the `mesh/noc-*` strata.
+#[test]
+fn chaos_profile_acceptance_on_a_four_tile_mesh() {
+    let mut mc = MeshCampaignConfig::new(4, 32, 2025);
+    mc.spec = GemmSpec::new(16, 6, 5);
+    mc.mesh.engine = TileEngine::FastForward;
+    let r = MeshCampaign::run(&mc).unwrap();
+    assert_eq!(r.total, 32);
+    assert_eq!(r.functional_errors(), 0, "chaos must be fully absorbed");
+    assert_eq!(r.applied_runs, 32, "chaos applies faults on every run");
+    assert!(r.events.detected() > 0 && r.events.corrected() > 0);
+    assert_eq!(r.strata.len(), NOC_STRATUM_NAMES.len());
+    for (st, name) in r.strata.iter().zip(NOC_STRATUM_NAMES) {
+        assert_eq!(st.name, name);
+        assert!(
+            st.applied > 0,
+            "chaos covers every stratum, {name} saw nothing"
+        );
+        assert_eq!(st.functional_errors, 0);
+    }
+    // Tile crashes were detected and survivors picked up the shards.
+    assert!(r.events.tiles_retired > 0);
+    assert!(r.events.shards_reassigned > 0);
+}
+
+#[test]
+fn crash_retirement_is_what_saves_the_run() {
+    let mut mc = MeshCampaignConfig::new(4, 16, 5);
+    mc.spec = spec();
+    mc.mesh.engine = TileEngine::FastForward;
+    mc.profile = MeshFaultProfile::Crash;
+    let with = MeshCampaign::run(&mc).unwrap();
+    assert_eq!(with.functional_errors(), 0);
+    assert!(with.events.tiles_retired > 0);
+    assert!(with.events.shards_reassigned > 0);
+    // Same plans, retirement off: crashed tiles' shards never arrive.
+    mc.mesh.tile_retirement = false;
+    let without = MeshCampaign::run(&mc).unwrap();
+    assert!(
+        without.timeout > 0,
+        "without retirement a crash must surface as a timeout"
+    );
+}
+
+#[test]
+fn single_tile_fault_registry_is_untouched_by_the_mesh() {
+    // The mesh NoC strata live in their own registry; the datapath
+    // fault-site population the four-mode default path samples from
+    // must not gain (or rename) a stratum.
+    assert_eq!(N_STRATA, 5);
+    assert!(STRATUM_NAMES.iter().all(|n| !n.starts_with("mesh/")));
+    for name in NOC_STRATUM_NAMES {
+        assert!(
+            !STRATUM_NAMES.contains(&name),
+            "NoC stratum {name} leaked into the datapath registry"
+        );
+    }
+}

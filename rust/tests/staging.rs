@@ -1,0 +1,127 @@
+//! ABFT input-staging verification — the carried PR-1 satellite.
+//!
+//! The writeback checksums only cover the compute/store path: an X/W
+//! image corrupted *at rest in TCDM after DMA* produces a wrong result
+//! whose output checksums are self-consistent, so nothing downstream
+//! can catch it. `System::verify_staged_inputs` closes that window by
+//! digesting the staged operand images through the accelerator's own
+//! TCDM port and comparing against the host-side expectation
+//! (ABFT builds compare the augmented image they actually stage).
+//!
+//! TCDM words carry SECDED ECC, so a *single* flipped codeword bit is
+//! repaired transparently at the read port — the staging check exists
+//! for what ECC cannot fix: double-bit upsets and botched DMA bursts.
+//! The corruption below is therefore a double flip in one codeword.
+
+use redmule_ft::cluster::System;
+use redmule_ft::golden::{GemmProblem, GemmSpec};
+use redmule_ft::mesh::{Mesh, MeshConfig};
+use redmule_ft::redmule::{ExecMode, Protection, RedMuleConfig};
+
+fn problem() -> GemmProblem {
+    GemmProblem::random(&GemmSpec::new(8, 6, 5), 33)
+}
+
+/// Codeword bit offsets of the FP16 half holding element `i` of the
+/// X image: 0 for even elements, 16 for odd ones.
+fn half_base(x_addr: u32, i: usize) -> (u32, u32) {
+    let byte = x_addr + 2 * i as u32;
+    (byte, if byte & 2 != 0 { 16 } else { 0 })
+}
+
+#[test]
+fn clean_staging_verifies_on_every_build() {
+    let p = problem();
+    for protection in [
+        Protection::Baseline,
+        Protection::Full,
+        Protection::Abft,
+        Protection::AbftOnline,
+    ] {
+        let mut sys = System::new(RedMuleConfig::paper(), protection);
+        let layout = sys.stage(&p).unwrap();
+        assert!(
+            sys.verify_staged_inputs(&p, &layout),
+            "clean staging must verify on {}",
+            protection.name()
+        );
+        // The digest is a pure function of the image: re-reading cannot
+        // change it (scrubbing included).
+        assert_eq!(
+            sys.staged_input_digest(&layout),
+            sys.staged_input_digest(&layout)
+        );
+    }
+}
+
+#[test]
+fn double_bit_staging_corruption_is_detected_and_restaged() {
+    let p = problem();
+    let mut sys = System::new(RedMuleConfig::paper(), Protection::Baseline);
+    let layout = sys.stage(&p).unwrap();
+    let clean_digest = sys.staged_input_digest(&layout);
+
+    // Double flip inside one staged X element's half-word: exponent MSB
+    // plus a mantissa bit — uncorrectable for SECDED, so the corrupted
+    // value reaches the read port.
+    let (byte, base) = half_base(layout.x_addr, 1);
+    sys.tcdm.flip_bit(byte, base + 14);
+    sys.tcdm.flip_bit(byte, base + 5);
+
+    assert_ne!(sys.staged_input_digest(&layout), clean_digest);
+    assert!(
+        !sys.verify_staged_inputs(&p, &layout),
+        "double-bit corruption must fail the staging check"
+    );
+
+    // Detect → restage → re-verify, then the run is clean end to end.
+    sys.restage_inputs(&p, &layout).unwrap();
+    assert!(sys.verify_staged_inputs(&p, &layout));
+    assert_eq!(sys.staged_input_digest(&layout), clean_digest);
+    let report = sys
+        .run_staged_with_fault(&layout, ExecMode::Performance, None)
+        .unwrap();
+    assert!(report.z_matches(&p.golden_z()));
+}
+
+#[test]
+fn unverified_staging_corruption_reaches_the_result() {
+    // The negative control: skip the staging check and the corrupted
+    // operand flows straight into the GEMM — a functional error no
+    // output-side machinery flags.
+    let p = problem();
+    // Pick a comfortably non-zero element so the exponent flip is a
+    // guaranteed large value change.
+    let i = p
+        .x
+        .data
+        .iter()
+        .position(|v| v.to_f64().abs() > 0.01)
+        .expect("random X has a non-tiny element");
+    let mut sys = System::new(RedMuleConfig::paper(), Protection::Baseline);
+    let layout = sys.stage(&p).unwrap();
+    let (byte, base) = half_base(layout.x_addr, i);
+    sys.tcdm.flip_bit(byte, base + 14);
+    sys.tcdm.flip_bit(byte, base + 5);
+    let report = sys
+        .run_staged_with_fault(&layout, ExecMode::Performance, None)
+        .unwrap();
+    assert!(
+        !report.z_matches(&p.golden_z()),
+        "corrupted staged input must corrupt the result when unverified"
+    );
+}
+
+#[test]
+fn mesh_staging_verification_is_a_clean_run_noop() {
+    // The mesh plumbs the check through every tile's staging (direct
+    // engine): on clean images it must neither repair anything nor
+    // perturb the sharded result.
+    let p = problem();
+    let mut cfg = MeshConfig::new(2);
+    cfg.verify_staging = true;
+    let r = Mesh::run_clean(&cfg, &p).unwrap();
+    assert!(r.completed);
+    assert_eq!(r.events.staging_repairs, 0);
+    assert_eq!(r.z.bits(), p.golden_z().bits());
+}
